@@ -1,0 +1,71 @@
+//! Image clustering (the paper's ImageNet-50k scenario, mirrored).
+//!
+//! Compares the full method roster on an image-feature-like workload:
+//! APNC-Nys, APNC-SD, the ensemble-Nyström extension, and the 2-Stages
+//! sample-and-propagate baseline — the qualitative shape of Tables 2/3.
+//!
+//!     cargo run --release --example image_clustering [-- --n 5000 --l 200]
+
+use apnc::baselines::two_stage::{self, TwoStageConfig};
+use apnc::cli::Args;
+use apnc::coordinator::driver::{Pipeline, PipelineConfig};
+use apnc::coordinator::sample::SampleMode;
+use apnc::data::registry;
+use apnc::embedding::Method;
+use apnc::metrics::nmi;
+use apnc::rng::Pcg;
+use apnc::runtime::Compute;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let n = args.usize_or("n", 5_000)?;
+    let l = args.usize_or("l", 200)?;
+    let ds = registry::generate("imagenet-50k", n, 23);
+    println!("images: n = {}, features = {}, classes = {}", ds.n, ds.d, ds.k);
+    let mut rng = Pcg::seeded(23);
+    let kernel = registry::spec("imagenet-50k").unwrap().kernel.build(&ds.x, ds.d, &mut rng);
+    println!("kernel: {kernel:?} (self-tuned)\n");
+    let compute = Compute::auto(&Compute::default_artifact_dir());
+
+    // 2-Stages baseline
+    let t0 = std::time::Instant::now();
+    let ts = two_stage::cluster(
+        &ds.x,
+        ds.n,
+        ds.d,
+        kernel,
+        &TwoStageConfig { k: ds.k, l, max_iters: 20, seed: 5, restarts: 1 },
+    );
+    println!(
+        "{:<10} NMI = {:.4}   ({:.2?})",
+        "2-Stages",
+        nmi(&ts.labels, &ds.labels),
+        t0.elapsed()
+    );
+
+    // APNC family
+    for method in [Method::Nystrom, Method::StableDist, Method::EnsembleNystrom] {
+        let cfg = PipelineConfig {
+            method,
+            l,
+            m: 256,
+            ensemble_q: 4,
+            workers: 8,
+            max_iters: 20,
+            sample_mode: SampleMode::Exact,
+            kernel: Some(kernel),
+            seed: 5,
+            ..Default::default()
+        };
+        let out = Pipeline::with_compute(cfg, compute.clone()).run(&ds)?;
+        println!(
+            "{:<10} NMI = {:.4}   (embed {:.2?} + cluster {:.2?}, m = {})",
+            method.label(),
+            out.nmi,
+            out.times.embed,
+            out.times.cluster,
+            out.m_actual
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+`apnc.py`   — the paper's compute hot-spot: fused kernel-block evaluation
+              kappa(X_tile, L) followed by the embedding matmul with R^T,
+              tiled over data-block rows (Algorithm 1 inner loop).
+`assign.py` — APNC cluster-assignment hot-spot: distances from embedded
+              points to centroid embeddings + running argmin
+              (Algorithm 2 map phase).
+`ref.py`    — pure-jnp oracles for both, used by pytest.
+
+All pallas_call sites use interpret=True: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the rust
+runtime executes unchanged.  Kernel *structure* (tile shapes, VMEM
+residency) is designed for TPU; see DESIGN.md section 6.
+"""

@@ -1,0 +1,140 @@
+"""L1 Pallas kernel: fused kernel-block evaluation + embedding matmul.
+
+This is the paper's per-mapper hot-spot (Algorithm 1, line 5-6):
+
+    K_{L b, i} = kappa(L^(b), x_i)          for every point i of the block
+    y_[b]^(i)  = R^(b) K_{L^(b) i}
+
+Batched over a data block X (B, d) it is the chain
+
+    Y = elementwise_kappa(X @ L^T) @ R^T          (B,d)x(d,l) -> (B,l) -> (B,m)
+
+TPU mapping (DESIGN.md section 6): the grid walks row tiles of X
+(TILE_B = 128, MXU-aligned); L (l,d) and R^T (l,m) use a constant
+index_map so they stay VMEM-resident across the whole row-tile loop —
+exactly the paper's "each mapper loads R^(b) and L^(b) once".  Both
+matmuls are MXU work with f32 accumulation; the kappa elementwise step is
+VPU work fused between them.  interpret=True lowers the same schedule to
+plain HLO for the CPU PJRT runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import KERNEL_LINEAR, KERNEL_POLY, KERNEL_RBF, KERNEL_TANH
+
+TILE_B = 128
+
+
+def _fused_embed_kernel(x_ref, l_ref, lsq_ref, rt_ref, p_ref, o_ref, *, kind):
+    """One row-tile: o = kappa(x @ L^T) @ R^T with kappa selected statically."""
+    x = x_ref[...]                       # (TILE_B, d)
+    samples = l_ref[...]                 # (l, d)
+    g = jax.lax.dot_general(
+        x, samples,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                    # (TILE_B, l)
+    p = p_ref[...]
+    if kind == KERNEL_LINEAR:
+        kb = g
+    elif kind == KERNEL_RBF:
+        x_sq = jnp.sum(x * x, axis=1)
+        d2 = x_sq[:, None] + lsq_ref[...][None, :] - 2.0 * g
+        kb = jnp.exp(-p[0] * jnp.maximum(d2, 0.0))
+    elif kind == KERNEL_POLY:
+        kb = jnp.power(jnp.maximum(g + p[0], 0.0), p[1])
+    elif kind == KERNEL_TANH:
+        kb = jnp.tanh(p[0] * g + p[1])
+    else:  # pragma: no cover - static dispatch
+        raise ValueError(f"unknown kernel kind {kind}")
+    o_ref[...] = jnp.dot(kb, rt_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "tile_b"))
+def fused_embed(x, samples, r_t, params, *, kind, tile_b=TILE_B):
+    """Y = kappa(X, L) @ R^T via the tiled Pallas kernel.
+
+    x:       (B, d)  data block, B must be a multiple of tile_b
+    samples: (l, d)  the sample set L^(b)
+    r_t:     (l, m)  R^(b) transposed
+    params:  (4,)    kernel parameters (see ref.py)
+    kind:    static python int KERNEL_*
+    """
+    b, d = x.shape
+    l, m = r_t.shape
+    assert samples.shape == (l, d), (samples.shape, (l, d))
+    assert b % tile_b == 0, f"block rows {b} not a multiple of {tile_b}"
+    # Hoisted once per block (not per tile): squared norms of the samples.
+    l_sq = jnp.sum(samples * samples, axis=1)
+    grid = (b // tile_b,)
+    return pl.pallas_call(
+        functools.partial(_fused_embed_kernel, kind=kind),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, d), lambda i: (i, 0)),   # X row tile
+            pl.BlockSpec((l, d), lambda i: (0, 0)),        # L, VMEM-resident
+            pl.BlockSpec((l,), lambda i: (0,)),            # ||L||^2
+            pl.BlockSpec((l, m), lambda i: (0, 0)),        # R^T, VMEM-resident
+            pl.BlockSpec((4,), lambda i: (0,)),            # params
+        ],
+        out_specs=pl.BlockSpec((tile_b, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        interpret=True,
+    )(x, samples, l_sq, r_t, params)
+
+
+def _kernel_block_kernel(x_ref, l_ref, lsq_ref, p_ref, o_ref, *, kind):
+    """One row-tile of the plain kernel block kappa(X, L) (no embedding)."""
+    x = x_ref[...]
+    samples = l_ref[...]
+    g = jax.lax.dot_general(
+        x, samples,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    p = p_ref[...]
+    if kind == KERNEL_LINEAR:
+        kb = g
+    elif kind == KERNEL_RBF:
+        x_sq = jnp.sum(x * x, axis=1)
+        d2 = x_sq[:, None] + lsq_ref[...][None, :] - 2.0 * g
+        kb = jnp.exp(-p[0] * jnp.maximum(d2, 0.0))
+    elif kind == KERNEL_POLY:
+        kb = jnp.power(jnp.maximum(g + p[0], 0.0), p[1])
+    elif kind == KERNEL_TANH:
+        kb = jnp.tanh(p[0] * g + p[1])
+    else:  # pragma: no cover - static dispatch
+        raise ValueError(f"unknown kernel kind {kind}")
+    o_ref[...] = kb
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "tile_b"))
+def kernel_block(x, samples, params, *, kind, tile_b=TILE_B):
+    """kappa(X, L): (B, l) kernel block, tiled like fused_embed.
+
+    Used by the coordinator for baseline paths (2-Stages label propagation,
+    Approx-KKM) that need raw kernel values rather than embeddings.
+    """
+    b, d = x.shape
+    l = samples.shape[0]
+    assert samples.shape == (l, d)
+    assert b % tile_b == 0, f"block rows {b} not a multiple of {tile_b}"
+    l_sq = jnp.sum(samples * samples, axis=1)
+    grid = (b // tile_b,)
+    return pl.pallas_call(
+        functools.partial(_kernel_block_kernel, kind=kind),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((l, d), lambda i: (0, 0)),
+            pl.BlockSpec((l,), lambda i: (0,)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, l), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l), jnp.float32),
+        interpret=True,
+    )(x, samples, l_sq, params)

@@ -1,0 +1,103 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the L1 kernels are tested against (pytest +
+hypothesis sweeps in python/tests/).  They mirror the paper's math
+directly with no tiling, masking tricks, or fusion.
+
+Conventions (shared with model.py, apnc.py, assign.py and the rust side):
+  * rows are points: X is (B, d), samples L is (l, d)
+  * the embedding coefficient matrix R is (m, l); we pass R^T = (l, m)
+  * Y = kappa(X, L) @ R^T is (B, m)                         [paper Eq. 3]
+  * centroid embeddings C are (k, m)                        [paper Alg. 2]
+  * params is a (4,) f32 vector; meaning depends on the kernel:
+      linear: unused
+      rbf:    params[0] = gamma            k(x,z) = exp(-gamma ||x-z||^2)
+      poly:   params[0] = c, params[1] = p k(x,z) = (x.z + c)^p   (x.z+c >= 0)
+      tanh:   params[0] = a, params[1] = b k(x,z) = tanh(a x.z + b)
+"""
+
+import jax.numpy as jnp
+
+KERNEL_LINEAR = 0
+KERNEL_RBF = 1
+KERNEL_POLY = 2
+KERNEL_TANH = 3
+
+DIST_L2SQ = 0
+DIST_L1 = 1
+
+
+def gram_elementwise(g, x_sq, l_sq, kind, params):
+    """Apply the kernel function elementwise to a raw Gram block.
+
+    g:    (B, l) raw inner products X @ L^T
+    x_sq: (B,)   squared row norms of X
+    l_sq: (l,)   squared row norms of L
+    kind: static python int (one of KERNEL_*)
+    """
+    if kind == KERNEL_LINEAR:
+        return g
+    if kind == KERNEL_RBF:
+        gamma = params[0]
+        d2 = x_sq[:, None] + l_sq[None, :] - 2.0 * g
+        # numerical noise can push tiny distances negative
+        return jnp.exp(-gamma * jnp.maximum(d2, 0.0))
+    if kind == KERNEL_POLY:
+        c, p = params[0], params[1]
+        # f32 pow of a negative base is NaN; the paper uses the polynomial
+        # kernel on non-negative data (MNIST pixels), so clamping is exact
+        # there and keeps the kernel bounded elsewhere.
+        return jnp.power(jnp.maximum(g + c, 0.0), p)
+    if kind == KERNEL_TANH:
+        a, b = params[0], params[1]
+        return jnp.tanh(a * g + b)
+    raise ValueError(f"unknown kernel kind {kind}")
+
+
+def kernel_block_ref(x, samples, kind, params):
+    """kappa(X, L): the (B, l) kernel block between data and samples."""
+    g = x @ samples.T
+    x_sq = jnp.sum(x * x, axis=1)
+    l_sq = jnp.sum(samples * samples, axis=1)
+    return gram_elementwise(g, x_sq, l_sq, kind, params)
+
+
+def embed_block_ref(x, samples, r_t, kind, params):
+    """APNC embedding of a data block: Y = kappa(X, L) @ R^T  (paper Eq. 3)."""
+    return kernel_block_ref(x, samples, kind, params) @ r_t
+
+
+def distances_ref(y, centroids, dist):
+    """(B, k) distances between embedded points and centroid embeddings.
+
+    DIST_L2SQ for APNC-Nys (paper Eq. 7), DIST_L1 for APNC-SD (paper Eq. 13).
+    """
+    if dist == DIST_L2SQ:
+        y_sq = jnp.sum(y * y, axis=1)
+        c_sq = jnp.sum(centroids * centroids, axis=1)
+        d = y_sq[:, None] + c_sq[None, :] - 2.0 * (y @ centroids.T)
+        return jnp.maximum(d, 0.0)
+    if dist == DIST_L1:
+        return jnp.sum(jnp.abs(y[:, None, :] - centroids[None, :, :]), axis=2)
+    raise ValueError(f"unknown distance kind {dist}")
+
+
+def assign_block_ref(y, centroids, mask, dist):
+    """Reference for the full Algorithm-2 map step on one block.
+
+    Returns (assign, z, g, obj):
+      assign: (B,) i32 nearest-centroid index (garbage where mask == 0)
+      z:      (k, m) per-cluster sum of masked embeddings
+      g:      (k,)   per-cluster masked point counts
+      obj:    ()     masked sum of min distances (quantization objective)
+    """
+    d = distances_ref(y, centroids, dist)
+    assign = jnp.argmin(d, axis=1).astype(jnp.int32)
+    mind = jnp.min(d, axis=1)
+    k = centroids.shape[0]
+    onehot = (assign[:, None] == jnp.arange(k)[None, :]).astype(y.dtype)
+    onehot = onehot * mask[:, None]
+    z = onehot.T @ y
+    g = jnp.sum(onehot, axis=0)
+    obj = jnp.sum(mind * mask)
+    return assign, z, g, obj

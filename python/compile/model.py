@@ -1,0 +1,90 @@
+"""L2: the paper's compute graphs in JAX, calling the L1 Pallas kernels.
+
+Three graphs are AOT-lowered by aot.py (shape-static, see the grid there):
+
+  embed_block(x, samples, r_t, kind, params)          -> y        [Alg. 1]
+  assign_block(y, centroids, mask, dist)              -> 4-tuple  [Alg. 2 map]
+  kernel_block(x, samples, kind, params)              -> K block  [baselines]
+
+`kind` and `dist` are *runtime* i32 scalars: each graph is a lax.switch
+over branches that were statically specialized at trace time, so a single
+HLO artifact per shape serves all four kernel functions / both distances.
+The switch is resolved once per block — negligible against the O(B·l·d)
+matmul work inside the branch.
+
+Padding contract with the rust runtime (runtime/pad.rs):
+  * feature dim d zero-padded           -> dot products and distances exact
+  * sample rows l zero-padded AND the matching R^T rows zero-padded
+                                        -> padded samples contribute 0 to y
+  * embedding dim m zero-padded         -> distances exact (both sides 0)
+  * centroid rows k padded with +BIG    -> never win the argmin
+  * block rows B mask-padded (mask=0)   -> excluded from z, g, obj
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import apnc, assign as assign_kernels
+from .kernels.ref import (
+    DIST_L1,
+    DIST_L2SQ,
+    KERNEL_LINEAR,
+    KERNEL_POLY,
+    KERNEL_RBF,
+    KERNEL_TANH,
+)
+
+KERNEL_KINDS = (KERNEL_LINEAR, KERNEL_RBF, KERNEL_POLY, KERNEL_TANH)
+DIST_KINDS = (DIST_L2SQ, DIST_L1)
+
+
+def embed_block(x, samples, r_t, kind, params):
+    """APNC embedding of one data block: Y = kappa(X, L) @ R^T (Eq. 3).
+
+    kind is a traced i32 scalar selecting the kernel function at runtime.
+    """
+    branches = [
+        (lambda op, kk=kk: apnc.fused_embed(op[0], op[1], op[2], op[3], kind=kk))
+        for kk in KERNEL_KINDS
+    ]
+    return jax.lax.switch(kind, branches, (x, samples, r_t, params))
+
+
+def kernel_block(x, samples, kind, params):
+    """Raw kernel block kappa(X, L): (B, l).  Baseline/2-Stages path."""
+    branches = [
+        (lambda op, kk=kk: apnc.kernel_block(op[0], op[1], op[2], kind=kk))
+        for kk in KERNEL_KINDS
+    ]
+    return jax.lax.switch(kind, branches, (x, samples, params))
+
+
+def assign_block(y, centroids, mask, dist):
+    """Algorithm 2 map phase for one block of embeddings.
+
+    Runs the L1 argmin kernel, then folds the block into the combiner
+    statistics the paper ships across the network:
+
+      assign: (B,) i32   nearest centroid per point
+      z:      (k, m)     sum of embeddings per cluster   (paper's Z)
+      g:      (k,)       point count per cluster         (paper's g)
+      obj:    ()         masked sum of min distances
+
+    dist is a traced i32 scalar (0 = l2^2 for APNC-Nys, 1 = l1 for APNC-SD).
+    """
+    branches = [
+        (lambda op, dd=dd: assign_kernels.assign_argmin(op[0], op[1], dist=dd))
+        for dd in DIST_KINDS
+    ]
+    assign, mind = jax.lax.switch(dist, branches, (y, centroids))
+    k = centroids.shape[0]
+    onehot = (assign[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :])
+    onehot = onehot.astype(y.dtype) * mask[:, None]
+    z = jax.lax.dot_general(
+        onehot, y,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                     # (k, m)
+    g = jnp.sum(onehot, axis=0)
+    obj = jnp.sum(mind * mask)
+    return assign, z, g, obj

@@ -1,0 +1,67 @@
+"""AOT pipeline checks: the manifest grid is well-formed, lowered HLO text
+parses as HLO (structural smoke), and lowering is deterministic.
+
+The heavyweight check — that the rust PJRT runtime executing these
+artifacts matches ref.py — lives on the rust side
+(rust/tests/runtime_parity.rs) so it exercises the real request path.
+"""
+
+import os
+
+from compile import aot
+
+
+def test_grid_names_unique_and_well_formed():
+    names = set()
+    for name, _, meta in aot.artifact_grid():
+        assert name not in names
+        names.add(name)
+        assert meta["op"] in ("embed", "assign", "kmat")
+        assert meta["b"] == aot.BLOCK_ROWS
+        if meta["op"] == "embed":
+            assert set(meta) == {"op", "b", "d", "l", "m"}
+        elif meta["op"] == "assign":
+            assert set(meta) == {"op", "b", "m", "k"}
+        else:
+            assert set(meta) == {"op", "b", "d", "l"}
+    # 12 embed + 4 assign + 6 kmat
+    assert len(names) == (
+        len(aot.EMBED_DIMS) * len(aot.SAMPLE_SIZES) * len(aot.TARGET_DIMS)
+        + len(aot.TARGET_DIMS) * len(aot.CLUSTER_CAPS)
+        + len(aot.EMBED_DIMS) * len(aot.SAMPLE_SIZES)
+    )
+
+
+def test_lowering_produces_entry_computation():
+    for name, lower, meta in aot.artifact_grid():
+        if name == "assign_b1024_m256_k16":
+            text = aot.to_hlo_text(lower())
+            assert "ENTRY" in text
+            assert "f32[1024,256]" in text  # the y operand
+            return
+    raise AssertionError("expected artifact missing from grid")
+
+
+def test_lowering_deterministic():
+    for name, lower, meta in aot.artifact_grid():
+        if meta["op"] == "kmat" and meta["d"] == 64 and meta["l"] == 256:
+            a = aot.to_hlo_text(lower())
+            b = aot.to_hlo_text(lower())
+            assert a == b
+            return
+    raise AssertionError("expected artifact missing from grid")
+
+
+def test_generated_artifacts_match_manifest(tmp_path=None):
+    """If `make artifacts` has run, every manifest entry's file exists."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest = os.path.join(art, "manifest.txt")
+    if not os.path.exists(manifest):
+        import pytest
+        pytest.skip("artifacts not built")
+    with open(manifest) as f:
+        lines = [l.strip() for l in f if l.strip() and not l.startswith("#")]
+    assert lines, "manifest is empty"
+    for line in lines:
+        fields = dict(tok.split("=", 1) for tok in line.split()[1:])
+        assert os.path.exists(os.path.join(art, fields["file"])), line

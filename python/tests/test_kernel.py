@@ -1,0 +1,128 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/params; every case asserts allclose against
+ref.py.  This is the CORE correctness signal for the compute layer — the
+rust runtime executes byte-identical HLO lowered from these functions.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import apnc, assign as assign_k, ref
+
+TILE = 16  # small tile keeps interpret-mode sweeps fast; lowering uses 128
+
+KINDS = [ref.KERNEL_LINEAR, ref.KERNEL_RBF, ref.KERNEL_POLY, ref.KERNEL_TANH]
+DISTS = [ref.DIST_L2SQ, ref.DIST_L1]
+
+
+def _params_for(kind, rng):
+    p = np.zeros(4, np.float32)
+    if kind == ref.KERNEL_RBF:
+        p[0] = rng.uniform(0.01, 0.5)
+    elif kind == ref.KERNEL_POLY:
+        p[0], p[1] = rng.uniform(0.5, 2.0), float(rng.integers(2, 6))
+    elif kind == ref.KERNEL_TANH:
+        p[0], p[1] = rng.uniform(0.001, 0.1), rng.uniform(0.0, 0.5)
+    return p
+
+
+def _data(rng, b, d, l, m):
+    x = rng.normal(size=(b, d)).astype(np.float32)
+    samples = rng.normal(size=(l, d)).astype(np.float32)
+    r_t = (rng.normal(size=(l, m)) * 0.2).astype(np.float32)
+    return x, samples, r_t
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_fused_embed_matches_ref_fixed(kind):
+    rng = np.random.default_rng(7 + kind)
+    x, samples, r_t = _data(rng, 4 * TILE, 24, 40, 12)
+    p = _params_for(kind, rng)
+    got = np.asarray(apnc.fused_embed(x, samples, r_t, p, kind=kind, tile_b=TILE))
+    want = np.asarray(ref.embed_block_ref(x, samples, r_t, kind, p))
+    # polynomial kernels of degree 5 reach 1e4-scale values in f32:
+    # tolerate error relative to the largest output magnitude
+    scale = max(1.0, float(np.max(np.abs(want))))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5 * scale)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    kind=st.sampled_from(KINDS),
+    tiles=st.integers(1, 4),
+    d=st.integers(1, 48),
+    l=st.integers(1, 64),
+    m=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_embed_matches_ref_sweep(kind, tiles, d, l, m, seed):
+    rng = np.random.default_rng(seed)
+    x, samples, r_t = _data(rng, tiles * TILE, d, l, m)
+    p = _params_for(kind, rng)
+    got = np.asarray(apnc.fused_embed(x, samples, r_t, p, kind=kind, tile_b=TILE))
+    want = np.asarray(ref.embed_block_ref(x, samples, r_t, kind, p))
+    scale = max(1.0, float(np.max(np.abs(want))))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5 * scale)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    kind=st.sampled_from(KINDS),
+    tiles=st.integers(1, 3),
+    d=st.integers(1, 32),
+    l=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_block_matches_ref_sweep(kind, tiles, d, l, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(tiles * TILE, d)).astype(np.float32)
+    samples = rng.normal(size=(l, d)).astype(np.float32)
+    p = _params_for(kind, rng)
+    got = np.asarray(apnc.kernel_block(x, samples, p, kind=kind, tile_b=TILE))
+    want = np.asarray(ref.kernel_block_ref(x, samples, kind, p))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_rbf_padding_contract():
+    """Zero-padded samples with zero-padded R^T rows contribute nothing,
+    even for RBF where kappa(x, 0) != 0 — the zero R column kills it."""
+    rng = np.random.default_rng(3)
+    x, samples, r_t = _data(rng, 2 * TILE, 8, 10, 6)
+    p = np.array([0.1, 0, 0, 0], np.float32)
+    sp = np.vstack([samples, np.zeros((6, 8), np.float32)])
+    rp = np.vstack([r_t, np.zeros((6, 6), np.float32)])
+    base = np.asarray(apnc.fused_embed(x, samples, r_t, p, kind=ref.KERNEL_RBF, tile_b=TILE))
+    padded = np.asarray(apnc.fused_embed(x, sp, rp, p, kind=ref.KERNEL_RBF, tile_b=TILE))
+    np.testing.assert_allclose(padded, base, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    dist=st.sampled_from(DISTS),
+    tiles=st.integers(1, 4),
+    m=st.integers(1, 48),
+    k=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_assign_argmin_matches_ref_sweep(dist, tiles, m, k, seed):
+    rng = np.random.default_rng(seed)
+    y = rng.normal(size=(tiles * TILE, m)).astype(np.float32)
+    c = rng.normal(size=(k, m)).astype(np.float32)
+    idx, mind = assign_k.assign_argmin(y, c, dist=dist, tile_b=TILE)
+    dref = np.asarray(ref.distances_ref(y, c, dist))
+    # ties can legitimately differ; compare achieved distance, not index
+    got_d = dref[np.arange(len(y)), np.asarray(idx)]
+    np.testing.assert_allclose(got_d, dref.min(axis=1), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(mind), dref.min(axis=1), rtol=1e-5, atol=1e-5)
+
+
+def test_assign_inf_padded_centroids_never_win():
+    rng = np.random.default_rng(11)
+    y = rng.normal(size=(TILE, 8)).astype(np.float32)
+    c = rng.normal(size=(4, 8)).astype(np.float32)
+    cp = np.vstack([c, np.full((3, 8), 1e30, np.float32)])
+    for dist in DISTS:
+        idx, _ = assign_k.assign_argmin(y, cp, dist=dist, tile_b=TILE)
+        assert int(np.max(np.asarray(idx))) < 4

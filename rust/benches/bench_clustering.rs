@@ -1,0 +1,60 @@
+//! Clustering hot-path benchmarks (Algorithm 2's per-iteration work):
+//! the assign op on PJRT vs reference, for both distance kinds, plus a
+//! full engine iteration.
+
+use apnc::bench::Bench;
+use apnc::coordinator::cluster_job::{self, ClusterConfig};
+use apnc::coordinator::DataBlock;
+use apnc::mapreduce::{Engine, EngineConfig};
+use apnc::rng::Pcg;
+use apnc::runtime::{Compute, DistKind};
+use std::hint::black_box;
+
+fn main() {
+    let bench = Bench::new("clustering");
+    let mut rng = Pcg::seeded(1);
+    let (b, m, k) = (1024usize, 256usize, 16usize);
+    let y: Vec<f32> = (0..b * m).map(|_| rng.normal() as f32).collect();
+    let centroids: Vec<f32> = y[..k * m].to_vec();
+
+    let reference = Compute::reference();
+    for dist in [DistKind::L2Sq, DistKind::L1] {
+        let stats = bench.run(&format!("reference_assign_{dist:?}"), || {
+            black_box(reference.assign(black_box(&y), b, m, &centroids, k, dist).unwrap());
+        });
+        bench.throughput(&stats, b * k * m, "dist-term");
+    }
+
+    let dir = Compute::default_artifact_dir();
+    if dir.join("manifest.txt").exists() {
+        let pjrt = Compute::pjrt(&dir).expect("pjrt backend");
+        for dist in [DistKind::L2Sq, DistKind::L1] {
+            let stats = bench.run(&format!("pjrt_assign_{dist:?}"), || {
+                black_box(pjrt.assign(black_box(&y), b, m, &centroids, k, dist).unwrap());
+            });
+            bench.throughput(&stats, b * k * m, "dist-term");
+        }
+    } else {
+        eprintln!("skipping pjrt benches: run `make artifacts` first");
+    }
+
+    // one full MapReduce Lloyd pass over 16k embedded points
+    let n = 16 * 1024;
+    let y_big: Vec<f32> = (0..n * 64).map(|_| rng.normal() as f32).collect();
+    let blocks = DataBlock::partition(&y_big, n, 64, 1024);
+    let engine = Engine::new(EngineConfig::with_workers(4));
+    let stats = bench.run("engine_lloyd_16k_m64_k16", || {
+        black_box(
+            cluster_job::run(
+                &engine,
+                &reference,
+                black_box(&blocks),
+                64,
+                DistKind::L2Sq,
+                &ClusterConfig { k: 16, max_iters: 1, tol: 0.0, seed: 3, ..Default::default() },
+            )
+            .unwrap(),
+        );
+    });
+    bench.throughput(&stats, n, "point");
+}

@@ -1,0 +1,53 @@
+//! Embedding hot-path benchmarks (Algorithm 1's per-block work).
+//!
+//! Measures the PJRT artifact path against the pure-rust reference at the
+//! canonical artifact shape, which is the §Perf L1/L2 signal: the AOT
+//! pipeline should comfortably beat the scalar reference implementation.
+
+use apnc::bench::Bench;
+use apnc::kernels::Kernel;
+use apnc::rng::Pcg;
+use apnc::runtime::Compute;
+use std::hint::black_box;
+
+fn main() {
+    let bench = Bench::new("embedding");
+    let mut rng = Pcg::seeded(1);
+    let (b, d, l, m) = (1024usize, 64usize, 256usize, 256usize);
+    let x: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32 * 0.3).collect();
+    let samples: Vec<f32> = (0..l * d).map(|_| rng.normal() as f32 * 0.3).collect();
+    let r_t: Vec<f32> = (0..l * m).map(|_| rng.normal() as f32 * 0.05).collect();
+    let kernel = Kernel::Rbf { gamma: 0.05 };
+    let flops = 2 * b * l * d + 2 * b * l * m; // gram + embed matmuls
+
+    let reference = Compute::reference();
+    let stats = bench.run("reference_block_1024", || {
+        black_box(
+            reference
+                .embed(black_box(&x), b, d, &samples, l, &r_t, m, kernel)
+                .unwrap(),
+        );
+    });
+    bench.throughput(&stats, flops, "flop");
+
+    let dir = Compute::default_artifact_dir();
+    if dir.join("manifest.txt").exists() {
+        let pjrt = Compute::pjrt(&dir).expect("pjrt backend");
+        let stats = bench.run("pjrt_block_1024", || {
+            black_box(
+                pjrt.embed(black_box(&x), b, d, &samples, l, &r_t, m, kernel).unwrap(),
+            );
+        });
+        bench.throughput(&stats, flops, "flop");
+        // padded path: awkward shapes exercising pad/unpad overhead
+        let (rows2, d2, l2, m2) = (700usize, 50usize, 200usize, 180usize);
+        let x2: Vec<f32> = (0..rows2 * d2).map(|_| rng.normal() as f32).collect();
+        let s2: Vec<f32> = (0..l2 * d2).map(|_| rng.normal() as f32).collect();
+        let rt2: Vec<f32> = (0..l2 * m2).map(|_| rng.normal() as f32 * 0.05).collect();
+        bench.run("pjrt_padded_700x50", || {
+            black_box(pjrt.embed(black_box(&x2), rows2, d2, &s2, l2, &rt2, m2, kernel).unwrap());
+        });
+    } else {
+        eprintln!("skipping pjrt benches: run `make artifacts` first");
+    }
+}

@@ -1,0 +1,37 @@
+//! Kernel-function benchmarks: the rust-side kernel block computation used
+//! by the coefficient jobs (K_LL) and centralized baselines.
+
+use apnc::bench::Bench;
+use apnc::kernels::Kernel;
+use apnc::rng::Pcg;
+use std::hint::black_box;
+
+fn main() {
+    let bench = Bench::new("kernels");
+    let mut rng = Pcg::seeded(1);
+    let d = 64;
+    let n = 512;
+    let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+    for kernel in [
+        Kernel::Linear,
+        Kernel::Rbf { gamma: 0.1 },
+        Kernel::Poly { c: 1.0, degree: 5.0 },
+        Kernel::Tanh { a: 0.0045, b: 0.11 },
+    ] {
+        let name = format!("gram_{:?}", kernel).chars().take(24).collect::<String>();
+        let stats = bench.run(&name, || {
+            black_box(kernel.gram(black_box(&x), d));
+        });
+        bench.throughput(&stats, n * (n + 1) / 2, "kernel-eval");
+    }
+    let l = 128;
+    let samples: Vec<f32> = (0..l * d).map(|_| rng.normal() as f32).collect();
+    let stats = bench.run("block_512x128_rbf", || {
+        black_box(Kernel::Rbf { gamma: 0.1 }.block(black_box(&x), black_box(&samples), d));
+    });
+    bench.throughput(&stats, n * l, "kernel-eval");
+    bench.run("self_tune_gamma", || {
+        let mut r = Pcg::seeded(7);
+        black_box(apnc::kernels::self_tune_gamma(black_box(&x), d, &mut r));
+    });
+}

@@ -1,0 +1,51 @@
+//! Linalg substrate benchmarks: the coefficient-fit hot spots
+//! (eigendecomposition of K_LL, matmuls) that bound Algorithm 3/4's
+//! single-reducer time in Table 3.
+
+use apnc::bench::Bench;
+use apnc::linalg::{eigh, Matrix};
+use apnc::rng::Pcg;
+use std::hint::black_box;
+
+fn random_spd(n: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg::seeded(seed);
+    let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+    let mut a = b.matmul_nt(&b);
+    for i in 0..n {
+        a[(i, i)] += 1.0;
+    }
+    a
+}
+
+fn main() {
+    let bench = Bench::new("linalg");
+    for &n in &[128usize, 256, 512] {
+        let a = random_spd(n, 1);
+        let stats = bench.run(&format!("eigh_{n}"), || {
+            black_box(eigh(black_box(&a)));
+        });
+        // eigh is ~9n^3 flops for values+vectors
+        bench.throughput(&stats, 9 * n * n * n, "flop");
+    }
+    for &n in &[128usize, 512] {
+        let mut rng = Pcg::seeded(2);
+        let a = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let stats = bench.run(&format!("matmul_{n}"), || {
+            black_box(black_box(&a).matmul(black_box(&b)));
+        });
+        bench.throughput(&stats, 2 * n * n * n, "flop");
+        let stats = bench.run(&format!("matmul_nt_{n}"), || {
+            black_box(black_box(&a).matmul_nt(black_box(&b)));
+        });
+        bench.throughput(&stats, 2 * n * n * n, "flop");
+    }
+    let a = random_spd(256, 3);
+    bench.run("cholesky_256", || {
+        black_box(apnc::linalg::chol::cholesky(black_box(&a)).unwrap());
+    });
+    let c = random_spd(512, 4);
+    bench.run("double_center_512", || {
+        black_box(apnc::linalg::ops::double_center(black_box(&c)));
+    });
+}

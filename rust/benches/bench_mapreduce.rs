@@ -1,0 +1,62 @@
+//! MapReduce engine overhead benchmarks: task dispatch, shuffle cost
+//! accounting, and scaling of the combiner pattern with worker count.
+
+use apnc::bench::Bench;
+use apnc::mapreduce::{Emitter, Engine, EngineConfig, Job, TaskCtx};
+use std::hint::black_box;
+
+/// Minimal job: per-block vector sum, combiner-collapsed.
+struct SumJob;
+impl Job for SumJob {
+    type Input = Vec<f32>;
+    type Key = u32;
+    type Value = Vec<f32>;
+    type Output = Vec<f32>;
+    fn map(&self, _id: usize, input: &Vec<f32>, _ctx: &mut TaskCtx, emit: &mut Emitter<u32, Vec<f32>>) {
+        emit.emit(0, input.clone());
+    }
+    fn combine(&self, _k: &u32, values: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+        let mut acc = values[0].clone();
+        for v in &values[1..] {
+            for (a, b) in acc.iter_mut().zip(v) {
+                *a += b;
+            }
+        }
+        vec![acc]
+    }
+    fn reduce(&self, _k: u32, values: Vec<Vec<f32>>, _ctx: &mut TaskCtx) -> Vec<f32> {
+        self.combine(&0, values).pop().unwrap()
+    }
+}
+
+fn main() {
+    let bench = Bench::new("mapreduce");
+    // dispatch overhead: many empty tasks
+    let empty: Vec<Vec<f32>> = vec![vec![]; 1000];
+    for workers in [1usize, 4, 16] {
+        let engine = Engine::new(EngineConfig::with_workers(workers));
+        let stats = bench.run(&format!("dispatch_1000_tasks_w{workers}"), || {
+            black_box(engine.run_map(black_box(&empty), |_, _, _| 0u64));
+        });
+        bench.throughput(&stats, 1000, "task");
+    }
+    // shuffle + combine with realistic (Z, g)-sized values
+    let blocks: Vec<Vec<f32>> = (0..64).map(|i| vec![i as f32; 4096]).collect();
+    for workers in [1usize, 4, 16] {
+        let engine = Engine::new(EngineConfig::with_workers(workers));
+        let stats = bench.run(&format!("sum_64x4096_w{workers}"), || {
+            black_box(engine.run(&SumJob, black_box(&blocks)));
+        });
+        bench.throughput(&stats, 64 * 4096, "element");
+    }
+    // fault-injected run (retries add re-execution work)
+    let cfg = EngineConfig {
+        workers: 4,
+        faults: apnc::mapreduce::FaultPlan::with_map_failures(0.2, 5),
+        ..Default::default()
+    };
+    let engine = Engine::new(cfg);
+    bench.run("sum_64x4096_faults_p02", || {
+        black_box(engine.run(&SumJob, black_box(&blocks)));
+    });
+}

@@ -1,0 +1,41 @@
+//! End-to-end pipeline benchmark: the full sample → fit → embed → cluster
+//! path at a small-but-real operating point, for both APNC instances.
+//! This is the top-level §Perf number.
+
+use apnc::bench::Bench;
+use apnc::coordinator::driver::{Pipeline, PipelineConfig};
+use apnc::coordinator::sample::SampleMode;
+use apnc::data::registry;
+use apnc::embedding::Method;
+use apnc::runtime::Compute;
+use std::hint::black_box;
+
+fn main() {
+    let bench = Bench::new("pipeline").with_iters(1, 3);
+    let ds = registry::generate("covtype", 8_192, 9);
+    let compute = Compute::auto(&Compute::default_artifact_dir());
+    eprintln!(
+        "pipeline bench backend: {}",
+        if compute.is_pjrt() { "pjrt" } else { "reference" }
+    );
+    for method in [Method::Nystrom, Method::StableDist] {
+        let cfg = PipelineConfig {
+            method,
+            l: 256,
+            m: 256,
+            workers: 4,
+            max_iters: 10,
+            tol: 0.0,
+            sample_mode: SampleMode::Exact,
+            seed: 9,
+            ..Default::default()
+        };
+        let stats = bench.run(&format!("covtype8k_{}", method.label()), || {
+            let out = Pipeline::with_compute(cfg.clone(), compute.clone())
+                .run(black_box(&ds))
+                .unwrap();
+            black_box(out.nmi);
+        });
+        bench.throughput(&stats, ds.n, "point");
+    }
+}

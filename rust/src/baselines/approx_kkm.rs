@@ -1,0 +1,262 @@
+//! Approximate kernel k-means (Chitta, Jin, Havens & Jain [7]).
+//!
+//! Centroids are restricted to the span of `l` sampled points:
+//! `phibar_c = sum_j alpha_cj phi(L_j)`. Given assignments, the optimal
+//! coefficients solve `K_LL alpha_c = (1/n_c) sum_{i in c} K_{L,i}`, and
+//! the assignment distance is
+//! `d(i, c) = K_ii - 2 alpha_c . K_{L,i} + alpha_c^T K_LL alpha_c`.
+//! Space is O(n l), time O(n l k + l^2 k) per iteration — the baseline the
+//! paper compares against in Table 2 ("Approx KKM").
+
+use super::BaselineOut;
+use crate::kernels::Kernel;
+use crate::linalg::chol::{cholesky, solve_chol};
+use crate::linalg::Matrix;
+use crate::rng::Pcg;
+
+/// Configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ApproxKkmConfig {
+    pub k: usize,
+    /// sample size l
+    pub l: usize,
+    pub max_iters: usize,
+    pub tol: f64,
+    pub seed: u64,
+    pub restarts: usize,
+    /// ridge added to K_LL for the solve (numerical stability)
+    pub ridge: f64,
+}
+
+impl Default for ApproxKkmConfig {
+    fn default() -> Self {
+        ApproxKkmConfig {
+            k: 10,
+            l: 100,
+            max_iters: 50,
+            tol: 1e-6,
+            seed: 0xA44,
+            restarts: 1,
+            ridge: 1e-8,
+        }
+    }
+}
+
+fn run_once(
+    x: &[f32],
+    n: usize,
+    d: usize,
+    kernel: Kernel,
+    cfg: &ApproxKkmConfig,
+    seed: u64,
+) -> BaselineOut {
+    let k = cfg.k;
+    let mut rng = Pcg::new(seed, 0xA55);
+    let l = cfg.l.min(n);
+    // sample l points uniformly
+    let idx = rng.choose(n, l);
+    let samples: Vec<f32> = idx.iter().flat_map(|&i| x[i * d..(i + 1) * d].iter().copied()).collect();
+    // K_LL (+ ridge) and its Cholesky factor. The neural (tanh) kernel is
+    // indefinite, so K_LL can have negative eigenvalues: grow the ridge
+    // geometrically until the factorization succeeds (Gershgorin bounds
+    // guarantee termination once ridge > l * max|K_ij|).
+    let k_ll_raw = kernel.gram(&samples, d);
+    let max_abs = k_ll_raw.max_abs().max(1.0);
+    let mut ridge = cfg.ridge.max(1e-12);
+    let factor = loop {
+        let mut k_ll = k_ll_raw.clone();
+        for i in 0..l {
+            k_ll[(i, i)] += ridge * max_abs;
+        }
+        if let Some(f) = cholesky(&k_ll) {
+            break f;
+        }
+        ridge *= 100.0;
+        assert!(
+            ridge <= 10.0 * l as f64,
+            "cholesky of K_LL failed even with ridge {ridge}"
+        );
+    };
+    // K_B = kernel block between all points and samples: (n, l)
+    let kb = kernel.block(x, &samples, d);
+    // diagonal K_ii
+    let diag: Vec<f64> = (0..n)
+        .map(|i| kernel.eval(&x[i * d..(i + 1) * d], &x[i * d..(i + 1) * d]))
+        .collect();
+
+    // init: random assignment from kernel-space k-means++ over the sample,
+    // then one propagation (cheap and robust)
+    let mut labels: Vec<u32> = {
+        let seeds = rng.choose(n, k);
+        (0..n)
+            .map(|i| {
+                let mut bc = 0u32;
+                let mut bd = f64::INFINITY;
+                for (c, &s) in seeds.iter().enumerate() {
+                    // distance through the sampled block (approximate)
+                    let mut dist = diag[i] + diag[s];
+                    let kbi = kb.row(i);
+                    let kbs = kb.row(s);
+                    let mut cross = 0.0;
+                    for j in 0..l {
+                        cross += kbi[j] * kbs[j];
+                    }
+                    dist -= 2.0 * cross / l as f64;
+                    if dist < bd {
+                        bd = dist;
+                        bc = c as u32;
+                    }
+                }
+                bc
+            })
+            .collect()
+    };
+
+    let mut obj = f64::INFINITY;
+    let mut iters_run = 0;
+    let mut alpha = Matrix::zeros(k, l);
+    for _ in 0..cfg.max_iters {
+        iters_run += 1;
+        // update alpha_c = K_LL^{-1} mean_{i in c} K_{L,i}
+        let mut counts = vec![0usize; k];
+        let mut mean_kb = vec![0.0f64; k * l];
+        for i in 0..n {
+            let c = labels[i] as usize;
+            counts[c] += 1;
+            let row = kb.row(i);
+            for j in 0..l {
+                mean_kb[c * l + j] += row[j];
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                continue;
+            }
+            for j in 0..l {
+                mean_kb[c * l + j] /= counts[c] as f64;
+            }
+            let sol = solve_chol(&factor, &mean_kb[c * l..(c + 1) * l]);
+            alpha.row_mut(c).copy_from_slice(&sol);
+        }
+        // centroid self-terms alpha_c^T K_LL alpha_c = alpha_c . mean_kb_c
+        // (since K_LL alpha_c = mean_kb_c)
+        let self_term: Vec<f64> = (0..k)
+            .map(|c| {
+                alpha
+                    .row(c)
+                    .iter()
+                    .zip(&mean_kb[c * l..(c + 1) * l])
+                    .map(|(a, b)| a * b)
+                    .sum()
+            })
+            .collect();
+        // assignment
+        let mut new_obj = 0.0;
+        let mut changed = false;
+        for i in 0..n {
+            let row = kb.row(i);
+            let mut bd = f64::INFINITY;
+            let mut bc = labels[i];
+            for c in 0..k {
+                if counts[c] == 0 {
+                    continue;
+                }
+                let mut cross = 0.0;
+                for j in 0..l {
+                    cross += alpha[(c, j)] * row[j];
+                }
+                let dist = diag[i] - 2.0 * cross + self_term[c];
+                if dist < bd {
+                    bd = dist;
+                    bc = c as u32;
+                }
+            }
+            if bc != labels[i] {
+                labels[i] = bc;
+                changed = true;
+            }
+            new_obj += bd.max(0.0);
+        }
+        if !changed || (obj.is_finite() && (obj - new_obj).abs() / obj.max(1e-12) < cfg.tol) {
+            obj = new_obj;
+            break;
+        }
+        obj = new_obj;
+    }
+    BaselineOut { labels, objective: obj, iters_run }
+}
+
+/// Approx KKM over raw points.
+pub fn cluster(x: &[f32], n: usize, d: usize, kernel: Kernel, cfg: &ApproxKkmConfig) -> BaselineOut {
+    assert_eq!(x.len(), n * d);
+    assert!(cfg.k >= 1 && cfg.k <= n);
+    let mut best: Option<BaselineOut> = None;
+    for attempt in 0..cfg.restarts.max(1) {
+        let out = run_once(x, n, d, kernel, cfg, cfg.seed.wrapping_add(attempt as u64 * 104729));
+        if best.as_ref().map_or(true, |b| out.objective < b.objective) {
+            best = Some(out);
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::metrics::nmi;
+
+    #[test]
+    fn tracks_exact_kkm_on_folded_manifold() {
+        // Approx KKM restricts centroids to span(phi(L)); with a decent l
+        // it should track exact kernel k-means closely (Chitta et al. [7])
+        let ds = synth::gaussian_manifold("f", 400, 6, 3, 3, 0.45, 0.0, synth::Warp::Fold, 6);
+        let mut rng = Pcg::seeded(2);
+        let gamma = 10.0 * crate::kernels::self_tune_gamma(&ds.x, ds.d, &mut rng);
+        let approx = cluster(
+            &ds.x,
+            ds.n,
+            ds.d,
+            Kernel::Rbf { gamma },
+            &ApproxKkmConfig { k: 3, l: 100, restarts: 5, ..Default::default() },
+        );
+        let nmi_approx = nmi(&approx.labels, &ds.labels);
+        assert!(nmi_approx > 0.85, "approx kkm nmi {nmi_approx}");
+    }
+
+    #[test]
+    fn quality_improves_with_l() {
+        // Table 2's qualitative trend: larger l, better (or equal) NMI
+        let ds = synth::gaussian_manifold("g", 500, 8, 5, 4, 0.45, 0.2, synth::Warp::Tanh, 16);
+        let mut rng = Pcg::seeded(3);
+        let gamma = crate::kernels::self_tune_gamma(&ds.x, ds.d, &mut rng);
+        let mut scores = Vec::new();
+        for l in [10, 50, 200] {
+            let out = cluster(
+                &ds.x,
+                ds.n,
+                ds.d,
+                Kernel::Rbf { gamma },
+                &ApproxKkmConfig { k: 5, l, restarts: 3, ..Default::default() },
+            );
+            scores.push(nmi(&out.labels, &ds.labels));
+        }
+        assert!(
+            scores[2] >= scores[0] - 0.05,
+            "NMI should not collapse as l grows: {scores:?}"
+        );
+    }
+
+    #[test]
+    fn l_capped_at_n() {
+        let ds = synth::moons("m", 60, 2, 0.05, 17);
+        let out = cluster(
+            &ds.x,
+            ds.n,
+            ds.d,
+            Kernel::Rbf { gamma: 1.0 },
+            &ApproxKkmConfig { k: 2, l: 500, ..Default::default() },
+        );
+        assert_eq!(out.labels.len(), 60);
+    }
+}

@@ -1,0 +1,191 @@
+//! Plain k-means (Lloyd's algorithm) over dense f32 rows, with k-means++
+//! initialization. The vector-space substrate for the RFF baselines and
+//! the "k-means fails on nonlinear structure" sanity comparisons.
+
+use super::BaselineOut;
+use crate::rng::Pcg;
+
+/// Configuration for a Lloyd run.
+#[derive(Clone, Copy, Debug)]
+pub struct LloydConfig {
+    pub k: usize,
+    pub max_iters: usize,
+    pub tol: f64,
+    pub seed: u64,
+    pub restarts: usize,
+}
+
+impl Default for LloydConfig {
+    fn default() -> Self {
+        LloydConfig { k: 10, max_iters: 50, tol: 1e-6, seed: 0x11_0D, restarts: 1 }
+    }
+}
+
+/// k-means++ seeding over rows of `x`.
+fn kpp_init(x: &[f32], n: usize, d: usize, k: usize, rng: &mut Pcg) -> Vec<f64> {
+    let mut centroids = vec![0.0f64; k * d];
+    let first = rng.below(n);
+    for j in 0..d {
+        centroids[j] = x[first * d + j] as f64;
+    }
+    let sqd = |row: usize, cent: &[f64]| -> f64 {
+        let mut s = 0.0;
+        for j in 0..d {
+            let diff = x[row * d + j] as f64 - cent[j];
+            s += diff * diff;
+        }
+        s
+    };
+    let mut best: Vec<f64> = (0..n).map(|r| sqd(r, &centroids[..d])).collect();
+    for c in 1..k {
+        let total: f64 = best.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut target = rng.f64() * total;
+            let mut chosen = n - 1;
+            for (r, &w) in best.iter().enumerate() {
+                target -= w;
+                if target <= 0.0 {
+                    chosen = r;
+                    break;
+                }
+            }
+            chosen
+        };
+        for j in 0..d {
+            centroids[c * d + j] = x[pick * d + j] as f64;
+        }
+        for r in 0..n {
+            let dnew = sqd(r, &centroids[c * d..(c + 1) * d]);
+            if dnew < best[r] {
+                best[r] = dnew;
+            }
+        }
+    }
+    centroids
+}
+
+/// One full Lloyd run from a given seed.
+fn run_once(x: &[f32], n: usize, d: usize, cfg: &LloydConfig, seed: u64) -> BaselineOut {
+    let k = cfg.k;
+    let mut rng = Pcg::new(seed, 0x110);
+    let mut centroids = kpp_init(x, n, d, k, &mut rng);
+    let mut labels = vec![0u32; n];
+    let mut obj = f64::INFINITY;
+    let mut iters_run = 0;
+    for _ in 0..cfg.max_iters {
+        iters_run += 1;
+        // assign
+        let mut new_obj = 0.0;
+        for r in 0..n {
+            let row = &x[r * d..(r + 1) * d];
+            let mut best = f64::INFINITY;
+            let mut best_c = 0u32;
+            for c in 0..k {
+                let cent = &centroids[c * d..(c + 1) * d];
+                let mut s = 0.0;
+                for j in 0..d {
+                    let diff = row[j] as f64 - cent[j];
+                    s += diff * diff;
+                }
+                if s < best {
+                    best = s;
+                    best_c = c as u32;
+                }
+            }
+            labels[r] = best_c;
+            new_obj += best;
+        }
+        // update
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0usize; k];
+        for r in 0..n {
+            let c = labels[r] as usize;
+            counts[c] += 1;
+            for j in 0..d {
+                sums[c * d + j] += x[r * d + j] as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for j in 0..d {
+                    centroids[c * d + j] = sums[c * d + j] / counts[c] as f64;
+                }
+            }
+        }
+        if obj.is_finite() && (obj - new_obj).abs() / obj.max(1e-12) < cfg.tol {
+            obj = new_obj;
+            break;
+        }
+        obj = new_obj;
+    }
+    BaselineOut { labels, objective: obj, iters_run }
+}
+
+/// k-means over rows of `x` ((n, d) row-major), best of `restarts`.
+pub fn cluster(x: &[f32], n: usize, d: usize, cfg: &LloydConfig) -> BaselineOut {
+    assert_eq!(x.len(), n * d);
+    assert!(cfg.k >= 1 && cfg.k <= n, "bad k");
+    let mut best: Option<BaselineOut> = None;
+    for attempt in 0..cfg.restarts.max(1) {
+        let out = run_once(x, n, d, cfg, cfg.seed.wrapping_add(attempt as u64 * 7919));
+        if best.as_ref().map_or(true, |b| out.objective < b.objective) {
+            best = Some(out);
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::nmi;
+
+    fn blobs(n_per: usize, d: usize, k: usize, seed: u64) -> (Vec<f32>, Vec<u32>, usize) {
+        let mut rng = Pcg::seeded(seed);
+        let mut x = Vec::new();
+        let mut truth = Vec::new();
+        for c in 0..k {
+            for _ in 0..n_per {
+                for j in 0..d {
+                    let center = if j % k == c { 6.0 } else { 0.0 };
+                    x.push(center as f32 + 0.4 * rng.normal() as f32);
+                }
+                truth.push(c as u32);
+            }
+        }
+        (x, truth, n_per * k)
+    }
+
+    #[test]
+    fn separates_blobs() {
+        let (x, truth, n) = blobs(80, 5, 4, 1);
+        let out = cluster(&x, n, 5, &LloydConfig { k: 4, restarts: 3, ..Default::default() });
+        assert!(nmi(&out.labels, &truth) > 0.95);
+    }
+
+    #[test]
+    fn objective_decreases_with_k() {
+        let (x, _, n) = blobs(50, 4, 3, 2);
+        let o2 = cluster(&x, n, 4, &LloydConfig { k: 2, restarts: 2, ..Default::default() });
+        let o6 = cluster(&x, n, 4, &LloydConfig { k: 6, restarts: 2, ..Default::default() });
+        assert!(o6.objective < o2.objective);
+    }
+
+    #[test]
+    fn deterministic() {
+        let (x, _, n) = blobs(30, 3, 3, 3);
+        let cfg = LloydConfig { k: 3, ..Default::default() };
+        let a = cluster(&x, n, 3, &cfg);
+        let b = cluster(&x, n, 3, &cfg);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn k_equals_n_degenerate() {
+        let (x, _, n) = blobs(2, 2, 2, 4);
+        let out = cluster(&x, n, 2, &LloydConfig { k: n, max_iters: 5, ..Default::default() });
+        assert_eq!(out.labels.len(), n);
+    }
+}

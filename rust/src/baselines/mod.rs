@@ -1,0 +1,31 @@
+//! Comparison methods from the paper's evaluation (Section 9).
+//!
+//! All of these are *centralized* algorithms, matching how the paper ran
+//! them (MATLAB, single machine, Table 2) — only APNC itself is
+//! distributed. Implemented:
+//!
+//! * [`lloyd`]      — plain k-means (substrate for the RFF baselines and a
+//!   vector-space sanity baseline)
+//! * [`kkmeans`]    — exact kernel k-means (Dhillon et al. [11]), the
+//!   quadratic-cost gold standard APNC approximates
+//! * [`approx_kkm`] — Approx KKM (Chitta et al. [7]): centroids restricted
+//!   to the span of l sampled points
+//! * [`rff`]        — Random Fourier Features k-means and its SV-RFF
+//!   variant (Chitta et al. [8]); RBF kernels only, like the paper
+//! * [`two_stage`]  — the 2-Stages sanity baseline of Table 3: exact
+//!   kernel k-means on a sample, labels propagated by nearest centroid
+
+pub mod approx_kkm;
+pub mod kkmeans;
+pub mod lloyd;
+pub mod rff;
+pub mod two_stage;
+
+/// Common result shape for every baseline.
+#[derive(Clone, Debug)]
+pub struct BaselineOut {
+    pub labels: Vec<u32>,
+    /// final clustering objective in whatever space the method optimizes
+    pub objective: f64,
+    pub iters_run: usize,
+}

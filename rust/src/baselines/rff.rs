@@ -1,0 +1,186 @@
+//! Random-Fourier-Features kernel k-means baselines (Chitta, Jin & Jain
+//! [8]; features per Rahimi & Recht [29]).
+//!
+//! For a shift-invariant RBF kernel `k(x,z) = exp(-gamma ||x-z||^2)`, draw
+//! `w ~ N(0, 2 gamma I)` and `b ~ U[0, 2 pi)`; the feature
+//! `z(x) = sqrt(2/D) cos(w.x + b)` satisfies `E[z(x) z(z)] = k(x,z)`.
+//!
+//! * **RFF**: plain k-means on the D-dim feature matrix.
+//! * **SV-RFF**: k-means on the top-k left singular vectors of the feature
+//!   matrix (computed via the D x D covariance eigendecomposition) — the
+//!   cheaper, spectral-flavored variant from [8].
+//!
+//! Like the paper notes, these apply to shift-invariant kernels only; the
+//! harness only runs them on RBF configurations (PIE / ImageNet rows of
+//! Table 2).
+
+use super::lloyd::{self, LloydConfig};
+use super::BaselineOut;
+use crate::linalg::{eigh, Matrix};
+use crate::rng::Pcg;
+
+/// Configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct RffConfig {
+    pub k: usize,
+    /// number of fourier features D (the paper uses 500 features ->
+    /// 1000-dim embeddings counting cos/sin pairs; we use cos+phase)
+    pub features: usize,
+    pub gamma: f32,
+    pub max_iters: usize,
+    pub seed: u64,
+    pub restarts: usize,
+}
+
+impl Default for RffConfig {
+    fn default() -> Self {
+        RffConfig { k: 10, features: 500, gamma: 0.1, max_iters: 50, seed: 0x4FF, restarts: 1 }
+    }
+}
+
+/// Compute the (n, D) random fourier feature matrix.
+pub fn features(x: &[f32], n: usize, d: usize, cfg: &RffConfig) -> Vec<f32> {
+    let dd = cfg.features;
+    let mut rng = Pcg::new(cfg.seed, 0x4FF1);
+    // w ~ N(0, 2 gamma I): scale = sqrt(2 gamma)
+    let scale = (2.0 * cfg.gamma as f64).sqrt();
+    let w: Vec<f64> = (0..dd * d).map(|_| scale * rng.normal()).collect();
+    let b: Vec<f64> = (0..dd).map(|_| rng.uniform(0.0, std::f64::consts::TAU)).collect();
+    let amp = (2.0 / dd as f64).sqrt();
+    let mut z = vec![0.0f32; n * dd];
+    for i in 0..n {
+        let xi = &x[i * d..(i + 1) * d];
+        let zrow = &mut z[i * dd..(i + 1) * dd];
+        for j in 0..dd {
+            let wrow = &w[j * d..(j + 1) * d];
+            let mut dot = b[j];
+            for (a, ww) in xi.iter().zip(wrow) {
+                dot += *a as f64 * ww;
+            }
+            zrow[j] = (amp * dot.cos()) as f32;
+        }
+    }
+    z
+}
+
+/// RFF baseline: k-means over the random fourier features.
+pub fn cluster(x: &[f32], n: usize, d: usize, cfg: &RffConfig) -> BaselineOut {
+    assert_eq!(x.len(), n * d);
+    let z = features(x, n, d, cfg);
+    lloyd::cluster(
+        &z,
+        n,
+        cfg.features,
+        &LloydConfig {
+            k: cfg.k,
+            max_iters: cfg.max_iters,
+            seed: cfg.seed ^ 0x55,
+            restarts: cfg.restarts,
+            ..Default::default()
+        },
+    )
+}
+
+/// SV-RFF baseline: k-means over the top-k left singular directions of the
+/// feature matrix (projected coordinates), per Chitta et al. [8].
+pub fn cluster_sv(x: &[f32], n: usize, d: usize, cfg: &RffConfig) -> BaselineOut {
+    assert_eq!(x.len(), n * d);
+    let dd = cfg.features;
+    let z = features(x, n, d, cfg);
+    // covariance C = Z^T Z (D, D); top-k eigenvectors = right singular
+    // vectors V; projected coords = Z V (n, k) span the top left singular
+    // directions.
+    let mut cov = Matrix::zeros(dd, dd);
+    for i in 0..n {
+        let zi = &z[i * dd..(i + 1) * dd];
+        for a in 0..dd {
+            let za = zi[a] as f64;
+            if za == 0.0 {
+                continue;
+            }
+            let row = cov.row_mut(a);
+            for (b, zb) in zi.iter().enumerate() {
+                row[b] += za * *zb as f64;
+            }
+        }
+    }
+    let dec = eigh(&cov);
+    let top = dec.top_indices(cfg.k.min(dd));
+    let kk = top.len();
+    let mut proj = vec![0.0f32; n * kk];
+    for i in 0..n {
+        let zi = &z[i * dd..(i + 1) * dd];
+        for (c, &j) in top.iter().enumerate() {
+            let mut acc = 0.0f64;
+            for a in 0..dd {
+                acc += zi[a] as f64 * dec.vectors[(a, j)];
+            }
+            proj[i * kk + c] = acc as f32;
+        }
+    }
+    lloyd::cluster(
+        &proj,
+        n,
+        kk,
+        &LloydConfig {
+            k: cfg.k,
+            max_iters: cfg.max_iters,
+            seed: cfg.seed ^ 0x56,
+            restarts: cfg.restarts,
+            ..Default::default()
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::kernels::Kernel;
+    use crate::metrics::nmi;
+
+    #[test]
+    fn features_approximate_rbf_kernel() {
+        let mut rng = Pcg::seeded(30);
+        let (n, d) = (40, 5);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let gamma = 0.2f32;
+        let cfg = RffConfig { features: 4000, gamma, seed: 31, ..Default::default() };
+        let z = features(&x, n, d, &cfg);
+        let kernel = Kernel::Rbf { gamma };
+        let dd = cfg.features;
+        let mut max_err = 0.0f64;
+        for i in 0..n {
+            for j in 0..n {
+                let want = kernel.eval(&x[i * d..(i + 1) * d], &x[j * d..(j + 1) * d]);
+                let got: f64 = (0..dd)
+                    .map(|c| z[i * dd + c] as f64 * z[j * dd + c] as f64)
+                    .sum();
+                max_err = max_err.max((want - got).abs());
+            }
+        }
+        // Monte-Carlo estimate with 4000 features: O(1/sqrt(D)) error
+        assert!(max_err < 0.12, "max kernel approx error {max_err}");
+    }
+
+    #[test]
+    fn clusters_gaussian_blobs() {
+        let ds = synth::gaussian_manifold("g", 300, 6, 3, 3, 0.25, 0.0, synth::Warp::None, 32);
+        let mut rng = Pcg::seeded(33);
+        let gamma = crate::kernels::self_tune_gamma(&ds.x, ds.d, &mut rng);
+        let cfg = RffConfig { k: 3, features: 256, gamma, restarts: 3, seed: 34, ..Default::default() };
+        let out = cluster(&ds.x, ds.n, ds.d, &cfg);
+        assert!(nmi(&out.labels, &ds.labels) > 0.8, "nmi {}", nmi(&out.labels, &ds.labels));
+        let sv = cluster_sv(&ds.x, ds.n, ds.d, &cfg);
+        assert!(nmi(&sv.labels, &ds.labels) > 0.8, "sv nmi {}", nmi(&sv.labels, &ds.labels));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let ds = synth::moons("m", 100, 2, 0.06, 35);
+        let cfg = RffConfig { k: 2, features: 64, gamma: 1.0, seed: 36, ..Default::default() };
+        let a = cluster(&ds.x, ds.n, ds.d, &cfg);
+        let b = cluster(&ds.x, ds.n, ds.d, &cfg);
+        assert_eq!(a.labels, b.labels);
+    }
+}

@@ -1,0 +1,156 @@
+//! The 2-Stages baseline of Table 3 (per Chitta et al. [7]).
+//!
+//! Stage 1: exact kernel k-means on a sample of l points.
+//! Stage 2: propagate labels to all points by assigning each to the
+//! sample-cluster with the nearest kernel-space centroid:
+//!   d(i, c) = K_ii - (2/n_c) sum_{a in P_c} K_{i,a} + const_c
+//! which needs only the (n, l) kernel block against the sample — the
+//! "sanity check" the paper uses to show APNC's accuracy gain is real.
+
+use super::kkmeans::{self, KkmConfig};
+use super::BaselineOut;
+use crate::kernels::Kernel;
+use crate::rng::Pcg;
+
+/// Configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TwoStageConfig {
+    pub k: usize,
+    pub l: usize,
+    pub max_iters: usize,
+    pub seed: u64,
+    pub restarts: usize,
+}
+
+impl Default for TwoStageConfig {
+    fn default() -> Self {
+        TwoStageConfig { k: 10, l: 100, max_iters: 50, seed: 0x25, restarts: 1 }
+    }
+}
+
+/// Run the 2-Stages method.
+pub fn cluster(x: &[f32], n: usize, d: usize, kernel: Kernel, cfg: &TwoStageConfig) -> BaselineOut {
+    assert_eq!(x.len(), n * d);
+    let l = cfg.l.min(n);
+    let mut rng = Pcg::new(cfg.seed, 0x2511);
+    let idx = rng.choose(n, l);
+    let samples: Vec<f32> =
+        idx.iter().flat_map(|&i| x[i * d..(i + 1) * d].iter().copied()).collect();
+
+    // stage 1 cannot produce more clusters than it has sample points; with
+    // k > l the method degrades to l clusters (a real limitation of the
+    // 2-Stages baseline the paper's Table 3 setup avoids by using l >= 500)
+    let k_eff = cfg.k.min(l);
+
+    // stage 1: exact kernel k-means on the sample
+    let stage1 = kkmeans::cluster(
+        &samples,
+        l,
+        d,
+        kernel,
+        &KkmConfig {
+            k: k_eff,
+            max_iters: cfg.max_iters,
+            seed: cfg.seed ^ 0x77,
+            restarts: cfg.restarts,
+            ..Default::default()
+        },
+    );
+
+    // per-cluster constant: (1/n_c^2) sum_{a,b in c} K_ab over the sample
+    let k_ll = kernel.gram(&samples, d);
+    let k = k_eff;
+    let mut counts = vec![0usize; k];
+    for &c in &stage1.labels {
+        counts[c as usize] += 1;
+    }
+    let mut within = vec![0.0f64; k];
+    for i in 0..l {
+        for j in 0..l {
+            if stage1.labels[i] == stage1.labels[j] {
+                within[stage1.labels[i] as usize] += k_ll[(i, j)];
+            }
+        }
+    }
+
+    // stage 2: propagate to all points via the (n, l) block
+    let kb = kernel.block(x, &samples, d);
+    let mut labels = vec![0u32; n];
+    let mut obj = 0.0f64;
+    for i in 0..n {
+        let diag = kernel.eval(&x[i * d..(i + 1) * d], &x[i * d..(i + 1) * d]);
+        let row = kb.row(i);
+        let mut cross = vec![0.0f64; k];
+        for (j, &v) in row.iter().enumerate() {
+            cross[stage1.labels[j] as usize] += v;
+        }
+        let mut bd = f64::INFINITY;
+        let mut bc = 0u32;
+        for c in 0..k {
+            if counts[c] == 0 {
+                continue;
+            }
+            let nc = counts[c] as f64;
+            let dist = diag - 2.0 * cross[c] / nc + within[c] / (nc * nc);
+            if dist < bd {
+                bd = dist;
+                bc = c as u32;
+            }
+        }
+        labels[i] = bc;
+        obj += bd.max(0.0);
+    }
+    BaselineOut { labels, objective: obj, iters_run: stage1.iters_run }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::metrics::nmi;
+
+    #[test]
+    fn propagation_recovers_easy_clusters() {
+        let ds = synth::gaussian_manifold("g", 500, 6, 4, 3, 0.2, 0.0, synth::Warp::None, 40);
+        let mut rng = Pcg::seeded(41);
+        let gamma = crate::kernels::self_tune_gamma(&ds.x, ds.d, &mut rng);
+        let out = cluster(
+            &ds.x,
+            ds.n,
+            ds.d,
+            Kernel::Rbf { gamma },
+            &TwoStageConfig { k: 4, l: 120, restarts: 3, ..Default::default() },
+        );
+        assert!(nmi(&out.labels, &ds.labels) > 0.85, "nmi {}", nmi(&out.labels, &ds.labels));
+    }
+
+    #[test]
+    fn sample_members_keep_their_stage1_cluster_structure() {
+        // points identical to sampled ones must land in that sample's cluster
+        let ds = synth::moons("m", 200, 2, 0.05, 42);
+        let out = cluster(
+            &ds.x,
+            ds.n,
+            ds.d,
+            Kernel::Rbf { gamma: 5.0 },
+            &TwoStageConfig { k: 2, l: 80, restarts: 2, ..Default::default() },
+        );
+        assert_eq!(out.labels.len(), 200);
+        // both clusters populated
+        let c0 = out.labels.iter().filter(|&&c| c == 0).count();
+        assert!(c0 > 10 && c0 < 190, "degenerate propagation: {c0}");
+    }
+
+    #[test]
+    fn small_l_degrades_vs_large_l() {
+        // Table 3's qualitative story: 2-Stages is bounded by its sample
+        let ds = synth::gaussian_manifold("g", 600, 8, 6, 4, 0.5, 0.4, synth::Warp::Tanh, 43);
+        let mut rng = Pcg::seeded(44);
+        let gamma = crate::kernels::self_tune_gamma(&ds.x, ds.d, &mut rng);
+        let tiny = cluster(&ds.x, ds.n, ds.d, Kernel::Rbf { gamma }, &TwoStageConfig { k: 6, l: 12, restarts: 3, ..Default::default() });
+        let big = cluster(&ds.x, ds.n, ds.d, Kernel::Rbf { gamma }, &TwoStageConfig { k: 6, l: 300, restarts: 3, ..Default::default() });
+        let nmi_tiny = nmi(&tiny.labels, &ds.labels);
+        let nmi_big = nmi(&big.labels, &ds.labels);
+        assert!(nmi_big > nmi_tiny - 0.05, "l=300 ({nmi_big}) should beat l=12 ({nmi_tiny})");
+    }
+}

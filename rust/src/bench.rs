@@ -1,0 +1,118 @@
+//! Minimal benchmark harness (the container has no criterion).
+//!
+//! Benches are `harness = false` binaries that call [`Bench::run`] per
+//! case: warmup iterations, then timed iterations, reporting min / median /
+//! p95 / mean. Output format is one line per case, grep-friendly for
+//! EXPERIMENTS.md section Perf.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark suite (a named group of cases).
+pub struct Bench {
+    suite: String,
+    warmup: usize,
+    iters: usize,
+    min_time: Duration,
+}
+
+/// Summary statistics for a case.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub mean: Duration,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        // APNC_BENCH_FAST=1 shrinks every suite (used by `cargo test`-adjacent
+        // smoke checks and CI-style runs).
+        let fast = std::env::var("APNC_BENCH_FAST").is_ok();
+        Bench {
+            suite: suite.to_string(),
+            warmup: if fast { 1 } else { 3 },
+            iters: if fast { 3 } else { 10 },
+            min_time: Duration::from_millis(if fast { 10 } else { 200 }),
+        }
+    }
+
+    pub fn with_iters(mut self, warmup: usize, iters: usize) -> Self {
+        self.warmup = warmup;
+        self.iters = iters;
+        self
+    }
+
+    /// Run one case; `f` is the measured closure (use `std::hint::black_box`
+    /// on inputs/outputs at the call site).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        let started = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+            if samples.len() >= self.iters && started.elapsed() >= self.min_time {
+                break;
+            }
+            if samples.len() >= self.iters * 20 {
+                break; // very fast case: enough samples
+            }
+        }
+        samples.sort();
+        let p95_idx = ((samples.len() - 1) * 95) / 100;
+        let stats = Stats {
+            name: name.to_string(),
+            iters: samples.len(),
+            min: samples[0],
+            median: samples[samples.len() / 2],
+            p95: samples[p95_idx],
+            mean: samples.iter().sum::<Duration>() / samples.len() as u32,
+        };
+        println!(
+            "bench {suite}/{name}: iters={iters} min={min:?} median={median:?} p95={p95:?} mean={mean:?}",
+            suite = self.suite,
+            name = stats.name,
+            iters = stats.iters,
+            min = stats.min,
+            median = stats.median,
+            p95 = stats.p95,
+            mean = stats.mean,
+        );
+        stats
+    }
+
+    /// Report a derived throughput line (items/sec based on median).
+    pub fn throughput(&self, stats: &Stats, items: usize, unit: &str) {
+        let per_sec = items as f64 / stats.median.as_secs_f64();
+        println!(
+            "bench {suite}/{name}: throughput={per_sec:.1} {unit}/s (items={items})",
+            suite = self.suite,
+            name = stats.name,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_collects_samples() {
+        std::env::set_var("APNC_BENCH_FAST", "1");
+        let b = Bench::new("test").with_iters(1, 3);
+        let mut count = 0u64;
+        let stats = b.run("noop", || {
+            count += 1;
+            std::hint::black_box(count);
+        });
+        assert!(stats.iters >= 3);
+        assert!(stats.min <= stats.median && stats.median <= stats.p95.max(stats.median));
+        assert!(count as usize >= stats.iters);
+    }
+}

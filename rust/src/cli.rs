@@ -1,0 +1,147 @@
+//! Minimal command-line argument parser (the container has no clap).
+//!
+//! Grammar: `repro <subcommand> [--flag value | --switch] [positional...]`.
+//! Flags may appear in any order; `--flag=value` is also accepted.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    /// flags that were present without a value (switches)
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next().unwrap();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bad flag '--'");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated usize list.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|tok| {
+                    tok.trim()
+                        .parse()
+                        .map_err(|_| anyhow!("--{name} expects comma-separated integers"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        // grammar note: a bare `--switch` followed by a non-flag token would
+        // consume it as a value; positionals go before flags (or use `=`)
+        let a = parse(&["table2", "extra", "--runs", "5", "--scale=0.5", "--verbose"]);
+        assert_eq!(a.subcommand, "table2");
+        assert_eq!(a.usize_or("runs", 1).unwrap(), 5);
+        assert_eq!(a.f64_or("scale", 1.0).unwrap(), 0.5);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["run"]);
+        assert_eq!(a.usize_or("l", 256).unwrap(), 256);
+        assert_eq!(a.get_or("dataset", "rings"), "rings");
+    }
+
+    #[test]
+    fn lists_parse() {
+        let a = parse(&["table3", "--l-values", "500,1000,1500"]);
+        assert_eq!(a.usize_list_or("l-values", &[1]).unwrap(), vec![500, 1000, 1500]);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse(&["x", "--runs", "abc"]);
+        assert!(a.usize_or("runs", 1).is_err());
+    }
+
+    #[test]
+    fn switch_before_flag() {
+        let a = parse(&["t", "--fast", "--l", "9"]);
+        assert!(a.has("fast"));
+        assert_eq!(a.usize_or("l", 0).unwrap(), 9);
+    }
+}

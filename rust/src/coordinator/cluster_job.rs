@@ -1,0 +1,438 @@
+//! Clustering job — Algorithm 2 of the paper.
+//!
+//! Lloyd iterations over the embedding matrix. Per iteration:
+//! the centroid matrix `Ȳ` (k, m) is broadcast to every mapper; each
+//! mapper assigns its block's points via the AOT-compiled assign artifact
+//! and keeps the in-memory combiner state `Z` (k, m column sums) and `g`
+//! (k counts). Only one `(Z, g)` pair per mapper crosses the network —
+//! O(workers * m * k) bytes, never O(n) — and a single reducer averages
+//! them into the next `Ȳ` (Algorithm 2 reduce).
+
+use super::DataBlock;
+use crate::mapreduce::{Emitter, Engine, Job, JobMetrics, TaskCtx};
+use crate::rng::Pcg;
+use crate::runtime::{Compute, DistKind};
+use anyhow::Result;
+
+/// Centroid initialization strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Init {
+    /// k distinct uniformly random points
+    Random,
+    /// k-means++ over a leader-side subsample (default; the paper leaves
+    /// initialization unspecified and Lloyd is init-sensitive)
+    KppSample,
+}
+
+/// Clustering configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    pub k: usize,
+    /// maximum Lloyd iterations (the paper's large-scale runs fix 20)
+    pub max_iters: usize,
+    /// relative objective-improvement convergence threshold (0 disables)
+    pub tol: f64,
+    pub seed: u64,
+    pub init: Init,
+    /// independent restarts; the run with the lowest final objective wins
+    pub restarts: usize,
+    /// subsample size for k-means++ initialization
+    pub kpp_cap: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            k: 10,
+            max_iters: 20,
+            tol: 1e-4,
+            seed: 0xC1A5,
+            init: Init::KppSample,
+            restarts: 1,
+            kpp_cap: 10_000,
+        }
+    }
+}
+
+/// Result of the clustering phase.
+pub struct ClusterOut {
+    /// (k, m) final centroid embeddings
+    pub centroids: Vec<f32>,
+    /// final assignment per point (global order)
+    pub labels: Vec<u32>,
+    /// objective value per iteration (masked sum of min distances)
+    pub obj_curve: Vec<f64>,
+    pub iters_run: usize,
+    pub metrics: JobMetrics,
+}
+
+/// One Lloyd iteration as a MapReduce job.
+struct IterJob<'a> {
+    compute: &'a Compute,
+    centroids: &'a [f32],
+    k: usize,
+    m: usize,
+    dist: DistKind,
+}
+
+impl Job for IterJob<'_> {
+    type Input = DataBlock;
+    type Key = u32;
+    /// the paper's combiner state: (Z flattened, g, obj)
+    type Value = (Vec<f32>, Vec<f32>, f64);
+    type Output = (Vec<f32>, Vec<f32>, f64);
+
+    fn map(
+        &self,
+        _id: usize,
+        block: &DataBlock,
+        _ctx: &mut TaskCtx,
+        emit: &mut Emitter<u32, (Vec<f32>, Vec<f32>, f64)>,
+    ) {
+        let out = self
+            .compute
+            .assign(&block.x, block.rows, self.m, self.centroids, self.k, self.dist)
+            .expect("assign artifact execution failed");
+        emit.emit(0, (out.z, out.g, out.obj));
+    }
+
+    fn combine(&self, _key: &u32, values: Vec<Self::Value>) -> Vec<Self::Value> {
+        // within-mapper combiner: sum the (Z, g, obj) triples
+        let mut it = values.into_iter();
+        let (mut z, mut g, mut obj) = it.next().expect("non-empty combine group");
+        for (z2, g2, o2) in it {
+            for (a, b) in z.iter_mut().zip(&z2) {
+                *a += b;
+            }
+            for (a, b) in g.iter_mut().zip(&g2) {
+                *a += b;
+            }
+            obj += o2;
+        }
+        vec![(z, g, obj)]
+    }
+
+    fn reduce(&self, _key: u32, values: Vec<Self::Value>, _ctx: &mut TaskCtx) -> Self::Output {
+        self.combine(&0, values).into_iter().next().unwrap()
+    }
+}
+
+/// Initialize centroids as k distinct points drawn from the embedding
+/// blocks (deterministic in the seed).
+pub fn init_centroids(blocks: &[DataBlock], m: usize, k: usize, seed: u64) -> Vec<f32> {
+    let n: usize = blocks.iter().map(|b| b.rows).sum();
+    assert!(n >= k, "need at least k points to seed centroids");
+    let mut rng = Pcg::new(seed, 0x1417);
+    let picks = rng.choose(n, k);
+    let mut centroids = vec![0.0f32; k * m];
+    for (c, &global) in picks.iter().enumerate() {
+        let blk = blocks
+            .iter()
+            .find(|b| global >= b.start && global < b.start + b.rows)
+            .expect("global index within blocks");
+        let r = global - blk.start;
+        centroids[c * m..(c + 1) * m].copy_from_slice(&blk.x[r * m..(r + 1) * m]);
+    }
+    centroids
+}
+
+/// k-means++ initialization over (a subsample of) the embedding blocks:
+/// each next centroid is drawn with probability proportional to its
+/// distance (in `dist`) to the nearest centroid chosen so far. Runs on
+/// the leader over at most `cap` subsampled points — a standard
+/// compromise; the paper leaves initialization unspecified.
+pub fn init_centroids_kpp(
+    blocks: &[DataBlock],
+    m: usize,
+    k: usize,
+    dist: DistKind,
+    seed: u64,
+    cap: usize,
+) -> Vec<f32> {
+    let n: usize = blocks.iter().map(|b| b.rows).sum();
+    assert!(n >= k, "need at least k points to seed centroids");
+    let mut rng = Pcg::new(seed, 0x144B);
+    // subsample up to `cap` rows into a dense pool
+    let take = n.min(cap.max(k));
+    let picks = rng.choose(n, take);
+    let mut pool = vec![0.0f32; take * m];
+    for (row, &global) in picks.iter().enumerate() {
+        let blk = blocks
+            .iter()
+            .find(|b| global >= b.start && global < b.start + b.rows)
+            .expect("global index within blocks");
+        let r = global - blk.start;
+        pool[row * m..(row + 1) * m].copy_from_slice(&blk.x[r * m..(r + 1) * m]);
+    }
+    let point_dist = |a: &[f32], b: &[f32]| -> f64 {
+        match dist {
+            DistKind::L2Sq => a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| {
+                    let diff = (x - y) as f64;
+                    diff * diff
+                })
+                .sum(),
+            DistKind::L1 => a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).sum(),
+        }
+    };
+    let mut centroids = vec![0.0f32; k * m];
+    let first = rng.below(take);
+    centroids[..m].copy_from_slice(&pool[first * m..(first + 1) * m]);
+    // nearest-centroid distance per pool point, updated incrementally
+    let mut best: Vec<f64> = (0..take)
+        .map(|r| point_dist(&pool[r * m..(r + 1) * m], &centroids[..m]))
+        .collect();
+    for c in 1..k {
+        let total: f64 = best.iter().sum();
+        let next = if total <= 0.0 {
+            rng.below(take) // all points coincide with a centroid
+        } else {
+            let mut target = rng.f64() * total;
+            let mut chosen = take - 1;
+            for (r, &w) in best.iter().enumerate() {
+                target -= w;
+                if target <= 0.0 {
+                    chosen = r;
+                    break;
+                }
+            }
+            chosen
+        };
+        let src = next * m;
+        centroids[c * m..(c + 1) * m].copy_from_slice(&pool[src..src + m]);
+        for r in 0..take {
+            let d = point_dist(&pool[r * m..(r + 1) * m], &pool[src..src + m]);
+            if d < best[r] {
+                best[r] = d;
+            }
+        }
+    }
+    centroids
+}
+
+/// Run Algorithm 2 to convergence (or `max_iters`), with restarts: the
+/// attempt with the lowest final objective wins.
+pub fn run(
+    engine: &Engine,
+    compute: &Compute,
+    blocks: &[DataBlock],
+    m: usize,
+    dist: DistKind,
+    cfg: &ClusterConfig,
+) -> Result<ClusterOut> {
+    let restarts = cfg.restarts.max(1);
+    let mut best: Option<ClusterOut> = None;
+    for attempt in 0..restarts {
+        let seed = cfg.seed.wrapping_add(attempt as u64 * 0x9E37);
+        let mut out = run_once(engine, compute, blocks, m, dist, cfg, seed)?;
+        let better = match &best {
+            None => true,
+            Some(b) => {
+                out.obj_curve.last().copied().unwrap_or(f64::INFINITY)
+                    < b.obj_curve.last().copied().unwrap_or(f64::INFINITY)
+            }
+        };
+        if let Some(b) = &best {
+            // accumulate the cost of all attempts into whichever wins
+            out.metrics.merge(&b.metrics);
+        }
+        if better {
+            best = Some(out);
+        } else if let Some(b) = &mut best {
+            b.metrics = out.metrics;
+        }
+    }
+    Ok(best.expect("restarts >= 1"))
+}
+
+fn run_once(
+    engine: &Engine,
+    compute: &Compute,
+    blocks: &[DataBlock],
+    m: usize,
+    dist: DistKind,
+    cfg: &ClusterConfig,
+    seed: u64,
+) -> Result<ClusterOut> {
+    let k = cfg.k;
+    let mut centroids = match cfg.init {
+        Init::Random => init_centroids(blocks, m, k, seed),
+        Init::KppSample => init_centroids_kpp(blocks, m, k, dist, seed, cfg.kpp_cap),
+    };
+    let mut metrics = JobMetrics::default();
+    let mut obj_curve = Vec::new();
+    let mut iters_run = 0;
+
+    for _ in 0..cfg.max_iters {
+        iters_run += 1;
+        // broadcast Ȳ to every mapper (Algorithm 2 line 4)
+        engine.broadcast_cost(&mut metrics, centroids.len() * 4);
+        let job = IterJob { compute, centroids: &centroids, k, m, dist };
+        let run = engine.run(&job, blocks);
+        metrics.merge(&run.metrics);
+        let (z, g, obj) = run.outputs.into_iter().next().expect("one reduce group");
+        obj_curve.push(obj);
+        // Ȳ_c = Z_c / g_c ; empty clusters keep their previous centroid
+        for c in 0..k {
+            if g[c] > 0.0 {
+                for j in 0..m {
+                    centroids[c * m + j] = z[c * m + j] / g[c];
+                }
+            }
+        }
+        if cfg.tol > 0.0 && obj_curve.len() >= 2 {
+            let prev = obj_curve[obj_curve.len() - 2];
+            let cur = obj_curve[obj_curve.len() - 1];
+            if prev.is_finite() && prev > 0.0 && (prev - cur).abs() / prev < cfg.tol {
+                break;
+            }
+        }
+    }
+
+    // final assignment pass (map-only; labels stay block-local like any
+    // MapReduce output written to the DFS)
+    engine.broadcast_cost(&mut metrics, centroids.len() * 4);
+    let cent_ref = &centroids;
+    let label_run = engine.run_map(blocks, |_id, block: &DataBlock, _ctx| {
+        compute
+            .assign(&block.x, block.rows, m, cent_ref, k, dist)
+            .expect("assign artifact execution failed")
+            .assign
+    });
+    metrics.merge(&label_run.metrics);
+    let mut labels = Vec::with_capacity(blocks.iter().map(|b| b.rows).sum());
+    for block_labels in label_run.outputs {
+        labels.extend(block_labels);
+    }
+
+    Ok(ClusterOut { centroids, labels, obj_curve, iters_run, metrics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::EngineConfig;
+
+    /// Three well-separated gaussian blobs in m-dim embedding space.
+    fn blob_blocks(n_per: usize, m: usize, seed: u64) -> (Vec<DataBlock>, Vec<u32>) {
+        let mut rng = Pcg::seeded(seed);
+        let mut x = Vec::new();
+        let mut truth = Vec::new();
+        for c in 0..3u32 {
+            for _ in 0..n_per {
+                for j in 0..m {
+                    let center = if j % 3 == c as usize { 5.0 } else { 0.0 };
+                    x.push(center + 0.3 * rng.normal() as f32);
+                }
+                truth.push(c);
+            }
+        }
+        // interleave by shuffling both together
+        let n = truth.len();
+        for i in (1..n).rev() {
+            let j = rng.below(i + 1);
+            truth.swap(i, j);
+            for col in 0..m {
+                x.swap(i * m + col, j * m + col);
+            }
+        }
+        (DataBlock::partition(&x, n, m, 64), truth)
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let (blocks, truth) = blob_blocks(60, 6, 1);
+        let engine = Engine::new(EngineConfig::with_workers(3));
+        let out = run(
+            &engine,
+            &Compute::reference(),
+            &blocks,
+            6,
+            DistKind::L2Sq,
+            &ClusterConfig { k: 3, max_iters: 30, tol: 1e-6, seed: 5, ..Default::default() },
+        )
+        .unwrap();
+        let nmi = crate::metrics::nmi(&out.labels, &truth);
+        assert!(nmi > 0.95, "nmi {nmi}");
+        assert_eq!(out.labels.len(), truth.len());
+    }
+
+    #[test]
+    fn objective_monotone_nonincreasing() {
+        let (blocks, _) = blob_blocks(50, 5, 2);
+        let engine = Engine::new(EngineConfig::with_workers(2));
+        let out = run(
+            &engine,
+            &Compute::reference(),
+            &blocks,
+            5,
+            DistKind::L2Sq,
+            &ClusterConfig { k: 4, max_iters: 15, tol: 0.0, seed: 6, ..Default::default() },
+        )
+        .unwrap();
+        for w in out.obj_curve.windows(2) {
+            assert!(w[1] <= w[0] * (1.0 + 1e-6), "objective rose: {:?}", out.obj_curve);
+        }
+    }
+
+    #[test]
+    fn network_cost_is_workers_times_km_not_n() {
+        // the paper's Algorithm 2 claim: per-iteration traffic is O(W*k*m)
+        let (blocks_small, _) = blob_blocks(40, 4, 3);
+        let (blocks_large, _) = blob_blocks(400, 4, 3);
+        let engine = Engine::new(EngineConfig::with_workers(4));
+        let cfg = ClusterConfig { k: 3, max_iters: 5, tol: 0.0, seed: 7, ..Default::default() };
+        let small = run(&engine, &Compute::reference(), &blocks_small, 4, DistKind::L2Sq, &cfg).unwrap();
+        let large = run(&engine, &Compute::reference(), &blocks_large, 4, DistKind::L2Sq, &cfg).unwrap();
+        // 10x the data: shuffle bytes grow only with the number of map
+        // tasks (combiner output), not with n
+        let per_task_small = small.metrics.shuffle_bytes as f64 / small.metrics.map_tasks as f64;
+        let per_task_large = large.metrics.shuffle_bytes as f64 / large.metrics.map_tasks as f64;
+        assert!((per_task_small - per_task_large).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let (blocks, _) = blob_blocks(40, 5, 4);
+        let cfg = ClusterConfig { k: 3, max_iters: 8, tol: 0.0, seed: 8, ..Default::default() };
+        let a = run(&Engine::new(EngineConfig::with_workers(1)), &Compute::reference(), &blocks, 5, DistKind::L2Sq, &cfg).unwrap();
+        let b = run(&Engine::new(EngineConfig::with_workers(8)), &Compute::reference(), &blocks, 5, DistKind::L2Sq, &cfg).unwrap();
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.obj_curve, b.obj_curve);
+    }
+
+    #[test]
+    fn l1_distance_works() {
+        let (blocks, truth) = blob_blocks(50, 6, 9);
+        let engine = Engine::new(EngineConfig::with_workers(2));
+        let out = run(
+            &engine,
+            &Compute::reference(),
+            &blocks,
+            6,
+            DistKind::L1,
+            &ClusterConfig { k: 3, max_iters: 20, tol: 1e-6, seed: 10, ..Default::default() },
+        )
+        .unwrap();
+        let nmi = crate::metrics::nmi(&out.labels, &truth);
+        assert!(nmi > 0.9, "nmi {nmi}");
+    }
+
+    #[test]
+    fn init_centroids_are_data_points() {
+        let (blocks, _) = blob_blocks(30, 4, 11);
+        let c = init_centroids(&blocks, 4, 5, 12);
+        assert_eq!(c.len(), 20);
+        // each centroid equals some point in some block
+        for cc in 0..5 {
+            let cent = &c[cc * 4..(cc + 1) * 4];
+            let found = blocks.iter().any(|b| {
+                (0..b.rows).any(|r| &b.x[r * 4..(r + 1) * 4] == cent)
+            });
+            assert!(found, "centroid {cc} not a data point");
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Coefficient fitting — the reduce phase of Algorithms 3 and 4.
+//!
+//! Runs on a single (simulated) reducer node, exactly as the paper
+//! prescribes: the whole sample set `L` and the coefficient matrix `R`
+//! must fit one machine (Property 4.3). The output is broadcast to all
+//! mappers by the embedding job; the broadcast cost is charged there.
+
+use crate::embedding::{nystrom, stable, ApncCoeffs, Method};
+use crate::kernels::Kernel;
+use crate::rng::Pcg;
+use std::time::{Duration, Instant};
+
+/// Configuration of the coefficient fit.
+#[derive(Clone, Copy, Debug)]
+pub struct CoeffConfig {
+    pub method: Method,
+    /// target dimensionality m (Nyström caps it at l)
+    pub m: usize,
+    /// SD: points summed per direction, as a fraction of l (paper: 0.4)
+    pub t_frac: f64,
+    /// ensemble Nyström: number of blocks q
+    pub ensemble_q: usize,
+}
+
+impl Default for CoeffConfig {
+    fn default() -> Self {
+        CoeffConfig { method: Method::Nystrom, m: 256, t_frac: 0.4, ensemble_q: 4 }
+    }
+}
+
+/// Fitted coefficients + reducer-side cost.
+pub struct CoeffOut {
+    pub coeffs: ApncCoeffs,
+    pub fit_time: Duration,
+}
+
+/// Fit `R` from the sampled points (single-reducer step).
+pub fn fit(
+    samples: &[f32],
+    d: usize,
+    kernel: Kernel,
+    cfg: &CoeffConfig,
+    rng: &mut Pcg,
+) -> CoeffOut {
+    let l = samples.len() / d;
+    assert!(l > 0, "coefficient fit on empty sample set");
+    let t0 = Instant::now();
+    let coeffs = match cfg.method {
+        Method::Nystrom => nystrom::fit(samples, d, kernel, cfg.m),
+        Method::StableDist => {
+            let t = ((l as f64 * cfg.t_frac).round() as usize).clamp(1, l);
+            stable::fit(samples, d, kernel, cfg.m, t, rng)
+        }
+        Method::EnsembleNystrom => {
+            let q = cfg.ensemble_q.max(1).min(l);
+            let m_per = (cfg.m / q).max(1);
+            nystrom::fit_ensemble(samples, d, kernel, m_per, q, rng)
+        }
+    };
+    CoeffOut { coeffs, fit_time: t0.elapsed() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples(l: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::seeded(seed);
+        (0..l * d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn nystrom_config() {
+        let s = samples(30, 4, 1);
+        let out = fit(
+            &s,
+            4,
+            Kernel::Rbf { gamma: 0.2 },
+            &CoeffConfig { method: Method::Nystrom, m: 16, ..Default::default() },
+            &mut Pcg::seeded(2),
+        );
+        assert_eq!(out.coeffs.method, Method::Nystrom);
+        assert_eq!(out.coeffs.m(), 16);
+    }
+
+    #[test]
+    fn sd_t_fraction_applied() {
+        let s = samples(50, 4, 3);
+        let out = fit(
+            &s,
+            4,
+            Kernel::Rbf { gamma: 0.2 },
+            &CoeffConfig { method: Method::StableDist, m: 64, t_frac: 0.4, ensemble_q: 1 },
+            &mut Pcg::seeded(4),
+        );
+        assert_eq!(out.coeffs.method, Method::StableDist);
+        assert_eq!(out.coeffs.m(), 64);
+        assert_eq!(out.coeffs.l(), 50);
+    }
+
+    #[test]
+    fn ensemble_splits_m_and_l() {
+        let s = samples(40, 3, 5);
+        let out = fit(
+            &s,
+            3,
+            Kernel::Rbf { gamma: 0.3 },
+            &CoeffConfig { method: Method::EnsembleNystrom, m: 32, t_frac: 0.4, ensemble_q: 4 },
+            &mut Pcg::seeded(6),
+        );
+        assert_eq!(out.coeffs.blocks.len(), 4);
+        assert_eq!(out.coeffs.m(), 32);
+        assert_eq!(out.coeffs.l(), 40);
+    }
+}

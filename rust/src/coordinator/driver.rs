@@ -1,0 +1,351 @@
+//! End-to-end pipeline driver: sample → fit coefficients → embed → cluster.
+//!
+//! This is the leader process of the system. It owns the engine (cluster
+//! shape), the compute backend (PJRT artifacts or the rust reference), the
+//! simulated DFS holding intermediate embeddings, and produces the full
+//! result record the experiment harnesses (tables 2/3) consume.
+
+use std::time::{Duration, Instant};
+
+use super::cluster_job::{self, ClusterConfig};
+use super::coeffs::{self, CoeffConfig};
+use super::embed_job;
+use super::sample::{self, SampleMode};
+use super::DataBlock;
+use crate::data::registry::KernelChoice;
+use crate::data::Dataset;
+use crate::embedding::Method;
+use crate::kernels::Kernel;
+use crate::mapreduce::{dfs::Dfs, Engine, EngineConfig, FaultPlan, JobMetrics};
+use crate::rng::Pcg;
+use crate::runtime::Compute;
+use anyhow::{ensure, Result};
+
+/// Full pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub method: Method,
+    /// target sample count l
+    pub l: usize,
+    /// target embedding dimensionality m
+    pub m: usize,
+    /// SD: t as a fraction of l (paper: 0.4)
+    pub t_frac: f64,
+    /// ensemble Nyström blocks
+    pub ensemble_q: usize,
+    /// clusters; 0 = use the dataset's class count
+    pub k: usize,
+    pub max_iters: usize,
+    /// independent clustering restarts (lowest final objective wins)
+    pub restarts: usize,
+    pub tol: f64,
+    /// simulated cluster nodes
+    pub workers: usize,
+    /// points per input split
+    pub block_rows: usize,
+    pub seed: u64,
+    pub sample_mode: SampleMode,
+    /// kernel override; None = the dataset registry's choice
+    pub kernel: Option<Kernel>,
+    pub faults: FaultPlan,
+    /// DFS replication for intermediate embeddings
+    pub dfs_replication: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            method: Method::Nystrom,
+            l: 256,
+            m: 256,
+            t_frac: 0.4,
+            ensemble_q: 4,
+            k: 0,
+            max_iters: 20,
+            restarts: 1,
+            tol: 1e-4,
+            workers: 4,
+            block_rows: 1024,
+            seed: 0xAB5C,
+            sample_mode: SampleMode::Bernoulli,
+            kernel: None,
+            faults: FaultPlan::none(),
+            dfs_replication: 2,
+        }
+    }
+}
+
+/// Wall-clock of each phase.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimes {
+    pub sample: Duration,
+    pub coeff_fit: Duration,
+    pub embed: Duration,
+    pub cluster: Duration,
+}
+
+impl PhaseTimes {
+    pub fn total(&self) -> Duration {
+        self.sample + self.coeff_fit + self.embed + self.cluster
+    }
+}
+
+/// Everything a run produces.
+pub struct PipelineOutput {
+    pub labels: Vec<u32>,
+    pub nmi: f64,
+    pub ari: f64,
+    pub purity: f64,
+    pub obj_curve: Vec<f64>,
+    /// actual sample count drawn (Bernoulli mode: random around l)
+    pub l_actual: usize,
+    /// actual embedding dimensionality (Nyström caps at l)
+    pub m_actual: usize,
+    pub iters_run: usize,
+    pub times: PhaseTimes,
+    pub sample_metrics: JobMetrics,
+    pub embed_metrics: JobMetrics,
+    pub cluster_metrics: JobMetrics,
+}
+
+impl PipelineOutput {
+    /// Simulated embedding time on a real `workers`-node cluster at the
+    /// given network bandwidth (see JobMetrics::simulated_time).
+    pub fn simulated_embed_time(&self, workers: usize, net: f64) -> Duration {
+        self.embed_metrics.simulated_time(workers, net)
+    }
+
+    pub fn simulated_cluster_time(&self, workers: usize, net: f64) -> Duration {
+        self.cluster_metrics.simulated_time(workers, net)
+    }
+}
+
+/// The pipeline: engine + compute backend bound to a config.
+pub struct Pipeline {
+    pub config: PipelineConfig,
+    pub compute: Compute,
+    pub engine: Engine,
+}
+
+impl Pipeline {
+    /// Build with the auto compute backend (PJRT if artifacts exist).
+    pub fn new(config: PipelineConfig) -> Self {
+        let compute = Compute::auto(&Compute::default_artifact_dir());
+        Self::with_compute(config, compute)
+    }
+
+    pub fn with_compute(config: PipelineConfig, compute: Compute) -> Self {
+        let engine = Engine::new(EngineConfig {
+            workers: config.workers,
+            reducers: 0,
+            seed: config.seed,
+            faults: config.faults.clone(),
+        });
+        Pipeline { config, compute, engine }
+    }
+
+    /// Run the full APNC pipeline on a dataset.
+    pub fn run(&self, ds: &Dataset) -> Result<PipelineOutput> {
+        let cfg = &self.config;
+        ensure!(ds.n >= 2, "dataset too small");
+        let k = if cfg.k == 0 { ds.k } else { cfg.k };
+        ensure!(k >= 1 && k <= ds.n, "bad k = {k}");
+        let mut rng = Pcg::new(cfg.seed, 0xD21E);
+
+        // resolve the kernel (registry choice needs data for self-tuning)
+        let kernel = match cfg.kernel {
+            Some(k) => k,
+            None => crate::data::registry::spec(&ds.name)
+                .map(|s| s.kernel)
+                .unwrap_or(KernelChoice::SelfTunedRbf)
+                .build(&ds.x, ds.d, &mut rng),
+        };
+
+        // input splits (these live on the simulated DFS)
+        let blocks = DataBlock::partition(&ds.x, ds.n, ds.d, cfg.block_rows);
+        let mut dfs: Dfs<DataBlock> = Dfs::new(cfg.workers, cfg.dfs_replication);
+        dfs.put("input", blocks.clone(), DataBlock::byte_size);
+
+        // ---- Algorithms 3/4 map: sample L --------------------------------
+        let t0 = Instant::now();
+        let sample_out =
+            sample::run(&self.engine, &blocks, ds.d, ds.n, cfg.l, cfg.sample_mode);
+        let sample_time = t0.elapsed();
+        ensure!(
+            sample_out.indices.len() >= 2,
+            "sampling returned {} points; increase l",
+            sample_out.indices.len()
+        );
+
+        // ---- Algorithms 3/4 reduce: fit R on one node ---------------------
+        let coeff_cfg = CoeffConfig {
+            method: cfg.method,
+            m: cfg.m,
+            t_frac: cfg.t_frac,
+            ensemble_q: cfg.ensemble_q,
+        };
+        let fit = coeffs::fit(&sample_out.samples, ds.d, kernel, &coeff_cfg, &mut rng);
+        let coeffs = fit.coeffs;
+
+        // pre-compile the artifacts this run will hit, so phase timings
+        // measure execution rather than first-call XLA compilation
+        self.compute.warm(ds.d, coeffs.l(), coeffs.m(), k);
+
+        // ---- Algorithm 1: embed every block -------------------------------
+        let t1 = Instant::now();
+        let embed_out = embed_job::run(&self.engine, &self.compute, &coeffs, &blocks)?;
+        let embed_time = t1.elapsed();
+        dfs.put("embeddings", embed_out.blocks.clone(), DataBlock::byte_size);
+
+        // ---- Algorithm 2: cluster the embeddings --------------------------
+        let t2 = Instant::now();
+        let cluster_cfg = ClusterConfig {
+            k,
+            max_iters: cfg.max_iters,
+            tol: cfg.tol,
+            seed: cfg.seed ^ 0xC0FFEE,
+            restarts: cfg.restarts,
+            ..Default::default()
+        };
+        let cluster_out = cluster_job::run(
+            &self.engine,
+            &self.compute,
+            &embed_out.blocks,
+            embed_out.m,
+            coeffs.dist(),
+            &cluster_cfg,
+        )?;
+        let cluster_time = t2.elapsed();
+
+        let nmi = crate::metrics::nmi(&cluster_out.labels, &ds.labels);
+        let ari = crate::metrics::ari(&cluster_out.labels, &ds.labels);
+        let purity = crate::metrics::purity(&cluster_out.labels, &ds.labels);
+
+        Ok(PipelineOutput {
+            labels: cluster_out.labels,
+            nmi,
+            ari,
+            purity,
+            obj_curve: cluster_out.obj_curve,
+            l_actual: sample_out.indices.len(),
+            m_actual: embed_out.m,
+            iters_run: cluster_out.iters_run,
+            times: PhaseTimes {
+                sample: sample_time,
+                coeff_fit: fit.fit_time,
+                embed: embed_time,
+                cluster: cluster_time,
+            },
+            sample_metrics: sample_out.metrics,
+            embed_metrics: embed_out.metrics,
+            cluster_metrics: cluster_out.metrics,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry;
+
+    fn quick_cfg(method: Method) -> PipelineConfig {
+        PipelineConfig {
+            method,
+            l: 48,
+            m: 32,
+            max_iters: 12,
+            workers: 3,
+            block_rows: 256,
+            seed: 77,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn rings_need_kernel_clustering_and_apnc_delivers() {
+        // the canonical sanity: rings are unclusterable for plain k-means;
+        // APNC-Nys with a self-tuned RBF must get high NMI
+        let ds = registry::generate("rings", 900, 3);
+        let mut cfg = quick_cfg(Method::Nystrom);
+        cfg.restarts = 3;
+        let p = Pipeline::with_compute(cfg, Compute::reference());
+        let out = p.run(&ds).unwrap();
+        assert!(out.nmi > 0.8, "rings nmi {}", out.nmi);
+        assert_eq!(out.labels.len(), ds.n);
+        assert!(out.iters_run >= 2);
+        assert!(!out.obj_curve.is_empty());
+    }
+
+    #[test]
+    fn stable_dist_method_works_too() {
+        let ds = registry::generate("rings", 900, 4);
+        // SD is a sampling estimator: it needs more projections (m) than
+        // Nystrom needs eigenvectors for the same quality (paper Sec. 7)
+        let mut cfg = quick_cfg(Method::StableDist);
+        cfg.m = 192;
+        cfg.l = 96;
+        cfg.restarts = 3;
+        let p = Pipeline::with_compute(cfg, Compute::reference());
+        let out = p.run(&ds).unwrap();
+        assert!(out.nmi > 0.5, "rings nmi {}", out.nmi);
+        assert_eq!(out.m_actual, 192);
+    }
+
+    #[test]
+    fn ensemble_nystrom_runs() {
+        let ds = registry::generate("moons", 600, 5);
+        let mut cfg = quick_cfg(Method::EnsembleNystrom);
+        cfg.ensemble_q = 3;
+        let p = Pipeline::with_compute(cfg, Compute::reference());
+        let out = p.run(&ds).unwrap();
+        assert!(out.nmi > 0.3, "moons nmi {}", out.nmi);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = registry::generate("moons", 400, 6);
+        let p = Pipeline::with_compute(quick_cfg(Method::Nystrom), Compute::reference());
+        let a = p.run(&ds).unwrap();
+        let b = p.run(&ds).unwrap();
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.obj_curve, b.obj_curve);
+    }
+
+    #[test]
+    fn network_structure_matches_paper() {
+        let ds = registry::generate("rings", 800, 7);
+        let p = Pipeline::with_compute(quick_cfg(Method::Nystrom), Compute::reference());
+        let out = p.run(&ds).unwrap();
+        // Algorithm 1: zero shuffle
+        assert_eq!(out.embed_metrics.shuffle_bytes, 0);
+        // Algorithm 2: per-iteration shuffle is O(blocks * k * m), indep of n
+        assert!(out.cluster_metrics.shuffle_bytes > 0);
+        let iters = out.iters_run;
+        let blocks = (ds.n + 255) / 256;
+        let per_iter = out.cluster_metrics.shuffle_bytes / iters;
+        let bound = blocks * (3 * out.m_actual * 4 + 3 * 4 + 64);
+        assert!(per_iter <= bound, "per-iter shuffle {per_iter} > bound {bound}");
+    }
+
+    #[test]
+    fn survives_fault_injection_with_identical_output() {
+        let ds = registry::generate("moons", 500, 8);
+        // small blocks -> enough distinct task ids that the deterministic
+        // fault plan is guaranteed to hit some of them
+        let mut clean_cfg = quick_cfg(Method::Nystrom);
+        clean_cfg.block_rows = 32;
+        let clean = Pipeline::with_compute(clean_cfg.clone(), Compute::reference())
+            .run(&ds)
+            .unwrap();
+        let mut cfg = clean_cfg;
+        cfg.faults = FaultPlan::with_map_failures(0.3, 99);
+        let faulty = Pipeline::with_compute(cfg, Compute::reference()).run(&ds).unwrap();
+        assert_eq!(clean.labels, faulty.labels);
+        assert!(
+            faulty.sample_metrics.map_retries
+                + faulty.embed_metrics.map_retries
+                + faulty.cluster_metrics.map_retries
+                > 0
+        );
+    }
+}

@@ -1,0 +1,152 @@
+//! Embedding job — Algorithm 1 of the paper.
+//!
+//! Runs `q` rounds (one per coefficient block). In round `b` the pair
+//! `(L^(b), R^(b))` is broadcast to every mapper via the distributed
+//! cache; each mapper computes the portion `y_[b] = R^(b) K_{L^(b) i}`
+//! for every point of its block by calling the AOT-compiled embed
+//! artifact. Portions for the same block land on the same (simulated)
+//! node, so concatenation (Algorithm 1's final "join" map) is local —
+//! the job shuffles **zero** bytes, which tests assert.
+
+use super::DataBlock;
+use crate::embedding::ApncCoeffs;
+use crate::mapreduce::{Engine, JobMetrics};
+use crate::runtime::Compute;
+use anyhow::Result;
+
+/// Output: embedding blocks aligned with the input blocks, plus the
+/// merged per-round metrics.
+pub struct EmbedOut {
+    /// embedding blocks: same `start`/`rows` as the inputs, x = (rows, m)
+    pub blocks: Vec<DataBlock>,
+    pub m: usize,
+    pub metrics: JobMetrics,
+}
+
+/// Run Algorithm 1 over the data blocks.
+pub fn run(
+    engine: &Engine,
+    compute: &Compute,
+    coeffs: &ApncCoeffs,
+    blocks: &[DataBlock],
+) -> Result<EmbedOut> {
+    let d = coeffs.d;
+    let m_total = coeffs.m();
+    let mut metrics = JobMetrics::default();
+    // portions[b][block] = (rows, m_b) buffer
+    let mut portions: Vec<Vec<Vec<f32>>> = Vec::with_capacity(coeffs.blocks.len());
+
+    for blk in &coeffs.blocks {
+        // round b: broadcast (L^(b), R^(b)) to every mapper
+        engine.broadcast_cost(&mut metrics, blk.broadcast_bytes(d));
+        let run = engine.run_map(blocks, |_id, data: &DataBlock, ctx| {
+            ctx.count("embedded_points", data.rows as u64);
+            compute
+                .embed(&data.x, data.rows, d, &blk.samples, blk.l, &blk.r_t, blk.m, coeffs.kernel)
+                .expect("embed artifact execution failed")
+        });
+        metrics.merge(&run.metrics);
+        portions.push(run.outputs);
+    }
+
+    // final map phase: concatenate portions per point (local, no network)
+    let concat = engine.run_map(blocks, |id, data: &DataBlock, _ctx| {
+        let rows = data.rows;
+        let mut y = vec![0.0f32; rows * m_total];
+        let mut col = 0usize;
+        for (b, blk) in coeffs.blocks.iter().enumerate() {
+            let part = &portions[b][id];
+            debug_assert_eq!(part.len(), rows * blk.m);
+            for r in 0..rows {
+                y[r * m_total + col..r * m_total + col + blk.m]
+                    .copy_from_slice(&part[r * blk.m..(r + 1) * blk.m]);
+            }
+            col += blk.m;
+        }
+        DataBlock { start: data.start, rows, x: y }
+    });
+    metrics.merge(&concat.metrics);
+
+    Ok(EmbedOut { blocks: concat.outputs, m: m_total, metrics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::nystrom;
+    use crate::kernels::Kernel;
+    use crate::mapreduce::EngineConfig;
+    use crate::rng::Pcg;
+
+    fn setup(n: usize, d: usize, l: usize, m: usize) -> (Vec<DataBlock>, ApncCoeffs, Vec<f32>) {
+        let mut rng = Pcg::seeded(90);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let samples: Vec<f32> = (0..l * d).map(|_| rng.normal() as f32).collect();
+        let coeffs = nystrom::fit(&samples, d, Kernel::Rbf { gamma: 0.2 }, m);
+        (DataBlock::partition(&x, n, d, 64), coeffs, x)
+    }
+
+    #[test]
+    fn matches_single_machine_embedding() {
+        let (blocks, coeffs, x) = setup(200, 5, 20, 12);
+        let engine = Engine::new(EngineConfig::with_workers(4));
+        let compute = Compute::reference();
+        let out = run(&engine, &compute, &coeffs, &blocks).unwrap();
+        assert_eq!(out.m, coeffs.m());
+        // single-machine reference: embed the whole matrix at once
+        let want = coeffs.embed_block(&compute, &x, 200).unwrap();
+        let mut got = Vec::new();
+        for b in &out.blocks {
+            got.extend_from_slice(&b.x);
+        }
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn zero_shuffle_bytes() {
+        // Algorithm 1's headline property: embedding moves no intermediate
+        // data across the network — only the broadcast of (L, R).
+        let (blocks, coeffs, _) = setup(300, 4, 16, 8);
+        let engine = Engine::new(EngineConfig::with_workers(4));
+        let out = run(&engine, &Compute::reference(), &coeffs, &blocks).unwrap();
+        assert_eq!(out.metrics.shuffle_bytes, 0);
+        assert_eq!(out.metrics.shuffle_pairs, 0);
+        assert!(out.metrics.broadcast_bytes > 0);
+        assert_eq!(out.metrics.counter("embedded_points"), 300);
+    }
+
+    #[test]
+    fn broadcast_cost_scales_with_workers_and_blocks() {
+        let (blocks, coeffs, _) = setup(100, 4, 16, 8);
+        let w2 = run(&Engine::new(EngineConfig::with_workers(2)), &Compute::reference(), &coeffs, &blocks)
+            .unwrap();
+        let w8 = run(&Engine::new(EngineConfig::with_workers(8)), &Compute::reference(), &coeffs, &blocks)
+            .unwrap();
+        assert_eq!(w8.metrics.broadcast_bytes, 4 * w2.metrics.broadcast_bytes);
+    }
+
+    #[test]
+    fn multi_block_coeffs_concatenate() {
+        let mut rng = Pcg::seeded(91);
+        let (n, d, l) = (120, 4, 24);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let samples: Vec<f32> = (0..l * d).map(|_| rng.normal() as f32).collect();
+        let coeffs = nystrom::fit_ensemble(&samples, d, Kernel::Rbf { gamma: 0.3 }, 6, 3, &mut rng);
+        let blocks = DataBlock::partition(&x, n, d, 50);
+        let engine = Engine::new(EngineConfig::with_workers(3));
+        let compute = Compute::reference();
+        let out = run(&engine, &compute, &coeffs, &blocks).unwrap();
+        assert_eq!(out.m, 18);
+        let want = coeffs.embed_block(&compute, &x, n).unwrap();
+        let mut got = Vec::new();
+        for b in &out.blocks {
+            got.extend_from_slice(&b.x);
+        }
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Sampling job — the map phase of Algorithms 3 and 4.
+//!
+//! Each mapper walks its block and emits every point with probability
+//! `l/n` under key 0; the single reduce group is the sample set `L`
+//! delivered to the coefficient fit. The emitted points *are* the shuffle
+//! traffic (expected `l * d * 4` bytes — independent of n per point count,
+//! which is the point: only the sample crosses the network).
+
+use super::DataBlock;
+use crate::mapreduce::{Emitter, Engine, Job, JobMetrics, TaskCtx};
+
+/// How to draw the sample.
+#[derive(Clone, Copy, Debug)]
+pub enum SampleMode {
+    /// the paper's Bernoulli(l/n) per point: expected size l, not exact
+    Bernoulli,
+    /// exactly l points (deterministic per-block quota + top-up) — used by
+    /// experiments that sweep l and need exact operating points
+    Exact,
+}
+
+struct SampleJob {
+    d: usize,
+    n_total: usize,
+    l_target: usize,
+    mode: SampleMode,
+}
+
+impl Job for SampleJob {
+    type Input = DataBlock;
+    type Key = u32;
+    /// (global point index, features) — indices keep output deterministic
+    type Value = (u64, Vec<f32>);
+    type Output = Vec<(u64, Vec<f32>)>;
+
+    fn map(
+        &self,
+        _id: usize,
+        block: &DataBlock,
+        ctx: &mut TaskCtx,
+        emit: &mut Emitter<u32, (u64, Vec<f32>)>,
+    ) {
+        let p = self.l_target as f64 / self.n_total as f64;
+        match self.mode {
+            SampleMode::Bernoulli => {
+                for r in 0..block.rows {
+                    if ctx.rng.bernoulli(p) {
+                        let pt = block.x[r * self.d..(r + 1) * self.d].to_vec();
+                        emit.emit(0, ((block.start + r) as u64, pt));
+                    }
+                }
+            }
+            SampleMode::Exact => {
+                // per-block quota proportional to block size, rounded by a
+                // deterministic draw; the reducer trims/fills to exactly l
+                let quota_f = p * block.rows as f64;
+                let mut quota = quota_f.floor() as usize;
+                if ctx.rng.bernoulli(quota_f - quota as f64) {
+                    quota += 1;
+                }
+                // over-draw slightly so the reducer can always fill up to l
+                let quota = (quota + 2).min(block.rows);
+                for r in ctx.rng.choose(block.rows, quota) {
+                    let pt = block.x[r * self.d..(r + 1) * self.d].to_vec();
+                    emit.emit(0, ((block.start + r) as u64, pt));
+                }
+            }
+        }
+        ctx.count("points_seen", block.rows as u64);
+    }
+
+    fn reduce(
+        &self,
+        _key: u32,
+        mut values: Vec<(u64, Vec<f32>)>,
+        ctx: &mut TaskCtx,
+    ) -> Vec<(u64, Vec<f32>)> {
+        // sort by global index: schedule-independent sample order
+        values.sort_by_key(|(i, _)| *i);
+        if matches!(self.mode, SampleMode::Exact) && values.len() > self.l_target {
+            // drop uniformly (deterministic via task rng) down to l
+            let keep = ctx.rng.choose(values.len(), self.l_target);
+            let mut keep_sorted = keep;
+            keep_sorted.sort_unstable();
+            values = keep_sorted.into_iter().map(|i| values[i].clone()).collect();
+        }
+        values
+    }
+}
+
+/// Result of the sampling phase.
+pub struct SampleOut {
+    /// (l, d) row-major sampled points, ordered by global index
+    pub samples: Vec<f32>,
+    /// global indices of the sampled points
+    pub indices: Vec<u64>,
+    pub metrics: JobMetrics,
+}
+
+/// Run the sampling job over the data blocks.
+pub fn run(
+    engine: &Engine,
+    blocks: &[DataBlock],
+    d: usize,
+    n_total: usize,
+    l_target: usize,
+    mode: SampleMode,
+) -> SampleOut {
+    let job = SampleJob { d, n_total, l_target: l_target.max(1), mode };
+    let run = engine.run(&job, blocks);
+    let mut samples = Vec::new();
+    let mut indices = Vec::new();
+    for group in run.outputs {
+        for (idx, pt) in group {
+            indices.push(idx);
+            samples.extend(pt);
+        }
+    }
+    SampleOut { samples, indices, metrics: run.metrics }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::EngineConfig;
+    use crate::rng::Pcg;
+
+    fn blocks(n: usize, d: usize, block_rows: usize, seed: u64) -> Vec<DataBlock> {
+        let mut rng = Pcg::seeded(seed);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        DataBlock::partition(&x, n, d, block_rows)
+    }
+
+    #[test]
+    fn bernoulli_sample_near_target() {
+        let engine = Engine::new(EngineConfig::with_workers(4));
+        let bs = blocks(5000, 3, 512, 1);
+        let out = run(&engine, &bs, 3, 5000, 200, SampleMode::Bernoulli);
+        let l = out.indices.len();
+        assert!((120..=280).contains(&l), "expected ~200 samples, got {l}");
+        assert_eq!(out.samples.len(), l * 3);
+        assert_eq!(out.metrics.counter("points_seen"), 5000);
+        // indices sorted and unique
+        assert!(out.indices.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn exact_sample_hits_target() {
+        let engine = Engine::new(EngineConfig::with_workers(3));
+        let bs = blocks(2000, 4, 256, 2);
+        let out = run(&engine, &bs, 4, 2000, 150, SampleMode::Exact);
+        assert_eq!(out.indices.len(), 150);
+        assert_eq!(out.samples.len(), 150 * 4);
+    }
+
+    #[test]
+    fn sample_schedule_independent() {
+        let bs = blocks(3000, 2, 300, 3);
+        let a = run(&Engine::new(EngineConfig::with_workers(1)), &bs, 2, 3000, 100, SampleMode::Bernoulli);
+        let b = run(&Engine::new(EngineConfig::with_workers(8)), &bs, 2, 3000, 100, SampleMode::Bernoulli);
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.samples, b.samples);
+    }
+
+    #[test]
+    fn shuffle_cost_proportional_to_sample() {
+        let engine = Engine::new(EngineConfig::with_workers(2));
+        let bs = blocks(4000, 8, 512, 4);
+        let small = run(&engine, &bs, 8, 4000, 50, SampleMode::Bernoulli);
+        let large = run(&engine, &bs, 8, 4000, 500, SampleMode::Bernoulli);
+        assert!(large.metrics.shuffle_bytes > 5 * small.metrics.shuffle_bytes);
+        // shuffle carries ~l points of d f32s (plus indices/keys)
+        let expected = large.indices.len() * (8 * 4 + 8 + 8 + 4);
+        let got = large.metrics.shuffle_bytes;
+        assert!(
+            got as f64 > expected as f64 * 0.8 && (got as f64) < expected as f64 * 1.2,
+            "shuffle {got} vs expected ~{expected}"
+        );
+    }
+
+    #[test]
+    fn sample_points_come_from_dataset() {
+        let engine = Engine::new(EngineConfig::with_workers(2));
+        let bs = blocks(500, 2, 100, 5);
+        let out = run(&engine, &bs, 2, 500, 40, SampleMode::Exact);
+        for (j, &idx) in out.indices.iter().enumerate() {
+            let blk = &bs[idx as usize / 100];
+            let r = idx as usize - blk.start;
+            assert_eq!(&out.samples[j * 2..(j + 1) * 2], &blk.x[r * 2..(r + 1) * 2]);
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Binary dataset persistence.
+//!
+//! Format (little-endian):
+//! `"APNC" | u32 version | u64 n | u64 d | u64 k | name_len u32 | name utf8
+//!  | labels u32[n] | x f32[n*d]`
+//!
+//! Lets a generated mirror be frozen to disk once and reused across runs
+//! (`repro gen` → `repro run --input`), so table sweeps compare methods on
+//! *identical* bytes.
+
+use super::Dataset;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"APNC";
+const VERSION: u32 = 1;
+
+/// Write a dataset to `path`.
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(ds.n as u64).to_le_bytes())?;
+    w.write_all(&(ds.d as u64).to_le_bytes())?;
+    w.write_all(&(ds.k as u64).to_le_bytes())?;
+    let name = ds.name.as_bytes();
+    w.write_all(&(name.len() as u32).to_le_bytes())?;
+    w.write_all(name)?;
+    for &l in &ds.labels {
+        w.write_all(&l.to_le_bytes())?;
+    }
+    for &v in &ds.x {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a dataset from `path`.
+pub fn load(path: &Path) -> Result<Dataset> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not an APNC dataset file", path.display());
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported dataset version {version}");
+    }
+    let n = read_u64(&mut r)? as usize;
+    let d = read_u64(&mut r)? as usize;
+    let k = read_u64(&mut r)? as usize;
+    if d == 0 || n == 0 || k == 0 {
+        bail!("degenerate dataset header: n={n} d={d} k={k}");
+    }
+    let name_len = read_u32(&mut r)? as usize;
+    if name_len > 4096 {
+        bail!("unreasonable name length {name_len}");
+    }
+    let mut name_buf = vec![0u8; name_len];
+    r.read_exact(&mut name_buf)?;
+    let name = String::from_utf8(name_buf).context("dataset name is not utf8")?;
+    let mut labels = Vec::with_capacity(n);
+    let mut buf4 = [0u8; 4];
+    for _ in 0..n {
+        r.read_exact(&mut buf4)?;
+        labels.push(u32::from_le_bytes(buf4));
+    }
+    let mut x = Vec::with_capacity(n * d);
+    for _ in 0..n * d {
+        r.read_exact(&mut buf4)?;
+        x.push(f32::from_le_bytes(buf4));
+    }
+    if labels.iter().any(|&l| l as usize >= k) {
+        bail!("label out of range for k={k}");
+    }
+    Ok(Dataset::new(name, d, k, x, labels))
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("apnc-io-test-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let ds = registry::generate("moons", 300, 5);
+        let path = tmp("roundtrip");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.name, ds.name);
+        assert_eq!((back.n, back.d, back.k), (ds.n, ds.d, ds.k));
+        assert_eq!(back.labels, ds.labels);
+        assert_eq!(back.x, ds.x);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmp("garbage");
+        std::fs::write(&path, b"not a dataset").unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("not an APNC dataset"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let ds = registry::generate("moons", 50, 6);
+        let path = tmp("truncated");
+        save(&ds, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,119 @@
+//! Datasets: the container has no network and none of the paper's corpora
+//! (USPS/PIE/MNIST/RCV1/CovType/ImageNet), so this module provides seeded
+//! synthetic generators that mirror each dataset's *shape* — n, d, number
+//! of classes, and the cluster geometry that makes kernel methods matter.
+//! See DESIGN.md section 2 for the substitution argument.
+
+pub mod io;
+pub mod registry;
+pub mod synth;
+
+/// An in-memory labeled dataset. Points are rows of `x` (row-major, f32 —
+/// the runtime ABI dtype); `labels` are ground-truth classes for NMI.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    /// number of points
+    pub n: usize,
+    /// feature dimensionality
+    pub d: usize,
+    /// number of ground-truth classes
+    pub k: usize,
+    /// row-major (n, d)
+    pub x: Vec<f32>,
+    pub labels: Vec<u32>,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, d: usize, k: usize, x: Vec<f32>, labels: Vec<u32>) -> Self {
+        assert!(d > 0 && x.len() % d == 0);
+        let n = x.len() / d;
+        assert_eq!(labels.len(), n, "labels/points mismatch");
+        debug_assert!(labels.iter().all(|&l| (l as usize) < k));
+        Dataset { name: name.into(), n, d, k, x, labels }
+    }
+
+    /// The i-th point as a feature slice.
+    pub fn point(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Rows `idx` gathered into a dense row-major buffer.
+    pub fn gather(&self, idx: &[usize]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(idx.len() * self.d);
+        for &i in idx {
+            out.extend_from_slice(self.point(i));
+        }
+        out
+    }
+
+    /// Split into blocks of at most `block_rows` points (the MapReduce
+    /// input splits). Returns (start_index, point_rows) per block.
+    pub fn blocks(&self, block_rows: usize) -> Vec<(usize, &[f32])> {
+        assert!(block_rows > 0);
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start < self.n {
+            let end = (start + block_rows).min(self.n);
+            out.push((start, &self.x[start * self.d..end * self.d]));
+            start = end;
+        }
+        out
+    }
+
+    /// Per-class counts (diagnostics / Table 1).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.k];
+        for &l in &self.labels {
+            counts[l as usize] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new("t", 2, 2, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0], vec![0, 1, 1])
+    }
+
+    #[test]
+    fn point_access() {
+        let ds = tiny();
+        assert_eq!(ds.n, 3);
+        assert_eq!(ds.point(1), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn gather_rows() {
+        let ds = tiny();
+        assert_eq!(ds.gather(&[2, 0]), vec![4.0, 5.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn blocks_cover_exactly() {
+        let ds = tiny();
+        let blocks = ds.blocks(2);
+        assert_eq!(blocks.len(), 2);
+        assert_eq!(blocks[0].0, 0);
+        assert_eq!(blocks[0].1.len(), 4);
+        assert_eq!(blocks[1].0, 2);
+        assert_eq!(blocks[1].1.len(), 2);
+        let total: usize = blocks.iter().map(|b| b.1.len()).sum();
+        assert_eq!(total, ds.n * ds.d);
+    }
+
+    #[test]
+    fn class_counts_sum_to_n() {
+        let ds = tiny();
+        assert_eq!(ds.class_counts(), vec![1, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn label_mismatch_panics() {
+        Dataset::new("bad", 2, 1, vec![0.0, 1.0], vec![0, 0]);
+    }
+}

@@ -1,0 +1,301 @@
+//! Synthetic dataset generators.
+//!
+//! Each generator produces clusters whose *geometry* stresses the same
+//! regime as the paper's corpora: image-like sets are Gaussian clusters on
+//! a low-dimensional manifold pushed through a nonlinearity (so RBF/poly
+//! kernels separate what plain k-means cannot), document-like sets are
+//! sparse non-negative topic mixtures, and rings/moons are the classic
+//! cases where kernel k-means is *required*.
+
+use super::Dataset;
+use crate::rng::Pcg;
+
+/// Zipf-ish cluster sizes: cluster c gets weight ~ 1 / (c + 1)^alpha.
+/// alpha = 0 gives balanced clusters.
+fn cluster_sizes(n: usize, k: usize, alpha: f64, rng: &mut Pcg) -> Vec<usize> {
+    let mut weights: Vec<f64> = (0..k).map(|c| 1.0 / ((c + 1) as f64).powf(alpha)).collect();
+    rng.shuffle(&mut weights);
+    let total: f64 = weights.iter().sum();
+    let mut sizes: Vec<usize> = weights.iter().map(|w| ((w / total) * n as f64) as usize).collect();
+    // every cluster gets at least one point; distribute the remainder
+    for s in sizes.iter_mut() {
+        if *s == 0 {
+            *s = 1;
+        }
+    }
+    let mut have: usize = sizes.iter().sum();
+    let mut c = 0;
+    while have < n {
+        sizes[c % k] += 1;
+        have += 1;
+        c += 1;
+    }
+    while have > n {
+        let c = sizes.iter().position(|&s| s > 1).expect("n >= k");
+        sizes[c] -= 1;
+        have -= 1;
+    }
+    sizes
+}
+
+/// Nonlinearity applied when lifting latent points to ambient space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Warp {
+    /// none: clusters stay linearly separable (sanity cases)
+    None,
+    /// tanh squash — smooth manifold curvature
+    Tanh,
+    /// |x| fold — creates clusters only separable by a nonlinear kernel
+    Fold,
+    /// sigmoid to [0, 1] — pixel-like non-negative features (poly kernel safe)
+    Pixel,
+}
+
+fn warp(v: f64, w: Warp) -> f64 {
+    match w {
+        Warp::None => v,
+        Warp::Tanh => v.tanh(),
+        Warp::Fold => v.abs(),
+        Warp::Pixel => 1.0 / (1.0 + (-v).exp()),
+    }
+}
+
+/// Gaussian clusters in a `latent`-dim space, lifted to `d` dims through a
+/// fixed random linear map followed by `warp_kind`, plus ambient noise.
+///
+/// `spread` scales within-cluster noise relative to the unit-scale cluster
+/// centers (larger = harder), `imbalance` is the Zipf alpha for sizes.
+#[allow(clippy::too_many_arguments)]
+pub fn gaussian_manifold(
+    name: &str,
+    n: usize,
+    d: usize,
+    k: usize,
+    latent: usize,
+    spread: f64,
+    imbalance: f64,
+    warp_kind: Warp,
+    seed: u64,
+) -> Dataset {
+    assert!(n >= k, "need at least one point per cluster");
+    let mut rng = Pcg::new(seed, 0xDA7A);
+    // cluster centers in latent space, unit scale
+    let centers: Vec<f64> = (0..k * latent).map(|_| rng.normal() * 1.6).collect();
+    // shared lift map latent -> ambient
+    let lift: Vec<f64> =
+        (0..latent * d).map(|_| rng.normal() / (latent as f64).sqrt()).collect();
+    let sizes = cluster_sizes(n, k, imbalance, &mut rng);
+
+    let mut x = vec![0.0f32; n * d];
+    let mut labels = vec![0u32; n];
+    let mut row = 0usize;
+    let mut z = vec![0.0f64; latent];
+    for (c, &sz) in sizes.iter().enumerate() {
+        for _ in 0..sz {
+            for (j, zj) in z.iter_mut().enumerate() {
+                *zj = centers[c * latent + j] + spread * rng.normal();
+            }
+            let out = &mut x[row * d..(row + 1) * d];
+            for (jd, o) in out.iter_mut().enumerate() {
+                let mut acc = 0.0;
+                for (jl, zj) in z.iter().enumerate() {
+                    acc += zj * lift[jl * d + jd];
+                }
+                // small ambient noise after the warp keeps features informative
+                *o = (warp(acc, warp_kind) + 0.01 * rng.normal()) as f32;
+            }
+            labels[row] = c as u32;
+            row += 1;
+        }
+    }
+    shuffle_rows(&mut x, &mut labels, d, &mut rng);
+    Dataset::new(name, d, k, x, labels)
+}
+
+/// Sparse non-negative "topic mixture" documents (RCV1-like): each class
+/// has a handful of high-probability feature indices; documents draw a
+/// heavy-tailed number of hits on their class topics plus background noise.
+pub fn topic_mixture(name: &str, n: usize, d: usize, k: usize, seed: u64) -> Dataset {
+    assert!(n >= k && d >= 8);
+    let mut rng = Pcg::new(seed, 0x70C);
+    let topic_size = (d / 16).clamp(4, 64);
+    // per-class topic support
+    let topics: Vec<Vec<usize>> = (0..k).map(|_| rng.choose(d, topic_size)).collect();
+    let sizes = cluster_sizes(n, k, 0.8, &mut rng);
+    let mut x = vec![0.0f32; n * d];
+    let mut labels = vec![0u32; n];
+    let mut row = 0usize;
+    for (c, &sz) in sizes.iter().enumerate() {
+        for _ in 0..sz {
+            let out = &mut x[row * d..(row + 1) * d];
+            // heavy-tailed doc length
+            let hits = 8 + (rng.f64().powi(2) * 40.0) as usize;
+            for _ in 0..hits {
+                let j = if rng.bernoulli(0.8) {
+                    topics[c][rng.below(topic_size)]
+                } else {
+                    rng.below(d)
+                };
+                out[j] += 1.0;
+            }
+            // l2 normalize (tf-idf-ish scale invariance)
+            let norm: f32 = out.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-6);
+            for v in out.iter_mut() {
+                *v /= norm;
+            }
+            labels[row] = c as u32;
+            row += 1;
+        }
+    }
+    shuffle_rows(&mut x, &mut labels, d, &mut rng);
+    Dataset::new(name, d, k, x, labels)
+}
+
+/// `k` concentric rings in 2D, embedded into `d` dims by a random rotation.
+/// The canonical "kernel k-means required" workload: ring classes are not
+/// linearly separable and plain k-means scores near-zero NMI.
+pub fn rings(name: &str, n: usize, d: usize, k: usize, noise: f64, seed: u64) -> Dataset {
+    assert!(d >= 2 && n >= k);
+    let mut rng = Pcg::new(seed, 0x41B6);
+    let sizes = cluster_sizes(n, k, 0.0, &mut rng);
+    // random 2 -> d isometry-ish embedding
+    let emb: Vec<f64> = (0..2 * d).map(|_| rng.normal() / (2.0f64).sqrt()).collect();
+    let mut x = vec![0.0f32; n * d];
+    let mut labels = vec![0u32; n];
+    let mut row = 0;
+    for (c, &sz) in sizes.iter().enumerate() {
+        let radius = 1.0 + 2.0 * c as f64;
+        for _ in 0..sz {
+            let theta = rng.uniform(0.0, std::f64::consts::TAU);
+            let r = radius + noise * rng.normal();
+            let (p0, p1) = (r * theta.cos(), r * theta.sin());
+            let out = &mut x[row * d..(row + 1) * d];
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = (p0 * emb[j] + p1 * emb[d + j]) as f32;
+            }
+            labels[row] = c as u32;
+            row += 1;
+        }
+    }
+    shuffle_rows(&mut x, &mut labels, d, &mut rng);
+    Dataset::new(name, d, k, x, labels)
+}
+
+/// Two interleaved half-moons embedded into `d` dims.
+pub fn moons(name: &str, n: usize, d: usize, noise: f64, seed: u64) -> Dataset {
+    assert!(d >= 2 && n >= 2);
+    let mut rng = Pcg::new(seed, 0x3003);
+    let emb: Vec<f64> = (0..2 * d).map(|_| rng.normal() / (2.0f64).sqrt()).collect();
+    let mut x = vec![0.0f32; n * d];
+    let mut labels = vec![0u32; n];
+    for row in 0..n {
+        let c = row % 2;
+        let t = rng.uniform(0.0, std::f64::consts::PI);
+        let (mut p0, mut p1) = if c == 0 {
+            (t.cos(), t.sin())
+        } else {
+            (1.0 - t.cos(), 0.5 - t.sin())
+        };
+        p0 += noise * rng.normal();
+        p1 += noise * rng.normal();
+        let out = &mut x[row * d..(row + 1) * d];
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = (p0 * emb[j] + p1 * emb[d + j]) as f32;
+        }
+        labels[row] = c as u32;
+    }
+    shuffle_rows(&mut x, &mut labels, d, &mut rng);
+    Dataset::new(name, d, 2, x, labels)
+}
+
+fn shuffle_rows(x: &mut [f32], labels: &mut [u32], d: usize, rng: &mut Pcg) {
+    let n = labels.len();
+    for i in (1..n).rev() {
+        let j = rng.below(i + 1);
+        labels.swap(i, j);
+        for col in 0..d {
+            x.swap(i * d + col, j * d + col);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_sum_and_minimum() {
+        let mut rng = Pcg::seeded(1);
+        for &(n, k, a) in &[(100usize, 7usize, 0.0f64), (50, 50, 1.2), (1000, 3, 0.8)] {
+            let s = cluster_sizes(n, k, a, &mut rng);
+            assert_eq!(s.iter().sum::<usize>(), n);
+            assert!(s.iter().all(|&v| v >= 1));
+        }
+    }
+
+    #[test]
+    fn gaussian_manifold_shapes() {
+        let ds = gaussian_manifold("g", 500, 16, 5, 4, 0.3, 0.5, Warp::Tanh, 7);
+        assert_eq!((ds.n, ds.d, ds.k), (500, 16, 5));
+        assert_eq!(ds.class_counts().iter().sum::<usize>(), 500);
+        assert!(ds.class_counts().iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn pixel_warp_nonnegative() {
+        let ds = gaussian_manifold("px", 200, 12, 4, 3, 0.3, 0.0, Warp::Pixel, 8);
+        // sigmoid output plus tiny noise: bounded to roughly [0,1]
+        assert!(ds.x.iter().all(|&v| v > -0.1 && v < 1.1));
+    }
+
+    #[test]
+    fn topic_mixture_normalized_nonneg() {
+        let ds = topic_mixture("docs", 300, 128, 10, 9);
+        assert!(ds.x.iter().all(|&v| v >= 0.0));
+        for i in 0..ds.n {
+            let norm: f32 = ds.point(i).iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-3, "row {i} norm {norm}");
+        }
+    }
+
+    #[test]
+    fn rings_radii_separate() {
+        let ds = rings("r", 600, 2, 3, 0.05, 10);
+        // with d=2 and an invertible embedding, the radii per class must be
+        // distinct (check mean radius in the embedded space is ordered)
+        let mut by_class = vec![(0.0f64, 0usize); 3];
+        for i in 0..ds.n {
+            let p = ds.point(i);
+            let r = ((p[0] as f64).powi(2) + (p[1] as f64).powi(2)).sqrt();
+            let c = ds.labels[i] as usize;
+            by_class[c].0 += r;
+            by_class[c].1 += 1;
+        }
+        let means: Vec<f64> = by_class.iter().map(|(s, c)| s / *c as f64).collect();
+        // each ring's mean radius must be separated from the next
+        let mut sorted = means.clone();
+        sorted.sort_by(f64::total_cmp);
+        for w in sorted.windows(2) {
+            assert!(w[1] - w[0] > 0.5, "{means:?}");
+        }
+    }
+
+    #[test]
+    fn moons_two_classes() {
+        let ds = moons("m", 400, 8, 0.05, 11);
+        assert_eq!(ds.k, 2);
+        let counts = ds.class_counts();
+        assert_eq!(counts.iter().sum::<usize>(), 400);
+        assert!((counts[0] as i64 - counts[1] as i64).abs() <= 1);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = gaussian_manifold("a", 100, 8, 3, 3, 0.2, 0.0, Warp::Fold, 42);
+        let b = gaussian_manifold("a", 100, 8, 3, 3, 0.2, 0.0, Warp::Fold, 42);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.labels, b.labels);
+        let c = gaussian_manifold("a", 100, 8, 3, 3, 0.2, 0.0, Warp::Fold, 43);
+        assert_ne!(a.x, c.x);
+    }
+}

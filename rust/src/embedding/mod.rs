@@ -1,0 +1,201 @@
+//! The APNC (Approximate Nearest Centroid) embedding family — Section 4
+//! of the paper.
+//!
+//! An APNC embedding is `y = R K_{L,i}` (Eq. 3) where `R` is block-diagonal
+//! (Property 4.3) over `q` coefficient blocks, each paired with its sample
+//! subset `L^(b)`. The family guarantees:
+//!
+//! * 4.1 linearity — centroids embed to centroids of embeddings
+//! * 4.2 kernelization — only kernel evaluations against `L` are needed
+//! * 4.3 block-diagonal `R` — each block fits one machine's memory
+//! * 4.4 a distance `e(.,.)` in embedding space approximating the
+//!   kernel-space point-to-centroid distance
+//!
+//! Two instances are provided, matching the paper's Sections 6 and 7:
+//! [`nystrom`] (e = l2) and [`stable`] (e = l1), plus the ensemble-Nyström
+//! extension the paper sketches as future work (q > 1 Nyström blocks).
+
+pub mod nystrom;
+pub mod stable;
+
+use crate::kernels::Kernel;
+use crate::runtime::{Compute, DistKind};
+use anyhow::Result;
+
+/// Which APNC instance produced the coefficients.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Section 6: Nyström whitening, e = squared l2 (Eq. 7)
+    Nystrom,
+    /// Section 7: 2-stable (gaussian) projections, e = l1 (Eq. 13)
+    StableDist,
+    /// Ensemble Nyström (Section 6 closing remark): q independent blocks
+    EnsembleNystrom,
+}
+
+impl Method {
+    pub fn dist(self) -> DistKind {
+        match self {
+            Method::Nystrom | Method::EnsembleNystrom => DistKind::L2Sq,
+            Method::StableDist => DistKind::L1,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Method::Nystrom => "APNC-Nys",
+            Method::StableDist => "APNC-SD",
+            Method::EnsembleNystrom => "APNC-ENys",
+        }
+    }
+}
+
+/// One block of the block-diagonal coefficient matrix (Property 4.3):
+/// `R^(b)` (m_b x l_b) stored transposed for the runtime ABI, plus its
+/// sample subset `L^(b)`.
+#[derive(Clone, Debug)]
+pub struct CoeffBlock {
+    /// (l_b, d) row-major sample points
+    pub samples: Vec<f32>,
+    pub l: usize,
+    /// (l_b, m_b) row-major — `R^(b)` transposed
+    pub r_t: Vec<f32>,
+    pub m: usize,
+}
+
+impl CoeffBlock {
+    /// Bytes this block costs to broadcast to a mapper (Algorithm 1 line 3).
+    pub fn broadcast_bytes(&self, d: usize) -> usize {
+        (self.samples.len() + self.r_t.len() + d) * std::mem::size_of::<f32>()
+    }
+}
+
+/// A fitted APNC embedding: everything a mapper needs (Algorithm 1).
+#[derive(Clone, Debug)]
+pub struct ApncCoeffs {
+    pub method: Method,
+    /// feature dimensionality the coefficients were fitted on
+    pub d: usize,
+    pub kernel: Kernel,
+    /// q >= 1 blocks (the paper's two instances have q = 1; ensemble > 1)
+    pub blocks: Vec<CoeffBlock>,
+}
+
+impl ApncCoeffs {
+    /// Total embedding dimensionality m = sum of block m_b.
+    pub fn m(&self) -> usize {
+        self.blocks.iter().map(|b| b.m).sum()
+    }
+
+    /// Total sample count l = sum of block l_b.
+    pub fn l(&self) -> usize {
+        self.blocks.iter().map(|b| b.l).sum()
+    }
+
+    pub fn dist(&self) -> DistKind {
+        self.method.dist()
+    }
+
+    /// Embed a data block: Algorithm 1's inner loop for all q coefficient
+    /// blocks, portions concatenated per point ("join" phase). Used by the
+    /// single-machine path and tests; the MapReduce path runs one block per
+    /// round via `coordinator::embed_job`.
+    pub fn embed_block(&self, compute: &Compute, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        assert_eq!(x.len(), rows * self.d);
+        let m_total = self.m();
+        let mut y = vec![0.0f32; rows * m_total];
+        let mut col = 0usize;
+        for blk in &self.blocks {
+            let part =
+                compute.embed(x, rows, self.d, &blk.samples, blk.l, &blk.r_t, blk.m, self.kernel)?;
+            for r in 0..rows {
+                y[r * m_total + col..r * m_total + col + blk.m]
+                    .copy_from_slice(&part[r * blk.m..(r + 1) * blk.m]);
+            }
+            col += blk.m;
+        }
+        Ok(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg;
+
+    fn toy_coeffs(q: usize, d: usize, l: usize, m: usize, seed: u64) -> ApncCoeffs {
+        let mut rng = Pcg::seeded(seed);
+        let blocks = (0..q)
+            .map(|_| CoeffBlock {
+                samples: (0..l * d).map(|_| rng.normal() as f32).collect(),
+                l,
+                r_t: (0..l * m).map(|_| rng.normal() as f32 * 0.2).collect(),
+                m,
+            })
+            .collect();
+        ApncCoeffs { method: Method::Nystrom, d, kernel: Kernel::Rbf { gamma: 0.3 }, blocks }
+    }
+
+    #[test]
+    fn dims_sum_over_blocks() {
+        let c = toy_coeffs(3, 5, 7, 4, 1);
+        assert_eq!(c.m(), 12);
+        assert_eq!(c.l(), 21);
+    }
+
+    #[test]
+    fn method_distances() {
+        assert_eq!(Method::Nystrom.dist(), DistKind::L2Sq);
+        assert_eq!(Method::EnsembleNystrom.dist(), DistKind::L2Sq);
+        assert_eq!(Method::StableDist.dist(), DistKind::L1);
+    }
+
+    #[test]
+    fn embed_block_concatenates_portions() {
+        let compute = Compute::reference();
+        let c = toy_coeffs(2, 4, 6, 3, 2);
+        let mut rng = Pcg::seeded(3);
+        let rows = 5;
+        let x: Vec<f32> = (0..rows * 4).map(|_| rng.normal() as f32).collect();
+        let y = c.embed_block(&compute, &x, rows).unwrap();
+        assert_eq!(y.len(), rows * 6);
+        // block 0's portion must equal embedding with only block 0
+        let solo = ApncCoeffs { blocks: vec![c.blocks[0].clone()], ..c.clone() };
+        let y0 = solo.embed_block(&compute, &x, rows).unwrap();
+        for r in 0..rows {
+            assert_eq!(&y[r * 6..r * 6 + 3], &y0[r * 3..(r + 1) * 3]);
+        }
+    }
+
+    #[test]
+    fn property_4_1_linearity_on_real_graph() {
+        // mean of embeddings == embedding computed from mean kernel column
+        let compute = Compute::reference();
+        let c = toy_coeffs(1, 4, 6, 5, 4);
+        let mut rng = Pcg::seeded(5);
+        let rows = 32;
+        let x: Vec<f32> = (0..rows * 4).map(|_| rng.normal() as f32).collect();
+        let y = c.embed_block(&compute, &x, rows).unwrap();
+        let m = c.m();
+        let mut mean_y = vec![0.0f64; m];
+        for r in 0..rows {
+            for j in 0..m {
+                mean_y[j] += y[r * m + j] as f64 / rows as f64;
+            }
+        }
+        // centroid of kernel columns -> embed: k_mean^T R^T
+        let blk = &c.blocks[0];
+        let kb = compute.kmat(&x, rows, 4, &blk.samples, blk.l, c.kernel).unwrap();
+        let mut k_mean = vec![0.0f64; blk.l];
+        for r in 0..rows {
+            for j in 0..blk.l {
+                k_mean[j] += kb[r * blk.l + j] as f64 / rows as f64;
+            }
+        }
+        for j in 0..m {
+            let want: f64 =
+                (0..blk.l).map(|i| k_mean[i] * blk.r_t[i * m + j] as f64).sum();
+            assert!((mean_y[j] - want).abs() < 1e-4, "dim {j}: {} vs {want}", mean_y[j]);
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! APNC via the Nyström method — Section 6 / Algorithm 3 of the paper.
+//!
+//! Given the sampled set `L`, the reducer computes the kernel matrix
+//! `K_LL = A`, its leading-m eigenpairs `A ≈ U Λ U^T`, and the coefficient
+//! matrix `R = Λ^{-1/2} U^T` (Algorithm 3, line 9). The induced embedding
+//! `y = R K_{L,i}` satisfies `<y_i, y_j> = K̃_ij`, the rank-m Nyström
+//! approximation of the kernel (Eq. 9), so the *squared l2* distance in
+//! embedding space approximates the kernel-space distance (Eq. 7).
+
+use super::{ApncCoeffs, CoeffBlock, Method};
+use crate::kernels::Kernel;
+use crate::linalg::ops::whitening_transform;
+use crate::rng::Pcg;
+
+/// Relative eigenvalue cutoff: kernel matrices over near-duplicate samples
+/// are numerically rank-deficient; directions below `EIG_EPS * λ_max`
+/// carry noise amplified by λ^{-1/2} and are dropped (pseudo-inverse
+/// semantics, standard for Nyström).
+pub const EIG_EPS: f64 = 1e-10;
+
+/// Fit Nyström coefficients from the sampled points (Algorithm 3 reduce).
+///
+/// `samples`: (l, d) row-major. `m` is capped at `l` (the whitening
+/// transform cannot produce more directions than samples).
+pub fn fit(samples: &[f32], d: usize, kernel: Kernel, m: usize) -> ApncCoeffs {
+    assert!(d > 0 && samples.len() % d == 0);
+    let l = samples.len() / d;
+    assert!(l > 0, "empty sample set");
+    let m = m.min(l).max(1);
+    let k_ll = kernel.gram(samples, d);
+    let r = whitening_transform(&k_ll, m, EIG_EPS); // (m, l), f64
+    // store transposed in f32 for the runtime ABI
+    let mut r_t = vec![0.0f32; l * m];
+    for i in 0..m {
+        for j in 0..l {
+            r_t[j * m + i] = r[(i, j)] as f32;
+        }
+    }
+    ApncCoeffs {
+        method: Method::Nystrom,
+        d,
+        kernel,
+        blocks: vec![CoeffBlock { samples: samples.to_vec(), l, r_t, m }],
+    }
+}
+
+/// Ensemble Nyström (the extension sketched at the end of Section 6):
+/// partition the sample set into `q` disjoint subsets and fit one Nyström
+/// block per subset; `R` becomes block-diagonal with q blocks and the
+/// embedding is the concatenation of the per-block embeddings (scaled by
+/// 1/sqrt(q) so the implied averaged kernel approximation keeps unit
+/// scale).
+pub fn fit_ensemble(
+    samples: &[f32],
+    d: usize,
+    kernel: Kernel,
+    m_per_block: usize,
+    q: usize,
+    rng: &mut Pcg,
+) -> ApncCoeffs {
+    assert!(q >= 1);
+    let l = samples.len() / d;
+    assert!(l >= q, "need at least one sample per ensemble block");
+    let mut idx: Vec<usize> = (0..l).collect();
+    rng.shuffle(&mut idx);
+    let scale = 1.0 / (q as f64).sqrt();
+    let per = l / q;
+    let mut blocks = Vec::with_capacity(q);
+    for b in 0..q {
+        let lo = b * per;
+        let hi = if b + 1 == q { l } else { lo + per };
+        let sub_idx = &idx[lo..hi];
+        let sub: Vec<f32> = sub_idx
+            .iter()
+            .flat_map(|&i| samples[i * d..(i + 1) * d].iter().copied())
+            .collect();
+        let single = fit(&sub, d, kernel, m_per_block);
+        let mut blk = single.blocks.into_iter().next().unwrap();
+        for v in &mut blk.r_t {
+            *v = (*v as f64 * scale) as f32;
+        }
+        blocks.push(blk);
+    }
+    ApncCoeffs { method: Method::EnsembleNystrom, d, kernel, blocks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Compute;
+
+    fn sample_points(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::seeded(seed);
+        (0..n * d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn embedding_inner_products_match_nystrom_kernel() {
+        // On the sample points themselves, <y_i, y_j> must reproduce K_LL
+        // up to the rank-m truncation: with m = l (full rank) it is exact.
+        let (l, d) = (24, 6);
+        let samples = sample_points(l, d, 70);
+        let kernel = Kernel::Rbf { gamma: 0.2 };
+        let coeffs = fit(&samples, d, kernel, l);
+        let compute = Compute::reference();
+        let y = coeffs.embed_block(&compute, &samples, l).unwrap();
+        let m = coeffs.m();
+        let k_ll = kernel.gram(&samples, d);
+        for i in 0..l {
+            for j in 0..l {
+                let dot: f64 = (0..m)
+                    .map(|c| y[i * m + c] as f64 * y[j * m + c] as f64)
+                    .sum();
+                assert!(
+                    (dot - k_ll[(i, j)]).abs() < 1e-3,
+                    "({i},{j}): {dot} vs {}",
+                    k_ll[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn m_capped_at_l() {
+        let samples = sample_points(10, 4, 71);
+        let coeffs = fit(&samples, 4, Kernel::Linear, 100);
+        assert_eq!(coeffs.m(), 10);
+        assert_eq!(coeffs.blocks.len(), 1);
+    }
+
+    #[test]
+    fn truncation_reduces_dim_keeps_quality() {
+        // distances under m=l and m=l/2 should correlate strongly for an
+        // RBF kernel with decaying spectrum
+        let (l, d) = (30, 5);
+        let samples = sample_points(l, d, 72);
+        let x = sample_points(40, d, 73);
+        let kernel = Kernel::Rbf { gamma: 0.15 };
+        let compute = Compute::reference();
+        let full = fit(&samples, d, kernel, l);
+        let half = fit(&samples, d, kernel, l / 2);
+        let yf = full.embed_block(&compute, &x, 40).unwrap();
+        let yh = half.embed_block(&compute, &x, 40).unwrap();
+        // squared norms approximate K(x,x)=1; the truncated one is smaller
+        for r in 0..40 {
+            let nf: f64 = yf[r * full.m()..(r + 1) * full.m()]
+                .iter()
+                .map(|v| (*v as f64) * (*v as f64))
+                .sum();
+            let nh: f64 = yh[r * half.m()..(r + 1) * half.m()]
+                .iter()
+                .map(|v| (*v as f64) * (*v as f64))
+                .sum();
+            assert!(nh <= nf + 1e-6, "row {r}: {nh} > {nf}");
+            assert!(nf < 1.5, "row {r}: norm^2 {nf} should be ~<=1 for RBF");
+        }
+    }
+
+    #[test]
+    fn ensemble_block_structure() {
+        let samples = sample_points(30, 4, 74);
+        let mut rng = Pcg::seeded(75);
+        let coeffs =
+            fit_ensemble(&samples, 4, Kernel::Rbf { gamma: 0.3 }, 8, 3, &mut rng);
+        assert_eq!(coeffs.method, Method::EnsembleNystrom);
+        assert_eq!(coeffs.blocks.len(), 3);
+        assert_eq!(coeffs.l(), 30);
+        assert_eq!(coeffs.m(), 24);
+        for b in &coeffs.blocks {
+            assert_eq!(b.l, 10);
+            assert_eq!(b.m, 8);
+        }
+    }
+
+    #[test]
+    fn degenerate_single_sample() {
+        let samples = sample_points(1, 3, 76);
+        let coeffs = fit(&samples, 3, Kernel::Rbf { gamma: 0.5 }, 10);
+        assert_eq!(coeffs.m(), 1);
+        assert_eq!(coeffs.l(), 1);
+        // embedding of the sample itself: y^2 = K(s,s) = 1
+        let compute = Compute::reference();
+        let y = coeffs.embed_block(&compute, &samples, 1).unwrap();
+        assert!((y[0].abs() - 1.0).abs() < 1e-4);
+    }
+}

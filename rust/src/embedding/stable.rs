@@ -1,0 +1,180 @@
+//! APNC via stable distributions — Section 7 / Algorithm 4 of the paper.
+//!
+//! Indyk's result: for `r` with i.i.d. 2-stable (gaussian) entries,
+//! `E|<v, r>|` is proportional to `||v||_2` (Eq. 10-11). The paper builds
+//! approximately-gaussian directions *in kernel space* from random subsets
+//! of `t` centered sample points (CLT), whitened so components are i.i.d.
+//! (Eq. 14, following Kulis & Grauman's kernelized LSH):
+//!
+//!   reduce side (this module, Algorithm 4):
+//!     E = (H K_LL H)^{-1/2}            via eigendecomposition
+//!     R_j: = sum of t random rows of E, for j = 1..m
+//!     R <- R H
+//!   map side: y = R K_{L,i}; e(y, ȳ) = ||y - ȳ||_1  (Eq. 13)
+
+use super::{ApncCoeffs, CoeffBlock, Method};
+use crate::kernels::Kernel;
+use crate::linalg::ops::{double_center, inv_sqrt};
+use crate::linalg::Matrix;
+use crate::rng::Pcg;
+
+/// Same relative eigenvalue cutoff rationale as the Nyström path.
+pub const EIG_EPS: f64 = 1e-10;
+
+/// Fit stable-distribution coefficients (Algorithm 4 reduce).
+///
+/// `samples`: (l, d) row-major; `m` target dimensionality; `t` the number
+/// of sample points summed per direction (the paper fixes t = 0.4 * l in
+/// its experiments). `t` is clamped to [1, l].
+pub fn fit(samples: &[f32], d: usize, kernel: Kernel, m: usize, t: usize, rng: &mut Pcg) -> ApncCoeffs {
+    assert!(d > 0 && samples.len() % d == 0);
+    let l = samples.len() / d;
+    assert!(l > 0, "empty sample set");
+    assert!(m > 0, "need m >= 1");
+    let t = t.clamp(1, l);
+
+    let k_ll = kernel.gram(samples, d); // (l, l)
+    let centered = double_center(&k_ll); // H K H  (Alg 4 line 9)
+    let e = inv_sqrt(&centered, EIG_EPS); // E = (H K H)^{-1/2}  (line 10)
+
+    // R rows: sums of t distinct random rows of E (lines 11-14)
+    let mut r = Matrix::zeros(m, l);
+    for j in 0..m {
+        let picks = rng.choose(l, t);
+        let row = r.row_mut(j);
+        for &p in &picks {
+            for (c, v) in e.row(p).iter().enumerate() {
+                row[c] += v;
+            }
+        }
+        // 1/sqrt(t) CLT normalization (Eq. 14): keeps the implicit
+        // directions ~N(0, Sigma) regardless of t
+        for v in row.iter_mut() {
+            *v /= (t as f64).sqrt();
+        }
+    }
+    // R <- R H (line 15): center the kernel columns at embed time
+    let r = right_multiply_centering(&r);
+
+    // store transposed f32 for the runtime ABI
+    let mut r_t = vec![0.0f32; l * m];
+    for i in 0..m {
+        for j in 0..l {
+            r_t[j * m + i] = r[(i, j)] as f32;
+        }
+    }
+    ApncCoeffs {
+        method: Method::StableDist,
+        d,
+        kernel,
+        blocks: vec![CoeffBlock { samples: samples.to_vec(), l, r_t, m }],
+    }
+}
+
+/// `R H` with `H = I - (1/l) e e^T`, computed in O(m l) via row means.
+fn right_multiply_centering(r: &Matrix) -> Matrix {
+    let (m, l) = r.shape();
+    let mut out = Matrix::zeros(m, l);
+    for i in 0..m {
+        let row = r.row(i);
+        let mean: f64 = row.iter().sum::<f64>() / l as f64;
+        for (j, v) in row.iter().enumerate() {
+            out[(i, j)] = v - mean;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Compute;
+
+    fn sample_points(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::seeded(seed);
+        (0..n * d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn centering_helper_matches_explicit() {
+        let mut rng = Pcg::seeded(80);
+        let r = Matrix::from_fn(4, 6, |_, _| rng.normal());
+        let h = Matrix::from_fn(6, 6, |i, j| (if i == j { 1.0 } else { 0.0 }) - 1.0 / 6.0);
+        let want = r.matmul(&h);
+        let got = right_multiply_centering(&r);
+        assert!(got.sub(&want).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn shapes_and_method() {
+        let samples = sample_points(20, 5, 81);
+        let mut rng = Pcg::seeded(82);
+        let c = fit(&samples, 5, Kernel::Rbf { gamma: 0.2 }, 33, 8, &mut rng);
+        assert_eq!(c.method, Method::StableDist);
+        assert_eq!(c.m(), 33); // SD dimensionality is NOT capped at l
+        assert_eq!(c.l(), 20);
+    }
+
+    #[test]
+    fn l1_distance_tracks_kernel_distance() {
+        // Property 4.4: ||y_i - y_j||_1 ~ beta * ||phi_i - phi_j||_2.
+        // Check rank correlation between the two distances over pairs.
+        let (l, d, m) = (80, 6, 600);
+        let samples = sample_points(l, d, 83);
+        let x = sample_points(30, d, 84);
+        let kernel = Kernel::Rbf { gamma: 0.15 };
+        let mut rng = Pcg::seeded(85);
+        let coeffs = fit(&samples, d, kernel, m, 16, &mut rng);
+        let compute = Compute::reference();
+        let y = coeffs.embed_block(&compute, &x, 30).unwrap();
+
+        let mut kernel_d = Vec::new();
+        let mut embed_d = Vec::new();
+        for i in 0..30 {
+            for j in (i + 1)..30 {
+                let xi = &x[i * d..(i + 1) * d];
+                let xj = &x[j * d..(j + 1) * d];
+                // kernel-space distance^2 = k(i,i) + k(j,j) - 2k(i,j)
+                let dk = kernel.eval(xi, xi) + kernel.eval(xj, xj) - 2.0 * kernel.eval(xi, xj);
+                kernel_d.push(dk.max(0.0).sqrt());
+                let dl1: f64 = (0..m)
+                    .map(|c| (y[i * m + c] - y[j * m + c]).abs() as f64)
+                    .sum();
+                embed_d.push(dl1);
+            }
+        }
+        // Pearson correlation must be strongly positive
+        let n = kernel_d.len() as f64;
+        let mk = kernel_d.iter().sum::<f64>() / n;
+        let me = embed_d.iter().sum::<f64>() / n;
+        let mut cov = 0.0;
+        let mut vk = 0.0;
+        let mut ve = 0.0;
+        for (a, b) in kernel_d.iter().zip(&embed_d) {
+            cov += (a - mk) * (b - me);
+            vk += (a - mk) * (a - mk);
+            ve += (b - me) * (b - me);
+        }
+        let corr = cov / (vk.sqrt() * ve.sqrt());
+        // the estimate is bounded by l covariance samples and m projections;
+        // strong positive rank agreement is what Property 4.4 needs
+        assert!(corr > 0.8, "l1-embedding vs kernel distance correlation {corr}");
+    }
+
+    #[test]
+    fn deterministic_given_rng() {
+        let samples = sample_points(15, 4, 86);
+        let a = fit(&samples, 4, Kernel::Linear, 10, 6, &mut Pcg::seeded(87));
+        let b = fit(&samples, 4, Kernel::Linear, 10, 6, &mut Pcg::seeded(87));
+        assert_eq!(a.blocks[0].r_t, b.blocks[0].r_t);
+    }
+
+    #[test]
+    fn t_clamped_to_l() {
+        let samples = sample_points(8, 3, 88);
+        let mut rng = Pcg::seeded(89);
+        // t larger than l must not panic
+        let c = fit(&samples, 3, Kernel::Rbf { gamma: 0.4 }, 12, 100, &mut rng);
+        assert_eq!(c.m(), 12);
+    }
+}

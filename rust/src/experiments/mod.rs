@@ -1,0 +1,59 @@
+//! Experiment harnesses that regenerate every table of the paper's
+//! evaluation section (Section 9). Invoked from the `repro` CLI:
+//!
+//! * `repro table1` — dataset properties ([`table1`])
+//! * `repro table2` — medium-scale NMI comparison ([`table2`])
+//! * `repro table3` — large-scale NMI + embedding/clustering time ([`table3`])
+//!
+//! Each harness returns structured results (so integration tests can
+//! assert the paper's qualitative shape at reduced scale) and prints the
+//! same rows the paper reports. Absolute values differ — the datasets are
+//! seeded synthetic mirrors (DESIGN.md section 2) — but orderings and
+//! growth trends are the reproduction target.
+
+pub mod ablate;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use crate::metrics::{mean_std, significantly_greater};
+
+/// Format `mean ± std` of NMI percentages like the paper's tables.
+pub fn fmt_nmi(scores: &[f64]) -> String {
+    let (m, s) = mean_std(scores);
+    format!("{:5.2} ± {:4.2}", 100.0 * m, 100.0 * s)
+}
+
+/// Indices of methods that are "best" in a column by the paper's rule:
+/// a method is bold iff no other method is significantly greater (95%
+/// one-sided t-test).
+pub fn best_by_ttest(columns: &[&[f64]]) -> Vec<bool> {
+    columns
+        .iter()
+        .map(|mine| {
+            !columns
+                .iter()
+                .any(|other| !std::ptr::eq(*other, *mine) && significantly_greater(other, mine))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_is_percentage() {
+        let s = fmt_nmi(&[0.5, 0.5, 0.5]);
+        assert!(s.starts_with("50.00"), "{s}");
+    }
+
+    #[test]
+    fn ttest_bolding_rule() {
+        let strong = vec![0.9, 0.91, 0.9, 0.92, 0.9];
+        let weak = vec![0.5, 0.51, 0.5, 0.49, 0.5];
+        let tied = vec![0.9, 0.9, 0.92, 0.91, 0.89];
+        let flags = best_by_ttest(&[&strong, &weak, &tied]);
+        assert_eq!(flags, vec![true, false, true]);
+    }
+}

@@ -1,0 +1,76 @@
+//! Table 1: the properties of the data sets used in the experiments —
+//! the paper's values side by side with this reproduction's mirrored
+//! generators (reduced n, capped d; DESIGN.md section 2).
+
+use crate::data::registry;
+
+/// One row of the table.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub name: &'static str,
+    pub kind: &'static str,
+    pub paper_n: usize,
+    pub paper_d: usize,
+    pub repro_n: usize,
+    pub repro_d: usize,
+    pub clusters: usize,
+}
+
+/// Collect the rows (paper's six Table-1 datasets, in paper order).
+pub fn rows() -> Vec<Row> {
+    ["usps", "pie", "mnist", "rcv1", "covtype", "imagenet"]
+        .iter()
+        .map(|name| {
+            let s = registry::spec(name).expect("registry row");
+            Row {
+                name: s.name,
+                kind: s.kind,
+                paper_n: s.paper_n,
+                paper_d: s.paper_d,
+                repro_n: s.default_n,
+                repro_d: s.d,
+                clusters: s.k,
+            }
+        })
+        .collect()
+}
+
+/// Print the table.
+pub fn run() {
+    println!("Table 1: The properties of the data sets used in the experiments.");
+    println!("(paper values | this reproduction's synthetic mirrors)\n");
+    println!(
+        "{:<10} {:<13} {:>10} {:>7} {:>9} {:>8} {:>7}",
+        "Data set", "Type", "#Inst", "#Fea", "#Inst'", "#Fea'", "#Clust"
+    );
+    for r in rows() {
+        println!(
+            "{:<10} {:<13} {:>10} {:>7} {:>9} {:>8} {:>7}",
+            r.name, r.kind, r.paper_n, r.paper_d, r.repro_n, r.repro_d, r.clusters
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_match_paper_table1() {
+        let rows = rows();
+        assert_eq!(rows.len(), 6);
+        let by_name = |n: &str| rows.iter().find(|r| r.name == n).unwrap().clone();
+        // exact paper numbers from Table 1
+        assert_eq!(by_name("usps").paper_n, 9_298);
+        assert_eq!(by_name("usps").paper_d, 256);
+        assert_eq!(by_name("pie").paper_n, 11_554);
+        assert_eq!(by_name("mnist").paper_n, 70_000);
+        assert_eq!(by_name("rcv1").paper_n, 193_844);
+        assert_eq!(by_name("rcv1").paper_d, 47_236);
+        assert_eq!(by_name("covtype").paper_n, 581_012);
+        assert_eq!(by_name("imagenet").paper_n, 1_262_102);
+        assert_eq!(by_name("imagenet").clusters, 164);
+        assert_eq!(by_name("covtype").clusters, 7);
+        assert_eq!(by_name("rcv1").clusters, 103);
+    }
+}

@@ -1,0 +1,302 @@
+//! Table 2: medium-scale NMI comparison of kernel-k-means approximations.
+//!
+//! Paper setup (Section 9): PIE + ImageNet-50k with a self-tuned RBF
+//! kernel (all five methods), USPS with the neural kernel and MNIST with
+//! the polynomial kernel (sampling-based methods only — RFF needs a
+//! shift-invariant kernel). l sweeps {50, 100, 300}; the paper fixes
+//! m = 1000 and t = 0.4 l; 20 runs per cell with t-test bolding.
+//!
+//! Reproduction deltas (documented in EXPERIMENTS.md): synthetic mirrored
+//! datasets at reduced n (`--scale`), m = 512 (the artifact grid cap),
+//! fewer default runs (`--runs`), 500 fourier features.
+
+use crate::baselines::approx_kkm::{self, ApproxKkmConfig};
+use crate::baselines::rff::{self, RffConfig};
+use crate::coordinator::driver::{Pipeline, PipelineConfig};
+use crate::coordinator::sample::SampleMode;
+use crate::data::registry;
+use crate::embedding::Method;
+use crate::kernels::Kernel;
+use crate::rng::Pcg;
+use crate::runtime::Compute;
+use anyhow::Result;
+
+use super::{best_by_ttest, fmt_nmi};
+
+/// Methods in paper order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Table2Method {
+    Rff,
+    SvRff,
+    ApproxKkm,
+    ApncNys,
+    ApncSd,
+}
+
+impl Table2Method {
+    pub fn label(self) -> &'static str {
+        match self {
+            Table2Method::Rff => "RFF",
+            Table2Method::SvRff => "SV-RFF",
+            Table2Method::ApproxKkm => "Approx KKM",
+            Table2Method::ApncNys => "APNC-Nys",
+            Table2Method::ApncSd => "APNC-SD",
+        }
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct Table2Config {
+    pub runs: usize,
+    pub scale: f64,
+    pub l_values: Vec<usize>,
+    pub m: usize,
+    pub fourier_features: usize,
+    pub seed: u64,
+    /// dataset-name filter (empty = all four)
+    pub only: Option<String>,
+}
+
+impl Default for Table2Config {
+    fn default() -> Self {
+        Table2Config {
+            runs: 5,
+            scale: 0.5,
+            l_values: vec![50, 100, 300],
+            m: 512,
+            fourier_features: 500,
+            seed: 2013,
+            only: None,
+        }
+    }
+}
+
+/// NMI samples for one (dataset, method, l) cell.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub scores: Vec<f64>,
+}
+
+/// One dataset sub-table.
+#[derive(Clone, Debug)]
+pub struct SubTable {
+    pub dataset: String,
+    pub kernel_desc: String,
+    pub n: usize,
+    pub methods: Vec<Table2Method>,
+    /// cells[method_idx][l_idx]
+    pub cells: Vec<Vec<Cell>>,
+}
+
+fn dataset_plan(cfg: &Table2Config) -> Vec<(&'static str, Vec<Table2Method>)> {
+    use Table2Method::*;
+    let all = vec![Rff, SvRff, ApproxKkm, ApncNys, ApncSd];
+    let sampling_only = vec![ApproxKkm, ApncNys, ApncSd];
+    [
+        ("pie", all.clone()),
+        ("imagenet-50k", all),
+        ("usps", sampling_only.clone()),
+        ("mnist", sampling_only),
+    ]
+    .into_iter()
+    .filter(|(name, _)| cfg.only.as_deref().map_or(true, |o| o == *name))
+    .collect()
+}
+
+/// Run one cell (one method, one dataset instance, one l, one seed).
+#[allow(clippy::too_many_arguments)]
+fn run_method(
+    method: Table2Method,
+    ds: &crate::data::Dataset,
+    kernel: Kernel,
+    l: usize,
+    cfg: &Table2Config,
+    compute: &Compute,
+    seed: u64,
+) -> Result<f64> {
+    let labels = match method {
+        Table2Method::Rff | Table2Method::SvRff => {
+            let gamma = match kernel {
+                Kernel::Rbf { gamma } => gamma,
+                other => anyhow::bail!("RFF needs an RBF kernel, got {other:?}"),
+            };
+            let rcfg = RffConfig {
+                k: ds.k,
+                features: cfg.fourier_features,
+                gamma,
+                max_iters: 30,
+                seed,
+                restarts: 1,
+            };
+            if method == Table2Method::Rff {
+                rff::cluster(&ds.x, ds.n, ds.d, &rcfg).labels
+            } else {
+                rff::cluster_sv(&ds.x, ds.n, ds.d, &rcfg).labels
+            }
+        }
+        Table2Method::ApproxKkm => {
+            approx_kkm::cluster(
+                &ds.x,
+                ds.n,
+                ds.d,
+                kernel,
+                &ApproxKkmConfig { k: ds.k, l, max_iters: 30, seed, restarts: 1, ..Default::default() },
+            )
+            .labels
+        }
+        Table2Method::ApncNys | Table2Method::ApncSd => {
+            let pcfg = PipelineConfig {
+                method: if method == Table2Method::ApncNys {
+                    Method::Nystrom
+                } else {
+                    Method::StableDist
+                },
+                l,
+                m: cfg.m,
+                t_frac: 0.4,
+                k: ds.k,
+                max_iters: 30,
+                tol: 1e-5,
+                workers: 4,
+                block_rows: 1024,
+                seed,
+                sample_mode: SampleMode::Exact,
+                kernel: Some(kernel),
+                ..Default::default()
+            };
+            Pipeline::with_compute(pcfg, compute.clone()).run(ds)?.labels
+        }
+    };
+    Ok(crate::metrics::nmi(&labels, &ds.labels))
+}
+
+/// Run the full Table 2 harness.
+pub fn run(cfg: &Table2Config, compute: &Compute) -> Result<Vec<SubTable>> {
+    let mut out = Vec::new();
+    for (name, methods) in dataset_plan(cfg) {
+        let spec = registry::spec(name).unwrap();
+        let n = ((spec.default_n as f64 * cfg.scale) as usize).max(spec.k * 8);
+        let mut cells: Vec<Vec<Cell>> =
+            vec![vec![Cell { scores: vec![] }; cfg.l_values.len()]; methods.len()];
+        let mut kernel_desc = String::new();
+        eprintln!("table2: dataset {name} (n = {n})...");
+        for run_idx in 0..cfg.runs {
+            // fresh dataset instance per run (like re-sampled restarts; the
+            // paper re-runs the algorithms, we also re-draw the mirror)
+            let ds = registry::generate(name, n, cfg.seed ^ (run_idx as u64) << 8);
+            let mut rng = Pcg::new(cfg.seed + run_idx as u64, 0x7AB2);
+            let kernel = spec.kernel.build(&ds.x, ds.d, &mut rng);
+            kernel_desc = format!("{kernel:?}");
+            for (mi, &method) in methods.iter().enumerate() {
+                for (li, &l) in cfg.l_values.iter().enumerate() {
+                    // RFF methods do not depend on l: reuse their first
+                    // column to save compute, matching the paper's table
+                    // (identical values across l)
+                    if matches!(method, Table2Method::Rff | Table2Method::SvRff) && li > 0 {
+                        let v = cells[mi][0].scores[run_idx];
+                        cells[mi][li].scores.push(v);
+                        continue;
+                    }
+                    let seed = cfg.seed
+                        .wrapping_add(run_idx as u64 * 1009)
+                        .wrapping_add(mi as u64 * 104729)
+                        .wrapping_add(li as u64 * 31);
+                    let t0 = std::time::Instant::now();
+                    let nmi = run_method(method, &ds, kernel, l, cfg, compute, seed)?;
+                    eprintln!(
+                        "table2: {name} run {run_idx} {} l={l}: nmi={nmi:.4} ({:.1?})",
+                        method.label(),
+                        t0.elapsed()
+                    );
+                    cells[mi][li].scores.push(nmi);
+                }
+            }
+        }
+        out.push(SubTable {
+            dataset: name.to_string(),
+            kernel_desc,
+            n,
+            methods,
+            cells,
+        });
+    }
+    Ok(out)
+}
+
+/// Print a result set the way the paper formats Table 2.
+pub fn print(tables: &[SubTable], cfg: &Table2Config) {
+    println!(
+        "Table 2: NMIs of kernel k-means approximations (medium-scale mirrors, \
+         {} runs, m = {}, t = 0.4 l).",
+        cfg.runs, cfg.m
+    );
+    println!("A cell is starred when no other method beats it (one-sided t-test, 95%).\n");
+    for t in tables {
+        println!("--- {} (n = {}, kernel = {}) ---", t.dataset, t.n, t.kernel_desc);
+        print!("{:<12}", "Method");
+        for l in &cfg.l_values {
+            print!(" {:>16}", format!("l = {l}"));
+        }
+        println!();
+        for (li, _) in cfg.l_values.iter().enumerate() {
+            let cols: Vec<&[f64]> =
+                t.cells.iter().map(|row| row[li].scores.as_slice()).collect();
+            let _ = cols; // bolding computed per column below
+        }
+        // compute bolding per l-column
+        let mut bold = vec![vec![false; cfg.l_values.len()]; t.methods.len()];
+        for li in 0..cfg.l_values.len() {
+            let cols: Vec<&[f64]> =
+                t.cells.iter().map(|row| row[li].scores.as_slice()).collect();
+            for (mi, flag) in best_by_ttest(&cols).into_iter().enumerate() {
+                bold[mi][li] = flag;
+            }
+        }
+        for (mi, &method) in t.methods.iter().enumerate() {
+            print!("{:<12}", method.label());
+            for li in 0..cfg.l_values.len() {
+                let s = fmt_nmi(&t.cells[mi][li].scores);
+                let mark = if bold[mi][li] { "*" } else { " " };
+                print!(" {:>15}{mark}", s);
+            }
+            println!();
+        }
+        println!();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny-scale smoke: the harness runs end to end and produces the
+    /// paper's structural shape (methods x l cells, populated).
+    #[test]
+    fn tiny_scale_structure() {
+        let cfg = Table2Config {
+            runs: 2,
+            scale: 0.02,
+            l_values: vec![16, 32],
+            m: 32,
+            fourier_features: 32,
+            seed: 99,
+            only: Some("usps".into()),
+        };
+        let compute = Compute::reference();
+        let tables = run(&cfg, &compute).unwrap();
+        assert_eq!(tables.len(), 1);
+        let t = &tables[0];
+        assert_eq!(t.methods.len(), 3); // sampling-based only for usps
+        assert_eq!(t.cells.len(), 3);
+        assert_eq!(t.cells[0].len(), 2);
+        for row in &t.cells {
+            for cell in row {
+                assert_eq!(cell.scores.len(), 2);
+                for &s in &cell.scores {
+                    assert!((0.0..=1.0).contains(&s));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,313 @@
+//! Table 3: large-scale NMI + embedding/clustering time on the simulated
+//! MapReduce cluster.
+//!
+//! Paper setup (Section 9): RCV1 / CovType / ImageNet on a 20-node EC2
+//! Hadoop cluster; methods 2-Stages, APNC-Nys, APNC-SD; l sweeps
+//! {500, 1000, 1500}; m = 500; self-tuned RBF; 20 fixed Lloyd iterations;
+//! 3 runs. The paper reports NMI plus embedding minutes per l and the
+//! average clustering minutes per dataset.
+//!
+//! Reproduction deltas: mirrored datasets at `--scale` of the paper's n,
+//! the simulated engine's cost model supplies "cluster minutes": the
+//! honest single-core analogue is `simulated_time(nodes, net)` —
+//! per-node compute + bytes moved at 1 Gbps (DESIGN.md sections 1-2) —
+//! reported beside raw wall-clock.
+
+use crate::baselines::two_stage::{self, TwoStageConfig};
+use crate::coordinator::driver::{Pipeline, PipelineConfig};
+use crate::coordinator::sample::SampleMode;
+use crate::data::registry;
+use crate::embedding::Method;
+use crate::rng::Pcg;
+use crate::runtime::Compute;
+use anyhow::Result;
+
+use super::{best_by_ttest, fmt_nmi};
+
+/// 1 Gbps in bytes/sec — the network model for simulated cluster time.
+pub const NET_BYTES_PER_SEC: f64 = 125_000_000.0;
+
+/// Methods in paper order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Table3Method {
+    TwoStages,
+    ApncNys,
+    ApncSd,
+}
+
+impl Table3Method {
+    pub fn label(self) -> &'static str {
+        match self {
+            Table3Method::TwoStages => "2-Stages",
+            Table3Method::ApncNys => "APNC-Nys",
+            Table3Method::ApncSd => "APNC-SD",
+        }
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct Table3Config {
+    pub runs: usize,
+    pub scale: f64,
+    pub l_values: Vec<usize>,
+    pub m: usize,
+    pub nodes: usize,
+    pub max_iters: usize,
+    pub seed: u64,
+    pub only: Option<String>,
+}
+
+impl Default for Table3Config {
+    fn default() -> Self {
+        Table3Config {
+            runs: 3,
+            scale: 0.25,
+            l_values: vec![500, 1000, 1500],
+            m: 500,
+            nodes: 20,
+            max_iters: 20,
+            seed: 2013,
+            only: None,
+        }
+    }
+}
+
+/// One (method, l) cell.
+#[derive(Clone, Debug, Default)]
+pub struct Cell {
+    pub scores: Vec<f64>,
+    /// wall-clock embedding seconds per run (APNC methods only)
+    pub embed_secs: Vec<f64>,
+    /// simulated `nodes`-cluster embedding seconds per run
+    pub embed_secs_sim: Vec<f64>,
+}
+
+/// One dataset sub-table.
+#[derive(Clone, Debug)]
+pub struct SubTable {
+    pub dataset: String,
+    pub n: usize,
+    pub methods: Vec<Table3Method>,
+    /// cells[method_idx][l_idx]
+    pub cells: Vec<Vec<Cell>>,
+    /// average clustering time (wall, simulated) across APNC runs
+    pub cluster_secs: (f64, f64),
+}
+
+/// Run the full Table 3 harness.
+pub fn run(cfg: &Table3Config, compute: &Compute) -> Result<Vec<SubTable>> {
+    let methods = vec![Table3Method::TwoStages, Table3Method::ApncNys, Table3Method::ApncSd];
+    let mut out = Vec::new();
+    for name in ["rcv1", "covtype", "imagenet"] {
+        if cfg.only.as_deref().map_or(false, |o| o != name) {
+            continue;
+        }
+        let spec = registry::spec(name).unwrap();
+        let n = ((spec.default_n as f64 * cfg.scale) as usize).max(spec.k * 8);
+        let mut cells: Vec<Vec<Cell>> =
+            vec![vec![Cell::default(); cfg.l_values.len()]; methods.len()];
+        let mut cluster_wall = Vec::new();
+        let mut cluster_sim = Vec::new();
+        eprintln!("table3: dataset {name} (n = {n})...");
+        for run_idx in 0..cfg.runs {
+            let ds = registry::generate(name, n, cfg.seed ^ ((run_idx as u64) << 9));
+            let mut rng = Pcg::new(cfg.seed + run_idx as u64, 0x7AB3);
+            let kernel = spec.kernel.build(&ds.x, ds.d, &mut rng);
+            for (mi, &method) in methods.iter().enumerate() {
+                for (li, &l) in cfg.l_values.iter().enumerate() {
+                    let seed = cfg
+                        .seed
+                        .wrapping_add(run_idx as u64 * 2027)
+                        .wrapping_add(mi as u64 * 7)
+                        .wrapping_add(li as u64 * 131);
+                    match method {
+                        Table3Method::TwoStages => {
+                            let r = two_stage::cluster(
+                                &ds.x,
+                                ds.n,
+                                ds.d,
+                                kernel,
+                                &TwoStageConfig {
+                                    k: ds.k,
+                                    l,
+                                    max_iters: cfg.max_iters,
+                                    seed,
+                                    restarts: 1,
+                                },
+                            );
+                            cells[mi][li]
+                                .scores
+                                .push(crate::metrics::nmi(&r.labels, &ds.labels));
+                        }
+                        Table3Method::ApncNys | Table3Method::ApncSd => {
+                            let pcfg = PipelineConfig {
+                                method: if method == Table3Method::ApncNys {
+                                    Method::Nystrom
+                                } else {
+                                    Method::StableDist
+                                },
+                                l,
+                                m: cfg.m,
+                                t_frac: 0.4,
+                                k: ds.k,
+                                max_iters: cfg.max_iters,
+                                tol: 0.0, // paper: fixed 20 iterations
+                                workers: cfg.nodes,
+                                block_rows: 1024,
+                                seed,
+                                sample_mode: SampleMode::Exact,
+                                kernel: Some(kernel),
+                                ..Default::default()
+                            };
+                            let r = Pipeline::with_compute(pcfg, compute.clone()).run(&ds)?;
+                            let cell = &mut cells[mi][li];
+                            cell.scores.push(r.nmi);
+                            // embedding time includes the coefficient fit
+                            // (the paper's "embedding time" covers Algs 3/4+1)
+                            let wall = (r.times.coeff_fit + r.times.embed).as_secs_f64();
+                            cell.embed_secs.push(wall);
+                            let sim = r
+                                .simulated_embed_time(cfg.nodes, NET_BYTES_PER_SEC)
+                                .as_secs_f64()
+                                + r.times.coeff_fit.as_secs_f64();
+                            cell.embed_secs_sim.push(sim);
+                            cluster_wall.push(r.times.cluster.as_secs_f64());
+                            cluster_sim.push(
+                                r.simulated_cluster_time(cfg.nodes, NET_BYTES_PER_SEC)
+                                    .as_secs_f64(),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        let avg = |v: &[f64]| if v.is_empty() { 0.0 } else { v.iter().sum::<f64>() / v.len() as f64 };
+        out.push(SubTable {
+            dataset: name.to_string(),
+            n,
+            methods: methods.clone(),
+            cells,
+            cluster_secs: (avg(&cluster_wall), avg(&cluster_sim)),
+        });
+    }
+    Ok(out)
+}
+
+fn fmt_secs(v: &[f64]) -> String {
+    if v.is_empty() {
+        return "No embedding".to_string();
+    }
+    let mean = v.iter().sum::<f64>() / v.len() as f64;
+    format!("{:.1}s", mean)
+}
+
+/// Print like the paper's Table 3 (NMI block + embedding-time block).
+pub fn print(tables: &[SubTable], cfg: &Table3Config) {
+    println!(
+        "Table 3: NMIs and embedding times (large-scale mirrors at scale {}, \
+         {} runs, m = {}, {} fixed iterations, {}-node simulated cluster).",
+        cfg.scale, cfg.runs, cfg.m, cfg.max_iters, cfg.nodes
+    );
+    println!("Embedding time = wall-clock on this host | simulated cluster model @1Gbps.\n");
+    for t in tables {
+        println!("--- {} (n = {}) ---", t.dataset, t.n);
+        print!("{:<10}", "Method");
+        for l in &cfg.l_values {
+            print!(" {:>16}", format!("NMI l={l}"));
+        }
+        for l in &cfg.l_values {
+            print!(" {:>22}", format!("Embed t l={l}"));
+        }
+        println!();
+        let mut bold = vec![vec![false; cfg.l_values.len()]; t.methods.len()];
+        for li in 0..cfg.l_values.len() {
+            let cols: Vec<&[f64]> =
+                t.cells.iter().map(|row| row[li].scores.as_slice()).collect();
+            for (mi, flag) in best_by_ttest(&cols).into_iter().enumerate() {
+                bold[mi][li] = flag;
+            }
+        }
+        for (mi, &method) in t.methods.iter().enumerate() {
+            print!("{:<10}", method.label());
+            for li in 0..cfg.l_values.len() {
+                let s = fmt_nmi(&t.cells[mi][li].scores);
+                let mark = if bold[mi][li] { "*" } else { " " };
+                print!(" {:>15}{mark}", s);
+            }
+            for li in 0..cfg.l_values.len() {
+                let cell = &t.cells[mi][li];
+                if cell.embed_secs.is_empty() {
+                    print!(" {:>22}", "No embedding");
+                } else {
+                    print!(
+                        " {:>22}",
+                        format!(
+                            "{} | {}",
+                            fmt_secs(&cell.embed_secs),
+                            fmt_secs(&cell.embed_secs_sim)
+                        )
+                    );
+                }
+            }
+            println!();
+        }
+        println!(
+            "avg clustering time: {:.1}s wall | {:.1}s simulated-cluster\n",
+            t.cluster_secs.0, t.cluster_secs.1
+        );
+    }
+    // Section 9 footer comparison (total time vs distributed spectral [5])
+    if let Some(rcv1) = tables.iter().find(|t| t.dataset == "rcv1") {
+        let li = cfg.l_values.len() - 1;
+        for (mi, method) in rcv1.methods.iter().enumerate() {
+            if *method == Table3Method::TwoStages {
+                continue;
+            }
+            let cell = &rcv1.cells[mi][li];
+            if cell.embed_secs.is_empty() {
+                continue;
+            }
+            let total = cell.embed_secs.iter().sum::<f64>() / cell.embed_secs.len() as f64
+                + rcv1.cluster_secs.0;
+            println!(
+                "total {} time on rcv1 (l = {}): {:.1}s wall (paper: 25.2 / 32.2 min at full \
+                 scale vs 95 min for distributed spectral clustering [5])",
+                method.label(),
+                cfg.l_values[li],
+                total
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_scale_structure_and_times() {
+        let cfg = Table3Config {
+            runs: 1,
+            scale: 0.01,
+            l_values: vec![32, 64],
+            m: 48,
+            nodes: 4,
+            max_iters: 4,
+            seed: 5,
+            only: Some("covtype".into()),
+        };
+        let compute = Compute::reference();
+        let tables = run(&cfg, &compute).unwrap();
+        assert_eq!(tables.len(), 1);
+        let t = &tables[0];
+        assert_eq!(t.methods.len(), 3);
+        // 2-Stages has no embedding time; APNC methods do
+        assert!(t.cells[0][0].embed_secs.is_empty());
+        assert_eq!(t.cells[1][0].embed_secs.len(), 1);
+        assert!(t.cells[1][0].embed_secs_sim[0] > 0.0);
+        // larger l must not make embedding cheaper (same run, more samples)
+        assert!(t.cells[1][1].embed_secs[0] >= t.cells[1][0].embed_secs[0] * 0.5);
+        assert!(t.cluster_secs.0 > 0.0);
+    }
+}

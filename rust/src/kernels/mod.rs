@@ -1,0 +1,228 @@
+//! Kernel functions over raw feature vectors (rust-side reference path).
+//!
+//! The PJRT artifacts compute kernel blocks on the hot path; this module is
+//! the rust-native equivalent used by (a) the coefficient jobs, which need
+//! `K_LL` in f64 for the eigendecomposition, (b) the centralized baselines,
+//! and (c) tests that cross-check the artifact outputs.
+//!
+//! Kernel kinds and parameter packing match `python/compile/kernels/ref.py`
+//! exactly (the integer codes are part of the artifact ABI).
+
+use crate::linalg::Matrix;
+use crate::rng::Pcg;
+
+/// Kernel function kind + parameters. Codes are the artifact ABI:
+/// 0 = linear, 1 = rbf, 2 = polynomial, 3 = tanh ("neural").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kernel {
+    /// k(x, z) = x.z
+    Linear,
+    /// k(x, z) = exp(-gamma ||x - z||^2)
+    Rbf { gamma: f32 },
+    /// k(x, z) = (x.z + c)^degree   (x.z + c clamped at 0, see ref.py)
+    Poly { c: f32, degree: f32 },
+    /// k(x, z) = tanh(a x.z + b) — the paper's "neural" kernel (USPS: a=0.0045, b=0.11)
+    Tanh { a: f32, b: f32 },
+}
+
+impl Kernel {
+    /// Integer code shared with the AOT artifacts (`kind` operand).
+    pub fn code(&self) -> i32 {
+        match self {
+            Kernel::Linear => 0,
+            Kernel::Rbf { .. } => 1,
+            Kernel::Poly { .. } => 2,
+            Kernel::Tanh { .. } => 3,
+        }
+    }
+
+    /// Parameter vector (4,) shared with the AOT artifacts.
+    pub fn params(&self) -> [f32; 4] {
+        match *self {
+            Kernel::Linear => [0.0; 4],
+            Kernel::Rbf { gamma } => [gamma, 0.0, 0.0, 0.0],
+            Kernel::Poly { c, degree } => [c, degree, 0.0, 0.0],
+            Kernel::Tanh { a, b } => [a, b, 0.0, 0.0],
+        }
+    }
+
+    /// Evaluate on a pair of points.
+    pub fn eval(&self, x: &[f32], z: &[f32]) -> f64 {
+        debug_assert_eq!(x.len(), z.len());
+        match *self {
+            Kernel::Linear => dot(x, z),
+            Kernel::Rbf { gamma } => {
+                let d2 = sqdist(x, z);
+                (-(gamma as f64) * d2).exp()
+            }
+            Kernel::Poly { c, degree } => {
+                let base = (dot(x, z) + c as f64).max(0.0);
+                base.powf(degree as f64)
+            }
+            Kernel::Tanh { a, b } => (a as f64 * dot(x, z) + b as f64).tanh(),
+        }
+    }
+
+    /// Kernel matrix between row-point sets `a` (na x d) and `b` (nb x d),
+    /// in f64 for downstream eigendecomposition.
+    pub fn block(&self, a: &[f32], b: &[f32], d: usize) -> Matrix {
+        assert!(d > 0 && a.len() % d == 0 && b.len() % d == 0);
+        let na = a.len() / d;
+        let nb = b.len() / d;
+        let mut out = Matrix::zeros(na, nb);
+        for i in 0..na {
+            let xi = &a[i * d..(i + 1) * d];
+            let row = out.row_mut(i);
+            for j in 0..nb {
+                row[j] = self.eval(xi, &b[j * d..(j + 1) * d]);
+            }
+        }
+        out
+    }
+
+    /// Symmetric kernel matrix over one row-point set (exploits symmetry:
+    /// half the evaluations of `block(a, a, d)`).
+    pub fn gram(&self, a: &[f32], d: usize) -> Matrix {
+        assert!(d > 0 && a.len() % d == 0);
+        let n = a.len() / d;
+        let mut out = Matrix::zeros(n, n);
+        for i in 0..n {
+            let xi = &a[i * d..(i + 1) * d];
+            for j in i..n {
+                let v = self.eval(xi, &a[j * d..(j + 1) * d]);
+                out[(i, j)] = v;
+                out[(j, i)] = v;
+            }
+        }
+        out
+    }
+}
+
+#[inline]
+fn dot(x: &[f32], z: &[f32]) -> f64 {
+    x.iter().zip(z).map(|(a, b)| *a as f64 * *b as f64).sum()
+}
+
+#[inline]
+fn sqdist(x: &[f32], z: &[f32]) -> f64 {
+    x.iter()
+        .zip(z)
+        .map(|(a, b)| {
+            let diff = *a as f64 - *b as f64;
+            diff * diff
+        })
+        .sum()
+}
+
+/// Self-tuned RBF gamma, following the heuristic of Chitta et al. [7] the
+/// paper uses in Section 9: gamma = 1 / mean squared pairwise distance,
+/// estimated from a sample of point pairs.
+pub fn self_tune_gamma(x: &[f32], d: usize, rng: &mut Pcg) -> f32 {
+    let n = x.len() / d;
+    assert!(n >= 2, "need at least two points");
+    let pairs = 1000.min(n * (n - 1) / 2).max(1);
+    let mut sum = 0.0;
+    let mut cnt = 0usize;
+    for _ in 0..pairs {
+        let i = rng.below(n);
+        let mut j = rng.below(n);
+        if i == j {
+            j = (j + 1) % n;
+        }
+        sum += sqdist(&x[i * d..(i + 1) * d], &x[j * d..(j + 1) * d]);
+        cnt += 1;
+    }
+    let mean = (sum / cnt as f64).max(1e-12);
+    (1.0 / mean) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_and_params_roundtrip() {
+        let ks = [
+            Kernel::Linear,
+            Kernel::Rbf { gamma: 0.3 },
+            Kernel::Poly { c: 1.0, degree: 5.0 },
+            Kernel::Tanh { a: 0.0045, b: 0.11 },
+        ];
+        let codes: Vec<i32> = ks.iter().map(|k| k.code()).collect();
+        assert_eq!(codes, vec![0, 1, 2, 3]);
+        assert_eq!(ks[1].params()[0], 0.3);
+        assert_eq!(ks[2].params()[1], 5.0);
+        assert_eq!(ks[3].params()[1], 0.11);
+    }
+
+    #[test]
+    fn rbf_diag_is_one() {
+        let k = Kernel::Rbf { gamma: 0.7 };
+        let x = [0.3f32, -1.2, 4.0];
+        assert!((k.eval(&x, &x) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rbf_decays_with_distance() {
+        let k = Kernel::Rbf { gamma: 1.0 };
+        let a = [0.0f32, 0.0];
+        let near = [0.1f32, 0.0];
+        let far = [2.0f32, 0.0];
+        assert!(k.eval(&a, &near) > k.eval(&a, &far));
+    }
+
+    #[test]
+    fn linear_is_dot() {
+        let k = Kernel::Linear;
+        assert_eq!(k.eval(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+
+    #[test]
+    fn poly_matches_formula() {
+        let k = Kernel::Poly { c: 1.0, degree: 3.0 };
+        let v = k.eval(&[1.0, 1.0], &[1.0, 1.0]); // (2+1)^3
+        assert!((v - 27.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tanh_bounded() {
+        let k = Kernel::Tanh { a: 0.5, b: 0.1 };
+        let v = k.eval(&[10.0, 10.0], &[10.0, 10.0]);
+        assert!(v.abs() <= 1.0);
+    }
+
+    #[test]
+    fn gram_symmetric_and_matches_block() {
+        let k = Kernel::Rbf { gamma: 0.2 };
+        let pts: Vec<f32> = (0..12).map(|i| (i as f32) * 0.37 - 2.0).collect();
+        let g = k.gram(&pts, 3);
+        let b = k.block(&pts, &pts, 3);
+        assert!(g.sub(&b).max_abs() < 1e-12);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(g[(i, j)], g[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn rbf_gram_is_psd() {
+        use crate::linalg::eigh;
+        let mut rng = Pcg::seeded(40);
+        let pts: Vec<f32> = (0..60).map(|_| rng.normal() as f32).collect();
+        let g = Kernel::Rbf { gamma: 0.5 }.gram(&pts, 4);
+        let e = eigh(&g);
+        assert!(e.values.iter().all(|&v| v > -1e-9), "{:?}", e.values);
+    }
+
+    #[test]
+    fn self_tune_gamma_reasonable() {
+        let mut rng = Pcg::seeded(41);
+        // points with mean squared distance ~ 2*d for unit gaussians
+        let d = 8;
+        let x: Vec<f32> = (0..200 * d).map(|_| rng.normal() as f32).collect();
+        let gamma = self_tune_gamma(&x, d, &mut rng);
+        let expect = 1.0 / (2.0 * d as f32);
+        assert!(gamma > expect * 0.5 && gamma < expect * 2.0, "gamma={gamma} expect~{expect}");
+    }
+}

@@ -1,0 +1,50 @@
+//! # apnc — Embed and Conquer: scalable kernel k-means on MapReduce
+//!
+//! A production-quality reproduction of *"Embed and Conquer: Scalable
+//! Embeddings for Kernel k-Means on MapReduce"* (Elgohary, Farahat, Kamel,
+//! Karray, 2013) as a three-layer rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution: the
+//!   APNC embedding family ([`embedding`]), its MapReduce parallelization
+//!   (Algorithms 1–4, [`coordinator`]) on a shared-nothing MapReduce engine
+//!   ([`mapreduce`]), plus every substrate the paper depends on:
+//!   dense linear algebra ([`linalg`]), kernel functions ([`kernels`]),
+//!   clustering baselines ([`baselines`]), dataset generators ([`data`]) and
+//!   evaluation metrics ([`metrics`]).
+//! * **Layer 2/1 (python/compile, build-time only)** — the compute hot-spot
+//!   (fused kernel-block evaluation + embedding matmul, and the
+//!   nearest-centroid assignment) written in JAX + Pallas and AOT-lowered to
+//!   HLO text artifacts.
+//! * **Runtime bridge** ([`runtime`]) — a PJRT CPU client that loads the
+//!   artifacts once and serves execute requests from the coordinator's hot
+//!   path. Python is never on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use apnc::coordinator::driver::{Pipeline, PipelineConfig};
+//! use apnc::data::registry;
+//!
+//! let ds = registry::generate("rings", 2_000, 1);
+//! let cfg = PipelineConfig::default();
+//! let out = Pipeline::new(cfg).run(&ds).unwrap();
+//! println!("NMI = {:.3}", out.nmi);
+//! ```
+//!
+//! See `examples/` for runnable end-to-end drivers and `repro --help` for
+//! the table-regeneration CLI.
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod embedding;
+pub mod experiments;
+pub mod kernels;
+pub mod linalg;
+pub mod mapreduce;
+pub mod metrics;
+pub mod prop;
+pub mod rng;
+pub mod runtime;

@@ -1,0 +1,129 @@
+//! Cholesky factorization and SPD solves.
+//!
+//! Used by the Approx-KKM baseline (Chitta et al. [7]) which needs
+//! `K_LL^{-1}` applied to kernel blocks, and as a fast SPD inverse for
+//! tests that cross-check the eigendecomposition path.
+
+use super::matrix::Matrix;
+
+/// Lower-triangular Cholesky factor `L` with `A = L L^T`.
+///
+/// Returns `None` when `a` is not (numerically) positive definite.
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    assert_eq!(a.rows(), a.cols(), "cholesky requires a square matrix");
+    let n = a.rows();
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[(i, j)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `A x = b` given the Cholesky factor `l` of `A`.
+pub fn solve_chol(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    // forward: L y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[(i, k)] * y[k];
+        }
+        y[i] = sum / l[(i, i)];
+    }
+    // backward: L^T x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in (i + 1)..n {
+            sum -= l[(k, i)] * x[k];
+        }
+        x[i] = sum / l[(i, i)];
+    }
+    x
+}
+
+/// SPD inverse via Cholesky. `None` if not positive definite.
+pub fn spd_inverse(a: &Matrix) -> Option<Matrix> {
+    let n = a.rows();
+    let l = cholesky(a)?;
+    let mut inv = Matrix::zeros(n, n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let x = solve_chol(&l, &e);
+        e[j] = 0.0;
+        for i in 0..n {
+            inv[(i, j)] = x[i];
+        }
+    }
+    Some(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg;
+
+    fn random_spd(rng: &mut Pcg, n: usize) -> Matrix {
+        let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let mut a = b.matmul_nt(&b);
+        for i in 0..n {
+            a[(i, i)] += 1.0;
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Pcg::seeded(20);
+        for &n in &[1usize, 2, 5, 17, 40] {
+            let a = random_spd(&mut rng, n);
+            let l = cholesky(&a).expect("SPD");
+            let r = l.matmul_nt(&l);
+            assert!(r.sub(&a).max_abs() < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigvals 3, -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solve_roundtrip() {
+        let mut rng = Pcg::seeded(21);
+        let a = random_spd(&mut rng, 12);
+        let l = cholesky(&a).unwrap();
+        let x_true: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let b = a.matvec(&x_true);
+        let x = solve_chol(&l, &b);
+        for (got, want) in x.iter().zip(&x_true) {
+            assert!((got - want).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let mut rng = Pcg::seeded(22);
+        let a = random_spd(&mut rng, 9);
+        let inv = spd_inverse(&a).unwrap();
+        let eye = a.matmul(&inv);
+        assert!(eye.sub(&Matrix::identity(9)).max_abs() < 1e-8);
+    }
+}

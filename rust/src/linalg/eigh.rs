@@ -1,0 +1,365 @@
+//! Symmetric eigendecomposition: Householder tridiagonalization (`tred2`)
+//! followed by implicit-shift QL iteration (`tql2`) — the classic EISPACK
+//! pair, O(n^3), accumulating eigenvectors.
+//!
+//! Used by both coefficient jobs of the paper: Nyström needs the leading-m
+//! eigenpairs of `K_LL` (Eq. 9); the stable-distribution embedding needs
+//! the full decomposition of the centered `H K_LL H` (Section 7).
+
+use super::matrix::Matrix;
+
+/// Eigendecomposition result: `a = V diag(values) V^T`.
+///
+/// Eigenvalues ascend; `vectors` holds eigenvectors as *columns*
+/// (`vectors[(i, j)]` is component `i` of eigenvector `j`).
+#[derive(Clone, Debug)]
+pub struct Eigh {
+    pub values: Vec<f64>,
+    pub vectors: Matrix,
+}
+
+impl Eigh {
+    /// The j-th eigenvector (column j).
+    pub fn vector(&self, j: usize) -> Vec<f64> {
+        self.vectors.col(j)
+    }
+
+    /// Indices of the `m` largest eigenvalues, descending.
+    pub fn top_indices(&self, m: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.values.len()).collect();
+        idx.sort_by(|&a, &b| self.values[b].total_cmp(&self.values[a]));
+        idx.truncate(m);
+        idx
+    }
+}
+
+/// Symmetric eigendecomposition of `a` (must be square; only the lower
+/// triangle is referenced after symmetrization).
+pub fn eigh(a: &Matrix) -> Eigh {
+    assert_eq!(a.rows(), a.cols(), "eigh requires a square matrix");
+    let n = a.rows();
+    if n == 0 {
+        return Eigh { values: vec![], vectors: Matrix::zeros(0, 0) };
+    }
+    // Work on a symmetrized copy: callers hand us kernel matrices that can
+    // carry ~1e-16 asymmetry from floating-point accumulation.
+    let mut v = a.symmetrize();
+    let mut d = vec![0.0; n]; // diagonal
+    let mut e = vec![0.0; n]; // off-diagonal
+    tred2(&mut v, &mut d, &mut e);
+    tql2(&mut v, &mut d, &mut e);
+    Eigh { values: d, vectors: v }
+}
+
+/// Householder reduction of a real symmetric matrix to tridiagonal form.
+/// On exit `v` holds the accumulated orthogonal transform Q, `d` the
+/// diagonal and `e[1..]` the sub-diagonal. (Numerical Recipes / EISPACK.)
+fn tred2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for j in 0..n {
+        d[j] = v[(n - 1, j)];
+    }
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        let mut scale = 0.0;
+        for k in 0..i {
+            scale += d[k].abs();
+        }
+        if scale == 0.0 {
+            e[i] = d[l];
+            for j in 0..i {
+                d[j] = v[(l, j)];
+                v[(i, j)] = 0.0;
+                v[(j, i)] = 0.0;
+            }
+        } else {
+            for k in 0..=l {
+                d[k] /= scale;
+                h += d[k] * d[k];
+            }
+            let mut f = d[l];
+            let mut g = if f > 0.0 { -h.sqrt() } else { h.sqrt() };
+            e[i] = scale * g;
+            h -= f * g;
+            d[l] = f - g;
+            for j in 0..=l {
+                e[j] = 0.0;
+            }
+            // Apply similarity transformation to remaining columns.
+            for j in 0..=l {
+                f = d[j];
+                v[(j, i)] = f;
+                g = e[j] + v[(j, j)] * f;
+                for k in (j + 1)..=l {
+                    g += v[(k, j)] * d[k];
+                    e[k] += v[(k, j)] * f;
+                }
+                e[j] = g;
+            }
+            f = 0.0;
+            for j in 0..=l {
+                e[j] /= h;
+                f += e[j] * d[j];
+            }
+            let hh = f / (h + h);
+            for j in 0..=l {
+                e[j] -= hh * d[j];
+            }
+            for j in 0..=l {
+                f = d[j];
+                g = e[j];
+                for k in j..=l {
+                    v[(k, j)] -= f * e[k] + g * d[k];
+                }
+                d[j] = v[(l, j)];
+                v[(i, j)] = 0.0;
+            }
+        }
+        d[i] = h;
+    }
+    // Accumulate transformations.
+    for i in 0..(n - 1) {
+        v[(n - 1, i)] = v[(i, i)];
+        v[(i, i)] = 1.0;
+        let h = d[i + 1];
+        if h != 0.0 {
+            for k in 0..=i {
+                d[k] = v[(k, i + 1)] / h;
+            }
+            for j in 0..=i {
+                let mut g = 0.0;
+                for k in 0..=i {
+                    g += v[(k, i + 1)] * v[(k, j)];
+                }
+                for k in 0..=i {
+                    v[(k, j)] -= g * d[k];
+                }
+            }
+        }
+        for k in 0..=i {
+            v[(k, i + 1)] = 0.0;
+        }
+    }
+    for j in 0..n {
+        d[j] = v[(n - 1, j)];
+        v[(n - 1, j)] = 0.0;
+    }
+    v[(n - 1, n - 1)] = 1.0;
+    e[0] = 0.0;
+}
+
+/// Implicit-shift QL iteration on the tridiagonal matrix, accumulating
+/// eigenvectors into `v`. Eigenvalues end up ascending in `d`.
+fn tql2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+
+    let mut f = 0.0f64;
+    let mut tst1 = 0.0f64;
+    let eps = f64::EPSILON;
+    for l in 0..n {
+        tst1 = tst1.max(d[l].abs() + e[l].abs());
+        let mut m = l;
+        while m < n {
+            if e[m].abs() <= eps * tst1 {
+                break;
+            }
+            m += 1;
+        }
+        if m > l {
+            let mut iter = 0;
+            loop {
+                iter += 1;
+                assert!(iter <= 50, "tql2 failed to converge at index {l}");
+                // Form shift.
+                let mut g = d[l];
+                let mut p = (d[l + 1] - g) / (2.0 * e[l]);
+                let mut r = p.hypot(1.0);
+                if p < 0.0 {
+                    r = -r;
+                }
+                d[l] = e[l] / (p + r);
+                d[l + 1] = e[l] * (p + r);
+                let dl1 = d[l + 1];
+                let mut h = g - d[l];
+                for i in (l + 2)..n {
+                    d[i] -= h;
+                }
+                f += h;
+                // Implicit QL transformation.
+                p = d[m];
+                let mut c = 1.0;
+                let mut c2 = c;
+                let mut c3 = c;
+                let el1 = e[l + 1];
+                let mut s = 0.0;
+                let mut s2 = 0.0;
+                for i in (l..m).rev() {
+                    c3 = c2;
+                    c2 = c;
+                    s2 = s;
+                    g = c * e[i];
+                    h = c * p;
+                    r = p.hypot(e[i]);
+                    e[i + 1] = s * r;
+                    s = e[i] / r;
+                    c = p / r;
+                    p = c * d[i] - s * g;
+                    d[i + 1] = h + s * (c * g + s * d[i]);
+                    // Accumulate eigenvectors.
+                    for k in 0..n {
+                        h = v[(k, i + 1)];
+                        v[(k, i + 1)] = s * v[(k, i)] + c * h;
+                        v[(k, i)] = c * v[(k, i)] - s * h;
+                    }
+                }
+                p = -s * s2 * c3 * el1 * e[l] / dl1;
+                e[l] = s * p;
+                d[l] = c * p;
+                if e[l].abs() <= eps * tst1 {
+                    break;
+                }
+            }
+        }
+        d[l] += f;
+        e[l] = 0.0;
+    }
+
+    // Sort eigenvalues ascending (and eigenvectors with them).
+    for i in 0..n.saturating_sub(1) {
+        let mut k = i;
+        let mut p = d[i];
+        for j in (i + 1)..n {
+            if d[j] < p {
+                k = j;
+                p = d[j];
+            }
+        }
+        if k != i {
+            d[k] = d[i];
+            d[i] = p;
+            for r in 0..n {
+                let t = v[(r, i)];
+                v[(r, i)] = v[(r, k)];
+                v[(r, k)] = t;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg;
+
+    fn random_spd(rng: &mut Pcg, n: usize) -> Matrix {
+        let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let mut a = b.matmul_nt(&b); // B B^T is PSD
+        for i in 0..n {
+            a[(i, i)] += 0.5; // make it PD
+        }
+        a
+    }
+
+    fn reconstruct(e: &Eigh) -> Matrix {
+        let n = e.values.len();
+        let mut vl = e.vectors.clone();
+        for r in 0..n {
+            for c in 0..n {
+                vl[(r, c)] *= e.values[c];
+            }
+        }
+        vl.matmul_nt(&e.vectors)
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Matrix::from_fn(4, 4, |r, c| if r == c { (r + 1) as f64 } else { 0.0 });
+        let e = eigh(&a);
+        for (i, &v) in e.values.iter().enumerate() {
+            assert!((v - (i + 1) as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let a = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let e = eigh(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstructs_random_spd() {
+        let mut rng = Pcg::seeded(10);
+        for &n in &[1usize, 2, 3, 7, 25, 60] {
+            let a = random_spd(&mut rng, n);
+            let e = eigh(&a);
+            let r = reconstruct(&e);
+            let err = r.sub(&a).max_abs() / a.max_abs();
+            assert!(err < 1e-10, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn vectors_orthonormal() {
+        let mut rng = Pcg::seeded(11);
+        let a = random_spd(&mut rng, 30);
+        let e = eigh(&a);
+        let vtv = e.vectors.transpose().matmul(&e.vectors);
+        let eye = Matrix::identity(30);
+        assert!(vtv.sub(&eye).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn eigenvalues_ascend() {
+        let mut rng = Pcg::seeded(12);
+        let a = random_spd(&mut rng, 40);
+        let e = eigh(&a);
+        for w in e.values.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn spd_eigenvalues_positive() {
+        let mut rng = Pcg::seeded(13);
+        let a = random_spd(&mut rng, 20);
+        let e = eigh(&a);
+        assert!(e.values.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn top_indices_descending() {
+        let mut rng = Pcg::seeded(14);
+        let a = random_spd(&mut rng, 15);
+        let e = eigh(&a);
+        let top = e.top_indices(5);
+        assert_eq!(top.len(), 5);
+        for w in top.windows(2) {
+            assert!(e.values[w[0]] >= e.values[w[1]]);
+        }
+        // top-1 must be the global max
+        let max = e.values.iter().cloned().fold(f64::MIN, f64::max);
+        assert!((e.values[top[0]] - max).abs() < 1e-14);
+    }
+
+    #[test]
+    fn rank_deficient_ok() {
+        // rank-1 matrix: outer product
+        let v: Vec<f64> = (0..10).map(|i| (i as f64) / 3.0).collect();
+        let a = Matrix::from_fn(10, 10, |r, c| v[r] * v[c]);
+        let e = eigh(&a);
+        let norm_sq: f64 = v.iter().map(|x| x * x).sum();
+        // one eigenvalue = ||v||^2, rest ~ 0
+        assert!((e.values[9] - norm_sq).abs() < 1e-9);
+        for &val in &e.values[..9] {
+            assert!(val.abs() < 1e-9);
+        }
+    }
+}

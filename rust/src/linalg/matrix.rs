@@ -1,0 +1,307 @@
+//! Row-major dense `f64` matrix with the operations the coefficient jobs
+//! and baselines need. Matmul is blocked/tiled for cache behaviour — this
+//! is a hot path for the centralized baselines (Table 2 sweeps call it
+//! thousands of times).
+
+use std::fmt;
+
+/// Row-major dense matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)?;
+        if self.rows <= 8 && self.cols <= 8 {
+            for r in 0..self.rows {
+                write!(f, "\n  {:?}", &self.row(r))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f64> {
+        (0..self.rows).map(|r| self[(r, c)]).collect()
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t[(c, r)] = self[(r, c)];
+            }
+        }
+        t
+    }
+
+    /// Blocked matmul: `self (m,k) @ other (k,n)`.
+    ///
+    /// i-k-j loop order with a tiled k-panel: the inner j loop is a
+    /// contiguous AXPY over the output row, which autovectorizes.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, kk, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        const KB: usize = 64;
+        for k0 in (0..kk).step_by(KB) {
+            let k1 = (k0 + KB).min(kk);
+            for i in 0..m {
+                let arow = &self.data[i * kk..(i + 1) * kk];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for k in k0..k1 {
+                    let a = arow[k];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[k * n..(k + 1) * n];
+                    for j in 0..n {
+                        orow[j] += a * brow[j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `self (m,k) @ other^T` where other is (n,k): avoids materializing
+    /// the transpose and reads both operands row-contiguously.
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (m, kk, n) = (self.rows, self.cols, other.rows);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let arow = &self.data[i * kk..(i + 1) * kk];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                let brow = &other.data[j * kk..(j + 1) * kk];
+                let mut acc = 0.0;
+                for k in 0..kk {
+                    acc += arow[k] * brow[k];
+                }
+                orow[j] = acc;
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len(), "matvec shape mismatch");
+        let mut out = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(v) {
+                acc += a * b;
+            }
+            out[r] = acc;
+        }
+        out
+    }
+
+    pub fn scale(&mut self, s: f64) -> &mut Self {
+        for v in &mut self.data {
+            *v *= s;
+        }
+        self
+    }
+
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ij|.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+    }
+
+    /// Enforce exact symmetry: (A + A^T) / 2.
+    pub fn symmetrize(&self) -> Matrix {
+        assert_eq!(self.rows, self.cols);
+        Matrix::from_fn(self.rows, self.cols, |r, c| 0.5 * (self[(r, c)] + self[(c, r)]))
+    }
+
+    /// Extract the sub-matrix of the given rows.
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg;
+
+    fn random(rng: &mut Pcg, r: usize, c: usize) -> Matrix {
+        Matrix::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg::seeded(1);
+        let a = random(&mut rng, 5, 5);
+        let i = Matrix::identity(5);
+        let prod = a.matmul(&i);
+        assert!((prod.sub(&a)).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg::seeded(2);
+        let a = random(&mut rng, 17, 90); // exercises partial k-panels
+        let b = random(&mut rng, 90, 13);
+        let got = a.matmul(&b);
+        for r in 0..17 {
+            for c in 0..13 {
+                let want: f64 = (0..90).map(|k| a[(r, k)] * b[(k, c)]).sum();
+                assert!((got[(r, c)] - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches_matmul() {
+        let mut rng = Pcg::seeded(3);
+        let a = random(&mut rng, 9, 20);
+        let b = random(&mut rng, 7, 20);
+        let got = a.matmul_nt(&b);
+        let want = a.matmul(&b.transpose());
+        assert!(got.sub(&want).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Pcg::seeded(4);
+        let a = random(&mut rng, 6, 11);
+        let v: Vec<f64> = (0..11).map(|_| rng.normal()).collect();
+        let got = a.matvec(&v);
+        let vm = Matrix::from_vec(11, 1, v);
+        let want = a.matmul(&vm);
+        for r in 0..6 {
+            assert!((got[r] - want[(r, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg::seeded(5);
+        let a = random(&mut rng, 4, 9);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn symmetrize_is_symmetric() {
+        let mut rng = Pcg::seeded(6);
+        let a = random(&mut rng, 8, 8).symmetrize();
+        for r in 0..8 {
+            for c in 0..8 {
+                assert_eq!(a[(r, c)], a[(c, r)]);
+            }
+        }
+    }
+
+    #[test]
+    fn select_rows_picks_rows() {
+        let a = Matrix::from_fn(5, 3, |r, c| (r * 10 + c) as f64);
+        let s = a.select_rows(&[4, 0]);
+        assert_eq!(s.row(0), &[40.0, 41.0, 42.0]);
+        assert_eq!(s.row(1), &[0.0, 1.0, 2.0]);
+    }
+}

@@ -1,0 +1,22 @@
+//! Dense linear algebra substrate.
+//!
+//! The coefficient jobs of the paper (Algorithms 3 and 4) run on a single
+//! reducer and need: the kernel matrix over the sample set, a symmetric
+//! eigendecomposition, and the inverse square root of an SPD matrix.  The
+//! container has no BLAS/LAPACK crates, so this module implements what the
+//! system needs from scratch, in `f64` for numerical headroom:
+//!
+//! * [`Matrix`] — row-major dense matrix with blocked matmul
+//! * [`eigh`] — symmetric eigendecomposition (Householder tridiagonalization
+//!   + implicit-shift QL, the EISPACK `tred2`/`tql2` pair)
+//! * [`chol`] — Cholesky factorization and SPD solves
+//! * [`ops`] — centering, inverse-sqrt, pseudo-inverse helpers used by the
+//!   Nyström (Eq. 9) and stable-distribution (Eq. 14–15) derivations
+
+pub mod chol;
+pub mod eigh;
+pub mod matrix;
+pub mod ops;
+
+pub use eigh::{eigh, Eigh};
+pub use matrix::Matrix;

@@ -1,0 +1,186 @@
+//! Higher-level operations used by the APNC coefficient derivations.
+
+use super::eigh::eigh;
+use super::matrix::Matrix;
+
+/// Double-center a square matrix: `H A H` with `H = I - (1/n) e e^T`
+/// (paper Algorithm 4, line 8). Computed in O(n^2) via row/column/grand
+/// means instead of two matmuls.
+pub fn double_center(a: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), a.cols(), "double_center requires square");
+    let n = a.rows();
+    if n == 0 {
+        return a.clone();
+    }
+    let nf = n as f64;
+    let mut row_mean = vec![0.0; n];
+    let mut col_mean = vec![0.0; n];
+    let mut grand = 0.0;
+    for r in 0..n {
+        for c in 0..n {
+            let v = a[(r, c)];
+            row_mean[r] += v;
+            col_mean[c] += v;
+            grand += v;
+        }
+    }
+    for v in &mut row_mean {
+        *v /= nf;
+    }
+    for v in &mut col_mean {
+        *v /= nf;
+    }
+    grand /= nf * nf;
+    Matrix::from_fn(n, n, |r, c| a[(r, c)] - row_mean[r] - col_mean[c] + grand)
+}
+
+/// Leading-`m` whitening transform of a PSD matrix:
+/// `R = Lambda_m^{-1/2} V_m^T` (m x n), the Nyström coefficient matrix of
+/// paper Eq. 9 / Algorithm 3 line 9.
+///
+/// Eigenvalues below `eps * max_eig` are dropped (their rows are zero) —
+/// kernel matrices over near-duplicate samples are numerically rank
+/// deficient and the paper's pseudo-inverse semantics are what is wanted.
+pub fn whitening_transform(a: &Matrix, m: usize, eps: f64) -> Matrix {
+    let n = a.rows();
+    let m = m.min(n);
+    let dec = eigh(a);
+    let top = dec.top_indices(m);
+    let max_eig = dec.values[*top.first().expect("m >= 1")].max(0.0);
+    let cutoff = eps * max_eig;
+    let mut r = Matrix::zeros(m, n);
+    for (row, &j) in top.iter().enumerate() {
+        let lam = dec.values[j];
+        if lam <= cutoff || lam <= 0.0 {
+            continue; // zero row: pseudo-inverse behaviour
+        }
+        let s = 1.0 / lam.sqrt();
+        for i in 0..n {
+            r[(row, i)] = s * dec.vectors[(i, j)];
+        }
+    }
+    r
+}
+
+/// Full inverse square root of an SPD matrix via its eigendecomposition:
+/// `A^{-1/2} = V Lambda^{-1/2} V^T`, with the same relative-eigenvalue
+/// clipping as [`whitening_transform`].
+pub fn inv_sqrt(a: &Matrix, eps: f64) -> Matrix {
+    let n = a.rows();
+    let dec = eigh(a);
+    let max_eig = dec.values.iter().cloned().fold(0.0f64, f64::max);
+    let cutoff = eps * max_eig;
+    let mut scaled = dec.vectors.clone(); // columns scaled by lambda^{-1/2}
+    for j in 0..n {
+        let lam = dec.values[j];
+        let s = if lam > cutoff && lam > 0.0 { 1.0 / lam.sqrt() } else { 0.0 };
+        for i in 0..n {
+            scaled[(i, j)] *= s;
+        }
+    }
+    scaled.matmul_nt(&dec.vectors)
+}
+
+/// Mean of each column (used for centering sample blocks).
+pub fn col_means(a: &Matrix) -> Vec<f64> {
+    let (r, c) = a.shape();
+    let mut out = vec![0.0; c];
+    for i in 0..r {
+        for (j, v) in a.row(i).iter().enumerate() {
+            out[j] += v;
+        }
+    }
+    let rf = r.max(1) as f64;
+    for v in &mut out {
+        *v /= rf;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg;
+
+    fn random_spd(rng: &mut Pcg, n: usize) -> Matrix {
+        let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let mut a = b.matmul_nt(&b);
+        for i in 0..n {
+            a[(i, i)] += 1.0;
+        }
+        a
+    }
+
+    #[test]
+    fn double_center_matches_explicit_h() {
+        let mut rng = Pcg::seeded(30);
+        let n = 12;
+        let a = random_spd(&mut rng, n);
+        let h = Matrix::from_fn(n, n, |r, c| {
+            (if r == c { 1.0 } else { 0.0 }) - 1.0 / n as f64
+        });
+        let want = h.matmul(&a).matmul(&h);
+        let got = double_center(&a);
+        assert!(got.sub(&want).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn double_center_rows_sum_zero() {
+        let mut rng = Pcg::seeded(31);
+        let a = random_spd(&mut rng, 9);
+        let c = double_center(&a);
+        for r in 0..9 {
+            let s: f64 = c.row(r).iter().sum();
+            assert!(s.abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn whitening_whitens() {
+        // R A R^T should be the identity on the retained subspace.
+        let mut rng = Pcg::seeded(32);
+        let n = 16;
+        let a = random_spd(&mut rng, n);
+        let r = whitening_transform(&a, n, 1e-12);
+        let w = r.matmul(&a).matmul(&r.transpose());
+        assert!(w.sub(&Matrix::identity(n)).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn whitening_truncates() {
+        let mut rng = Pcg::seeded(33);
+        let a = random_spd(&mut rng, 10);
+        let r = whitening_transform(&a, 4, 1e-12);
+        assert_eq!(r.shape(), (4, 10));
+        let w = r.matmul(&a).matmul(&r.transpose());
+        assert!(w.sub(&Matrix::identity(4)).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn inv_sqrt_squares_to_inverse() {
+        let mut rng = Pcg::seeded(34);
+        let a = random_spd(&mut rng, 8);
+        let s = inv_sqrt(&a, 1e-12);
+        // s a s = I
+        let eye = s.matmul(&a).matmul(&s);
+        assert!(eye.sub(&Matrix::identity(8)).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn inv_sqrt_handles_rank_deficiency() {
+        // PSD rank-2 matrix in R^4: pseudo inverse-sqrt must not blow up.
+        let b = Matrix::from_fn(4, 2, |r, c| ((r + 1) * (c + 2)) as f64);
+        let a = b.matmul_nt(&b);
+        let s = inv_sqrt(&a, 1e-10);
+        assert!(s.max_abs().is_finite());
+        // s a s acts as identity on range(a): s a s a == a * pinv-projection
+        let p = s.matmul(&a).matmul(&s).matmul(&a);
+        assert!(p.sub(&a).max_abs() < 1e-6 * a.max_abs());
+    }
+
+    #[test]
+    fn col_means_simple() {
+        let a = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 3.0, 4.0, 5.0]);
+        assert_eq!(col_means(&a), vec![2.0, 3.0, 4.0]);
+    }
+}

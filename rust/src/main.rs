@@ -1,0 +1,170 @@
+//! `repro` — the leader CLI for the Embed-and-Conquer reproduction.
+//!
+//! Subcommands:
+//!   table1                      regenerate Table 1 (dataset properties)
+//!   table2 [flags]              regenerate Table 2 (medium-scale NMI)
+//!   table3 [flags]              regenerate Table 3 (large-scale NMI + times)
+//!   run    [flags]              run one APNC pipeline on one dataset
+//!   backend                     report which compute backend is active
+//!
+//! Common flags: --runs N --scale S --seed S --only DATASET
+//! `run` flags: --dataset NAME --method nys|sd|enys --l N --m N --k N
+//!              --workers N --iters N --n N --reference (force rust backend)
+
+use anyhow::{bail, Result};
+use apnc::cli::Args;
+use apnc::coordinator::driver::{Pipeline, PipelineConfig};
+use apnc::coordinator::sample::SampleMode;
+use apnc::data::registry;
+use apnc::embedding::Method;
+use apnc::experiments::{ablate, table1, table2, table3};
+use apnc::runtime::Compute;
+
+fn compute_backend(args: &Args) -> Compute {
+    if args.has("reference") {
+        Compute::reference()
+    } else {
+        Compute::auto(&Compute::default_artifact_dir())
+    }
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    let cfg = table2::Table2Config {
+        runs: args.usize_or("runs", 5)?,
+        scale: args.f64_or("scale", 0.5)?,
+        l_values: args.usize_list_or("l-values", &[50, 100, 300])?,
+        m: args.usize_or("m", 512)?,
+        fourier_features: args.usize_or("fourier-features", 500)?,
+        seed: args.u64_or("seed", 2013)?,
+        only: args.get("only").map(String::from),
+    };
+    let compute = compute_backend(args);
+    eprintln!(
+        "table2: runs={} scale={} backend={}",
+        cfg.runs,
+        cfg.scale,
+        if compute.is_pjrt() { "pjrt" } else { "reference" }
+    );
+    let tables = table2::run(&cfg, &compute)?;
+    table2::print(&tables, &cfg);
+    Ok(())
+}
+
+fn cmd_table3(args: &Args) -> Result<()> {
+    let cfg = table3::Table3Config {
+        runs: args.usize_or("runs", 3)?,
+        scale: args.f64_or("scale", 0.25)?,
+        l_values: args.usize_list_or("l-values", &[500, 1000, 1500])?,
+        m: args.usize_or("m", 500)?,
+        nodes: args.usize_or("nodes", 20)?,
+        max_iters: args.usize_or("iters", 20)?,
+        seed: args.u64_or("seed", 2013)?,
+        only: args.get("only").map(String::from),
+    };
+    let compute = compute_backend(args);
+    eprintln!(
+        "table3: runs={} scale={} nodes={} backend={}",
+        cfg.runs,
+        cfg.scale,
+        cfg.nodes,
+        if compute.is_pjrt() { "pjrt" } else { "reference" }
+    );
+    let tables = table3::run(&cfg, &compute)?;
+    table3::print(&tables, &cfg);
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let dataset = args.get_or("dataset", "rings").to_string();
+    let method = match args.get_or("method", "nys") {
+        "nys" => Method::Nystrom,
+        "sd" => Method::StableDist,
+        "enys" => Method::EnsembleNystrom,
+        other => bail!("unknown --method '{other}' (nys|sd|enys)"),
+    };
+    let cfg = PipelineConfig {
+        method,
+        l: args.usize_or("l", 256)?,
+        m: args.usize_or("m", 256)?,
+        t_frac: args.f64_or("t-frac", 0.4)?,
+        ensemble_q: args.usize_or("ensemble-q", 4)?,
+        k: args.usize_or("k", 0)?,
+        max_iters: args.usize_or("iters", 20)?,
+        restarts: args.usize_or("restarts", 1)?,
+        workers: args.usize_or("workers", 4)?,
+        block_rows: args.usize_or("block-rows", 1024)?,
+        seed: args.u64_or("seed", 42)?,
+        sample_mode: if args.has("bernoulli") { SampleMode::Bernoulli } else { SampleMode::Exact },
+        ..Default::default()
+    };
+    let n = args.usize_or("n", 0)?;
+    let ds = match args.get("input") {
+        Some(path) => apnc::data::io::load(std::path::Path::new(path))?,
+        None => registry::generate(&dataset, n, args.u64_or("data-seed", 7)?),
+    };
+    let compute = compute_backend(args);
+    eprintln!(
+        "run: dataset={dataset} n={} d={} k={} method={} backend={}",
+        ds.n,
+        ds.d,
+        ds.k,
+        method.label(),
+        if compute.is_pjrt() { "pjrt" } else { "reference" }
+    );
+    let out = Pipeline::with_compute(cfg, compute).run(&ds)?;
+    println!("NMI      = {:.4}", out.nmi);
+    println!("ARI      = {:.4}", out.ari);
+    println!("purity   = {:.4}", out.purity);
+    println!("l actual = {}, m actual = {}, iterations = {}", out.l_actual, out.m_actual, out.iters_run);
+    println!(
+        "times: sample {:.2?}, coeff fit {:.2?}, embed {:.2?}, cluster {:.2?}",
+        out.times.sample, out.times.coeff_fit, out.times.embed, out.times.cluster
+    );
+    println!(
+        "network: embed shuffle {} B (zero by design), embed broadcast {} B, cluster shuffle {} B",
+        out.embed_metrics.shuffle_bytes,
+        out.embed_metrics.broadcast_bytes,
+        out.cluster_metrics.shuffle_bytes
+    );
+    println!("objective curve: {:?}", out.obj_curve);
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_str() {
+        "table1" => table1::run(),
+        "table2" => cmd_table2(&args)?,
+        "table3" => cmd_table3(&args)?,
+        "run" => cmd_run(&args)?,
+        "gen" => {
+            // freeze a mirrored dataset to disk for repeatable sweeps
+            let name = args.get_or("dataset", "rings").to_string();
+            let n = args.usize_or("n", 0)?;
+            let out = args.get("out").map(String::from).unwrap_or(format!("{name}.apnc"));
+            let ds = registry::generate(&name, n, args.u64_or("data-seed", 7)?);
+            apnc::data::io::save(&ds, std::path::Path::new(&out))?;
+            println!("wrote {} (n = {}, d = {}, k = {})", out, ds.n, ds.d, ds.k);
+        }
+        "ablate" => {
+            let cfg = ablate::AblateConfig {
+                n: args.usize_or("n", 6_000)?,
+                seed: args.u64_or("seed", 77)?,
+            };
+            let rows = ablate::run(&cfg, &compute_backend(&args))?;
+            ablate::print(&rows);
+        }
+        "backend" => {
+            let c = compute_backend(&args);
+            println!("backend = {}", if c.is_pjrt() { "pjrt" } else { "reference" });
+            println!("artifacts = {}", Compute::default_artifact_dir().display());
+        }
+        "" | "help" => {
+            println!("repro — Embed and Conquer (kernel k-means on MapReduce) reproduction");
+            println!("usage: repro <table1|table2|table3|run|backend> [flags]");
+            println!("see the module docs in rust/src/main.rs and README.md");
+        }
+        other => bail!("unknown subcommand '{other}' (try: table1 table2 table3 run ablate backend)"),
+    }
+    Ok(())
+}

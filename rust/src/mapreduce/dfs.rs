@@ -1,0 +1,135 @@
+//! Simulated distributed block store (HDFS stand-in).
+//!
+//! Holds named block sets with a replication factor and tracks which
+//! simulated node each replica lives on, so the driver can account data
+//! locality and survive simulated node loss. The coordinator stores the
+//! dataset blocks and the intermediate embedding matrix here between jobs
+//! (Algorithm 1's output is Algorithm 2's input).
+
+use std::collections::HashMap;
+
+/// One replicated block of typed data.
+#[derive(Clone, Debug)]
+struct StoredBlock<T> {
+    data: T,
+    /// node ids currently holding a live replica
+    replicas: Vec<usize>,
+}
+
+/// A named collection of blocks, replicated `replication`-ways across
+/// `nodes` simulated nodes.
+pub struct Dfs<T> {
+    nodes: usize,
+    replication: usize,
+    files: HashMap<String, Vec<StoredBlock<T>>>,
+    /// total bytes written (replicas included): DFS write network cost
+    pub bytes_written: usize,
+}
+
+impl<T: Clone> Dfs<T> {
+    pub fn new(nodes: usize, replication: usize) -> Self {
+        assert!(nodes >= 1 && replication >= 1);
+        Dfs { nodes, replication: replication.min(nodes), files: HashMap::new(), bytes_written: 0 }
+    }
+
+    /// Store blocks under `name`. `byte_size` sizes each block for cost
+    /// accounting. Replica placement is round-robin with offset striding —
+    /// deterministic, spread like HDFS's default placement.
+    pub fn put(&mut self, name: &str, blocks: Vec<T>, byte_size: impl Fn(&T) -> usize) {
+        let stored: Vec<StoredBlock<T>> = blocks
+            .into_iter()
+            .enumerate()
+            .map(|(i, data)| {
+                let replicas: Vec<usize> =
+                    (0..self.replication).map(|r| (i + r * 7 + r) % self.nodes).collect();
+                self.bytes_written += byte_size(&data) * self.replication;
+                StoredBlock { data, replicas }
+            })
+            .collect();
+        self.files.insert(name.to_string(), stored);
+    }
+
+    /// All blocks of `name` in order. Panics if missing (a programming
+    /// error in the driver, like reading an output before its job ran).
+    pub fn get(&self, name: &str) -> Vec<&T> {
+        self.files
+            .get(name)
+            .unwrap_or_else(|| panic!("dfs: no file '{name}'"))
+            .iter()
+            .map(|b| &b.data)
+            .collect()
+    }
+
+    pub fn exists(&self, name: &str) -> bool {
+        self.files.contains_key(name)
+    }
+
+    pub fn block_count(&self, name: &str) -> usize {
+        self.files.get(name).map(|b| b.len()).unwrap_or(0)
+    }
+
+    /// Simulate losing a node: drop its replicas. Returns the number of
+    /// blocks that *newly lost their last replica* in this call (data loss —
+    /// should be zero with replication >= 2 and few failures).
+    pub fn fail_node(&mut self, node: usize) -> usize {
+        let mut lost = 0;
+        for blocks in self.files.values_mut() {
+            for b in blocks.iter_mut() {
+                let had = !b.replicas.is_empty();
+                b.replicas.retain(|&r| r != node);
+                if had && b.replicas.is_empty() {
+                    lost += 1;
+                }
+            }
+        }
+        lost
+    }
+
+    /// Which node serves block `idx` of `name` (first live replica).
+    pub fn locate(&self, name: &str, idx: usize) -> Option<usize> {
+        self.files.get(name)?.get(idx)?.replicas.first().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut dfs: Dfs<Vec<f32>> = Dfs::new(4, 2);
+        dfs.put("embeddings", vec![vec![1.0; 8], vec![2.0; 8]], |b| b.len() * 4);
+        assert!(dfs.exists("embeddings"));
+        assert_eq!(dfs.block_count("embeddings"), 2);
+        let blocks = dfs.get("embeddings");
+        assert_eq!(blocks[1][0], 2.0);
+        // 2 blocks * 32 bytes * replication 2
+        assert_eq!(dfs.bytes_written, 128);
+    }
+
+    #[test]
+    fn replication_survives_single_failure() {
+        let mut dfs: Dfs<u32> = Dfs::new(5, 3);
+        dfs.put("f", (0..20).collect(), |_| 4);
+        assert_eq!(dfs.fail_node(2), 0, "triple replication survives one loss");
+        // all blocks still locatable
+        for i in 0..20 {
+            assert!(dfs.locate("f", i).is_some());
+        }
+    }
+
+    #[test]
+    fn no_replication_loses_data() {
+        let mut dfs: Dfs<u32> = Dfs::new(2, 1);
+        dfs.put("f", vec![1, 2, 3, 4], |_| 4);
+        let lost = dfs.fail_node(0) + dfs.fail_node(1);
+        assert_eq!(lost, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "no file")]
+    fn missing_file_panics() {
+        let dfs: Dfs<u32> = Dfs::new(2, 1);
+        dfs.get("nope");
+    }
+}

@@ -1,0 +1,392 @@
+//! The MapReduce executor: block partitioning over worker threads,
+//! map-side combining, a byte-accounted shuffle, parallel reduce, fault
+//! injection with task re-execution, and a distributed-cache broadcast.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::fault::FaultPlan;
+use super::job::{Emitter, Job, Payload, TaskCtx};
+use super::metrics::JobMetrics;
+
+/// Cluster shape + failure model.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// simulated cluster nodes (map slots); also the reduce parallelism cap
+    pub workers: usize,
+    /// reducers (Hadoop's number of reduce tasks); 0 = same as workers
+    pub reducers: usize,
+    /// job-level RNG seed (feeds per-task splits)
+    pub seed: u64,
+    pub faults: FaultPlan,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { workers: 4, reducers: 0, seed: 0x5EED, faults: FaultPlan::none() }
+    }
+}
+
+impl EngineConfig {
+    pub fn with_workers(workers: usize) -> Self {
+        EngineConfig { workers, ..Default::default() }
+    }
+}
+
+/// Result of one job: outputs in key order + the cost model.
+pub struct JobRun<O> {
+    /// reduce outputs, sorted by key (deterministic)
+    pub outputs: Vec<O>,
+    pub metrics: JobMetrics,
+}
+
+/// The engine. Cheap to construct; `run` executes one job synchronously.
+pub struct Engine {
+    pub config: EngineConfig,
+}
+
+impl Engine {
+    pub fn new(config: EngineConfig) -> Self {
+        assert!(config.workers >= 1, "need at least one worker");
+        Engine { config }
+    }
+
+    /// Broadcast `bytes` to every worker via the distributed cache and
+    /// charge it to `metrics` (the paper's per-round `R^(b)`, `L^(b)`,
+    /// `Ybar` loads — Algorithm 1 line 3, Algorithm 2 line 4).
+    pub fn broadcast_cost(&self, metrics: &mut JobMetrics, bytes: usize) {
+        metrics.broadcast_bytes += bytes * self.config.workers;
+    }
+
+    /// Execute a *map-only* job: one output per input block, no shuffle
+    /// (like a Hadoop job with zero reducers writing map output to HDFS).
+    /// This is Algorithm 1's shape — the engine charges no shuffle bytes,
+    /// which is exactly the paper's MapReduce-efficiency claim for the
+    /// embedding phase.
+    pub fn run_map<I: Sync, O: Send>(
+        &self,
+        blocks: &[I],
+        f: impl Fn(usize, &I, &mut TaskCtx) -> O + Send + Sync,
+    ) -> JobRun<O> {
+        let workers = self.config.workers;
+        let n_tasks = blocks.len();
+        let mut metrics = JobMetrics::default();
+        metrics.map_tasks = n_tasks;
+        let next_task = AtomicUsize::new(0);
+        let results: Mutex<Vec<(usize, O, Duration, usize, Vec<(&'static str, u64)>)>> =
+            Mutex::new(Vec::with_capacity(n_tasks));
+        let map_start = Instant::now();
+        let cpu_time: Mutex<Duration> = Mutex::new(Duration::ZERO);
+        std::thread::scope(|scope| {
+            for _ in 0..workers.min(n_tasks.max(1)) {
+                scope.spawn(|| {
+                    let mut local_busy = Duration::ZERO;
+                    loop {
+                        let t = next_task.fetch_add(1, Ordering::Relaxed);
+                        if t >= n_tasks {
+                            break;
+                        }
+                        let t0 = Instant::now();
+                        let mut attempts = 0;
+                        loop {
+                            attempts += 1;
+                            assert!(
+                                attempts <= self.config.faults.max_attempts,
+                                "map task {t} exceeded {} attempts",
+                                self.config.faults.max_attempts
+                            );
+                            if self.config.faults.fails(t, attempts - 1) {
+                                continue;
+                            }
+                            let mut ctx = TaskCtx::new(self.config.seed, t);
+                            let out = f(t, &blocks[t], &mut ctx);
+                            let elapsed = t0.elapsed();
+                            local_busy += elapsed;
+                            results.lock().unwrap().push((t, out, elapsed, attempts, ctx.counters));
+                            break;
+                        }
+                    }
+                    *cpu_time.lock().unwrap() += local_busy;
+                });
+            }
+        });
+        metrics.map_time = map_start.elapsed();
+        metrics.map_cpu_time = *cpu_time.lock().unwrap();
+        let mut outs = results.into_inner().unwrap();
+        outs.sort_by_key(|(t, ..)| *t);
+        let mut ordered = Vec::with_capacity(n_tasks);
+        for (_, out, elapsed, attempts, counters) in outs {
+            metrics.map_retries += attempts - 1;
+            metrics.map_critical_path = metrics.map_critical_path.max(elapsed);
+            for (n, v) in counters {
+                metrics.add_counter(n, v);
+            }
+            ordered.push(out);
+        }
+        JobRun { outputs: ordered, metrics }
+    }
+
+    /// Execute `job` over `blocks`. Outputs are sorted by reduce key, so
+    /// results are identical for any worker count (given order-insensitive
+    /// or sorted-input reducers — the engine sorts values by origin).
+    pub fn run<J: Job>(&self, job: &J, blocks: &[J::Input]) -> JobRun<J::Output> {
+        let workers = self.config.workers;
+        let n_tasks = blocks.len();
+        let mut metrics = JobMetrics::default();
+        metrics.map_tasks = n_tasks;
+
+        // ---- map phase -----------------------------------------------------
+        let next_task = AtomicUsize::new(0);
+        struct MapOut<K, V> {
+            task_id: usize,
+            pairs: Vec<(K, V)>,
+            bytes: usize,
+            counters: Vec<(&'static str, u64)>,
+            attempts: usize,
+            task_time: Duration,
+        }
+        let results: Mutex<Vec<MapOut<J::Key, J::Value>>> = Mutex::new(Vec::with_capacity(n_tasks));
+        let map_start = Instant::now();
+        let cpu_time: Mutex<Duration> = Mutex::new(Duration::ZERO);
+        std::thread::scope(|scope| {
+            for _ in 0..workers.min(n_tasks.max(1)) {
+                scope.spawn(|| {
+                    let mut local_busy = Duration::ZERO;
+                    loop {
+                        let t = next_task.fetch_add(1, Ordering::Relaxed);
+                        if t >= n_tasks {
+                            break;
+                        }
+                        let t0 = Instant::now();
+                        let mut attempts = 0;
+                        let out = loop {
+                            attempts += 1;
+                            assert!(
+                                attempts <= self.config.faults.max_attempts,
+                                "map task {t} exceeded {} attempts",
+                                self.config.faults.max_attempts
+                            );
+                            // failure drawn *before* the work, like a node
+                            // dying when the task is scheduled onto it
+                            if self.config.faults.fails(t, attempts - 1) {
+                                continue;
+                            }
+                            let mut ctx = TaskCtx::new(self.config.seed, t);
+                            let mut emitter = Emitter::new();
+                            job.map(t, &blocks[t], &mut ctx, &mut emitter);
+                            // map-side combine, per key
+                            let mut grouped: BTreeMap<J::Key, Vec<J::Value>> = BTreeMap::new();
+                            for (k, v) in emitter.pairs {
+                                grouped.entry(k).or_default().push(v);
+                            }
+                            let mut pairs = Vec::new();
+                            let mut bytes = 0usize;
+                            for (k, vs) in grouped {
+                                for v in job.combine(&k, vs) {
+                                    bytes += v.byte_size() + std::mem::size_of::<J::Key>();
+                                    pairs.push((k.clone(), v));
+                                }
+                            }
+                            break MapOut {
+                                task_id: t,
+                                pairs,
+                                bytes,
+                                counters: ctx.counters,
+                                attempts,
+                                task_time: t0.elapsed(),
+                            };
+                        };
+                        local_busy += out.task_time;
+                        results.lock().unwrap().push(out);
+                    }
+                    *cpu_time.lock().unwrap() += local_busy;
+                });
+            }
+        });
+        metrics.map_time = map_start.elapsed();
+        metrics.map_cpu_time = *cpu_time.lock().unwrap();
+
+        // ---- shuffle ---------------------------------------------------------
+        let reduce_start = Instant::now();
+        let mut map_outs = results.into_inner().unwrap();
+        // sort by origin task so grouped values are schedule-independent
+        map_outs.sort_by_key(|m| m.task_id);
+        let mut grouped: BTreeMap<J::Key, Vec<J::Value>> = BTreeMap::new();
+        for out in &mut map_outs {
+            metrics.map_retries += out.attempts - 1;
+            metrics.shuffle_bytes += out.bytes;
+            metrics.shuffle_pairs += out.pairs.len();
+            metrics.map_critical_path = metrics.map_critical_path.max(out.task_time);
+            for (name, v) in out.counters.drain(..) {
+                metrics.add_counter(name, v);
+            }
+            for (k, v) in out.pairs.drain(..) {
+                grouped.entry(k).or_default().push(v);
+            }
+        }
+
+        // ---- reduce phase ----------------------------------------------------
+        let reducers = if self.config.reducers == 0 { workers } else { self.config.reducers };
+        metrics.reduce_tasks = grouped.len().min(reducers.max(1));
+        let work: Vec<(J::Key, Vec<J::Value>)> = grouped.into_iter().collect();
+        let n_red = work.len();
+        let next_red = AtomicUsize::new(0);
+        let red_out: Mutex<Vec<(usize, J::Output)>> = Mutex::new(Vec::with_capacity(n_red));
+        let work_ref = &work;
+        std::thread::scope(|scope| {
+            for _ in 0..reducers.min(n_red.max(1)) {
+                scope.spawn(|| loop {
+                    let i = next_red.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_red {
+                        break;
+                    }
+                    let (k, vs) = &work_ref[i];
+                    let mut ctx = TaskCtx::new(self.config.seed ^ 0xF00D, i);
+                    let out = job.reduce(k.clone(), vs.clone(), &mut ctx);
+                    red_out.lock().unwrap().push((i, out));
+                });
+            }
+        });
+        let mut outs = red_out.into_inner().unwrap();
+        outs.sort_by_key(|(i, _)| *i);
+        metrics.reduce_time = reduce_start.elapsed();
+        JobRun { outputs: outs.into_iter().map(|(_, o)| o).collect(), metrics }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Classic word count over integer "words".
+    struct WordCount;
+    impl Job for WordCount {
+        type Input = Vec<u32>;
+        type Key = u32;
+        type Value = u64;
+        type Output = (u32, u64);
+        fn map(&self, _id: usize, input: &Vec<u32>, ctx: &mut TaskCtx, emit: &mut Emitter<u32, u64>) {
+            ctx.count("points", input.len() as u64);
+            for &w in input {
+                emit.emit(w, 1);
+            }
+        }
+        fn combine(&self, _k: &u32, values: Vec<u64>) -> Vec<u64> {
+            vec![values.iter().sum()]
+        }
+        fn reduce(&self, key: u32, values: Vec<u64>, _ctx: &mut TaskCtx) -> (u32, u64) {
+            (key, values.iter().sum())
+        }
+    }
+
+    fn blocks() -> Vec<Vec<u32>> {
+        vec![vec![1, 2, 2, 3], vec![3, 3, 4], vec![1, 4, 4, 4], vec![]]
+    }
+
+    #[test]
+    fn wordcount_correct() {
+        let engine = Engine::new(EngineConfig::with_workers(3));
+        let run = engine.run(&WordCount, &blocks());
+        assert_eq!(run.outputs, vec![(1, 2), (2, 2), (3, 3), (4, 4)]);
+        assert_eq!(run.metrics.map_tasks, 4);
+        assert_eq!(run.metrics.counter("points"), 11);
+    }
+
+    #[test]
+    fn output_independent_of_worker_count() {
+        let base = Engine::new(EngineConfig::with_workers(1)).run(&WordCount, &blocks());
+        for w in [2, 3, 8, 32] {
+            let run = Engine::new(EngineConfig::with_workers(w)).run(&WordCount, &blocks());
+            assert_eq!(run.outputs, base.outputs, "workers={w}");
+            assert_eq!(run.metrics.shuffle_bytes, base.metrics.shuffle_bytes);
+        }
+    }
+
+    #[test]
+    fn combiner_reduces_shuffle() {
+        struct NoCombine;
+        impl Job for NoCombine {
+            type Input = Vec<u32>;
+            type Key = u32;
+            type Value = u64;
+            type Output = (u32, u64);
+            fn map(&self, _id: usize, input: &Vec<u32>, _ctx: &mut TaskCtx, emit: &mut Emitter<u32, u64>) {
+                for &w in input {
+                    emit.emit(w, 1);
+                }
+            }
+            fn reduce(&self, key: u32, values: Vec<u64>, _ctx: &mut TaskCtx) -> (u32, u64) {
+                (key, values.iter().sum())
+            }
+        }
+        let engine = Engine::new(EngineConfig::with_workers(2));
+        let with = engine.run(&WordCount, &blocks());
+        let without = engine.run(&NoCombine, &blocks());
+        assert_eq!(with.outputs, without.outputs);
+        assert!(with.metrics.shuffle_bytes < without.metrics.shuffle_bytes);
+        assert!(with.metrics.shuffle_pairs < without.metrics.shuffle_pairs);
+    }
+
+    #[test]
+    fn outputs_identical_under_faults() {
+        let clean = Engine::new(EngineConfig::with_workers(4)).run(&WordCount, &blocks());
+        let cfg = EngineConfig {
+            workers: 4,
+            faults: FaultPlan::with_map_failures(0.4, 123),
+            ..Default::default()
+        };
+        let faulty = Engine::new(cfg).run(&WordCount, &blocks());
+        assert_eq!(faulty.outputs, clean.outputs);
+        assert!(faulty.metrics.map_retries > 0, "p=0.4 over 4 tasks should retry");
+    }
+
+    #[test]
+    #[should_panic] // the assert fires on a worker thread; scope re-panics
+    fn certain_failure_aborts() {
+        let cfg = EngineConfig {
+            workers: 1,
+            faults: FaultPlan { map_failure_prob: 1.0, max_attempts: 3, seed: 0 },
+            ..Default::default()
+        };
+        Engine::new(cfg).run(&WordCount, &blocks());
+    }
+
+    #[test]
+    fn task_rng_deterministic_across_schedules() {
+        struct RngJob;
+        impl Job for RngJob {
+            type Input = ();
+            type Key = usize;
+            type Value = u64;
+            type Output = u64;
+            fn map(&self, id: usize, _i: &(), ctx: &mut TaskCtx, emit: &mut Emitter<usize, u64>) {
+                emit.emit(id, ctx.rng.next_u64());
+            }
+            fn reduce(&self, _k: usize, v: Vec<u64>, _c: &mut TaskCtx) -> u64 {
+                v[0]
+            }
+        }
+        let inputs = vec![(); 16];
+        let a = Engine::new(EngineConfig::with_workers(1)).run(&RngJob, &inputs);
+        let b = Engine::new(EngineConfig::with_workers(7)).run(&RngJob, &inputs);
+        assert_eq!(a.outputs, b.outputs);
+    }
+
+    #[test]
+    fn broadcast_charged_per_worker() {
+        let engine = Engine::new(EngineConfig::with_workers(20));
+        let mut m = JobMetrics::default();
+        engine.broadcast_cost(&mut m, 1000);
+        assert_eq!(m.broadcast_bytes, 20_000);
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let engine = Engine::new(EngineConfig::with_workers(2));
+        let run = engine.run(&WordCount, &[]);
+        assert!(run.outputs.is_empty());
+        assert_eq!(run.metrics.map_tasks, 0);
+    }
+}

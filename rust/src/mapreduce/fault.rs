@@ -1,0 +1,74 @@
+//! Deterministic fault injection: MapReduce's defining runtime property is
+//! transparent task re-execution; the engine simulates worker failures so
+//! tests can assert that job *outputs are bit-identical under failures*.
+
+use crate::rng::Pcg;
+
+/// Failure plan for a job execution.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// probability that any given map-task *attempt* fails
+    pub map_failure_prob: f64,
+    /// maximum attempts per task before the job aborts
+    pub max_attempts: usize,
+    /// seed for the (deterministic) failure draws
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan { map_failure_prob: 0.0, max_attempts: 4, seed: 0 }
+    }
+}
+
+impl FaultPlan {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn with_map_failures(prob: f64, seed: u64) -> Self {
+        FaultPlan { map_failure_prob: prob, max_attempts: 4, seed }
+    }
+
+    /// Does attempt `attempt` of task `task_id` fail?  Deterministic in
+    /// (seed, task, attempt) — independent of scheduling.
+    pub fn fails(&self, task_id: usize, attempt: usize) -> bool {
+        if self.map_failure_prob <= 0.0 {
+            return false;
+        }
+        let mut rng = Pcg::new(
+            self.seed ^ (task_id as u64).wrapping_mul(0xA24BAED4963EE407),
+            attempt as u64,
+        );
+        rng.bernoulli(self.map_failure_prob)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_failures_by_default() {
+        let p = FaultPlan::none();
+        assert!((0..100).all(|t| !p.fails(t, 0)));
+    }
+
+    #[test]
+    fn failures_deterministic() {
+        let p = FaultPlan::with_map_failures(0.5, 7);
+        let a: Vec<bool> = (0..64).map(|t| p.fails(t, 0)).collect();
+        let b: Vec<bool> = (0..64).map(|t| p.fails(t, 0)).collect();
+        assert_eq!(a, b);
+        assert!(a.iter().any(|&f| f), "p=0.5 over 64 tasks must fail some");
+        assert!(!a.iter().all(|&f| f));
+    }
+
+    #[test]
+    fn attempts_redrawn() {
+        let p = FaultPlan::with_map_failures(0.5, 9);
+        // some task must fail attempt 0 but succeed on a retry
+        let recovered = (0..256).any(|t| p.fails(t, 0) && !p.fails(t, 1));
+        assert!(recovered);
+    }
+}

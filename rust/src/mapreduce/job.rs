@@ -1,0 +1,155 @@
+//! The `Job` trait and the byte-accounted key-value plumbing.
+
+use crate::rng::Pcg;
+
+/// Values that can be shipped across the simulated network; `byte_size`
+/// is what the shuffle/broadcast accounting charges (serialized size, not
+/// in-memory size — matches what Hadoop would move).
+pub trait Payload: Send + Clone + 'static {
+    fn byte_size(&self) -> usize;
+}
+
+macro_rules! scalar_payload {
+    ($($t:ty),*) => {
+        $(impl Payload for $t {
+            fn byte_size(&self) -> usize { std::mem::size_of::<$t>() }
+        })*
+    };
+}
+scalar_payload!(u8, u16, u32, u64, usize, i8, i16, i32, i64, f32, f64, bool);
+
+impl Payload for String {
+    fn byte_size(&self) -> usize {
+        self.len()
+    }
+}
+
+impl<T: Payload + Copy> Payload for Vec<T> {
+    fn byte_size(&self) -> usize {
+        // length prefix + elements (fixed-size elements by the Copy bound)
+        8 + self.iter().map(Payload::byte_size).sum::<usize>()
+    }
+}
+
+impl<A: Payload, B: Payload> Payload for (A, B) {
+    fn byte_size(&self) -> usize {
+        self.0.byte_size() + self.1.byte_size()
+    }
+}
+
+impl<A: Payload, B: Payload, C: Payload> Payload for (A, B, C) {
+    fn byte_size(&self) -> usize {
+        self.0.byte_size() + self.1.byte_size() + self.2.byte_size()
+    }
+}
+
+/// A MapReduce job over input blocks of type `Input`.
+///
+/// Determinism contract: `map` receives a per-*task* RNG split derived
+/// from (job seed, block id) — never from the worker — so outputs are
+/// identical for any worker count or schedule. Reducers receive values
+/// sorted by (origin map task, emission order).
+pub trait Job: Send + Sync {
+    type Input: Sync;
+    type Key: Ord + Clone + Send + Sync;
+    type Value: Payload + Sync;
+    type Output: Send;
+
+    fn map(
+        &self,
+        block_id: usize,
+        input: &Self::Input,
+        ctx: &mut TaskCtx,
+        emit: &mut Emitter<Self::Key, Self::Value>,
+    );
+
+    /// Map-side combiner (runs per map task, like a Hadoop combiner).
+    /// Default: identity. Combining reduces shuffle bytes — the engine
+    /// accounts post-combine sizes, exactly like Hadoop.
+    fn combine(&self, _key: &Self::Key, values: Vec<Self::Value>) -> Vec<Self::Value> {
+        values
+    }
+
+    fn reduce(&self, key: Self::Key, values: Vec<Self::Value>, ctx: &mut TaskCtx) -> Self::Output;
+}
+
+/// Per-task context: deterministic RNG + custom counters.
+pub struct TaskCtx {
+    pub task_id: usize,
+    pub rng: Pcg,
+    /// (name, value) counters folded into JobMetrics::counters
+    pub counters: Vec<(&'static str, u64)>,
+}
+
+impl TaskCtx {
+    pub fn new(job_seed: u64, task_id: usize) -> Self {
+        let mut root = Pcg::new(job_seed, 0x7A5C);
+        let rng = root.split(task_id as u64);
+        TaskCtx { task_id, rng, counters: Vec::new() }
+    }
+
+    pub fn count(&mut self, name: &'static str, v: u64) {
+        if let Some(slot) = self.counters.iter_mut().find(|(n, _)| *n == name) {
+            slot.1 += v;
+        } else {
+            self.counters.push((name, v));
+        }
+    }
+}
+
+/// Collects map emissions and charges their serialized size.
+pub struct Emitter<K, V> {
+    pub(crate) pairs: Vec<(K, V)>,
+    pub(crate) bytes: usize,
+}
+
+impl<K, V: Payload> Emitter<K, V> {
+    pub(crate) fn new() -> Self {
+        Emitter { pairs: Vec::new(), bytes: 0 }
+    }
+
+    pub fn emit(&mut self, key: K, value: V) {
+        self.bytes += value.byte_size() + std::mem::size_of::<K>();
+        self.pairs.push((key, value));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_sizes() {
+        assert_eq!(3u32.byte_size(), 4);
+        assert_eq!(1.5f64.byte_size(), 8);
+        assert_eq!(vec![1.0f32; 10].byte_size(), 8 + 40);
+        assert_eq!("abc".to_string().byte_size(), 3);
+        assert_eq!((1u32, vec![0u8; 5]).byte_size(), 4 + 8 + 5);
+    }
+
+    #[test]
+    fn task_ctx_rng_schedule_independent() {
+        let mut a = TaskCtx::new(9, 3);
+        let mut b = TaskCtx::new(9, 3);
+        assert_eq!(a.rng.next_u64(), b.rng.next_u64());
+        let mut c = TaskCtx::new(9, 4);
+        assert_ne!(a.rng.next_u64(), c.rng.next_u64());
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut ctx = TaskCtx::new(1, 0);
+        ctx.count("pts", 5);
+        ctx.count("pts", 7);
+        ctx.count("other", 1);
+        assert_eq!(ctx.counters, vec![("pts", 12), ("other", 1)]);
+    }
+
+    #[test]
+    fn emitter_charges_bytes() {
+        let mut e: Emitter<u32, Vec<f32>> = Emitter::new();
+        e.emit(1, vec![0.0; 4]);
+        assert_eq!(e.pairs.len(), 1);
+        assert_eq!(e.bytes, 4 + 8 + 16);
+    }
+}

@@ -1,0 +1,112 @@
+//! Per-job cost accounting: the numbers the paper's MapReduce-efficiency
+//! argument is actually about.
+
+use std::time::Duration;
+
+/// Costs measured for one job execution.
+#[derive(Clone, Debug, Default)]
+pub struct JobMetrics {
+    pub map_tasks: usize,
+    /// map tasks that were re-executed after injected failures
+    pub map_retries: usize,
+    pub reduce_tasks: usize,
+    /// key-value pairs crossing the shuffle (post-combine)
+    pub shuffle_pairs: usize,
+    /// serialized bytes crossing the shuffle (post-combine)
+    pub shuffle_bytes: usize,
+    /// bytes broadcast to mappers via the distributed cache
+    pub broadcast_bytes: usize,
+    /// wall-clock of the map phase (all workers)
+    pub map_time: Duration,
+    /// wall-clock of the shuffle + reduce phase
+    pub reduce_time: Duration,
+    /// sum over workers of busy map time — per-node work, used to derive the
+    /// simulated-cluster critical path on a single-core host
+    pub map_cpu_time: Duration,
+    /// longest single map-task time: the critical path of a perfectly
+    /// parallel map phase
+    pub map_critical_path: Duration,
+    /// custom counters accumulated from TaskCtx::count
+    pub counters: Vec<(&'static str, u64)>,
+}
+
+impl JobMetrics {
+    pub(crate) fn add_counter(&mut self, name: &'static str, v: u64) {
+        if let Some(slot) = self.counters.iter_mut().find(|(n, _)| *n == name) {
+            slot.1 += v;
+        } else {
+            self.counters.push((name, v));
+        }
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(n, _)| *n == name).map(|(_, v)| *v).unwrap_or(0)
+    }
+
+    /// Merge another job's metrics into this one (pipeline totals).
+    pub fn merge(&mut self, other: &JobMetrics) {
+        self.map_tasks += other.map_tasks;
+        self.map_retries += other.map_retries;
+        self.reduce_tasks += other.reduce_tasks;
+        self.shuffle_pairs += other.shuffle_pairs;
+        self.shuffle_bytes += other.shuffle_bytes;
+        self.broadcast_bytes += other.broadcast_bytes;
+        self.map_time += other.map_time;
+        self.reduce_time += other.reduce_time;
+        self.map_cpu_time += other.map_cpu_time;
+        self.map_critical_path = self.map_critical_path.max(other.map_critical_path);
+        for (n, v) in &other.counters {
+            self.add_counter(n, *v);
+        }
+    }
+
+    /// Estimated wall-clock on a real `workers`-node cluster with the given
+    /// network bandwidth: max over workers of per-node compute + data motion.
+    /// This is the honest stand-in for Hadoop minutes on a 1-core host.
+    pub fn simulated_time(&self, workers: usize, net_bytes_per_sec: f64) -> Duration {
+        let compute = self.map_cpu_time.as_secs_f64() / workers.max(1) as f64;
+        let compute = compute.max(self.map_critical_path.as_secs_f64());
+        let network =
+            (self.shuffle_bytes + self.broadcast_bytes) as f64 / net_bytes_per_sec.max(1.0);
+        Duration::from_secs_f64(compute + network + self.reduce_time.as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_merge() {
+        let mut a = JobMetrics::default();
+        a.add_counter("x", 1);
+        let mut b = JobMetrics::default();
+        b.add_counter("x", 2);
+        b.add_counter("y", 5);
+        b.shuffle_bytes = 100;
+        a.merge(&b);
+        assert_eq!(a.counter("x"), 3);
+        assert_eq!(a.counter("y"), 5);
+        assert_eq!(a.counter("zzz"), 0);
+        assert_eq!(a.shuffle_bytes, 100);
+    }
+
+    #[test]
+    fn simulated_time_scales_with_workers() {
+        let mut m = JobMetrics::default();
+        m.map_cpu_time = Duration::from_secs(20);
+        m.map_critical_path = Duration::from_millis(100);
+        let t1 = m.simulated_time(1, 1e9);
+        let t20 = m.simulated_time(20, 1e9);
+        assert!(t1 > t20);
+        assert!(t20 >= Duration::from_millis(100)); // critical path floor
+    }
+
+    #[test]
+    fn simulated_time_charges_network() {
+        let mut m = JobMetrics::default();
+        m.shuffle_bytes = 1_000_000_000; // 1 GB at 1 GB/s = 1s
+        let t = m.simulated_time(10, 1e9);
+        assert!(t >= Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,33 @@
+//! A shared-nothing MapReduce execution engine (the paper's substrate).
+//!
+//! The paper's contribution is a *MapReduce-efficient* algorithm family:
+//! what matters is which matrices are broadcast to every mapper, how many
+//! bytes cross the network in the shuffle, and that one kernel-k-means
+//! iteration costs O(1) jobs with O(workers * m * k) network traffic
+//! instead of O(n^2) kernel accesses. This engine executes real
+//! map / combine / shuffle / reduce dataflow on worker threads while
+//! accounting those costs exactly, and supports the fault model MapReduce
+//! is designed around (task re-execution, §3.1 of the paper).
+//!
+//! Single-machine honesty: the container is single-core, so worker threads
+//! model *cluster structure*, not wall-clock speedup. Every experiment
+//! reports the engine's cost model (bytes moved, per-phase times, critical
+//! path) alongside wall-clock — see DESIGN.md sections 1-2.
+//!
+//! Modules:
+//! * [`job`]     — the `Job` trait (map/combine/reduce) + payload sizing
+//! * [`engine`]  — the executor: partitioning, shuffle, retries, metrics
+//! * [`dfs`]     — simulated distributed block store with replication
+//! * [`fault`]   — deterministic fault-injection plans
+//! * [`metrics`] — per-job cost accounting
+
+pub mod dfs;
+pub mod engine;
+pub mod fault;
+pub mod job;
+pub mod metrics;
+
+pub use engine::{Engine, EngineConfig, JobRun};
+pub use fault::FaultPlan;
+pub use job::{Emitter, Job, Payload, TaskCtx};
+pub use metrics::JobMetrics;

@@ -1,0 +1,177 @@
+//! Clustering evaluation metrics.
+//!
+//! The paper reports Normalized Mutual Information (Strehl & Ghosh [33])
+//! between cluster labels and ground-truth class labels; ARI and purity are
+//! provided for additional diagnostics, and a paired t-test used for the
+//! bold-facing rule in Tables 2/3.
+
+/// Contingency table between two labelings (dense, clusters x classes).
+fn contingency(pred: &[u32], truth: &[u32]) -> (Vec<Vec<f64>>, Vec<f64>, Vec<f64>, f64) {
+    assert_eq!(pred.len(), truth.len());
+    assert!(!pred.is_empty(), "empty labeling");
+    let kp = *pred.iter().max().unwrap() as usize + 1;
+    let kt = *truth.iter().max().unwrap() as usize + 1;
+    let mut table = vec![vec![0.0; kt]; kp];
+    for (&p, &t) in pred.iter().zip(truth) {
+        table[p as usize][t as usize] += 1.0;
+    }
+    let rows: Vec<f64> = table.iter().map(|r| r.iter().sum()).collect();
+    let mut cols = vec![0.0; kt];
+    for r in &table {
+        for (j, v) in r.iter().enumerate() {
+            cols[j] += v;
+        }
+    }
+    (table, rows, cols, pred.len() as f64)
+}
+
+/// Normalized Mutual Information: `I(P;T) / sqrt(H(P) H(T))`, in [0, 1].
+pub fn nmi(pred: &[u32], truth: &[u32]) -> f64 {
+    let (table, rows, cols, n) = contingency(pred, truth);
+    let mut mi = 0.0;
+    for (i, row) in table.iter().enumerate() {
+        for (j, &nij) in row.iter().enumerate() {
+            if nij > 0.0 {
+                mi += (nij / n) * ((n * nij) / (rows[i] * cols[j])).ln();
+            }
+        }
+    }
+    let hp: f64 = rows.iter().filter(|&&v| v > 0.0).map(|&v| -(v / n) * (v / n).ln()).sum();
+    let ht: f64 = cols.iter().filter(|&&v| v > 0.0).map(|&v| -(v / n) * (v / n).ln()).sum();
+    if hp <= 0.0 || ht <= 0.0 {
+        // one side is a single cluster: MI is 0; define NMI = 1 iff both sides
+        // are single-cluster (identical trivial partitions), else 0.
+        return if hp <= 0.0 && ht <= 0.0 { 1.0 } else { 0.0 };
+    }
+    (mi / (hp * ht).sqrt()).clamp(0.0, 1.0)
+}
+
+/// Adjusted Rand Index, in [-1, 1] with 0 = chance.
+pub fn ari(pred: &[u32], truth: &[u32]) -> f64 {
+    let (table, rows, cols, n) = contingency(pred, truth);
+    let comb2 = |x: f64| x * (x - 1.0) / 2.0;
+    let sum_ij: f64 = table.iter().flatten().map(|&v| comb2(v)).sum();
+    let sum_i: f64 = rows.iter().map(|&v| comb2(v)).sum();
+    let sum_j: f64 = cols.iter().map(|&v| comb2(v)).sum();
+    let total = comb2(n);
+    let expected = sum_i * sum_j / total;
+    let max_index = 0.5 * (sum_i + sum_j);
+    if (max_index - expected).abs() < 1e-12 {
+        return 0.0;
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+/// Purity: fraction of points whose cluster's majority class matches theirs.
+pub fn purity(pred: &[u32], truth: &[u32]) -> f64 {
+    let (table, _, _, n) = contingency(pred, truth);
+    let correct: f64 = table
+        .iter()
+        .map(|row| row.iter().cloned().fold(0.0f64, f64::max))
+        .sum();
+    correct / n
+}
+
+/// Mean and (sample) standard deviation.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+/// Welch's t-test: returns true when `a`'s mean is significantly *greater*
+/// than `b`'s at ~95% confidence (one-sided, normal approximation of the t
+/// distribution — adequate for the table bold-facing rule, matching the
+/// paper's "best method(s) per column by t-test" presentation).
+pub fn significantly_greater(a: &[f64], b: &[f64]) -> bool {
+    if a.len() < 2 || b.len() < 2 {
+        return false;
+    }
+    let (ma, sa) = mean_std(a);
+    let (mb, sb) = mean_std(b);
+    let se = (sa * sa / a.len() as f64 + sb * sb / b.len() as f64).sqrt();
+    if se <= 1e-12 {
+        return ma > mb;
+    }
+    (ma - mb) / se > 1.645 // one-sided 95%
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nmi_perfect_match() {
+        let a = [0u32, 0, 1, 1, 2, 2];
+        assert!((nmi(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nmi_label_permutation_invariant() {
+        let truth = [0u32, 0, 1, 1, 2, 2];
+        let pred = [2u32, 2, 0, 0, 1, 1];
+        assert!((nmi(&pred, &truth) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nmi_independent_low() {
+        // alternating vs blocked: some but weak agreement
+        let truth: Vec<u32> = (0..400).map(|i| (i / 200) as u32).collect();
+        let pred: Vec<u32> = (0..400).map(|i| (i % 2) as u32).collect();
+        assert!(nmi(&pred, &truth) < 0.05);
+    }
+
+    #[test]
+    fn nmi_single_cluster_pred() {
+        let truth = [0u32, 0, 1, 1];
+        let pred = [0u32, 0, 0, 0];
+        assert_eq!(nmi(&pred, &truth), 0.0);
+    }
+
+    #[test]
+    fn nmi_symmetric() {
+        let a = [0u32, 1, 1, 2, 2, 2, 0];
+        let b = [1u32, 1, 0, 2, 0, 2, 0];
+        assert!((nmi(&a, &b) - nmi(&b, &a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_perfect_and_chance() {
+        let a = [0u32, 0, 1, 1, 2, 2];
+        assert!((ari(&a, &a) - 1.0).abs() < 1e-12);
+        let truth: Vec<u32> = (0..1000).map(|i| (i / 500) as u32).collect();
+        let pred: Vec<u32> = (0..1000).map(|i| (i % 2) as u32).collect();
+        assert!(ari(&pred, &truth).abs() < 0.05);
+    }
+
+    #[test]
+    fn purity_values() {
+        let truth = [0u32, 0, 0, 1, 1, 1];
+        let pred = [0u32, 0, 1, 1, 1, 1];
+        // cluster0: {0,0} pure; cluster1: {0,1,1,1} majority 3/4
+        assert!((purity(&pred, &truth) - 5.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ttest_separates_clear_difference() {
+        let a = [0.9, 0.91, 0.92, 0.9, 0.89];
+        let b = [0.5, 0.52, 0.49, 0.51, 0.5];
+        assert!(significantly_greater(&a, &b));
+        assert!(!significantly_greater(&b, &a));
+        assert!(!significantly_greater(&a, &a));
+    }
+}

@@ -1,0 +1,65 @@
+//! Minimal property-based testing harness (the container has no proptest).
+//!
+//! `check` runs a property over `iters` generated cases; on failure it
+//! reports the seed that produced the counterexample so the case can be
+//! replayed deterministically. Shrinking is intentionally out of scope —
+//! generators here take a seed, so a failing seed *is* the reproducer.
+
+use crate::rng::Pcg;
+
+/// Run `prop(rng, case_index)` for `iters` cases derived from `base_seed`.
+/// The property panics (e.g. via assert!) to signal failure.
+pub fn check<F: FnMut(&mut Pcg, usize)>(name: &str, base_seed: u64, iters: usize, mut prop: F) {
+    for case in 0..iters {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Pcg::new(seed, 0x9009 + case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| err.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Draw a "sized" usize in [lo, hi] biased toward small values early on —
+/// cheap cases first, bigger cases later in the run.
+pub fn sized(rng: &mut Pcg, case: usize, iters: usize, lo: usize, hi: usize) -> usize {
+    debug_assert!(lo <= hi);
+    let frac = (case + 1) as f64 / iters.max(1) as f64;
+    let cap = lo + ((hi - lo) as f64 * frac).ceil() as usize;
+    lo + rng.below(cap.min(hi) - lo + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("sum-commutes", 1, 50, |rng, _| {
+            let a = rng.f64();
+            let b = rng.f64();
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failures() {
+        check("always-fails", 2, 3, |_, _| panic!("nope"));
+    }
+
+    #[test]
+    fn sized_respects_bounds() {
+        check("sized-bounds", 3, 100, |rng, case| {
+            let v = sized(rng, case, 100, 5, 50);
+            assert!((5..=50).contains(&v), "{v}");
+        });
+    }
+}

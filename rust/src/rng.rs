@@ -1,0 +1,224 @@
+//! Deterministic pseudo-random numbers (PCG-XSH-RR 64/32 based PCG64-ish).
+//!
+//! The container has no `rand` crate, and determinism matters more here
+//! than statistical perfection: every experiment in EXPERIMENTS.md is
+//! reproducible from a seed, and the MapReduce engine hands each task a
+//! *split* stream so results are independent of worker scheduling.
+
+/// PCG-XSH-RR with 64-bit state and 32-bit output, extended to u64 output
+/// by concatenating two draws. Splittable via distinct odd increments.
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+    /// Box–Muller produces pairs; the second value is cached here.
+    cached: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg {
+    /// Seeded stream. `stream` selects one of 2^63 independent sequences.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg { state: 0, inc: (stream << 1) | 1, cached: None };
+        rng.state = rng.inc.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience: stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive an independent child stream; used per MapReduce task so that
+    /// results do not depend on which worker ran the task or in what order.
+    pub fn split(&mut self, tag: u64) -> Pcg {
+        let seed = self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15);
+        Pcg::new(seed, tag.wrapping_add(1))
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n). Unbiased via rejection.
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        let n = n as u64;
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return (v % n) as usize;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (both values used).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.cached = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Bernoulli(p).
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// `n` distinct indices from [0, pool) (n <= pool), via partial shuffle.
+    pub fn choose(&mut self, pool: usize, n: usize) -> Vec<usize> {
+        assert!(n <= pool, "choose({n}) from pool of {pool}");
+        let mut idx: Vec<usize> = (0..pool).collect();
+        for i in 0..n {
+            let j = i + self.below(pool - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(n);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg::seeded(42);
+        let mut b = Pcg::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg::new(42, 1);
+        let mut b = Pcg::new(42, 2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4, "streams should be (nearly) disjoint, got {same}");
+    }
+
+    #[test]
+    fn split_is_schedule_independent() {
+        let mut parent1 = Pcg::seeded(7);
+        let c1 = parent1.split(3);
+        let mut parent2 = Pcg::seeded(7);
+        let c2 = parent2.split(3);
+        assert_eq!(c1.clone().next_u64_test(), c2.clone().next_u64_test());
+    }
+
+    impl Pcg {
+        fn next_u64_test(mut self) -> u64 {
+            self.next_u64()
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Pcg::seeded(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg::seeded(2);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = r.normal();
+            s1 += v;
+            s2 += v * v;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn below_unbiased_small() {
+        let mut r = Pcg::seeded(3);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn choose_distinct_and_in_range() {
+        let mut r = Pcg::seeded(4);
+        let got = r.choose(100, 30);
+        assert_eq!(got.len(), 30);
+        let mut sorted = got.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 30);
+        assert!(got.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg::seeded(5);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut back = xs.clone();
+        back.sort_unstable();
+        assert_eq!(back, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,175 @@
+//! Parser for `artifacts/manifest.txt` (written by python/compile/aot.py).
+//!
+//! Format: one artifact per line, `name key=value ...`; `#` comments.
+//! The manifest is the ABI between the build-time python layer and this
+//! runtime: every entry names an HLO-text file plus its static shapes.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Operation implemented by an artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Y = kappa(X, L) @ R^T : (b,d) x (l,d) x (l,m) -> (b,m)
+    Embed,
+    /// (assign, Z, g, obj) from (b,m) x (k,m) x mask(b)
+    Assign,
+    /// kappa(X, L) : (b,d) x (l,d) -> (b,l)
+    Kmat,
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub op: Op,
+    pub b: usize,
+    pub d: usize,
+    pub l: usize,
+    pub m: usize,
+    pub k: usize,
+    pub path: PathBuf,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`; artifact paths resolve relative to `dir`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut artifacts = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut toks = line.split_whitespace();
+            let name = toks.next().unwrap().to_string();
+            let (mut op, mut b, mut d, mut l, mut m, mut k, mut file) =
+                (None, 0usize, 0usize, 0usize, 0usize, 0usize, None);
+            for tok in toks {
+                let (key, value) = tok
+                    .split_once('=')
+                    .with_context(|| format!("line {}: bad token '{tok}'", ln + 1))?;
+                match key {
+                    "op" => {
+                        op = Some(match value {
+                            "embed" => Op::Embed,
+                            "assign" => Op::Assign,
+                            "kmat" => Op::Kmat,
+                            other => bail!("line {}: unknown op '{other}'", ln + 1),
+                        })
+                    }
+                    "b" => b = value.parse()?,
+                    "d" => d = value.parse()?,
+                    "l" => l = value.parse()?,
+                    "m" => m = value.parse()?,
+                    "k" => k = value.parse()?,
+                    "file" => file = Some(dir.join(value)),
+                    other => bail!("line {}: unknown key '{other}'", ln + 1),
+                }
+            }
+            let op = op.with_context(|| format!("line {}: missing op", ln + 1))?;
+            let path = file.with_context(|| format!("line {}: missing file", ln + 1))?;
+            if b == 0 {
+                bail!("line {}: missing b", ln + 1);
+            }
+            artifacts.push(Artifact { name, op, b, d, l, m, k, path });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Smallest embed artifact covering (d, l, m). (All artifacts share the
+    /// same block size b, so "smallest" = least padding waste in d*l*m.)
+    pub fn pick_embed(&self, d: usize, l: usize, m: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.op == Op::Embed && a.d >= d && a.l >= l && a.m >= m)
+            .min_by_key(|a| a.d * a.l * a.m)
+    }
+
+    /// Smallest assign artifact covering (m, k).
+    pub fn pick_assign(&self, m: usize, k: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.op == Op::Assign && a.m >= m && a.k >= k)
+            .min_by_key(|a| a.m * a.k)
+    }
+
+    /// Smallest kmat artifact covering (d, l).
+    pub fn pick_kmat(&self, d: usize, l: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.op == Op::Kmat && a.d >= d && a.l >= l)
+            .min_by_key(|a| a.d * a.l)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+embed_a op=embed b=1024 d=64 l=256 m=256 file=a.hlo.txt
+embed_b op=embed b=1024 d=256 l=1024 m=512 file=b.hlo.txt
+assign_a op=assign b=1024 m=256 k=16 file=c.hlo.txt
+kmat_a op=kmat b=1024 d=64 l=256 file=d.hlo.txt
+";
+
+    fn parsed() -> Manifest {
+        Manifest::parse(SAMPLE, Path::new("/art")).unwrap()
+    }
+
+    #[test]
+    fn parses_entries() {
+        let m = parsed();
+        assert_eq!(m.artifacts.len(), 4);
+        let a = &m.artifacts[0];
+        assert_eq!(a.op, Op::Embed);
+        assert_eq!((a.b, a.d, a.l, a.m), (1024, 64, 256, 256));
+        assert_eq!(a.path, Path::new("/art/a.hlo.txt"));
+    }
+
+    #[test]
+    fn picks_smallest_cover() {
+        let m = parsed();
+        assert_eq!(m.pick_embed(60, 100, 200).unwrap().name, "embed_a");
+        assert_eq!(m.pick_embed(65, 100, 200).unwrap().name, "embed_b");
+        assert!(m.pick_embed(300, 100, 200).is_none());
+        assert_eq!(m.pick_assign(10, 10).unwrap().name, "assign_a");
+        assert!(m.pick_assign(10, 17).is_none());
+        assert_eq!(m.pick_kmat(64, 256).unwrap().name, "kmat_a");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Manifest::parse("x op=embed", Path::new("/")).is_err()); // no b/file
+        assert!(Manifest::parse("x op=wat b=1 file=f", Path::new("/")).is_err());
+        assert!(Manifest::parse("x garbage", Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.pick_embed(64, 256, 256).is_some());
+            assert!(m.pick_assign(256, 16).is_some());
+            assert!(m.pick_kmat(64, 256).is_some());
+            for a in &m.artifacts {
+                assert!(a.path.exists(), "{} missing", a.path.display());
+            }
+        }
+    }
+}

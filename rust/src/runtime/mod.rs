@@ -1,0 +1,330 @@
+//! Runtime bridge: executes the AOT-compiled compute graphs from rust.
+//!
+//! [`Compute`] is the facade the coordinator uses on the hot path. It has
+//! two interchangeable backends:
+//!
+//! * **PJRT** ([`service::PjrtService`]) — loads `artifacts/*.hlo.txt`
+//!   (lowered once by `python/compile/aot.py`), compiles each on the XLA
+//!   CPU client, and executes with shape padding per [`pad`]'s exact
+//!   padding contract. This is the production path; python is never
+//!   involved at runtime.
+//! * **Reference** ([`reference`]) — the same three ops in pure rust.
+//!   Used when artifacts are absent (unit tests) and as the oracle the
+//!   parity tests cross-check PJRT against.
+//!
+//! Both backends implement: `embed` (Algorithm 1's per-block hot-spot),
+//! `assign` (Algorithm 2's map step), `kmat` (raw kernel blocks for the
+//! baseline paths).
+
+pub mod manifest;
+pub mod pad;
+pub mod reference;
+pub mod service;
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+use crate::kernels::Kernel;
+use manifest::Manifest;
+use pad::{pad2, row_mask, unpad2, BIG};
+use service::{PjrtService, Tensor};
+
+/// Distance used in embedding space: l2^2 for APNC-Nys (paper Eq. 7),
+/// l1 for APNC-SD (paper Eq. 13). Codes are the artifact ABI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistKind {
+    L2Sq,
+    L1,
+}
+
+impl DistKind {
+    pub fn code(self) -> i32 {
+        match self {
+            DistKind::L2Sq => 0,
+            DistKind::L1 => 1,
+        }
+    }
+}
+
+/// Output of the assignment op on one block.
+#[derive(Clone, Debug)]
+pub struct AssignOut {
+    /// nearest centroid per row
+    pub assign: Vec<u32>,
+    /// (k, m) per-cluster embedding sums (masked)
+    pub z: Vec<f32>,
+    /// per-cluster masked counts
+    pub g: Vec<f32>,
+    /// masked sum of min distances
+    pub obj: f64,
+}
+
+enum Backend {
+    Pjrt { svc: PjrtService, manifest: Manifest },
+    Reference,
+}
+
+/// Compute facade. Cheap to clone (the PJRT backend is a channel handle).
+pub struct Compute {
+    backend: Backend,
+}
+
+impl Clone for Compute {
+    fn clone(&self) -> Self {
+        match &self.backend {
+            Backend::Pjrt { svc, manifest } => Compute {
+                backend: Backend::Pjrt { svc: svc.clone(), manifest: manifest.clone() },
+            },
+            Backend::Reference => Compute { backend: Backend::Reference },
+        }
+    }
+}
+
+impl Compute {
+    /// PJRT backend from an artifact directory (must contain manifest.txt).
+    pub fn pjrt(artifact_dir: &Path) -> Result<Compute> {
+        let manifest = Manifest::load(artifact_dir)
+            .with_context(|| format!("loading manifest from {}", artifact_dir.display()))?;
+        let svc = PjrtService::start(&manifest)?;
+        Ok(Compute { backend: Backend::Pjrt { svc, manifest } })
+    }
+
+    /// Pure-rust reference backend.
+    pub fn reference() -> Compute {
+        Compute { backend: Backend::Reference }
+    }
+
+    /// PJRT when artifacts exist (and `APNC_FORCE_REFERENCE` is unset),
+    /// reference otherwise.
+    pub fn auto(artifact_dir: &Path) -> Compute {
+        if std::env::var("APNC_FORCE_REFERENCE").is_err()
+            && artifact_dir.join("manifest.txt").exists()
+        {
+            match Compute::pjrt(artifact_dir) {
+                Ok(c) => return c,
+                Err(e) => eprintln!("warn: PJRT backend unavailable ({e:#}); using reference"),
+            }
+        }
+        Compute::reference()
+    }
+
+    /// Default artifact directory: `$APNC_ARTIFACTS` or `<crate>/artifacts`.
+    pub fn default_artifact_dir() -> std::path::PathBuf {
+        std::env::var_os("APNC_ARTIFACTS")
+            .map(Into::into)
+            .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self.backend, Backend::Pjrt { .. })
+    }
+
+    /// Pre-compile the artifacts a run at these operating points will use,
+    /// so the first hot-path call doesn't pay XLA compile latency (and
+    /// phase timings measure execution, not compilation).
+    pub fn warm(&self, d: usize, l: usize, m: usize, k: usize) {
+        if let Backend::Pjrt { svc, manifest } = &self.backend {
+            for art in [manifest.pick_embed(d, l, m), manifest.pick_assign(m, k)]
+                .into_iter()
+                .flatten()
+            {
+                if let Err(e) = svc.warm(&art.name) {
+                    eprintln!("warn: warming {} failed: {e:#}", art.name);
+                }
+            }
+        }
+    }
+
+    /// Y = kappa(X, L) @ R^T.
+    ///
+    /// `x`: (rows, d) row-major; `samples`: (l, d); `r_t`: (l, m).
+    /// Returns (rows, m). Rows are chunked to the artifact block size.
+    pub fn embed(
+        &self,
+        x: &[f32],
+        rows: usize,
+        d: usize,
+        samples: &[f32],
+        l: usize,
+        r_t: &[f32],
+        m: usize,
+        kernel: Kernel,
+    ) -> Result<Vec<f32>> {
+        assert_eq!(x.len(), rows * d, "x shape");
+        assert_eq!(samples.len(), l * d, "samples shape");
+        assert_eq!(r_t.len(), l * m, "r_t shape");
+        match &self.backend {
+            Backend::Reference => Ok(reference::embed(x, rows, d, samples, l, r_t, m, kernel)),
+            Backend::Pjrt { svc, manifest } => {
+                let art = manifest
+                    .pick_embed(d, l, m)
+                    .ok_or_else(|| anyhow!("no embed artifact covers d={d} l={l} m={m}"))?;
+                let (pb, pd, pl, pm) = (art.b, art.d, art.l, art.m);
+                // broadcast operands are padded once and Arc-shared across
+                // every chunk request (no per-chunk copies)
+                let samples_p = std::sync::Arc::new(pad2(samples, l, d, pl, pd, 0.0));
+                let r_t_p = std::sync::Arc::new(pad2(r_t, l, m, pl, pm, 0.0));
+                let params = std::sync::Arc::new(kernel.params().to_vec());
+                let mut y = Vec::with_capacity(rows * m);
+                let mut start = 0usize;
+                while start < rows {
+                    let chunk = (rows - start).min(pb);
+                    let x_p = pad2(&x[start * d..(start + chunk) * d], chunk, d, pb, pd, 0.0);
+                    let outs = svc.exec(
+                        &art.name,
+                        vec![
+                            Tensor::f32(vec![pb as i64, pd as i64], x_p),
+                            Tensor::f32_shared(vec![pl as i64, pd as i64], samples_p.clone()),
+                            Tensor::f32_shared(vec![pl as i64, pm as i64], r_t_p.clone()),
+                            Tensor::I32Scalar(kernel.code()),
+                            Tensor::f32_shared(vec![4], params.clone()),
+                        ],
+                    )?;
+                    y.extend(unpad2(outs[0].as_f32(), pb, pm, chunk, m));
+                    start += chunk;
+                }
+                Ok(y)
+            }
+        }
+    }
+
+    /// Nearest-centroid assignment + combiner stats for one block.
+    ///
+    /// `y`: (rows, m); `centroids`: (k, m). Chunked like `embed`.
+    pub fn assign(
+        &self,
+        y: &[f32],
+        rows: usize,
+        m: usize,
+        centroids: &[f32],
+        k: usize,
+        dist: DistKind,
+    ) -> Result<AssignOut> {
+        assert_eq!(y.len(), rows * m, "y shape");
+        assert_eq!(centroids.len(), k * m, "centroids shape");
+        match &self.backend {
+            Backend::Reference => {
+                let mask = vec![1.0f32; rows];
+                Ok(reference::assign(y, rows, m, centroids, k, &mask, dist))
+            }
+            Backend::Pjrt { svc, manifest } => {
+                let art = manifest
+                    .pick_assign(m, k)
+                    .ok_or_else(|| anyhow!("no assign artifact covers m={m} k={k}"))?;
+                let (pb, pm, pk) = (art.b, art.m, art.k);
+                let cent_p = std::sync::Arc::new(pad2(centroids, k, m, pk, pm, BIG));
+                let mut out = AssignOut {
+                    assign: Vec::with_capacity(rows),
+                    z: vec![0.0; k * m],
+                    g: vec![0.0; k],
+                    obj: 0.0,
+                };
+                let mut start = 0usize;
+                while start < rows {
+                    let chunk = (rows - start).min(pb);
+                    let y_p = pad2(&y[start * m..(start + chunk) * m], chunk, m, pb, pm, 0.0);
+                    let mask = row_mask(chunk, pb);
+                    let outs = svc.exec(
+                        &art.name,
+                        vec![
+                            Tensor::f32(vec![pb as i64, pm as i64], y_p),
+                            Tensor::f32_shared(vec![pk as i64, pm as i64], cent_p.clone()),
+                            Tensor::f32(vec![pb as i64], mask),
+                            Tensor::I32Scalar(dist.code()),
+                        ],
+                    )?;
+                    let assign = outs[0].as_i32();
+                    out.assign.extend(assign[..chunk].iter().map(|&v| v as u32));
+                    let z = unpad2(outs[1].as_f32(), pk, pm, k, m);
+                    for (acc, v) in out.z.iter_mut().zip(&z) {
+                        *acc += v;
+                    }
+                    for (acc, v) in out.g.iter_mut().zip(&outs[2].as_f32()[..k]) {
+                        *acc += v;
+                    }
+                    out.obj += outs[3].as_f32()[0] as f64;
+                    start += chunk;
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Raw kernel block kappa(X, L): (rows, l).
+    pub fn kmat(
+        &self,
+        x: &[f32],
+        rows: usize,
+        d: usize,
+        samples: &[f32],
+        l: usize,
+        kernel: Kernel,
+    ) -> Result<Vec<f32>> {
+        assert_eq!(x.len(), rows * d, "x shape");
+        assert_eq!(samples.len(), l * d, "samples shape");
+        match &self.backend {
+            Backend::Reference => Ok(reference::kmat(x, rows, d, samples, l, kernel)),
+            Backend::Pjrt { svc, manifest } => {
+                let art = manifest
+                    .pick_kmat(d, l)
+                    .ok_or_else(|| anyhow!("no kmat artifact covers d={d} l={l}"))?;
+                let (pb, pd, pl) = (art.b, art.d, art.l);
+                let samples_p = std::sync::Arc::new(pad2(samples, l, d, pl, pd, 0.0));
+                let params = std::sync::Arc::new(kernel.params().to_vec());
+                let mut out = Vec::with_capacity(rows * l);
+                let mut start = 0usize;
+                while start < rows {
+                    let chunk = (rows - start).min(pb);
+                    let x_p = pad2(&x[start * d..(start + chunk) * d], chunk, d, pb, pd, 0.0);
+                    let outs = svc.exec(
+                        &art.name,
+                        vec![
+                            Tensor::f32(vec![pb as i64, pd as i64], x_p),
+                            Tensor::f32_shared(vec![pl as i64, pd as i64], samples_p.clone()),
+                            Tensor::I32Scalar(kernel.code()),
+                            Tensor::f32_shared(vec![4], params.clone()),
+                        ],
+                    )?;
+                    out.extend(unpad2(outs[0].as_f32(), pb, pl, chunk, l));
+                    start += chunk;
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg;
+
+    fn randv(rng: &mut Pcg, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn reference_backend_smoke() {
+        let c = Compute::reference();
+        assert!(!c.is_pjrt());
+        let mut rng = Pcg::seeded(60);
+        let (rows, d, l, m) = (10, 4, 6, 3);
+        let x = randv(&mut rng, rows * d);
+        let s = randv(&mut rng, l * d);
+        let rt = randv(&mut rng, l * m);
+        let y = c.embed(&x, rows, d, &s, l, &rt, m, Kernel::Rbf { gamma: 0.5 }).unwrap();
+        assert_eq!(y.len(), rows * m);
+        let cent = y[..2 * m].to_vec();
+        let out = c.assign(&y, rows, m, &cent, 2, DistKind::L2Sq).unwrap();
+        assert_eq!(out.assign.len(), rows);
+        assert_eq!(out.assign[0], 0);
+        assert_eq!(out.assign[1], 1);
+        assert_eq!(out.g.iter().sum::<f32>(), rows as f32);
+    }
+
+    #[test]
+    fn dist_codes_are_abi() {
+        assert_eq!(DistKind::L2Sq.code(), 0);
+        assert_eq!(DistKind::L1.code(), 1);
+    }
+}

@@ -1,0 +1,106 @@
+//! Shape padding/unpadding between caller shapes and artifact shapes.
+//!
+//! HLO artifacts are shape-static; callers have arbitrary (rows, d, l, m, k).
+//! The padding contract (mirrored in python/compile/model.py) is *exact*:
+//!
+//! * features (d): zero-pad columns — dot products and distances unchanged
+//! * samples (l): zero-pad sample rows AND zero-pad the matching R^T rows —
+//!   padded samples contribute exactly 0 to the embedding
+//! * embedding dim (m): zero-pad R^T columns / Y columns — distances exact
+//! * centroids (k): pad rows with `BIG` — they never win an argmin
+//! * block rows (b): zero-pad X/Y rows; a 0/1 mask excludes them from the
+//!   Z/g/obj statistics; their per-row outputs are discarded on unpad
+
+/// Pad value for phantom centroids (f32::squares to +inf in l2, stays
+/// finite-dominant in l1).
+pub const BIG: f32 = 1e30;
+
+/// Pad a row-major (rows, cols) buffer to (pad_rows, pad_cols) with `fill`.
+pub fn pad2(
+    src: &[f32],
+    rows: usize,
+    cols: usize,
+    pad_rows: usize,
+    pad_cols: usize,
+    fill: f32,
+) -> Vec<f32> {
+    assert_eq!(src.len(), rows * cols, "pad2 input shape");
+    assert!(pad_rows >= rows && pad_cols >= cols, "pad must grow");
+    let mut out = vec![fill; pad_rows * pad_cols];
+    for r in 0..rows {
+        out[r * pad_cols..r * pad_cols + cols].copy_from_slice(&src[r * cols..(r + 1) * cols]);
+        // rows that exist but whose tail columns are padding must be `fill`
+        // only for centroid padding; for zero-padding fill == 0 already.
+        if fill != 0.0 {
+            // centroid rows: real rows keep zero tail (distances must not
+            // pick up BIG in real rows)
+            for c in cols..pad_cols {
+                out[r * pad_cols + c] = 0.0;
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`pad2`]: extract the leading (rows, cols) block.
+pub fn unpad2(src: &[f32], pad_rows: usize, pad_cols: usize, rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(src.len(), pad_rows * pad_cols, "unpad2 input shape");
+    assert!(pad_rows >= rows && pad_cols >= cols);
+    let mut out = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        out.extend_from_slice(&src[r * pad_cols..r * pad_cols + cols]);
+    }
+    out
+}
+
+/// 0/1 mask for a padded block: first `rows` ones, rest zeros.
+pub fn row_mask(rows: usize, pad_rows: usize) -> Vec<f32> {
+    assert!(pad_rows >= rows);
+    let mut mask = vec![0.0f32; pad_rows];
+    for m in mask.iter_mut().take(rows) {
+        *m = 1.0;
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_unpad_roundtrip() {
+        let src: Vec<f32> = (0..6).map(|v| v as f32).collect(); // 2x3
+        let padded = pad2(&src, 2, 3, 4, 5, 0.0);
+        assert_eq!(padded.len(), 20);
+        assert_eq!(padded[0..3], [0.0, 1.0, 2.0]);
+        assert_eq!(padded[3..5], [0.0, 0.0]);
+        assert_eq!(padded[5..8], [3.0, 4.0, 5.0]);
+        assert!(padded[10..].iter().all(|&v| v == 0.0));
+        assert_eq!(unpad2(&padded, 4, 5, 2, 3), src);
+    }
+
+    #[test]
+    fn centroid_fill_pads_rows_not_tails() {
+        let src = vec![1.0, 2.0]; // 1x2
+        let padded = pad2(&src, 1, 2, 3, 4, BIG);
+        // real row keeps zero tail
+        assert_eq!(&padded[0..4], &[1.0, 2.0, 0.0, 0.0]);
+        // phantom rows are all BIG
+        assert!(padded[4..].iter().all(|&v| v == BIG));
+    }
+
+    #[test]
+    fn mask_counts() {
+        let m = row_mask(3, 5);
+        assert_eq!(m, vec![1.0, 1.0, 1.0, 0.0, 0.0]);
+        let s: f32 = m.iter().sum();
+        assert_eq!(s, 3.0);
+    }
+
+    #[test]
+    fn noop_padding_identity() {
+        let src = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(pad2(&src, 2, 2, 2, 2, 0.0), src);
+        assert_eq!(unpad2(&src, 2, 2, 2, 2), src);
+    }
+}

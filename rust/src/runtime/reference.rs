@@ -1,0 +1,205 @@
+//! Pure-rust reference backend: the same three ops as the PJRT artifacts,
+//! computed directly in f32.
+//!
+//! Two jobs: (1) unit tests run without `make artifacts`; (2) the parity
+//! integration test cross-checks the PJRT path against this one — the rust
+//! twin of python's ref.py (same math, same clamping).
+
+use super::{AssignOut, DistKind};
+use crate::kernels::Kernel;
+
+#[inline]
+fn kernel_value(kernel: Kernel, dot: f32, x_sq: f32, l_sq: f32) -> f32 {
+    match kernel {
+        Kernel::Linear => dot,
+        Kernel::Rbf { gamma } => (-gamma * (x_sq + l_sq - 2.0 * dot).max(0.0)).exp(),
+        Kernel::Poly { c, degree } => (dot + c).max(0.0).powf(degree),
+        Kernel::Tanh { a, b } => (a * dot + b).tanh(),
+    }
+}
+
+/// kappa(X, L): (rows, l) kernel block.
+pub fn kmat(x: &[f32], rows: usize, d: usize, samples: &[f32], l: usize, kernel: Kernel) -> Vec<f32> {
+    assert_eq!(x.len(), rows * d);
+    assert_eq!(samples.len(), l * d);
+    let x_sq: Vec<f32> = (0..rows)
+        .map(|r| x[r * d..(r + 1) * d].iter().map(|v| v * v).sum())
+        .collect();
+    let l_sq: Vec<f32> = (0..l)
+        .map(|j| samples[j * d..(j + 1) * d].iter().map(|v| v * v).sum())
+        .collect();
+    let mut out = vec![0.0f32; rows * l];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        for j in 0..l {
+            let sj = &samples[j * d..(j + 1) * d];
+            let mut dot = 0.0f32;
+            for i in 0..d {
+                dot += xr[i] * sj[i];
+            }
+            out[r * l + j] = kernel_value(kernel, dot, x_sq[r], l_sq[j]);
+        }
+    }
+    out
+}
+
+/// Y = kappa(X, L) @ R^T : (rows, m).
+pub fn embed(
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    samples: &[f32],
+    l: usize,
+    r_t: &[f32],
+    m: usize,
+    kernel: Kernel,
+) -> Vec<f32> {
+    assert_eq!(r_t.len(), l * m);
+    let kb = kmat(x, rows, d, samples, l, kernel);
+    let mut y = vec![0.0f32; rows * m];
+    for r in 0..rows {
+        let krow = &kb[r * l..(r + 1) * l];
+        let yrow = &mut y[r * m..(r + 1) * m];
+        for (j, &kv) in krow.iter().enumerate() {
+            if kv == 0.0 {
+                continue;
+            }
+            let rrow = &r_t[j * m..(j + 1) * m];
+            for c in 0..m {
+                yrow[c] += kv * rrow[c];
+            }
+        }
+    }
+    y
+}
+
+/// Nearest-centroid assignment + combiner statistics (Algorithm 2 map).
+pub fn assign(
+    y: &[f32],
+    rows: usize,
+    m: usize,
+    centroids: &[f32],
+    k: usize,
+    mask: &[f32],
+    dist: DistKind,
+) -> AssignOut {
+    assert_eq!(y.len(), rows * m);
+    assert_eq!(centroids.len(), k * m);
+    assert_eq!(mask.len(), rows);
+    let mut assign = vec![0u32; rows];
+    let mut z = vec![0.0f32; k * m];
+    let mut g = vec![0.0f32; k];
+    let mut obj = 0.0f64;
+    for r in 0..rows {
+        let yr = &y[r * m..(r + 1) * m];
+        let mut best = f32::INFINITY;
+        let mut best_c = 0usize;
+        for c in 0..k {
+            let cr = &centroids[c * m..(c + 1) * m];
+            let mut dv = 0.0f32;
+            match dist {
+                DistKind::L2Sq => {
+                    for i in 0..m {
+                        let diff = yr[i] - cr[i];
+                        dv += diff * diff;
+                    }
+                }
+                DistKind::L1 => {
+                    for i in 0..m {
+                        dv += (yr[i] - cr[i]).abs();
+                    }
+                }
+            }
+            if dv < best {
+                best = dv;
+                best_c = c;
+            }
+        }
+        assign[r] = best_c as u32;
+        if mask[r] != 0.0 {
+            let zr = &mut z[best_c * m..(best_c + 1) * m];
+            for i in 0..m {
+                zr[i] += yr[i];
+            }
+            g[best_c] += 1.0;
+            obj += best as f64;
+        }
+    }
+    AssignOut { assign, z, g, obj }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg;
+
+    fn randv(rng: &mut Pcg, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn kmat_matches_kernel_eval() {
+        let mut rng = Pcg::seeded(50);
+        let (rows, d, l) = (5, 7, 4);
+        let x = randv(&mut rng, rows * d);
+        let s = randv(&mut rng, l * d);
+        for kernel in [
+            Kernel::Linear,
+            Kernel::Rbf { gamma: 0.2 },
+            Kernel::Poly { c: 1.0, degree: 3.0 },
+            Kernel::Tanh { a: 0.01, b: 0.1 },
+        ] {
+            let got = kmat(&x, rows, d, &s, l, kernel);
+            for r in 0..rows {
+                for j in 0..l {
+                    let want = kernel.eval(&x[r * d..(r + 1) * d], &s[j * d..(j + 1) * d]) as f32;
+                    let diff = (got[r * l + j] - want).abs();
+                    assert!(diff < 2e-4 * want.abs().max(1.0), "{kernel:?} r={r} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn embed_is_kmat_times_rt() {
+        let mut rng = Pcg::seeded(51);
+        let (rows, d, l, m) = (6, 5, 4, 3);
+        let x = randv(&mut rng, rows * d);
+        let s = randv(&mut rng, l * d);
+        let rt = randv(&mut rng, l * m);
+        let kernel = Kernel::Rbf { gamma: 0.3 };
+        let kb = kmat(&x, rows, d, &s, l, kernel);
+        let y = embed(&x, rows, d, &s, l, &rt, m, kernel);
+        for r in 0..rows {
+            for c in 0..m {
+                let want: f32 = (0..l).map(|j| kb[r * l + j] * rt[j * m + c]).sum();
+                assert!((y[r * m + c] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn assign_nearest_and_stats() {
+        // 2 far-apart centroids, points near each
+        let centroids = vec![0.0f32, 0.0, 10.0, 10.0]; // k=2, m=2
+        let y = vec![0.1f32, -0.1, 9.9, 10.2, 0.3, 0.0];
+        let mask = vec![1.0f32, 1.0, 0.0]; // third point masked out
+        let out = assign(&y, 3, 2, &centroids, 2, &mask, DistKind::L2Sq);
+        assert_eq!(out.assign, vec![0, 1, 0]);
+        assert_eq!(out.g, vec![1.0, 1.0]); // masked point not counted
+        assert!((out.z[0] - 0.1).abs() < 1e-6);
+        assert!((out.z[2] - 9.9).abs() < 1e-6);
+        let l1 = assign(&y, 3, 2, &centroids, 2, &mask, DistKind::L1);
+        assert_eq!(l1.assign, vec![0, 1, 0]);
+        assert!(l1.obj > 0.0 && l1.obj != out.obj);
+    }
+
+    #[test]
+    fn assign_obj_is_masked_min_sum() {
+        let centroids = vec![0.0f32, 1.0]; // k=1, m=2
+        let y = vec![0.0f32, 0.0, 3.0, 1.0];
+        let mask = vec![1.0f32, 1.0];
+        let out = assign(&y, 2, 2, &centroids, 1, &mask, DistKind::L2Sq);
+        assert!((out.obj - (1.0 + 9.0)) < 1e-6);
+    }
+}

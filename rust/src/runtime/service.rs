@@ -1,0 +1,206 @@
+//! The PJRT compute service.
+//!
+//! A single dedicated thread owns the `PjRtClient` and the compiled
+//! executables (the `xla` crate's handles wrap raw pointers and are not
+//! `Send`); the rest of the system talks to it over an mpsc channel. On a
+//! CPU backend this serialization is near-optimal anyway: each execute
+//! call is internally parallelized by the XLA CPU runtime, so concurrent
+//! submissions would contend for the same cores.
+//!
+//! Executables compile lazily on first use and are cached for the process
+//! lifetime (the paper's "load once per mapper" — Algorithm 1 line 3 —
+//! amortized across all blocks).
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+
+use super::manifest::Manifest;
+
+/// A plain (shape, data) tensor that can cross threads. Data is
+/// `Arc`-backed so broadcast operands (the sample set, R^T, centroids)
+/// are shared across per-chunk requests instead of re-copied.
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    F32 { dims: Vec<i64>, data: Arc<Vec<f32>> },
+    /// rank-0 i32 (the `kind`/`dist` selectors)
+    I32Scalar(i32),
+}
+
+impl Tensor {
+    /// Owned f32 tensor (wraps in an Arc).
+    pub fn f32(dims: Vec<i64>, data: Vec<f32>) -> Tensor {
+        Tensor::F32 { dims, data: Arc::new(data) }
+    }
+
+    /// Shared f32 tensor (cheap to clone across chunked requests).
+    pub fn f32_shared(dims: Vec<i64>, data: Arc<Vec<f32>>) -> Tensor {
+        Tensor::F32 { dims, data }
+    }
+}
+
+/// Output buffer from an execution.
+#[derive(Clone, Debug)]
+pub enum OutTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl OutTensor {
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            OutTensor::F32(v) => v,
+            OutTensor::I32(_) => panic!("expected f32 output, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            OutTensor::I32(v) => v,
+            OutTensor::F32(_) => panic!("expected i32 output, got f32"),
+        }
+    }
+}
+
+enum Request {
+    Exec {
+        artifact: String,
+        inputs: Vec<Tensor>,
+        reply: mpsc::Sender<Result<Vec<OutTensor>>>,
+    },
+    /// Pre-compile an artifact (startup warming), reply when done.
+    Warm { artifact: String, reply: mpsc::Sender<Result<()>> },
+}
+
+/// Cloneable handle to the service thread.
+#[derive(Clone)]
+pub struct PjrtService {
+    tx: mpsc::Sender<Request>,
+}
+
+impl PjrtService {
+    /// Start the service for a manifest. Fails fast if the PJRT client
+    /// cannot start.
+    pub fn start(manifest: &Manifest) -> Result<PjrtService> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let paths: HashMap<String, PathBuf> =
+            manifest.artifacts.iter().map(|a| (a.name.clone(), a.path.clone())).collect();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || service_main(rx, paths, ready_tx))
+            .context("spawning pjrt service thread")?;
+        ready_rx.recv().context("pjrt service died during startup")??;
+        Ok(PjrtService { tx })
+    }
+
+    /// Execute `artifact` with `inputs`; returns the flattened tuple
+    /// outputs in order.
+    pub fn exec(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Vec<OutTensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Exec { artifact: artifact.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("pjrt service is gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt service dropped the reply"))?
+    }
+
+    /// Compile `artifact` now (hides compile latency at startup).
+    pub fn warm(&self, artifact: &str) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Warm { artifact: artifact.to_string(), reply })
+            .map_err(|_| anyhow!("pjrt service is gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt service dropped the reply"))?
+    }
+}
+
+fn service_main(
+    rx: mpsc::Receiver<Request>,
+    paths: HashMap<String, PathBuf>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("starting PJRT CPU client: {e}")));
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Warm { artifact, reply } => {
+                let r = ensure_compiled(&client, &mut cache, &paths, &artifact).map(|_| ());
+                let _ = reply.send(r);
+            }
+            Request::Exec { artifact, inputs, reply } => {
+                let r = match ensure_compiled(&client, &mut cache, &paths, &artifact) {
+                    Ok(exe) => run(exe, inputs),
+                    Err(e) => Err(e),
+                };
+                let _ = reply.send(r);
+            }
+        }
+    }
+}
+
+fn ensure_compiled<'c>(
+    client: &xla::PjRtClient,
+    cache: &'c mut HashMap<String, xla::PjRtLoadedExecutable>,
+    paths: &HashMap<String, PathBuf>,
+    artifact: &str,
+) -> Result<&'c xla::PjRtLoadedExecutable> {
+    if !cache.contains_key(artifact) {
+        let path = paths
+            .get(artifact)
+            .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {artifact}: {e}"))?;
+        cache.insert(artifact.to_string(), exe);
+    }
+    Ok(cache.get(artifact).unwrap())
+}
+
+fn run(exe: &xla::PjRtLoadedExecutable, inputs: Vec<Tensor>) -> Result<Vec<OutTensor>> {
+    let literals: Vec<xla::Literal> = inputs
+        .into_iter()
+        .map(|t| match t {
+            Tensor::F32 { dims, data } => {
+                let lit = xla::Literal::vec1(data.as_slice());
+                lit.reshape(&dims).map_err(|e| anyhow!("reshape to {dims:?}: {e}"))
+            }
+            Tensor::I32Scalar(v) => Ok(xla::Literal::scalar(v)),
+        })
+        .collect::<Result<_>>()?;
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow!("execute: {e}"))?;
+    let out = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetching result: {e}"))?;
+    // aot.py lowers with return_tuple=True: output is always a tuple
+    let elems = out.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+    elems
+        .into_iter()
+        .map(|lit| {
+            let ty = lit.ty().map_err(|e| anyhow!("element type: {e}"))?;
+            match ty {
+                xla::ElementType::F32 => {
+                    Ok(OutTensor::F32(lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?))
+                }
+                xla::ElementType::S32 => {
+                    Ok(OutTensor::I32(lit.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?))
+                }
+                other => Err(anyhow!("unexpected output element type {other:?}")),
+            }
+        })
+        .collect()
+}

@@ -1,0 +1,211 @@
+//! Edge-case integration tests: boundary shapes, degenerate clusterings,
+//! and failure-injection corners across the public API.
+
+use apnc::coordinator::cluster_job::{self, ClusterConfig};
+use apnc::coordinator::driver::{Pipeline, PipelineConfig};
+use apnc::coordinator::sample::SampleMode;
+use apnc::coordinator::DataBlock;
+use apnc::data::{registry, synth, Dataset};
+use apnc::embedding::{nystrom, Method};
+use apnc::kernels::Kernel;
+use apnc::mapreduce::{Engine, EngineConfig};
+use apnc::rng::Pcg;
+use apnc::runtime::{Compute, DistKind};
+
+fn pjrt_or_skip() -> Option<Compute> {
+    let dir = Compute::default_artifact_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Compute::pjrt(&dir).expect("pjrt backend"))
+}
+
+#[test]
+fn embed_single_row_and_single_sample() {
+    for compute in [Some(Compute::reference()), pjrt_or_skip()].into_iter().flatten() {
+        let x = vec![0.5f32, -0.25, 1.0];
+        let samples = vec![0.1f32, 0.2, 0.3];
+        let r_t = vec![2.0f32];
+        let y = compute
+            .embed(&x, 1, 3, &samples, 1, &r_t, 1, Kernel::Rbf { gamma: 0.5 })
+            .unwrap();
+        assert_eq!(y.len(), 1);
+        let kv = Kernel::Rbf { gamma: 0.5 }.eval(&x, &samples) as f32;
+        assert!((y[0] - 2.0 * kv).abs() < 1e-5, "{} vs {}", y[0], 2.0 * kv);
+    }
+}
+
+#[test]
+fn embed_rows_exactly_at_block_boundary() {
+    let Some(pjrt) = pjrt_or_skip() else { return };
+    let reference = Compute::reference();
+    let mut rng = Pcg::seeded(5);
+    // 1024 = exactly one artifact block; 1025 = one full + one padded row
+    for rows in [1024usize, 1025, 2048] {
+        let d = 8;
+        let x: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32).collect();
+        let samples: Vec<f32> = (0..16 * d).map(|_| rng.normal() as f32).collect();
+        let r_t: Vec<f32> = (0..16 * 4).map(|_| rng.normal() as f32 * 0.2).collect();
+        let k = Kernel::Linear;
+        let a = pjrt.embed(&x, rows, d, &samples, 16, &r_t, 4, k).unwrap();
+        let b = reference.embed(&x, rows, d, &samples, 16, &r_t, 4, k).unwrap();
+        assert_eq!(a.len(), rows * 4);
+        for (x1, x2) in a.iter().zip(&b) {
+            assert!((x1 - x2).abs() < 1e-3, "rows={rows}");
+        }
+    }
+}
+
+#[test]
+fn assign_k_equals_one() {
+    for compute in [Some(Compute::reference()), pjrt_or_skip()].into_iter().flatten() {
+        let mut rng = Pcg::seeded(6);
+        let y: Vec<f32> = (0..40 * 3).map(|_| rng.normal() as f32).collect();
+        let c = vec![0.0f32; 3];
+        let out = compute.assign(&y, 40, 3, &c, 1, DistKind::L2Sq).unwrap();
+        assert!(out.assign.iter().all(|&a| a == 0));
+        assert_eq!(out.g[0], 40.0);
+    }
+}
+
+#[test]
+fn cluster_k_equals_n_points() {
+    // every point its own cluster: objective ~ 0
+    let mut rng = Pcg::seeded(7);
+    let n = 12;
+    let x: Vec<f32> = (0..n * 4).map(|_| rng.normal() as f32).collect();
+    let blocks = DataBlock::partition(&x, n, 4, 4);
+    let engine = Engine::new(EngineConfig::with_workers(2));
+    let out = cluster_job::run(
+        &engine,
+        &Compute::reference(),
+        &blocks,
+        4,
+        DistKind::L2Sq,
+        &ClusterConfig { k: n, max_iters: 10, tol: 0.0, seed: 8, ..Default::default() },
+    )
+    .unwrap();
+    assert!(out.obj_curve.last().unwrap() < &1e-6, "{:?}", out.obj_curve);
+}
+
+#[test]
+fn pipeline_with_l_larger_than_n() {
+    // sampling caps at n; Nystrom caps m at l
+    let ds = registry::generate("moons", 120, 9);
+    let cfg = PipelineConfig {
+        method: Method::Nystrom,
+        l: 10_000,
+        m: 10_000,
+        workers: 2,
+        max_iters: 5,
+        sample_mode: SampleMode::Exact,
+        seed: 9,
+        ..Default::default()
+    };
+    let out = Pipeline::with_compute(cfg, Compute::reference()).run(&ds).unwrap();
+    assert!(out.l_actual <= 120);
+    assert!(out.m_actual <= out.l_actual);
+    assert_eq!(out.labels.len(), 120);
+}
+
+#[test]
+fn pipeline_single_block_single_worker() {
+    let ds = registry::generate("moons", 200, 10);
+    let cfg = PipelineConfig {
+        method: Method::StableDist,
+        l: 40,
+        m: 32,
+        workers: 1,
+        block_rows: 100_000,
+        max_iters: 5,
+        seed: 10,
+        ..Default::default()
+    };
+    let out = Pipeline::with_compute(cfg, Compute::reference()).run(&ds).unwrap();
+    assert_eq!(out.labels.len(), 200);
+    // one block -> one map task for the embed round plus one for the
+    // portion-concat pass (Algorithm 1's final map phase)
+    assert_eq!(out.embed_metrics.map_tasks, 2);
+}
+
+#[test]
+fn duplicate_points_rank_deficient_kernel() {
+    // all-identical sample points: K_LL is rank 1; the whitening must not
+    // produce NaNs and the pipeline must still emit a valid clustering
+    let mut x = Vec::new();
+    let mut labels = Vec::new();
+    for i in 0..200 {
+        let c = (i % 2) as f32;
+        x.extend_from_slice(&[c * 10.0, c * 10.0 + 1.0]);
+        labels.push(i % 2);
+    }
+    let ds = Dataset::new("dup", 2, 2, x, labels.iter().map(|&l| l as u32).collect());
+    let cfg = PipelineConfig {
+        method: Method::Nystrom,
+        l: 16,
+        m: 8,
+        workers: 2,
+        max_iters: 5,
+        kernel: Some(Kernel::Rbf { gamma: 0.1 }),
+        seed: 11,
+        ..Default::default()
+    };
+    let out = Pipeline::with_compute(cfg, Compute::reference()).run(&ds).unwrap();
+    assert_eq!(out.labels.len(), 200);
+    assert!(out.nmi > 0.9, "two obvious point-clusters: nmi {}", out.nmi);
+}
+
+#[test]
+fn coeff_fit_on_two_samples() {
+    let samples = vec![0.0f32, 0.0, 1.0, 1.0];
+    let coeffs = nystrom::fit(&samples, 2, Kernel::Rbf { gamma: 1.0 }, 5);
+    assert_eq!(coeffs.l(), 2);
+    assert!(coeffs.m() <= 2);
+    assert!(coeffs.blocks[0].r_t.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn heavy_fault_rate_still_correct() {
+    let ds = synth::moons("m", 300, 4, 0.05, 12);
+    let base = PipelineConfig {
+        method: Method::Nystrom,
+        l: 32,
+        m: 16,
+        workers: 4,
+        block_rows: 32,
+        max_iters: 5,
+        seed: 12,
+        ..Default::default()
+    };
+    let clean = Pipeline::with_compute(base.clone(), Compute::reference()).run(&ds).unwrap();
+    let mut faulty = base;
+    // 60% per-attempt failure: most tasks need several attempts (p^4 ~ 13%
+    // of tasks would exhaust 4 attempts, so allow more)
+    faulty.faults = apnc::mapreduce::FaultPlan { map_failure_prob: 0.6, max_attempts: 24, seed: 13 };
+    let out = Pipeline::with_compute(faulty, Compute::reference()).run(&ds).unwrap();
+    assert_eq!(out.labels, clean.labels);
+    assert!(out.embed_metrics.map_retries + out.cluster_metrics.map_retries > 10);
+}
+
+#[test]
+fn dataset_io_roundtrip_through_pipeline() {
+    let ds = registry::generate("rings", 600, 14);
+    let path = std::env::temp_dir().join(format!("apnc-edge-io-{}", std::process::id()));
+    apnc::data::io::save(&ds, &path).unwrap();
+    let loaded = apnc::data::io::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let cfg = PipelineConfig {
+        method: Method::Nystrom,
+        l: 64,
+        m: 32,
+        workers: 2,
+        max_iters: 8,
+        restarts: 3,
+        seed: 14,
+        ..Default::default()
+    };
+    let a = Pipeline::with_compute(cfg.clone(), Compute::reference()).run(&ds).unwrap();
+    let b = Pipeline::with_compute(cfg, Compute::reference()).run(&loaded).unwrap();
+    assert_eq!(a.labels, b.labels, "persisted dataset must cluster identically");
+}

@@ -1,0 +1,163 @@
+//! End-to-end integration: the full pipeline on the PJRT artifact backend
+//! (the production path), plus PJRT-vs-reference pipeline agreement and a
+//! tiny-scale run of each table harness.
+//!
+//! PJRT-dependent tests skip with a notice when `make artifacts` hasn't run.
+
+use apnc::coordinator::driver::{Pipeline, PipelineConfig};
+use apnc::coordinator::sample::SampleMode;
+use apnc::data::registry;
+use apnc::embedding::Method;
+use apnc::experiments::{table2, table3};
+use apnc::runtime::Compute;
+
+fn pjrt_or_skip() -> Option<Compute> {
+    let dir = Compute::default_artifact_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Compute::pjrt(&dir).expect("pjrt backend"))
+}
+
+fn cfg(method: Method) -> PipelineConfig {
+    PipelineConfig {
+        method,
+        // m < l: the whitened Nyström embedding must truncate the noise
+        // directions (lambda^{-1/2} amplifies the smallest eigenvalues)
+        l: 128,
+        m: 64,
+        workers: 4,
+        max_iters: 15,
+        // kpp can seed both centroids in one ring; restarts make the good
+        // optimum (which has a much lower objective) win deterministically
+        restarts: 5,
+        sample_mode: SampleMode::Exact,
+        seed: 1234,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn pjrt_pipeline_clusters_rings() {
+    let Some(pjrt) = pjrt_or_skip() else { return };
+    let ds = registry::generate("rings", 1200, 3);
+    let out = Pipeline::with_compute(cfg(Method::Nystrom), pjrt).run(&ds).unwrap();
+    assert!(out.nmi > 0.8, "rings nmi on pjrt = {}", out.nmi);
+    assert_eq!(out.labels.len(), ds.n);
+    assert_eq!(out.embed_metrics.shuffle_bytes, 0);
+}
+
+#[test]
+fn pjrt_and_reference_pipelines_agree() {
+    // same seeds, same data: label assignments must match across backends
+    // (the HLO path and the rust path compute the same math in f32)
+    let Some(pjrt) = pjrt_or_skip() else { return };
+    let ds = registry::generate("moons", 800, 5);
+    let a = Pipeline::with_compute(cfg(Method::Nystrom), pjrt).run(&ds).unwrap();
+    let b = Pipeline::with_compute(cfg(Method::Nystrom), Compute::reference()).run(&ds).unwrap();
+    // f32 rounding at padded vs unpadded shapes can flip borderline points;
+    // demand near-identical agreement rather than bit equality
+    let disagree = a
+        .labels
+        .iter()
+        .zip(&b.labels)
+        .filter(|(x, y)| x != y)
+        .count();
+    let frac = disagree as f64 / ds.n as f64;
+    assert!(
+        frac < 0.02 || (apnc::metrics::nmi(&a.labels, &b.labels) > 0.95),
+        "backends disagree on {disagree}/{} points",
+        ds.n
+    );
+    assert!((a.nmi - b.nmi).abs() < 0.05, "nmi gap: {} vs {}", a.nmi, b.nmi);
+}
+
+#[test]
+fn pjrt_stable_dist_works() {
+    // covtype-like folded manifold: the workload where the paper's Table 3
+    // shows APNC-SD at its strongest (rings favor the Nystrom whitening)
+    let Some(pjrt) = pjrt_or_skip() else { return };
+    let ds = registry::generate("covtype", 3000, 9);
+    let mut c = cfg(Method::StableDist);
+    c.m = 192;
+    let out = Pipeline::with_compute(c, pjrt).run(&ds).unwrap();
+    assert!(out.nmi > 0.5, "sd covtype nmi on pjrt = {}", out.nmi);
+    assert_eq!(out.m_actual, 192);
+}
+
+#[test]
+fn table2_tiny_on_pjrt() {
+    let Some(pjrt) = pjrt_or_skip() else { return };
+    let cfg = table2::Table2Config {
+        runs: 1,
+        scale: 0.02,
+        l_values: vec![24],
+        m: 48,
+        fourier_features: 32,
+        seed: 3,
+        only: Some("pie".into()),
+    };
+    let tables = table2::run(&cfg, &pjrt).unwrap();
+    assert_eq!(tables.len(), 1);
+    assert_eq!(tables[0].methods.len(), 5); // all five on an RBF dataset
+    for row in &tables[0].cells {
+        assert!(row[0].scores.iter().all(|s| (0.0..=1.0).contains(s)));
+    }
+}
+
+#[test]
+fn table3_tiny_on_pjrt() {
+    let Some(pjrt) = pjrt_or_skip() else { return };
+    let cfg = table3::Table3Config {
+        runs: 1,
+        scale: 0.01,
+        l_values: vec![48],
+        m: 64,
+        nodes: 4,
+        max_iters: 3,
+        seed: 4,
+        only: Some("rcv1".into()),
+    };
+    let tables = table3::run(&cfg, &pjrt).unwrap();
+    assert_eq!(tables.len(), 1);
+    assert!(tables[0].cells[1][0].embed_secs[0] > 0.0);
+}
+
+#[test]
+fn e2e_quality_ordering_holds_at_small_scale() {
+    // the paper's qualitative claim, tested end-to-end: APNC beats the
+    // 2-Stages sanity baseline on a hard mirrored dataset
+    let Some(pjrt) = pjrt_or_skip() else { return };
+    let ds = registry::generate("covtype", 4000, 13);
+    let spec = registry::spec("covtype").unwrap();
+    let mut rng = apnc::rng::Pcg::seeded(13);
+    let kernel = spec.kernel.build(&ds.x, ds.d, &mut rng);
+
+    let apnc_out = {
+        let mut c = cfg(Method::Nystrom);
+        c.l = 256;
+        c.m = 256;
+        c.kernel = Some(kernel);
+        Pipeline::with_compute(c, pjrt).run(&ds).unwrap()
+    };
+    let two_stage = apnc::baselines::two_stage::cluster(
+        &ds.x,
+        ds.n,
+        ds.d,
+        kernel,
+        &apnc::baselines::two_stage::TwoStageConfig {
+            k: ds.k,
+            l: 256,
+            max_iters: 15,
+            seed: 13,
+            restarts: 2,
+        },
+    );
+    let ts_nmi = apnc::metrics::nmi(&two_stage.labels, &ds.labels);
+    assert!(
+        apnc_out.nmi > ts_nmi - 0.02,
+        "APNC ({}) should not lose to 2-Stages ({ts_nmi})",
+        apnc_out.nmi
+    );
+}

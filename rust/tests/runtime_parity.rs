@@ -1,0 +1,122 @@
+//! PJRT ↔ reference parity: the heavyweight correctness signal for the
+//! whole AOT bridge. For every op, kernel kind, and distance kind, run the
+//! compiled HLO artifact via the PJRT service and compare against the
+//! pure-rust reference backend (which itself matches python's ref.py).
+//!
+//! Skips (with a notice) when `make artifacts` hasn't been run.
+
+use apnc::kernels::Kernel;
+use apnc::rng::Pcg;
+use apnc::runtime::{Compute, DistKind};
+
+fn pjrt_or_skip() -> Option<Compute> {
+    let dir = Compute::default_artifact_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Compute::pjrt(&dir).expect("pjrt backend"))
+}
+
+fn randv(rng: &mut Pcg, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    let scale = want.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol * scale,
+            "{what}[{i}]: got {g}, want {w} (scale {scale})"
+        );
+    }
+}
+
+fn kernels() -> Vec<Kernel> {
+    vec![
+        Kernel::Linear,
+        Kernel::Rbf { gamma: 0.07 },
+        Kernel::Poly { c: 1.0, degree: 5.0 },
+        Kernel::Tanh { a: 0.0045, b: 0.11 },
+    ]
+}
+
+#[test]
+fn embed_parity_all_kernels() {
+    let Some(pjrt) = pjrt_or_skip() else { return };
+    let reference = Compute::reference();
+    let mut rng = Pcg::seeded(100);
+    // deliberately awkward shapes: rows not a tile multiple, d/l/m below
+    // artifact sizes, rows spanning two chunks
+    for &(rows, d, l, m) in &[(50usize, 7usize, 30usize, 20usize), (1500, 64, 256, 96)] {
+        let x = randv(&mut rng, rows * d);
+        // non-negative-ish data keeps poly/tanh in sane ranges
+        let x: Vec<f32> = x.iter().map(|v| v * 0.3).collect();
+        let samples = randv(&mut rng, l * d).iter().map(|v| v * 0.3).collect::<Vec<_>>();
+        let r_t = randv(&mut rng, l * m).iter().map(|v| v * 0.1).collect::<Vec<_>>();
+        for kernel in kernels() {
+            let got = pjrt.embed(&x, rows, d, &samples, l, &r_t, m, kernel).unwrap();
+            let want = reference.embed(&x, rows, d, &samples, l, &r_t, m, kernel).unwrap();
+            assert_close(&got, &want, 5e-4, &format!("embed {kernel:?} rows={rows}"));
+        }
+    }
+}
+
+#[test]
+fn assign_parity_both_distances() {
+    let Some(pjrt) = pjrt_or_skip() else { return };
+    let reference = Compute::reference();
+    let mut rng = Pcg::seeded(101);
+    for &(rows, m, k) in &[(40usize, 12usize, 5usize), (1300, 100, 37)] {
+        let y = randv(&mut rng, rows * m);
+        // centroids from actual rows so distances straddle ties rarely
+        let centroids: Vec<f32> = y[..k * m].to_vec();
+        for dist in [DistKind::L2Sq, DistKind::L1] {
+            let got = pjrt.assign(&y, rows, m, &centroids, k, dist).unwrap();
+            let want = reference.assign(&y, rows, m, &centroids, k, dist).unwrap();
+            // indices must match exactly (ties are measure-zero with random data)
+            assert_eq!(got.assign, want.assign, "assign {dist:?} rows={rows}");
+            assert_close(&got.z, &want.z, 1e-4, &format!("z {dist:?}"));
+            assert_close(&got.g, &want.g, 0.0, &format!("g {dist:?}"));
+            let obj_scale = want.obj.abs().max(1.0);
+            assert!(
+                (got.obj - want.obj).abs() / obj_scale < 1e-4,
+                "obj {dist:?}: {} vs {}",
+                got.obj,
+                want.obj
+            );
+        }
+    }
+}
+
+#[test]
+fn kmat_parity_all_kernels() {
+    let Some(pjrt) = pjrt_or_skip() else { return };
+    let reference = Compute::reference();
+    let mut rng = Pcg::seeded(102);
+    let (rows, d, l) = (200usize, 40usize, 100usize);
+    let x: Vec<f32> = randv(&mut rng, rows * d).iter().map(|v| v * 0.3).collect();
+    let samples: Vec<f32> = randv(&mut rng, l * d).iter().map(|v| v * 0.3).collect();
+    for kernel in kernels() {
+        let got = pjrt.kmat(&x, rows, d, &samples, l, kernel).unwrap();
+        let want = reference.kmat(&x, rows, d, &samples, l, kernel).unwrap();
+        assert_close(&got, &want, 5e-4, &format!("kmat {kernel:?}"));
+    }
+}
+
+#[test]
+fn embed_exact_at_artifact_shapes() {
+    // no padding path: shapes exactly matching an artifact
+    let Some(pjrt) = pjrt_or_skip() else { return };
+    let reference = Compute::reference();
+    let mut rng = Pcg::seeded(103);
+    let (rows, d, l, m) = (1024usize, 64usize, 256usize, 256usize);
+    let x: Vec<f32> = randv(&mut rng, rows * d).iter().map(|v| v * 0.2).collect();
+    let samples: Vec<f32> = randv(&mut rng, l * d).iter().map(|v| v * 0.2).collect();
+    let r_t: Vec<f32> = randv(&mut rng, l * m).iter().map(|v| v * 0.05).collect();
+    let kernel = Kernel::Rbf { gamma: 0.1 };
+    let got = pjrt.embed(&x, rows, d, &samples, l, &r_t, m, kernel).unwrap();
+    let want = reference.embed(&x, rows, d, &samples, l, &r_t, m, kernel).unwrap();
+    assert_close(&got, &want, 2e-4, "embed@artifact-shape");
+}
