@@ -1,0 +1,29 @@
+# Repo-root build/verify/bench entry points.
+#
+#   make build       — tier-1 build (cargo build --release)
+#   make test        — tier-1 tests (cargo test -q)
+#   make bench-json  — regenerate BENCH_PR1.json from the three perf
+#                      trajectory suites (kernels, linalg, pipeline);
+#                      records are JSON-lines appended by each suite
+#   make bench-json BENCH_OUT=BENCH_PR2.json  — next PR's baseline
+
+CARGO   ?= cargo
+MANIFEST = rust/Cargo.toml
+BENCH_OUT ?= BENCH_PR1.json
+
+.PHONY: build test verify bench-json
+
+build:
+	$(CARGO) build --release --manifest-path $(MANIFEST)
+
+test:
+	$(CARGO) test -q --manifest-path $(MANIFEST)
+
+verify: build test
+
+bench-json:
+	rm -f $(BENCH_OUT)
+	$(CARGO) bench --manifest-path $(MANIFEST) --bench bench_kernels -- --json $(BENCH_OUT)
+	$(CARGO) bench --manifest-path $(MANIFEST) --bench bench_linalg -- --json $(BENCH_OUT)
+	$(CARGO) bench --manifest-path $(MANIFEST) --bench bench_pipeline -- --json $(BENCH_OUT)
+	@echo "wrote $(BENCH_OUT)"

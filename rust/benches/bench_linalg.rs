@@ -40,6 +40,11 @@ fn main() {
         });
         bench.throughput(&stats, 2 * n * n * n, "flop");
     }
+    let mut rng = Pcg::seeded(5);
+    let t = Matrix::from_fn(512, 384, |_, _| rng.normal());
+    bench.run("transpose_512x384", || {
+        black_box(black_box(&t).transpose());
+    });
     let a = random_spd(256, 3);
     bench.run("cholesky_256", || {
         black_box(apnc::linalg::chol::cholesky(black_box(&a)).unwrap());

@@ -15,8 +15,9 @@ fn main() {
     let ds = registry::generate("covtype", 8_192, 9);
     let compute = Compute::auto(&Compute::default_artifact_dir());
     eprintln!(
-        "pipeline bench backend: {}",
-        if compute.is_pjrt() { "pjrt" } else { "reference" }
+        "pipeline bench backend: {} (compute threads: {})",
+        if compute.is_pjrt() { "pjrt" } else { "reference" },
+        apnc::parallel::max_threads(),
     );
     for method in [Method::Nystrom, Method::StableDist] {
         let cfg = PipelineConfig {

@@ -4,7 +4,20 @@
 //! case: warmup iterations, then timed iterations, reporting min / median /
 //! p95 / mean. Output format is one line per case, grep-friendly for
 //! EXPERIMENTS.md section Perf.
+//!
+//! Machine-readable mode: pass `--json <path>` to any bench binary (or
+//! set `APNC_BENCH_JSON=<path>`) and one JSON record per case is
+//! *appended* to `<path>` when the suite drops — JSON-lines, so several
+//! suites can share one trajectory file (see the repo-root `Makefile`'s
+//! `bench-json` target and `BENCH_PR1.json`):
+//!
+//! ```text
+//! {"suite":"kernels","name":"gram_Rbf { gamma: 0.1 ","iters":10,
+//!  "median_ns":123456,"p95_ns":130000,"throughput":1.06e9,"unit":"kernel-eval/s"}
+//! ```
 
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 /// One benchmark suite (a named group of cases).
@@ -13,6 +26,8 @@ pub struct Bench {
     warmup: usize,
     iters: usize,
     min_time: Duration,
+    json_path: Option<PathBuf>,
+    records: RefCell<Vec<JsonRecord>>,
 }
 
 /// Summary statistics for a case.
@@ -26,6 +41,35 @@ pub struct Stats {
     pub mean: Duration,
 }
 
+struct JsonRecord {
+    name: String,
+    iters: usize,
+    median_ns: u128,
+    p95_ns: u128,
+    throughput: Option<f64>,
+    unit: Option<String>,
+}
+
+/// `--json <path>` / `--json=<path>` from the bench binary's argv, else
+/// the `APNC_BENCH_JSON` environment variable.
+fn json_path_from_env() -> Option<PathBuf> {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--json" {
+            if let Some(p) = args.next() {
+                return Some(PathBuf::from(p));
+            }
+        } else if let Some(p) = a.strip_prefix("--json=") {
+            return Some(PathBuf::from(p));
+        }
+    }
+    std::env::var_os("APNC_BENCH_JSON").map(PathBuf::from)
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
 impl Bench {
     pub fn new(suite: &str) -> Self {
         // APNC_BENCH_FAST=1 shrinks every suite (used by `cargo test`-adjacent
@@ -36,12 +80,20 @@ impl Bench {
             warmup: if fast { 1 } else { 3 },
             iters: if fast { 3 } else { 10 },
             min_time: Duration::from_millis(if fast { 10 } else { 200 }),
+            json_path: json_path_from_env(),
+            records: RefCell::new(Vec::new()),
         }
     }
 
     pub fn with_iters(mut self, warmup: usize, iters: usize) -> Self {
         self.warmup = warmup;
         self.iters = iters;
+        self
+    }
+
+    /// Route this suite's JSON records to `path` (overrides `--json`).
+    pub fn with_json(mut self, path: &Path) -> Self {
+        self.json_path = Some(path.to_path_buf());
         self
     }
 
@@ -84,6 +136,14 @@ impl Bench {
             p95 = stats.p95,
             mean = stats.mean,
         );
+        self.records.borrow_mut().push(JsonRecord {
+            name: stats.name.clone(),
+            iters: stats.iters,
+            median_ns: stats.median.as_nanos(),
+            p95_ns: stats.p95.as_nanos(),
+            throughput: None,
+            unit: None,
+        });
         stats
     }
 
@@ -95,6 +155,50 @@ impl Bench {
             suite = self.suite,
             name = stats.name,
         );
+        if per_sec.is_finite() {
+            let mut recs = self.records.borrow_mut();
+            if let Some(r) = recs.iter_mut().rev().find(|r| r.name == stats.name) {
+                r.throughput = Some(per_sec);
+                r.unit = Some(format!("{unit}/s"));
+            }
+        }
+    }
+
+    fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        for r in self.records.borrow().iter() {
+            let throughput = match r.throughput {
+                Some(v) => format!("{v:.3}"),
+                None => "null".to_string(),
+            };
+            let unit = match &r.unit {
+                Some(u) => format!("\"{}\"", json_escape(u)),
+                None => "null".to_string(),
+            };
+            writeln!(
+                f,
+                "{{\"suite\":\"{}\",\"name\":\"{}\",\"iters\":{},\"median_ns\":{},\"p95_ns\":{},\"throughput\":{},\"unit\":{}}}",
+                json_escape(&self.suite),
+                json_escape(&r.name),
+                r.iters,
+                r.median_ns,
+                r.p95_ns,
+                throughput,
+                unit,
+            )?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Bench {
+    fn drop(&mut self) {
+        if let Some(path) = self.json_path.clone() {
+            if let Err(e) = self.write_json(&path) {
+                eprintln!("warn: writing bench json to {} failed: {e}", path.display());
+            }
+        }
     }
 }
 
@@ -114,5 +218,40 @@ mod tests {
         assert!(stats.iters >= 3);
         assert!(stats.min <= stats.median && stats.median <= stats.p95.max(stats.median));
         assert!(count as usize >= stats.iters);
+    }
+
+    #[test]
+    fn json_records_appended_on_drop() {
+        let path = std::env::temp_dir().join(format!("apnc_bench_json_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let b = Bench::new("jsuite").with_iters(0, 1).with_json(&path);
+            let s1 = b.run("with_tp", || {
+                std::hint::black_box(3u64.pow(7));
+            });
+            b.throughput(&s1, 1000, "op");
+            b.run("no_tp", || {
+                std::hint::black_box(2u64.pow(9));
+            });
+        } // drop writes
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "{text}");
+        assert!(lines[0].contains("\"suite\":\"jsuite\""));
+        assert!(lines[0].contains("\"name\":\"with_tp\""));
+        assert!(lines[0].contains("\"median_ns\":"));
+        assert!(lines[0].contains("\"unit\":\"op/s\""));
+        assert!(lines[1].contains("\"throughput\":null"));
+        // appending a second suite accumulates records
+        {
+            let b = Bench::new("jsuite2").with_iters(0, 1).with_json(&path);
+            b.run("case", || {
+                std::hint::black_box(5u64.pow(3));
+            });
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.contains("\"suite\":\"jsuite2\""));
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -41,6 +41,10 @@ pub struct PipelineConfig {
     pub tol: f64,
     /// simulated cluster nodes
     pub workers: usize,
+    /// compute threads per process for the parallel linalg/kernel core
+    /// (0 = auto: `APNC_THREADS` env, else available parallelism).
+    /// Outputs are bit-identical for any value — see [`crate::parallel`].
+    pub threads: usize,
     /// points per input split
     pub block_rows: usize,
     pub seed: u64,
@@ -65,6 +69,7 @@ impl Default for PipelineConfig {
             restarts: 1,
             tol: 1e-4,
             workers: 4,
+            threads: 0,
             block_rows: 1024,
             seed: 0xAB5C,
             sample_mode: SampleMode::Bernoulli,
@@ -147,6 +152,9 @@ impl Pipeline {
     /// Run the full APNC pipeline on a dataset.
     pub fn run(&self, ds: &Dataset) -> Result<PipelineOutput> {
         let cfg = &self.config;
+        // unconditional: threads == 0 restores auto resolution, so a
+        // previous run's explicit override never leaks into this one
+        crate::parallel::set_threads(cfg.threads);
         ensure!(ds.n >= 2, "dataset too small");
         let k = if cfg.k == 0 { ds.k } else { cfg.k };
         ensure!(k >= 1 && k <= ds.n, "bad k = {k}");

@@ -14,6 +14,11 @@
 //! Two instances are provided, matching the paper's Sections 6 and 7:
 //! [`nystrom`] (e = l2) and [`stable`] (e = l1), plus the ensemble-Nyström
 //! extension the paper sketches as future work (q > 1 Nyström blocks).
+//!
+//! The fit-side hot spots — `K_LL` via the GEMM-formulated
+//! [`crate::kernels::Kernel::gram`] and the whitening transform's
+//! eigenvector scaling — run on the shared parallel core
+//! ([`crate::parallel`]), bit-identical for any thread count.
 
 pub mod nystrom;
 pub mod stable;

@@ -7,9 +7,46 @@
 //!
 //! Kernel kinds and parameter packing match `python/compile/kernels/ref.py`
 //! exactly (the integer codes are part of the artifact ABI).
+//!
+//! Kernel blocks are GEMM-formulated: precompute row squared norms,
+//! compute the dot-product block via the parallel tiled `matmul_nt`, then
+//! apply the kernel elementwise ([`Kernel::apply_f64`] — the same kernel
+//! map the f32 reference runtime uses via [`Kernel::apply_f32`]). The
+//! symmetric [`Kernel::gram`] computes only the upper triangle and
+//! mirrors; both paths share the same per-element dot kernel, so
+//! `gram(a, d)` and `block(a, a, d)` are bit-identical.
 
+use crate::linalg::matrix::dot4;
 use crate::linalg::Matrix;
+use crate::parallel;
 use crate::rng::Pcg;
+
+/// Instantiates the elementwise kernel map at one float width. Sharing
+/// one implementation keeps the f64 coefficient path and the f32
+/// reference runtime in agreement (same clamping, same formulas — the
+/// twin of `ref.py`'s `kernel_value`).
+macro_rules! kernel_apply_impl {
+    ($name:ident, $t:ty, $doc:literal) => {
+        #[doc = $doc]
+        ///
+        /// `dot` is `<x, z>`; `x_sq`/`z_sq` are the squared row norms
+        /// (only the RBF kernel reads them). The RBF squared distance is
+        /// clamped at 0 against rounding, matching `ref.py`.
+        #[inline]
+        pub fn $name(self, dot: $t, x_sq: $t, z_sq: $t) -> $t {
+            match self {
+                Kernel::Linear => dot,
+                Kernel::Rbf { gamma } => {
+                    (-(gamma as $t) * (x_sq + z_sq - 2.0 * dot).max(0.0)).exp()
+                }
+                Kernel::Poly { c, degree } => {
+                    (dot + c as $t).max(0.0).powf(degree as $t)
+                }
+                Kernel::Tanh { a, b } => ((a as $t) * dot + (b as $t)).tanh(),
+            }
+        }
+    };
+}
 
 /// Kernel function kind + parameters. Codes are the artifact ABI:
 /// 0 = linear, 1 = rbf, 2 = polynomial, 3 = tanh ("neural").
@@ -63,39 +100,94 @@ impl Kernel {
         }
     }
 
+    kernel_apply_impl!(apply_f32, f32, "Elementwise kernel map over a precomputed f32 dot-product entry.");
+    kernel_apply_impl!(apply_f64, f64, "Elementwise kernel map over a precomputed f64 dot-product entry.");
+
     /// Kernel matrix between row-point sets `a` (na x d) and `b` (nb x d),
     /// in f64 for downstream eigendecomposition.
+    ///
+    /// GEMM-formulated: the dot-product block `A B^T` comes from the
+    /// parallel tiled [`Matrix::matmul_nt`], then the kernel map is
+    /// applied elementwise (also in parallel). Equals scalar
+    /// [`Kernel::eval`] up to the reduction-order rounding of the dot
+    /// products (~1e-15 relative).
     pub fn block(&self, a: &[f32], b: &[f32], d: usize) -> Matrix {
         assert!(d > 0 && a.len() % d == 0 && b.len() % d == 0);
         let na = a.len() / d;
         let nb = b.len() / d;
-        let mut out = Matrix::zeros(na, nb);
-        for i in 0..na {
-            let xi = &a[i * d..(i + 1) * d];
-            let row = out.row_mut(i);
-            for j in 0..nb {
-                row[j] = self.eval(xi, &b[j * d..(j + 1) * d]);
-            }
+        let a_mat = upcast(a, na, d);
+        let b_mat = upcast(b, nb, d);
+        let a_sq = row_sq_norms(&a_mat);
+        let b_sq = row_sq_norms(&b_mat);
+        let mut out = a_mat.matmul_nt(&b_mat);
+        if na == 0 || nb == 0 {
+            return out;
         }
+        let kernel = *self;
+        let rpc = parallel::chunk_rows(na, nb);
+        let (a_sq_ref, b_sq_ref) = (&a_sq, &b_sq);
+        parallel::par_chunks_mut(out.data_mut(), rpc * nb, move |chunk_idx, orows| {
+            let row0 = chunk_idx * rpc;
+            for (ri, orow) in orows.chunks_mut(nb).enumerate() {
+                let x_sq = a_sq_ref[row0 + ri];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o = kernel.apply_f64(*o, x_sq, b_sq_ref[j]);
+                }
+            }
+        });
         out
     }
 
-    /// Symmetric kernel matrix over one row-point set (exploits symmetry:
-    /// half the evaluations of `block(a, a, d)`).
+    /// Symmetric kernel matrix over one row-point set. GEMM-formulated
+    /// like [`Kernel::block`], but only the upper-triangular row tails
+    /// are computed (parallel over row panels) and mirrored — half the
+    /// dot products. Shares the per-element dot kernel with `matmul_nt`,
+    /// so `gram(a, d)` is bit-identical to `block(a, a, d)`.
     pub fn gram(&self, a: &[f32], d: usize) -> Matrix {
         assert!(d > 0 && a.len() % d == 0);
         let n = a.len() / d;
+        let a_mat = upcast(a, n, d);
+        let sq = row_sq_norms(&a_mat);
         let mut out = Matrix::zeros(n, n);
-        for i in 0..n {
-            let xi = &a[i * d..(i + 1) * d];
-            for j in i..n {
-                let v = self.eval(xi, &a[j * d..(j + 1) * d]);
-                out[(i, j)] = v;
-                out[(j, i)] = v;
+        if n == 0 {
+            return out;
+        }
+        let kernel = *self;
+        // upper-triangle rows shrink linearly; halve the chunk so panels
+        // near the top (the long rows) don't dominate one thread
+        let rpc = (parallel::chunk_rows(n, n * d) / 2).max(1);
+        let (a_ref, sq_ref) = (&a_mat, &sq);
+        parallel::par_chunks_mut(out.data_mut(), rpc * n, move |chunk_idx, orows| {
+            let row0 = chunk_idx * rpc;
+            for (ri, orow) in orows.chunks_mut(n).enumerate() {
+                let i = row0 + ri;
+                let ai = a_ref.row(i);
+                let x_sq = sq_ref[i];
+                for (j, o) in orow.iter_mut().enumerate().skip(i) {
+                    let dot = dot4(ai, a_ref.row(j));
+                    *o = kernel.apply_f64(dot, x_sq, sq_ref[j]);
+                }
+            }
+        });
+        // mirror the strict lower triangle (O(n^2) copies, memory-bound)
+        for i in 1..n {
+            for j in 0..i {
+                out[(i, j)] = out[(j, i)];
             }
         }
         out
     }
+}
+
+/// Upcast an f32 row-point set to the f64 matrix the GEMM path runs on.
+fn upcast(a: &[f32], rows: usize, d: usize) -> Matrix {
+    Matrix::from_vec(rows, d, a.iter().map(|&v| v as f64).collect())
+}
+
+/// Squared norm of every row, with the same reduction order as the
+/// GEMM dot products (so `k(x, x)` is exact for RBF: `dot == x_sq`).
+fn row_sq_norms(a: &Matrix) -> Vec<f64> {
+    (0..a.rows()).map(|i| dot4(a.row(i), a.row(i))).collect()
 }
 
 #[inline]

@@ -10,7 +10,13 @@
 //!   ([`mapreduce`]), plus every substrate the paper depends on:
 //!   dense linear algebra ([`linalg`]), kernel functions ([`kernels`]),
 //!   clustering baselines ([`baselines`]), dataset generators ([`data`]) and
-//!   evaluation metrics ([`metrics`]).
+//!   evaluation metrics ([`metrics`]). The compute hot paths — kernel
+//!   blocks, the dense matmuls, and the f32 reference runtime — run on a
+//!   shared parallel core ([`parallel`]): GEMM-formulated kernel blocks
+//!   (row norms + tiled `matmul_nt` + elementwise kernel map) executed
+//!   over scoped-thread row panels, bit-identical for any thread count
+//!   (`PipelineConfig::threads`, `--threads`, or `APNC_THREADS`; default
+//!   = available parallelism).
 //! * **Layer 2/1 (python/compile, build-time only)** — the compute hot-spot
 //!   (fused kernel-block evaluation + embedding matmul, and the
 //!   nearest-centroid assignment) written in JAX + Pallas and AOT-lowered to
@@ -45,6 +51,7 @@ pub mod kernels;
 pub mod linalg;
 pub mod mapreduce;
 pub mod metrics;
+pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod runtime;

@@ -1,9 +1,51 @@
 //! Row-major dense `f64` matrix with the operations the coefficient jobs
-//! and baselines need. Matmul is blocked/tiled for cache behaviour — this
-//! is a hot path for the centralized baselines (Table 2 sweeps call it
-//! thousands of times).
+//! and baselines need. Matmul is blocked/tiled for cache behaviour and
+//! parallelized over output row panels via [`crate::parallel`] — this is
+//! a hot path for the centralized baselines (Table 2 sweeps call it
+//! thousands of times) and for the GEMM-formulated kernel blocks.
+//!
+//! Every output row is produced by exactly one chunk with a fixed
+//! sequential reduction order, so results are bit-identical for any
+//! thread count.
 
+use crate::parallel;
 use std::fmt;
+
+/// Generates a dot product with 4 independent accumulators (breaks the
+/// FP dependency chain so the inner loop pipelines/vectorizes) at the
+/// given float width. The reduction order is the determinism contract's
+/// load-bearing detail — `((s0+s1)+(s2+s3)) + tail` — and lives in this
+/// single macro so every instantiation (the f64 [`dot4`] shared by
+/// `matmul_nt` and `Kernel::gram`, the f32 twin in the reference
+/// runtime) stays bit-compatible by construction.
+macro_rules! dot4_impl {
+    ($name:ident, $t:ty) => {
+        #[inline]
+        pub(crate) fn $name(a: &[$t], b: &[$t]) -> $t {
+            debug_assert_eq!(a.len(), b.len());
+            let n = a.len();
+            let n4 = n - (n % 4);
+            let (mut s0, mut s1, mut s2, mut s3): ($t, $t, $t, $t) = (0.0, 0.0, 0.0, 0.0);
+            let mut k = 0;
+            while k < n4 {
+                s0 += a[k] * b[k];
+                s1 += a[k + 1] * b[k + 1];
+                s2 += a[k + 2] * b[k + 2];
+                s3 += a[k + 3] * b[k + 3];
+                k += 4;
+            }
+            let mut tail: $t = 0.0;
+            while k < n {
+                tail += a[k] * b[k];
+                k += 1;
+            }
+            ((s0 + s1) + (s2 + s3)) + tail
+        }
+    };
+}
+pub(crate) use dot4_impl;
+
+dot4_impl!(dot4, f64);
 
 /// Row-major dense matrix.
 #[derive(Clone, PartialEq)]
@@ -87,62 +129,90 @@ impl Matrix {
     }
 
     pub fn transpose(&self) -> Matrix {
-        let mut t = Matrix::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                t[(c, r)] = self[(r, c)];
-            }
+        let (r, c) = (self.rows, self.cols);
+        let mut t = Matrix::zeros(c, r);
+        if r == 0 || c == 0 {
+            return t;
         }
+        let rpc = parallel::chunk_rows(c, r);
+        let data = &self.data;
+        parallel::par_chunks_mut(&mut t.data, rpc * r, |chunk_idx, trows| {
+            let col0 = chunk_idx * rpc;
+            for (ci, trow) in trows.chunks_mut(r).enumerate() {
+                let src_col = col0 + ci;
+                for (row, o) in trow.iter_mut().enumerate() {
+                    *o = data[row * c + src_col];
+                }
+            }
+        });
         t
     }
 
-    /// Blocked matmul: `self (m,k) @ other (k,n)`.
+    /// Blocked matmul: `self (m,k) @ other (k,n)`, parallel over output
+    /// row panels.
     ///
-    /// i-k-j loop order with a tiled k-panel: the inner j loop is a
-    /// contiguous AXPY over the output row, which autovectorizes.
+    /// Within a panel: k-tiled i-k-j loop order — the B panel (KB rows of
+    /// `other`) stays cache-hot across the panel's rows and the inner j
+    /// loop is a contiguous AXPY over the output row, which
+    /// autovectorizes. Per output row the k-accumulation order is fixed,
+    /// so results are bit-identical for any thread count.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, kk, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
+        if m == 0 || n == 0 || kk == 0 {
+            return out;
+        }
         const KB: usize = 64;
-        for k0 in (0..kk).step_by(KB) {
-            let k1 = (k0 + KB).min(kk);
-            for i in 0..m {
-                let arow = &self.data[i * kk..(i + 1) * kk];
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for k in k0..k1 {
-                    let a = arow[k];
-                    if a == 0.0 {
-                        continue;
-                    }
-                    let brow = &other.data[k * n..(k + 1) * n];
-                    for j in 0..n {
-                        orow[j] += a * brow[j];
+        let rpc = parallel::chunk_rows(m, n * kk);
+        let a_data = &self.data;
+        let b_data = &other.data;
+        parallel::par_chunks_mut(&mut out.data, rpc * n, |chunk_idx, orows| {
+            let row0 = chunk_idx * rpc;
+            let rows_here = orows.len() / n;
+            for k0 in (0..kk).step_by(KB) {
+                let k1 = (k0 + KB).min(kk);
+                for ri in 0..rows_here {
+                    let arow = &a_data[(row0 + ri) * kk..(row0 + ri + 1) * kk];
+                    let orow = &mut orows[ri * n..(ri + 1) * n];
+                    for k in k0..k1 {
+                        let a = arow[k];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let brow = &b_data[k * n..(k + 1) * n];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += a * bv;
+                        }
                     }
                 }
             }
-        }
+        });
         out
     }
 
     /// `self (m,k) @ other^T` where other is (n,k): avoids materializing
-    /// the transpose and reads both operands row-contiguously.
+    /// the transpose and reads both operands row-contiguously. Parallel
+    /// over output row panels with a 4-wide-unrolled inner dot product.
     pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
         let (m, kk, n) = (self.rows, self.cols, other.rows);
         let mut out = Matrix::zeros(m, n);
-        for i in 0..m {
-            let arow = &self.data[i * kk..(i + 1) * kk];
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for j in 0..n {
-                let brow = &other.data[j * kk..(j + 1) * kk];
-                let mut acc = 0.0;
-                for k in 0..kk {
-                    acc += arow[k] * brow[k];
-                }
-                orow[j] = acc;
-            }
+        if m == 0 || n == 0 {
+            return out;
         }
+        let rpc = parallel::chunk_rows(m, n * kk.max(1));
+        let a_data = &self.data;
+        let b_data = &other.data;
+        parallel::par_chunks_mut(&mut out.data, rpc * n, |chunk_idx, orows| {
+            let row0 = chunk_idx * rpc;
+            for (ri, orow) in orows.chunks_mut(n).enumerate() {
+                let arow = &a_data[(row0 + ri) * kk..(row0 + ri + 1) * kk];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o = dot4(arow, &b_data[j * kk..(j + 1) * kk]);
+                }
+            }
+        });
         out
     }
 

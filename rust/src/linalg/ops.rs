@@ -1,7 +1,13 @@
 //! Higher-level operations used by the APNC coefficient derivations.
+//!
+//! The O(n^2) fills and scalings run on the shared parallel core
+//! ([`crate::parallel`]); the matmuls they feed into are parallel-tiled
+//! in [`super::matrix`]. All loops keep a fixed per-element reduction
+//! order, so results are bit-identical for any thread count.
 
 use super::eigh::eigh;
 use super::matrix::Matrix;
+use crate::parallel;
 
 /// Double-center a square matrix: `H A H` with `H = I - (1/n) e e^T`
 /// (paper Algorithm 4, line 8). Computed in O(n^2) via row/column/grand
@@ -31,7 +37,19 @@ pub fn double_center(a: &Matrix) -> Matrix {
         *v /= nf;
     }
     grand /= nf * nf;
-    Matrix::from_fn(n, n, |r, c| a[(r, c)] - row_mean[r] - col_mean[c] + grand)
+    let mut out = Matrix::zeros(n, n);
+    let rpc = parallel::chunk_rows(n, n);
+    parallel::par_chunks_mut(out.data_mut(), rpc * n, |chunk_idx, orows| {
+        let row0 = chunk_idx * rpc;
+        for (ri, orow) in orows.chunks_mut(n).enumerate() {
+            let arow = a.row(row0 + ri);
+            let rm = row_mean[row0 + ri];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = arow[j] - rm - col_mean[j] + grand;
+            }
+        }
+    });
+    out
 }
 
 /// Leading-`m` whitening transform of a PSD matrix:
@@ -49,16 +67,23 @@ pub fn whitening_transform(a: &Matrix, m: usize, eps: f64) -> Matrix {
     let max_eig = dec.values[*top.first().expect("m >= 1")].max(0.0);
     let cutoff = eps * max_eig;
     let mut r = Matrix::zeros(m, n);
-    for (row, &j) in top.iter().enumerate() {
-        let lam = dec.values[j];
-        if lam <= cutoff || lam <= 0.0 {
-            continue; // zero row: pseudo-inverse behaviour
+    let rpc = parallel::chunk_rows(m, n);
+    let dec_ref = &dec;
+    let top_ref = &top;
+    parallel::par_chunks_mut(r.data_mut(), rpc * n, |chunk_idx, rrows| {
+        let row0 = chunk_idx * rpc;
+        for (ri, rrow) in rrows.chunks_mut(n).enumerate() {
+            let j = top_ref[row0 + ri];
+            let lam = dec_ref.values[j];
+            if lam > cutoff && lam > 0.0 {
+                let s = 1.0 / lam.sqrt();
+                for (i, o) in rrow.iter_mut().enumerate() {
+                    *o = s * dec_ref.vectors[(i, j)];
+                }
+            }
+            // else: zero row, pseudo-inverse behaviour
         }
-        let s = 1.0 / lam.sqrt();
-        for i in 0..n {
-            r[(row, i)] = s * dec.vectors[(i, j)];
-        }
-    }
+    });
     r
 }
 
@@ -70,13 +95,27 @@ pub fn inv_sqrt(a: &Matrix, eps: f64) -> Matrix {
     let dec = eigh(a);
     let max_eig = dec.values.iter().cloned().fold(0.0f64, f64::max);
     let cutoff = eps * max_eig;
+    let scale: Vec<f64> = (0..n)
+        .map(|j| {
+            let lam = dec.values[j];
+            if lam > cutoff && lam > 0.0 {
+                1.0 / lam.sqrt()
+            } else {
+                0.0
+            }
+        })
+        .collect();
     let mut scaled = dec.vectors.clone(); // columns scaled by lambda^{-1/2}
-    for j in 0..n {
-        let lam = dec.values[j];
-        let s = if lam > cutoff && lam > 0.0 { 1.0 / lam.sqrt() } else { 0.0 };
-        for i in 0..n {
-            scaled[(i, j)] *= s;
-        }
+    if n > 0 {
+        let rpc = parallel::chunk_rows(n, n);
+        let scale_ref = &scale;
+        parallel::par_chunks_mut(scaled.data_mut(), rpc * n, |_, rows| {
+            for row in rows.chunks_mut(n) {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v *= scale_ref[j];
+                }
+            }
+        });
     }
     scaled.matmul_nt(&dec.vectors)
 }

@@ -9,7 +9,8 @@
 //!
 //! Common flags: --runs N --scale S --seed S --only DATASET
 //! `run` flags: --dataset NAME --method nys|sd|enys --l N --m N --k N
-//!              --workers N --iters N --n N --reference (force rust backend)
+//!              --workers N --threads N (compute threads, 0 = auto)
+//!              --iters N --n N --reference (force rust backend)
 
 use anyhow::{bail, Result};
 use apnc::cli::Args;
@@ -92,6 +93,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         max_iters: args.usize_or("iters", 20)?,
         restarts: args.usize_or("restarts", 1)?,
         workers: args.usize_or("workers", 4)?,
+        threads: args.usize_or("threads", 0)?,
         block_rows: args.usize_or("block-rows", 1024)?,
         seed: args.u64_or("seed", 42)?,
         sample_mode: if args.has("bernoulli") { SampleMode::Bernoulli } else { SampleMode::Exact },

@@ -230,7 +230,10 @@ impl Engine {
         // ---- reduce phase ----------------------------------------------------
         let reducers = if self.config.reducers == 0 { workers } else { self.config.reducers };
         metrics.reduce_tasks = grouped.len().min(reducers.max(1));
-        let work: Vec<(J::Key, Vec<J::Value>)> = grouped.into_iter().collect();
+        // each group is taken (moved) by exactly one reducer — no deep copy
+        // of the shuffled value vectors
+        let work: Vec<Mutex<Option<(J::Key, Vec<J::Value>)>>> =
+            grouped.into_iter().map(|kv| Mutex::new(Some(kv))).collect();
         let n_red = work.len();
         let next_red = AtomicUsize::new(0);
         let red_out: Mutex<Vec<(usize, J::Output)>> = Mutex::new(Vec::with_capacity(n_red));
@@ -242,9 +245,10 @@ impl Engine {
                     if i >= n_red {
                         break;
                     }
-                    let (k, vs) = &work_ref[i];
+                    let (k, vs) =
+                        work_ref[i].lock().unwrap().take().expect("reduce group taken once");
                     let mut ctx = TaskCtx::new(self.config.seed ^ 0xF00D, i);
-                    let out = job.reduce(k.clone(), vs.clone(), &mut ctx);
+                    let out = job.reduce(k, vs, &mut ctx);
                     red_out.lock().unwrap().push((i, out));
                 });
             }

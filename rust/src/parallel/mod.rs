@@ -1,0 +1,228 @@
+//! Shared parallel compute core: scoped-thread row partitioners used by
+//! the dense linalg ([`crate::linalg`]), the kernel-block evaluators
+//! ([`crate::kernels`]), and the f32 reference runtime
+//! ([`crate::runtime::reference`]).
+//!
+//! Design constraints (in priority order):
+//!
+//! 1. **Bit-for-bit determinism across thread counts.** Work is split
+//!    into chunks whose size depends only on the problem shape — never on
+//!    the thread count — and every reduction over per-chunk partials is
+//!    merged sequentially in chunk order. A pipeline run with
+//!    `APNC_THREADS=1` and `APNC_THREADS=64` produces identical bytes,
+//!    preserving the MapReduce engine's schedule-independence guarantees.
+//! 2. **No dependencies.** Scoped `std::thread` only; chunks are
+//!    statically assigned round-robin to at most [`max_threads`] workers
+//!    (the caller's thread doubles as worker 0), so there is no unsafe
+//!    code, no channel, and no queue contention on the hot path.
+//! 3. **Small inputs stay sequential.** [`chunk_rows`] targets a fixed
+//!    amount of scalar work per chunk; problems below one chunk never pay
+//!    a thread spawn.
+//!
+//! Thread count resolution order: [`set_threads`] override (used by
+//! `PipelineConfig::threads` and the `--threads` CLI flag), then the
+//! `APNC_THREADS` environment variable, then
+//! `std::thread::available_parallelism()`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide thread-count override; 0 = auto.
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the worker count for all parallel loops (0 restores auto
+/// resolution via `APNC_THREADS` / available parallelism).
+pub fn set_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Effective maximum worker count for a parallel loop.
+pub fn max_threads() -> usize {
+    let o = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
+    if let Ok(s) = std::env::var("APNC_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Rows per parallel chunk, targeting a fixed amount of scalar work per
+/// chunk (~256k ops, comfortably above scoped-thread spawn cost: a call
+/// only goes parallel once it has >= ~2 chunks of >= ~100us work each).
+/// Depends only on the problem shape — never on the thread count — which
+/// keeps any reduction over per-chunk partials schedule-independent.
+pub fn chunk_rows(total_rows: usize, ops_per_row: usize) -> usize {
+    const TARGET_OPS: usize = 1 << 18;
+    (TARGET_OPS / ops_per_row.max(1)).clamp(1, total_rows.max(1))
+}
+
+/// Process `data` in chunks of `chunk_len` elements across up to
+/// [`max_threads`] scoped threads. The closure receives the chunk index
+/// (chunk `i` covers `data[i*chunk_len .. (i+1)*chunk_len]`; the last
+/// chunk may be shorter) and the mutable chunk slice. Chunks are
+/// statically assigned round-robin, and the calling thread runs bucket 0,
+/// so a single-chunk call never spawns.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let n_chunks = (data.len() + chunk_len - 1) / chunk_len;
+    let threads = max_threads().min(n_chunks);
+    if threads <= 1 {
+        for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let mut buckets: Vec<Vec<(usize, &mut [T])>> = (0..threads).map(|_| Vec::new()).collect();
+    for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+        buckets[i % threads].push((i, c));
+    }
+    let f = &f;
+    std::thread::scope(|scope| {
+        let mut rest = buckets.into_iter();
+        let mine = rest.next();
+        for bucket in rest {
+            scope.spawn(move || {
+                for (i, c) in bucket {
+                    f(i, c);
+                }
+            });
+        }
+        if let Some(bucket) = mine {
+            for (i, c) in bucket {
+                f(i, c);
+            }
+        }
+    });
+}
+
+/// Compute `f(0), f(1), ..., f(n-1)` across up to [`max_threads`] scoped
+/// threads and return the results in index order. Used for per-chunk
+/// partial reductions (e.g. the assign op's combiner statistics): the
+/// caller merges the returned vector sequentially, so the reduction order
+/// is independent of the thread count.
+pub fn par_map_indexed<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = max_threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    {
+        let f = &f;
+        let mut buckets: Vec<Vec<(usize, &mut Option<R>)>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        for (i, s) in slots.iter_mut().enumerate() {
+            buckets[i % threads].push((i, s));
+        }
+        std::thread::scope(|scope| {
+            let mut rest = buckets.into_iter();
+            let mine = rest.next();
+            for bucket in rest {
+                scope.spawn(move || {
+                    for (i, s) in bucket {
+                        *s = Some(f(i));
+                    }
+                });
+            }
+            if let Some(bucket) = mine {
+                for (i, s) in bucket {
+                    *s = Some(f(i));
+                }
+            }
+        });
+    }
+    slots.into_iter().map(|s| s.expect("parallel slot filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_chunks_mut_covers_every_chunk_once() {
+        let mut data = vec![0u64; 1003];
+        par_chunks_mut(&mut data, 17, |i, chunk| {
+            for v in chunk.iter_mut() {
+                *v += 1 + i as u64;
+            }
+        });
+        // chunk i covers [i*17, min((i+1)*17, 1003))
+        for (pos, v) in data.iter().enumerate() {
+            assert_eq!(*v, 1 + (pos / 17) as u64, "pos {pos}");
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_single_chunk_and_empty() {
+        let mut data = vec![1.0f64; 5];
+        par_chunks_mut(&mut data, 100, |i, c| {
+            assert_eq!(i, 0);
+            assert_eq!(c.len(), 5);
+            c[0] = 2.0;
+        });
+        assert_eq!(data[0], 2.0);
+        let mut empty: Vec<f64> = Vec::new();
+        par_chunks_mut(&mut empty, 4, |_, _| panic!("no chunks on empty input"));
+    }
+
+    #[test]
+    fn par_map_indexed_preserves_order() {
+        let out = par_map_indexed(37, |i| i * i);
+        assert_eq!(out.len(), 37);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+        assert!(par_map_indexed(0, |i| i).is_empty());
+    }
+
+    // NOTE: this is the only test in the binary allowed to call
+    // set_threads — the override is process-global, and concurrent tests
+    // flipping it would race (results stay correct by design, but
+    // assertions *about* max_threads itself would be flaky).
+    #[test]
+    fn identical_results_across_thread_counts() {
+        set_threads(3);
+        assert_eq!(max_threads(), 3);
+        let run = |threads: usize| -> Vec<f64> {
+            set_threads(threads);
+            let mut data = vec![0.0f64; 4096];
+            par_chunks_mut(&mut data, 64, |i, chunk| {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = ((i * 64 + j) as f64).sqrt().sin();
+                }
+            });
+            data
+        };
+        let base = run(1);
+        for t in [2, 3, 8] {
+            assert_eq!(run(t), base, "threads={t}");
+        }
+        set_threads(0);
+        assert!(max_threads() >= 1);
+    }
+
+    #[test]
+    fn chunk_rows_bounds() {
+        assert_eq!(chunk_rows(0, 100), 1);
+        assert_eq!(chunk_rows(10, 1 << 24), 1);
+        assert_eq!(chunk_rows(4, 1), 4);
+        let c = chunk_rows(10_000, 256);
+        assert!(c >= 1 && c <= 10_000);
+        assert_eq!(c, (1 << 18) / 256);
+    }
+}

@@ -3,47 +3,63 @@
 //!
 //! Two jobs: (1) unit tests run without `make artifacts`; (2) the parity
 //! integration test cross-checks the PJRT path against this one — the rust
-//! twin of python's ref.py (same math, same clamping).
+//! twin of python's ref.py (same math, same clamping — the elementwise
+//! kernel map is shared with the f64 coefficient path via
+//! [`Kernel::apply_f32`]).
+//!
+//! All three ops are tiled over row chunks and run on the shared parallel
+//! core ([`crate::parallel`]). Chunk shapes depend only on the problem
+//! size and partial reductions merge in chunk order, so outputs are
+//! bit-identical for any thread count.
 
 use super::{AssignOut, DistKind};
 use crate::kernels::Kernel;
+use crate::parallel;
 
-#[inline]
-fn kernel_value(kernel: Kernel, dot: f32, x_sq: f32, l_sq: f32) -> f32 {
-    match kernel {
-        Kernel::Linear => dot,
-        Kernel::Rbf { gamma } => (-gamma * (x_sq + l_sq - 2.0 * dot).max(0.0)).exp(),
-        Kernel::Poly { c, degree } => (dot + c).max(0.0).powf(degree),
-        Kernel::Tanh { a, b } => (a * dot + b).tanh(),
-    }
-}
+use crate::linalg::matrix::dot4_impl;
 
-/// kappa(X, L): (rows, l) kernel block.
+// f32 twin of `linalg::matrix::dot4` — same macro, same fixed reduction
+// order, bit-compatible by construction.
+dot4_impl!(dot4f, f32);
+
+/// kappa(X, L): (rows, l) kernel block. GEMM-formulated — row squared
+/// norms + dot-product block + elementwise kernel map — and parallel over
+/// row chunks.
 pub fn kmat(x: &[f32], rows: usize, d: usize, samples: &[f32], l: usize, kernel: Kernel) -> Vec<f32> {
     assert_eq!(x.len(), rows * d);
     assert_eq!(samples.len(), l * d);
-    let x_sq: Vec<f32> = (0..rows)
-        .map(|r| x[r * d..(r + 1) * d].iter().map(|v| v * v).sum())
-        .collect();
-    let l_sq: Vec<f32> = (0..l)
-        .map(|j| samples[j * d..(j + 1) * d].iter().map(|v| v * v).sum())
-        .collect();
-    let mut out = vec![0.0f32; rows * l];
-    for r in 0..rows {
+    let x_sq: Vec<f32> = (0..rows).map(|r| {
         let xr = &x[r * d..(r + 1) * d];
-        for j in 0..l {
-            let sj = &samples[j * d..(j + 1) * d];
-            let mut dot = 0.0f32;
-            for i in 0..d {
-                dot += xr[i] * sj[i];
-            }
-            out[r * l + j] = kernel_value(kernel, dot, x_sq[r], l_sq[j]);
-        }
+        dot4f(xr, xr)
+    }).collect();
+    let l_sq: Vec<f32> = (0..l).map(|j| {
+        let sj = &samples[j * d..(j + 1) * d];
+        dot4f(sj, sj)
+    }).collect();
+    let mut out = vec![0.0f32; rows * l];
+    if rows == 0 || l == 0 {
+        return out;
     }
+    let rpc = parallel::chunk_rows(rows, l * d);
+    let (x_sq_ref, l_sq_ref) = (&x_sq, &l_sq);
+    parallel::par_chunks_mut(&mut out, rpc * l, move |chunk_idx, orows| {
+        let row0 = chunk_idx * rpc;
+        for (ri, orow) in orows.chunks_mut(l).enumerate() {
+            let r = row0 + ri;
+            let xr = &x[r * d..(r + 1) * d];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let dot = dot4f(xr, &samples[j * d..(j + 1) * d]);
+                *o = kernel.apply_f32(dot, x_sq_ref[r], l_sq_ref[j]);
+            }
+        }
+    });
     out
 }
 
-/// Y = kappa(X, L) @ R^T : (rows, m).
+/// Y = kappa(X, L) @ R^T : (rows, m). The matmul is parallel over row
+/// chunks; per row the accumulation stays in sample order (a contiguous
+/// AXPY over the output row), so results are bit-identical for any
+/// thread count.
 pub fn embed(
     x: &[f32],
     rows: usize,
@@ -57,40 +73,46 @@ pub fn embed(
     assert_eq!(r_t.len(), l * m);
     let kb = kmat(x, rows, d, samples, l, kernel);
     let mut y = vec![0.0f32; rows * m];
-    for r in 0..rows {
-        let krow = &kb[r * l..(r + 1) * l];
-        let yrow = &mut y[r * m..(r + 1) * m];
-        for (j, &kv) in krow.iter().enumerate() {
-            if kv == 0.0 {
-                continue;
-            }
-            let rrow = &r_t[j * m..(j + 1) * m];
-            for c in 0..m {
-                yrow[c] += kv * rrow[c];
+    if rows == 0 || m == 0 {
+        return y;
+    }
+    let rpc = parallel::chunk_rows(rows, l * m);
+    let kb_ref = &kb;
+    parallel::par_chunks_mut(&mut y, rpc * m, move |chunk_idx, yrows| {
+        let row0 = chunk_idx * rpc;
+        for (ri, yrow) in yrows.chunks_mut(m).enumerate() {
+            let krow = &kb_ref[(row0 + ri) * l..(row0 + ri + 1) * l];
+            for (j, &kv) in krow.iter().enumerate() {
+                if kv == 0.0 {
+                    continue;
+                }
+                let rrow = &r_t[j * m..(j + 1) * m];
+                for (o, &rv) in yrow.iter_mut().zip(rrow) {
+                    *o += kv * rv;
+                }
             }
         }
-    }
+    });
     y
 }
 
-/// Nearest-centroid assignment + combiner statistics (Algorithm 2 map).
-pub fn assign(
+/// Nearest-centroid assignment + combiner statistics for the rows
+/// `lo..hi` (one tile of the parallel [`assign`]).
+fn assign_tile(
     y: &[f32],
-    rows: usize,
     m: usize,
     centroids: &[f32],
     k: usize,
     mask: &[f32],
     dist: DistKind,
+    lo: usize,
+    hi: usize,
 ) -> AssignOut {
-    assert_eq!(y.len(), rows * m);
-    assert_eq!(centroids.len(), k * m);
-    assert_eq!(mask.len(), rows);
-    let mut assign = vec![0u32; rows];
+    let mut assign = Vec::with_capacity(hi - lo);
     let mut z = vec![0.0f32; k * m];
     let mut g = vec![0.0f32; k];
     let mut obj = 0.0f64;
-    for r in 0..rows {
+    for r in lo..hi {
         let yr = &y[r * m..(r + 1) * m];
         let mut best = f32::INFINITY;
         let mut best_c = 0usize;
@@ -115,17 +137,64 @@ pub fn assign(
                 best_c = c;
             }
         }
-        assign[r] = best_c as u32;
+        assign.push(best_c as u32);
         if mask[r] != 0.0 {
             let zr = &mut z[best_c * m..(best_c + 1) * m];
-            for i in 0..m {
-                zr[i] += yr[i];
+            for (a, &v) in zr.iter_mut().zip(yr) {
+                *a += v;
             }
             g[best_c] += 1.0;
             obj += best as f64;
         }
     }
     AssignOut { assign, z, g, obj }
+}
+
+/// Nearest-centroid assignment + combiner statistics (Algorithm 2 map).
+///
+/// Parallel over fixed-size row tiles; per-tile partial `(Z, g, obj)`
+/// statistics are merged sequentially in tile order. The tile size
+/// depends only on the problem shape, so the merged sums are
+/// bit-identical for any thread count.
+pub fn assign(
+    y: &[f32],
+    rows: usize,
+    m: usize,
+    centroids: &[f32],
+    k: usize,
+    mask: &[f32],
+    dist: DistKind,
+) -> AssignOut {
+    assert_eq!(y.len(), rows * m);
+    assert_eq!(centroids.len(), k * m);
+    assert_eq!(mask.len(), rows);
+    let mut out = AssignOut {
+        assign: Vec::with_capacity(rows),
+        z: vec![0.0f32; k * m],
+        g: vec![0.0f32; k],
+        obj: 0.0,
+    };
+    if rows == 0 {
+        return out;
+    }
+    let tile = parallel::chunk_rows(rows, k * m.max(1));
+    let n_tiles = (rows + tile - 1) / tile;
+    let partials = parallel::par_map_indexed(n_tiles, |t| {
+        let lo = t * tile;
+        let hi = (lo + tile).min(rows);
+        assign_tile(y, m, centroids, k, mask, dist, lo, hi)
+    });
+    for p in partials {
+        out.assign.extend(p.assign);
+        for (a, b) in out.z.iter_mut().zip(&p.z) {
+            *a += b;
+        }
+        for (a, b) in out.g.iter_mut().zip(&p.g) {
+            *a += b;
+        }
+        out.obj += p.obj;
+    }
+    out
 }
 
 #[cfg(test)]

@@ -1,0 +1,193 @@
+//! Parity + determinism for the parallel tiled compute core.
+//!
+//! (1) The GEMM-formulated kernel blocks (`Kernel::{block, gram}`, f64;
+//! `runtime::reference::kmat`, f32) must match the scalar `Kernel::eval`
+//! loop for every kernel kind. (2) Pipeline outputs and the parallel
+//! linalg primitives must be **bit-identical** across thread counts —
+//! the parallel core's schedule-independence contract.
+//!
+//! NOTE on the global thread override: `parallel::set_threads` is
+//! process-wide, and the test harness runs these tests concurrently. The
+//! parallel core is deterministic *by design* for any thread count, so
+//! tests racing on the override still assert correctly — a failure here
+//! means the determinism contract itself is broken.
+
+use apnc::coordinator::driver::{Pipeline, PipelineConfig};
+use apnc::data::registry;
+use apnc::embedding::Method;
+use apnc::kernels::Kernel;
+use apnc::linalg::Matrix;
+use apnc::parallel;
+use apnc::rng::Pcg;
+use apnc::runtime::{reference, Compute};
+
+fn all_kernels() -> [Kernel; 4] {
+    [
+        Kernel::Linear,
+        Kernel::Rbf { gamma: 0.2 },
+        Kernel::Poly { c: 1.0, degree: 3.0 },
+        Kernel::Tanh { a: 0.0045, b: 0.11 },
+    ]
+}
+
+fn randv(rng: &mut Pcg, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn gemm_block_matches_scalar_eval_f64() {
+    let mut rng = Pcg::seeded(2001);
+    // awkward sizes: not tile multiples, d not a multiple of 4
+    let (na, nb, d) = (37, 23, 7);
+    let a = randv(&mut rng, na * d);
+    let b = randv(&mut rng, nb * d);
+    for kernel in all_kernels() {
+        let blk = kernel.block(&a, &b, d);
+        assert_eq!(blk.shape(), (na, nb));
+        for i in 0..na {
+            for j in 0..nb {
+                let want = kernel.eval(&a[i * d..(i + 1) * d], &b[j * d..(j + 1) * d]);
+                let got = blk[(i, j)];
+                assert!(
+                    (got - want).abs() <= 1e-12 * want.abs().max(1.0),
+                    "{kernel:?} ({i},{j}): got {got}, want {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_gram_matches_scalar_eval_and_block_bitwise() {
+    let mut rng = Pcg::seeded(2002);
+    let (n, d) = (41, 6);
+    let a = randv(&mut rng, n * d);
+    for kernel in all_kernels() {
+        let g = kernel.gram(&a, d);
+        for i in 0..n {
+            for j in 0..n {
+                let want = kernel.eval(&a[i * d..(i + 1) * d], &a[j * d..(j + 1) * d]);
+                assert!(
+                    (g[(i, j)] - want).abs() <= 1e-12 * want.abs().max(1.0),
+                    "{kernel:?} ({i},{j})"
+                );
+                // mirror is an exact copy
+                assert_eq!(g[(i, j)], g[(j, i)], "{kernel:?} symmetry ({i},{j})");
+            }
+        }
+        // triangular+mirror gram and the full GEMM block share the dot
+        // kernel, so they agree to the bit
+        let b = kernel.block(&a, &a, d);
+        assert_eq!(g, b, "{kernel:?} gram != block(a, a)");
+    }
+}
+
+#[test]
+fn reference_kmat_matches_scalar_eval_f32() {
+    let mut rng = Pcg::seeded(2003);
+    let (rows, l, d) = (29, 13, 9);
+    let x = randv(&mut rng, rows * d);
+    let s = randv(&mut rng, l * d);
+    for kernel in all_kernels() {
+        let got = reference::kmat(&x, rows, d, &s, l, kernel);
+        for r in 0..rows {
+            for j in 0..l {
+                let want =
+                    kernel.eval(&x[r * d..(r + 1) * d], &s[j * d..(j + 1) * d]) as f32;
+                let diff = (got[r * l + j] - want).abs();
+                assert!(
+                    diff <= 1e-5 * want.abs().max(1.0),
+                    "{kernel:?} ({r},{j}): got {}, want {want}",
+                    got[r * l + j]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn linalg_bit_identical_across_thread_counts() {
+    // sizes chosen so chunk_rows yields several chunks per op — the
+    // parallel path must actually engage for threads > 1
+    let mut rng = Pcg::seeded(2004);
+    let a = Matrix::from_fn(301, 200, |_, _| rng.normal());
+    let b = Matrix::from_fn(200, 153, |_, _| rng.normal());
+    let c = Matrix::from_fn(181, 200, |_, _| rng.normal());
+    let pts = randv(&mut rng, 401 * 6);
+    let run = |threads: usize| {
+        parallel::set_threads(threads);
+        let out = (
+            a.matmul(&b),
+            a.matmul_nt(&c),
+            a.transpose(),
+            Kernel::Rbf { gamma: 0.3 }.gram(&pts, 6),
+        );
+        parallel::set_threads(0);
+        out
+    };
+    let base = run(1);
+    for t in [2, 8] {
+        let got = run(t);
+        assert_eq!(got.0, base.0, "matmul, threads={t}");
+        assert_eq!(got.1, base.1, "matmul_nt, threads={t}");
+        assert_eq!(got.2, base.2, "transpose, threads={t}");
+        assert_eq!(got.3, base.3, "gram, threads={t}");
+    }
+}
+
+#[test]
+fn pipeline_bit_identical_across_thread_counts() {
+    // operating point sized so the embed/assign inner loops span several
+    // parallel chunks per block (not just engine-level block parallelism)
+    let ds = registry::generate("covtype", 4000, 21);
+    let run_with = |threads: usize| {
+        let cfg = PipelineConfig {
+            method: Method::Nystrom,
+            l: 128,
+            m: 96,
+            max_iters: 6,
+            workers: 3,
+            threads,
+            block_rows: 1024,
+            seed: 4242,
+            ..Default::default()
+        };
+        Pipeline::with_compute(cfg, Compute::reference()).run(&ds).unwrap()
+    };
+    let base = run_with(1);
+    for t in [2, 8] {
+        let out = run_with(t);
+        assert_eq!(out.labels, base.labels, "labels, threads={t}");
+        assert_eq!(out.obj_curve, base.obj_curve, "objective curve, threads={t}");
+        assert_eq!(out.nmi.to_bits(), base.nmi.to_bits(), "nmi, threads={t}");
+        assert_eq!(out.l_actual, base.l_actual);
+        assert_eq!(out.m_actual, base.m_actual);
+    }
+    parallel::set_threads(0);
+}
+
+#[test]
+fn reference_assign_tiled_merge_is_deterministic() {
+    // rows large enough to span several tiles; partial (Z, g, obj) merge
+    // order must not depend on the thread count
+    let mut rng = Pcg::seeded(2005);
+    // rows >> chunk_rows(rows, k*m) = 256k/40, so the merge spans >= 4 tiles
+    let (rows, m, k) = (30_000, 8, 5);
+    let y = randv(&mut rng, rows * m);
+    let centroids = y[..k * m].to_vec();
+    let mask = vec![1.0f32; rows];
+    let run = |threads: usize| {
+        parallel::set_threads(threads);
+        let out = reference::assign(&y, rows, m, &centroids, k, &mask, apnc::runtime::DistKind::L2Sq);
+        parallel::set_threads(0);
+        out
+    };
+    let base = run(1);
+    for t in [2, 8] {
+        let got = run(t);
+        assert_eq!(got.assign, base.assign, "threads={t}");
+        assert_eq!(got.z, base.z, "threads={t}");
+        assert_eq!(got.g, base.g, "threads={t}");
+        assert_eq!(got.obj.to_bits(), base.obj.to_bits(), "threads={t}");
+    }
+}
