@@ -2,16 +2,19 @@
 #
 #   make build       — tier-1 build (cargo build --release)
 #   make test        — tier-1 tests (cargo test -q)
-#   make bench-json  — regenerate BENCH_PR1.json from the three perf
-#                      trajectory suites (kernels, linalg, pipeline);
-#                      records are JSON-lines appended by each suite
-#   make bench-json BENCH_OUT=BENCH_PR2.json  — next PR's baseline
+#   make doc         — rustdoc gate: cargo doc --no-deps with warnings
+#                      denied (broken intra-doc links fail the build)
+#   make verify      — build + test + doc
+#   make bench-json  — regenerate $(BENCH_OUT) from the perf trajectory
+#                      suites (kernels, linalg, pipeline); records are
+#                      JSON-lines appended by each suite
+#   make bench-json BENCH_OUT=BENCH_PR3.json  — next PR's baseline
 
 CARGO   ?= cargo
 MANIFEST = rust/Cargo.toml
-BENCH_OUT ?= BENCH_PR1.json
+BENCH_OUT ?= BENCH_PR2.json
 
-.PHONY: build test verify bench-json
+.PHONY: build test doc verify bench-json
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -19,11 +22,17 @@ build:
 test:
 	$(CARGO) test -q --manifest-path $(MANIFEST)
 
-verify: build test
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --manifest-path $(MANIFEST)
 
+verify: build test doc
+
+# cargo bench runs the bench binaries with cwd = the package root
+# (rust/), so hand them an absolute path or the records land in
+# rust/$(BENCH_OUT) instead of next to this Makefile.
 bench-json:
 	rm -f $(BENCH_OUT)
-	$(CARGO) bench --manifest-path $(MANIFEST) --bench bench_kernels -- --json $(BENCH_OUT)
-	$(CARGO) bench --manifest-path $(MANIFEST) --bench bench_linalg -- --json $(BENCH_OUT)
-	$(CARGO) bench --manifest-path $(MANIFEST) --bench bench_pipeline -- --json $(BENCH_OUT)
+	$(CARGO) bench --manifest-path $(MANIFEST) --bench bench_kernels -- --json $(abspath $(BENCH_OUT))
+	$(CARGO) bench --manifest-path $(MANIFEST) --bench bench_linalg -- --json $(abspath $(BENCH_OUT))
+	$(CARGO) bench --manifest-path $(MANIFEST) --bench bench_pipeline -- --json $(abspath $(BENCH_OUT))
 	@echo "wrote $(BENCH_OUT)"

@@ -1,9 +1,14 @@
 //! Linalg substrate benchmarks: the coefficient-fit hot spots
 //! (eigendecomposition of K_LL, matmuls) that bound Algorithm 3/4's
-//! single-reducer time in Table 3.
+//! single-reducer time in Table 3, plus the PR-2 scaling pairs — `eigh`
+//! (l = 256/1024/2048) and `Kernel::gram` at 1 thread vs. all threads —
+//! recorded into `BENCH_PR<N>.json` by `make bench-json` (see README
+//! "Benchmarks").
 
 use apnc::bench::Bench;
+use apnc::kernels::Kernel;
 use apnc::linalg::{eigh, Matrix};
+use apnc::parallel;
 use apnc::rng::Pcg;
 use std::hint::black_box;
 
@@ -53,4 +58,35 @@ fn main() {
     bench.run("double_center_512", || {
         black_box(apnc::linalg::ops::double_center(black_box(&c)));
     });
+    drop(bench); // flush the default-cadence suite before the heavy one
+
+    // PR-2 scaling pairs: serial vs. pooled. t1 pins the substrate to one
+    // thread; tmax restores auto resolution (APNC_THREADS or all cores).
+    // Few iterations — eigh_2048 is ~77 Gflop per call.
+    let heavy = Bench::new("linalg").with_iters(1, 3);
+    for &n in &[256usize, 1024, 2048] {
+        let a = random_spd(n, 6);
+        for (label, threads) in [("t1", 1usize), ("tmax", 0)] {
+            parallel::set_threads(threads);
+            let stats = heavy.run(&format!("eigh_{n}_{label}"), || {
+                black_box(eigh(black_box(&a)));
+            });
+            heavy.throughput(&stats, 9 * n * n * n, "flop");
+        }
+    }
+    let mut rng = Pcg::seeded(7);
+    let d = 32usize;
+    for &n in &[1024usize, 2048] {
+        let pts: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let kernel = Kernel::Rbf { gamma: 0.05 };
+        for (label, threads) in [("t1", 1usize), ("tmax", 0)] {
+            parallel::set_threads(threads);
+            let stats = heavy.run(&format!("gram_{n}x{d}_{label}"), || {
+                black_box(kernel.gram(black_box(&pts), d));
+            });
+            // n*(n+1)/2 kernel evaluations per call (upper triangle)
+            heavy.throughput(&stats, n * (n + 1) / 2, "kernel-eval");
+        }
+    }
+    parallel::set_threads(0);
 }

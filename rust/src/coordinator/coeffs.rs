@@ -4,6 +4,16 @@
 //! prescribes: the whole sample set `L` and the coefficient matrix `R`
 //! must fit one machine (Property 4.3). The output is broadcast to all
 //! mappers by the embedding job; the broadcast cost is charged there.
+//!
+//! The single-reducer constraint made this the pipeline's serial
+//! bottleneck for l >= 1000: both methods reduce to a symmetric
+//! eigendecomposition of the l×l sample kernel matrix. Since the engine
+//! only guards *multi*-task phases against nested parallelism, the lone
+//! coefficient reducer keeps full access to the persistent worker pool —
+//! `Kernel::gram` and [`crate::linalg::eigh()`] fan out across all
+//! configured threads while the rest of the cluster is idle, exactly the
+//! shape Algorithms 3–4 prescribe. See `ARCHITECTURE.md` at the repo
+//! root.
 
 use crate::embedding::{nystrom, stable, ApncCoeffs, Method};
 use crate::kernels::Kernel;

@@ -42,8 +42,9 @@ pub struct PipelineConfig {
     /// simulated cluster nodes
     pub workers: usize,
     /// compute threads per process for the parallel linalg/kernel core
-    /// (0 = auto: `APNC_THREADS` env, else available parallelism).
-    /// Outputs are bit-identical for any value — see [`crate::parallel`].
+    /// (0 = auto: `APNC_THREADS` env, else available parallelism). Sizes
+    /// the persistent worker pool; outputs are bit-identical for any
+    /// value — see [`crate::parallel`].
     pub threads: usize,
     /// points per input split
     pub block_rows: usize,

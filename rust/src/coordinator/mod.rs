@@ -13,6 +13,11 @@
 //! asserts the paper's network-cost structure in its tests: the embedding
 //! job shuffles **zero** bytes, and one clustering iteration moves
 //! O(workers * m * k) — never O(n).
+//!
+//! How these jobs map onto the simulated cluster and the in-process
+//! compute substrate (engine worker threads vs. the persistent parallel
+//! pool, and the nested-parallelism guard between them) is documented in
+//! `ARCHITECTURE.md` at the repo root.
 
 pub mod cluster_job;
 pub mod coeffs;

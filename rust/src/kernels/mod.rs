@@ -169,12 +169,31 @@ impl Kernel {
                 }
             }
         });
-        // mirror the strict lower triangle (O(n^2) copies, memory-bound)
-        for i in 1..n {
-            for j in 0..i {
-                out[(i, j)] = out[(j, i)];
+        // Mirror the strict lower triangle (O(n^2) copies, memory-bound),
+        // parallel over row chunks. Every access goes through one raw
+        // pointer — no `&mut` chunk slices — because each chunk's reads
+        // (strictly above the diagonal, rows `j < i`) land inside other
+        // chunks' row ranges. Writes (strictly below the diagonal of rows
+        // `lo..hi`) and reads are globally disjoint cell sets, and no
+        // reference into the buffer is live during the region, so shares
+        // never alias.
+        let mirror_rpc = parallel::chunk_rows(n, n);
+        let n_chunks = (n + mirror_rpc - 1) / mirror_rpc;
+        let base_addr = out.data_mut().as_mut_ptr() as usize;
+        parallel::par_map_indexed(n_chunks, |t| {
+            let base = base_addr as *mut f64;
+            let lo = t * mirror_rpc;
+            let hi = (lo + mirror_rpc).min(n);
+            for i in lo..hi {
+                for j in 0..i {
+                    // SAFETY: write cell (i, j) with i > j is touched by
+                    // exactly one chunk; read cell (j, i) is never written
+                    // by any chunk; the pool's completion barrier orders
+                    // everything before `out` is used again.
+                    unsafe { *base.add(i * n + j) = *base.add(j * n + i) };
+                }
             }
-        }
+        });
         out
     }
 }

@@ -11,12 +11,15 @@
 //!   dense linear algebra ([`linalg`]), kernel functions ([`kernels`]),
 //!   clustering baselines ([`baselines`]), dataset generators ([`data`]) and
 //!   evaluation metrics ([`metrics`]). The compute hot paths — kernel
-//!   blocks, the dense matmuls, and the f32 reference runtime — run on a
-//!   shared parallel core ([`parallel`]): GEMM-formulated kernel blocks
-//!   (row norms + tiled `matmul_nt` + elementwise kernel map) executed
-//!   over scoped-thread row panels, bit-identical for any thread count
-//!   (`PipelineConfig::threads`, `--threads`, or `APNC_THREADS`; default
-//!   = available parallelism).
+//!   blocks, the dense matmuls, the symmetric eigendecomposition, and the
+//!   f32 reference runtime — run on a shared parallel core ([`parallel`]):
+//!   a lazily-initialized persistent worker pool executing GEMM-formulated
+//!   kernel blocks (row norms + tiled `matmul_nt` + elementwise kernel
+//!   map) and `eigh`'s Householder/QL panels over row chunks,
+//!   bit-identical for any thread count (`PipelineConfig::threads`,
+//!   `--threads`, or `APNC_THREADS`; default = available parallelism). A
+//!   nested-parallelism guard keeps MapReduce map/reduce workers from
+//!   oversubscribing the pool ([`parallel::sequential_scope`]).
 //! * **Layer 2/1 (python/compile, build-time only)** — the compute hot-spot
 //!   (fused kernel-block evaluation + embedding matmul, and the
 //!   nearest-centroid assignment) written in JAX + Pallas and AOT-lowered to
@@ -39,6 +42,16 @@
 //!
 //! See `examples/` for runnable end-to-end drivers and `repro --help` for
 //! the table-regeneration CLI.
+//!
+//! ## Architecture
+//!
+//! The repo-root `README.md` gives the layer map and quickstart;
+//! `ARCHITECTURE.md` (same directory) describes the MapReduce simulation
+//! model (mapper/reducer roles for Algorithms 1–4, the Property 4.3
+//! single-reducer constraint), the parallel substrate's
+//! chunking/reduction-order rules behind the determinism contract, and
+//! where the worker pool's nested-parallelism guard sits. Start there
+//! before touching [`parallel`], [`mapreduce`], or [`coordinator`].
 
 pub mod baselines;
 pub mod bench;

@@ -4,9 +4,27 @@
 //!
 //! Used by both coefficient jobs of the paper: Nyström needs the leading-m
 //! eigenpairs of `K_LL` (Eq. 9); the stable-distribution embedding needs
-//! the full decomposition of the centered `H K_LL H` (Section 7).
+//! the full decomposition of the centered `H K_LL H` (Section 7). Both
+//! run on the single coefficient reducer (Property 4.3), which made this
+//! routine the pipeline's serial bottleneck for l >= 1000 — so the O(n^3)
+//! phases run on the persistent pool of [`crate::parallel`]:
+//!
+//! * `tred2`'s symmetric mat-vec (`w = A u` per Householder column), its
+//!   rank-2 panel update (`A <- A - u w^T - w u^T`), and the Q
+//!   accumulation's panel dot products + rank-1 updates are parallel over
+//!   row chunks, with per-chunk partials merged in chunk order;
+//! * `tql2` batches each QL sweep's Givens rotations and applies them to
+//!   the eigenvector rows in parallel (rows are independent; the per-row
+//!   rotation order is the serial order).
+//!
+//! Chunk shapes depend only on the problem size, so `Eigh` is
+//! **bit-identical for any thread count** — the same contract as the rest
+//! of the substrate (see `ARCHITECTURE.md` at the repo root), pinned down
+//! by `rust/tests/eigh_parity.rs`. The remaining O(n^2) scalar
+//! recurrences (QL shifts, eigenvalue sort) stay sequential by design.
 
 use super::matrix::Matrix;
+use crate::parallel;
 
 /// Eigendecomposition result: `a = V diag(values) V^T`.
 ///
@@ -14,7 +32,9 @@ use super::matrix::Matrix;
 /// (`vectors[(i, j)]` is component `i` of eigenvector `j`).
 #[derive(Clone, Debug)]
 pub struct Eigh {
+    /// Eigenvalues in ascending order.
     pub values: Vec<f64>,
+    /// Orthonormal eigenvectors, one per column, matching `values`.
     pub vectors: Matrix,
 }
 
@@ -35,6 +55,27 @@ impl Eigh {
 
 /// Symmetric eigendecomposition of `a` (must be square; only the lower
 /// triangle is referenced after symmetrization).
+///
+/// The decomposition round-trips: `a ≈ V diag(λ) Vᵀ`.
+///
+/// ```
+/// use apnc::linalg::{eigh, Matrix};
+///
+/// let a = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+/// let e = eigh(&a);
+/// assert!((e.values[0] - 1.0).abs() < 1e-12);
+/// assert!((e.values[1] - 3.0).abs() < 1e-12);
+///
+/// // reconstruct V diag(λ) Vᵀ and compare against a
+/// let mut vl = e.vectors.clone();
+/// for r in 0..2 {
+///     for c in 0..2 {
+///         vl[(r, c)] *= e.values[c];
+///     }
+/// }
+/// let err = vl.matmul_nt(&e.vectors).sub(&a).max_abs();
+/// assert!(err < 1e-12);
+/// ```
 pub fn eigh(a: &Matrix) -> Eigh {
     assert_eq!(a.rows(), a.cols(), "eigh requires a square matrix");
     let n = a.rows();
@@ -53,14 +94,19 @@ pub fn eigh(a: &Matrix) -> Eigh {
 
 /// Householder reduction of a real symmetric matrix to tridiagonal form.
 /// On exit `v` holds the accumulated orthogonal transform Q, `d` the
-/// diagonal and `e[1..]` the sub-diagonal. (Numerical Recipes / EISPACK.)
+/// diagonal and `e[1..]` the sub-diagonal. (Numerical Recipes / EISPACK,
+/// with the O(n^3) inner phases chunked over the parallel substrate;
+/// every chunk merge is in fixed chunk order, so the output is
+/// bit-identical for any thread count.)
 fn tred2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
     let n = d.len();
+    let nc = n; // row stride of v
     for j in 0..n {
         d[j] = v[(n - 1, j)];
     }
     for i in (1..n).rev() {
         let l = i - 1;
+        let rows = i; // the active leading block is rows/cols 0..=l
         let mut h = 0.0;
         let mut scale = 0.0;
         for k in 0..i {
@@ -74,30 +120,44 @@ fn tred2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
                 v[(j, i)] = 0.0;
             }
         } else {
+            // Build the scaled Householder vector u in d[0..=l].
             for k in 0..=l {
                 d[k] /= scale;
                 h += d[k] * d[k];
             }
-            let mut f = d[l];
-            let mut g = if f > 0.0 { -h.sqrt() } else { h.sqrt() };
-            e[i] = scale * g;
-            h -= f * g;
-            d[l] = f - g;
+            let f0 = d[l];
+            let g0 = if f0 > 0.0 { -h.sqrt() } else { h.sqrt() };
+            e[i] = scale * g0;
+            h -= f0 * g0;
+            d[l] = f0 - g0;
+            // Stash u in column i (read back by the accumulation pass).
             for j in 0..=l {
-                e[j] = 0.0;
+                v[(j, i)] = d[j];
             }
-            // Apply similarity transformation to remaining columns.
-            for j in 0..=l {
-                f = d[j];
-                v[(j, i)] = f;
-                g = e[j] + v[(j, j)] * f;
-                for k in (j + 1)..=l {
-                    g += v[(k, j)] * d[k];
-                    e[k] += v[(k, j)] * f;
-                }
-                e[j] = g;
+            // Symmetric mat-vec w = A u over the lower triangle, parallel
+            // over output rows; each e[j] is one fixed-order accumulation
+            // (A's row j up to the diagonal, then its column j below it).
+            {
+                let rc = parallel::chunk_rows(rows, rows);
+                let vv: &Matrix = v;
+                let dd: &[f64] = d;
+                parallel::par_chunks_mut(&mut e[..rows], rc, |chunk_idx, ej| {
+                    let j0 = chunk_idx * rc;
+                    for (jo, out) in ej.iter_mut().enumerate() {
+                        let j = j0 + jo;
+                        let vrow = vv.row(j);
+                        let mut acc = 0.0;
+                        for k in 0..=j {
+                            acc += vrow[k] * dd[k];
+                        }
+                        for k in (j + 1)..rows {
+                            acc += vv[(k, j)] * dd[k];
+                        }
+                        *out = acc;
+                    }
+                });
             }
-            f = 0.0;
+            let mut f = 0.0;
             for j in 0..=l {
                 e[j] /= h;
                 f += e[j] * d[j];
@@ -106,36 +166,85 @@ fn tred2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
             for j in 0..=l {
                 e[j] -= hh * d[j];
             }
+            // Rank-2 panel update A <- A - u w^T - w u^T on the lower
+            // triangle, parallel over rows; every element is written
+            // exactly once, so the partition cannot affect the result.
+            {
+                let rc = parallel::chunk_rows(rows, rows);
+                let dd: &[f64] = d;
+                let ee: &[f64] = e;
+                parallel::par_chunks_mut(
+                    &mut v.data_mut()[..rows * nc],
+                    rc * nc,
+                    |chunk_idx, vrows| {
+                        let k0 = chunk_idx * rc;
+                        for (ko, vrow) in vrows.chunks_mut(nc).enumerate() {
+                            let k = k0 + ko;
+                            let (dk, ek) = (dd[k], ee[k]);
+                            for j in 0..=k {
+                                vrow[j] -= dd[j] * ek + ee[j] * dk;
+                            }
+                        }
+                    },
+                );
+            }
             for j in 0..=l {
-                f = d[j];
-                g = e[j];
-                for k in j..=l {
-                    v[(k, j)] -= f * e[k] + g * d[k];
-                }
                 d[j] = v[(l, j)];
                 v[(i, j)] = 0.0;
             }
         }
         d[i] = h;
     }
-    // Accumulate transformations.
+    // Accumulate transformations into Q: for every stored Householder
+    // column u (= column i+1), apply V <- V - u (u^T V) / h to the
+    // leading block. Two parallel passes per column — panel dot products
+    // g = V^T u (row-chunked partials merged in chunk order), then the
+    // rank-1 update (one write per element).
     for i in 0..(n - 1) {
         v[(n - 1, i)] = v[(i, i)];
         v[(i, i)] = 1.0;
         let h = d[i + 1];
         if h != 0.0 {
-            for k in 0..=i {
+            let rows = i + 1;
+            for k in 0..rows {
                 d[k] = v[(k, i + 1)] / h;
             }
-            for j in 0..=i {
-                let mut g = 0.0;
-                for k in 0..=i {
-                    g += v[(k, i + 1)] * v[(k, j)];
+            let rc = parallel::chunk_rows(rows, rows);
+            let n_chunks = (rows + rc - 1) / rc;
+            let g = {
+                let vv: &Matrix = v;
+                let partials = parallel::par_map_indexed(n_chunks, |t| {
+                    let k0 = t * rc;
+                    let k1 = (k0 + rc).min(rows);
+                    let mut part = vec![0.0f64; rows];
+                    for k in k0..k1 {
+                        let vrow = vv.row(k);
+                        let f = vrow[i + 1];
+                        for (j, pj) in part.iter_mut().enumerate() {
+                            *pj += f * vrow[j];
+                        }
+                    }
+                    part
+                });
+                let mut g = vec![0.0f64; rows];
+                for part in partials {
+                    for (a, b) in g.iter_mut().zip(&part) {
+                        *a += b;
+                    }
                 }
-                for k in 0..=i {
-                    v[(k, j)] -= g * d[k];
+                g
+            };
+            let dd: &[f64] = d;
+            let gg: &[f64] = &g;
+            parallel::par_chunks_mut(&mut v.data_mut()[..rows * nc], rc * nc, |chunk_idx, vrows| {
+                let k0 = chunk_idx * rc;
+                for (ko, vrow) in vrows.chunks_mut(nc).enumerate() {
+                    let dk = dd[k0 + ko];
+                    for (j, gj) in gg.iter().enumerate() {
+                        vrow[j] -= gj * dk;
+                    }
                 }
-            }
+            });
         }
         for k in 0..=i {
             v[(k, i + 1)] = 0.0;
@@ -149,8 +258,34 @@ fn tred2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
     e[0] = 0.0;
 }
 
+/// Apply one QL sweep's batch of Givens rotations to the eigenvector
+/// matrix: `rots[t]` is the `(c, s)` pair for column pair
+/// `(m - 1 - t, m - t)`. Rows of `v` are independent and the per-row
+/// rotation order equals the serial loop's, so the result is bit-identical
+/// to rotating inside the sweep — at any thread count.
+fn apply_rotations(v: &mut Matrix, m: usize, rots: &[(f64, f64)]) {
+    if rots.is_empty() {
+        return;
+    }
+    let n = v.rows();
+    let nc = v.cols();
+    let rc = parallel::chunk_rows(n, 6 * rots.len());
+    parallel::par_chunks_mut(v.data_mut(), rc * nc, |_, vrows| {
+        for vrow in vrows.chunks_mut(nc) {
+            for (t, &(c, s)) in rots.iter().enumerate() {
+                let i = m - 1 - t;
+                let h = vrow[i + 1];
+                vrow[i + 1] = s * vrow[i] + c * h;
+                vrow[i] = c * vrow[i] - s * h;
+            }
+        }
+    });
+}
+
 /// Implicit-shift QL iteration on the tridiagonal matrix, accumulating
-/// eigenvectors into `v`. Eigenvalues end up ascending in `d`.
+/// eigenvectors into `v`. Eigenvalues end up ascending in `d`. The scalar
+/// shift/rotation recurrence is sequential; the O(n) eigenvector rotation
+/// per sweep is batched and applied in parallel ([`apply_rotations`]).
 fn tql2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
     let n = d.len();
     for i in 1..n {
@@ -161,6 +296,7 @@ fn tql2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
     let mut f = 0.0f64;
     let mut tst1 = 0.0f64;
     let eps = f64::EPSILON;
+    let mut rots: Vec<(f64, f64)> = Vec::new();
     for l in 0..n {
         tst1 = tst1.max(d[l].abs() + e[l].abs());
         let mut m = l;
@@ -190,7 +326,9 @@ fn tql2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
                     d[i] -= h;
                 }
                 f += h;
-                // Implicit QL transformation.
+                // Implicit QL transformation: run the scalar recurrence,
+                // collecting the rotations instead of applying them
+                // row-by-row inside the sweep.
                 p = d[m];
                 let mut c = 1.0;
                 let mut c2 = c;
@@ -198,6 +336,8 @@ fn tql2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
                 let el1 = e[l + 1];
                 let mut s = 0.0;
                 let mut s2 = 0.0;
+                rots.clear();
+                rots.reserve(m - l);
                 for i in (l..m).rev() {
                     c3 = c2;
                     c2 = c;
@@ -210,13 +350,10 @@ fn tql2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
                     c = p / r;
                     p = c * d[i] - s * g;
                     d[i + 1] = h + s * (c * g + s * d[i]);
-                    // Accumulate eigenvectors.
-                    for k in 0..n {
-                        h = v[(k, i + 1)];
-                        v[(k, i + 1)] = s * v[(k, i)] + c * h;
-                        v[(k, i)] = c * v[(k, i)] - s * h;
-                    }
+                    rots.push((c, s));
                 }
+                // Accumulate eigenvectors: all rows, columns l..=m.
+                apply_rotations(v, m, &rots);
                 p = -s * s2 * c3 * el1 * e[l] / dl1;
                 e[l] = s * p;
                 d[l] = c * p;
@@ -361,5 +498,20 @@ mod tests {
         for &val in &e.values[..9] {
             assert!(val.abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn large_enough_to_engage_parallel_phases() {
+        // n chosen so tred2's panel updates and tql2's rotation batches
+        // span multiple chunks when threads > 1; correctness must hold
+        // either way
+        let mut rng = Pcg::seeded(15);
+        let n = 160;
+        let a = random_spd(&mut rng, n);
+        let e = eigh(&a);
+        let err = reconstruct(&e).sub(&a).max_abs() / a.max_abs();
+        assert!(err < 1e-10, "err={err}");
+        let vtv = e.vectors.transpose().matmul(&e.vectors);
+        assert!(vtv.sub(&Matrix::identity(n)).max_abs() < 1e-9);
     }
 }

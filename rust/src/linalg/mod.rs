@@ -7,8 +7,10 @@
 //! system needs from scratch, in `f64` for numerical headroom:
 //!
 //! * [`Matrix`] — row-major dense matrix with blocked matmul
-//! * [`eigh`] — symmetric eigendecomposition (Householder tridiagonalization
-//!   + implicit-shift QL, the EISPACK `tred2`/`tql2` pair)
+//! * [`eigh()`] — symmetric eigendecomposition (Householder tridiagonalization
+//!   + implicit-shift QL, the EISPACK `tred2`/`tql2` pair); the O(n^3)
+//!   phases run on the persistent pool of [`crate::parallel`] and are
+//!   bit-identical for any thread count
 //! * [`chol`] — Cholesky factorization and SPD solves
 //! * [`ops`] — centering, inverse-sqrt, pseudo-inverse helpers used by the
 //!   Nyström (Eq. 9) and stable-distribution (Eq. 14–15) derivations

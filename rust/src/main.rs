@@ -9,7 +9,9 @@
 //!
 //! Common flags: --runs N --scale S --seed S --only DATASET
 //! `run` flags: --dataset NAME --method nys|sd|enys --l N --m N --k N
-//!              --workers N --threads N (compute threads, 0 = auto)
+//!              --workers N (simulated cluster nodes)
+//!              --threads N (persistent compute pool size, 0 = auto;
+//!                           results are identical for any value)
 //!              --iters N --n N --reference (force rust backend)
 
 use anyhow::{bail, Result};

@@ -1,6 +1,16 @@
 //! The MapReduce executor: block partitioning over worker threads,
 //! map-side combining, a byte-accounted shuffle, parallel reduce, fault
 //! injection with task re-execution, and a distributed-cache broadcast.
+//!
+//! Nested-parallelism guard: whenever a phase runs on more than one
+//! engine worker thread, each task executes under
+//! [`crate::parallel::sequential_scope`], so reference-runtime / kernel /
+//! linalg calls inside map and reduce functions run sequentially instead
+//! of oversubscribing the machine `workers × threads`-fold. A
+//! single-worker engine leaves the compute substrate's parallelism
+//! untouched (there is nothing to oversubscribe). Results are identical
+//! either way — the substrate is bit-identical for any thread count. See
+//! `ARCHITECTURE.md` at the repo root.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -72,6 +82,9 @@ impl Engine {
     ) -> JobRun<O> {
         let workers = self.config.workers;
         let n_tasks = blocks.len();
+        // more than one live worker => tasks must not fan out on the
+        // compute pool on top of the engine's own parallelism
+        let guard_nested = workers.min(n_tasks.max(1)) > 1;
         let mut metrics = JobMetrics::default();
         metrics.map_tasks = n_tasks;
         let next_task = AtomicUsize::new(0);
@@ -101,7 +114,11 @@ impl Engine {
                                 continue;
                             }
                             let mut ctx = TaskCtx::new(self.config.seed, t);
-                            let out = f(t, &blocks[t], &mut ctx);
+                            let out = if guard_nested {
+                                crate::parallel::sequential_scope(|| f(t, &blocks[t], &mut ctx))
+                            } else {
+                                f(t, &blocks[t], &mut ctx)
+                            };
                             let elapsed = t0.elapsed();
                             local_busy += elapsed;
                             results.lock().unwrap().push((t, out, elapsed, attempts, ctx.counters));
@@ -134,6 +151,7 @@ impl Engine {
     pub fn run<J: Job>(&self, job: &J, blocks: &[J::Input]) -> JobRun<J::Output> {
         let workers = self.config.workers;
         let n_tasks = blocks.len();
+        let guard_nested = workers.min(n_tasks.max(1)) > 1;
         let mut metrics = JobMetrics::default();
         metrics.map_tasks = n_tasks;
 
@@ -175,7 +193,13 @@ impl Engine {
                             }
                             let mut ctx = TaskCtx::new(self.config.seed, t);
                             let mut emitter = Emitter::new();
-                            job.map(t, &blocks[t], &mut ctx, &mut emitter);
+                            if guard_nested {
+                                crate::parallel::sequential_scope(|| {
+                                    job.map(t, &blocks[t], &mut ctx, &mut emitter)
+                                });
+                            } else {
+                                job.map(t, &blocks[t], &mut ctx, &mut emitter);
+                            }
                             // map-side combine, per key
                             let mut grouped: BTreeMap<J::Key, Vec<J::Value>> = BTreeMap::new();
                             for (k, v) in emitter.pairs {
@@ -238,6 +262,7 @@ impl Engine {
         let next_red = AtomicUsize::new(0);
         let red_out: Mutex<Vec<(usize, J::Output)>> = Mutex::new(Vec::with_capacity(n_red));
         let work_ref = &work;
+        let guard_reduce = reducers.min(n_red.max(1)) > 1;
         std::thread::scope(|scope| {
             for _ in 0..reducers.min(n_red.max(1)) {
                 scope.spawn(|| loop {
@@ -248,7 +273,11 @@ impl Engine {
                     let (k, vs) =
                         work_ref[i].lock().unwrap().take().expect("reduce group taken once");
                     let mut ctx = TaskCtx::new(self.config.seed ^ 0xF00D, i);
-                    let out = job.reduce(k, vs, &mut ctx);
+                    let out = if guard_reduce {
+                        crate::parallel::sequential_scope(|| job.reduce(k, vs, &mut ctx))
+                    } else {
+                        job.reduce(k, vs, &mut ctx)
+                    };
                     red_out.lock().unwrap().push((i, out));
                 });
             }

@@ -1,7 +1,9 @@
-//! Shared parallel compute core: scoped-thread row partitioners used by
-//! the dense linalg ([`crate::linalg`]), the kernel-block evaluators
+//! Shared parallel compute core — substrate v2: a persistent worker pool
+//! (`pool.rs`, internal) behind deterministic row partitioners used by the
+//! dense linalg ([`crate::linalg`]), the kernel-block evaluators
 //! ([`crate::kernels`]), and the f32 reference runtime
-//! ([`crate::runtime::reference`]).
+//! ([`crate::runtime::reference`]). The narrative version of this module
+//! doc lives in `ARCHITECTURE.md` at the repo root.
 //!
 //! Design constraints (in priority order):
 //!
@@ -11,18 +13,34 @@
 //!    merged sequentially in chunk order. A pipeline run with
 //!    `APNC_THREADS=1` and `APNC_THREADS=64` produces identical bytes,
 //!    preserving the MapReduce engine's schedule-independence guarantees.
-//! 2. **No dependencies.** Scoped `std::thread` only; chunks are
-//!    statically assigned round-robin to at most [`max_threads`] workers
-//!    (the caller's thread doubles as worker 0), so there is no unsafe
-//!    code, no channel, and no queue contention on the hot path.
+//! 2. **No dependencies, no per-call spawn.** Parallel regions execute on
+//!    a lazily-initialized process-wide pool of parked `std::thread`
+//!    workers (PR 1 spawned scoped threads per call). Chunks are assigned
+//!    round-robin by index to at most [`max_threads`] shares — the caller's
+//!    thread doubles as share 0 — so there is no channel and no queue
+//!    contention on the hot path.
 //! 3. **Small inputs stay sequential.** [`chunk_rows`] targets a fixed
-//!    amount of scalar work per chunk; problems below one chunk never pay
-//!    a thread spawn.
+//!    amount of scalar work per chunk; problems below two chunks never
+//!    touch the pool.
+//! 4. **No nested oversubscription.** Threads already inside a parallel
+//!    region — pool workers, the submitting thread while it runs its own
+//!    share, and anything under an explicit [`sequential_scope`] (the
+//!    MapReduce engine's map/reduce workers) — see [`max_threads`]` == 1`
+//!    and run nested parallel calls inline. This bounds the process at
+//!    one live parallel region (`pool` threads + submitter) instead of
+//!    `engine workers × threads`, and makes nested submission — which
+//!    would deadlock a single-job-slot pool — unreachable.
 //!
-//! Thread count resolution order: [`set_threads`] override (used by
+//! Thread count resolution order: nested guard (always 1 inside a
+//! parallel region), then the [`set_threads`] override (used by
 //! `PipelineConfig::threads` and the `--threads` CLI flag), then the
 //! `APNC_THREADS` environment variable, then
-//! `std::thread::available_parallelism()`.
+//! `std::thread::available_parallelism()` — the last two resolved once
+//! per process and cached.
+
+mod pool;
+
+pub use pool::{in_sequential_scope, pool_stats, sequential_scope, PoolStats, MAX_POOL_WORKERS};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -30,43 +48,77 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
 
 /// Override the worker count for all parallel loops (0 restores auto
-/// resolution via `APNC_THREADS` / available parallelism).
+/// resolution via `APNC_THREADS` / available parallelism). The persistent
+/// pool grows on demand to one thread below the requested count (the
+/// caller doubles as a worker) and never shrinks.
 pub fn set_threads(n: usize) {
     THREAD_OVERRIDE.store(n, Ordering::Relaxed);
 }
 
-/// Effective maximum worker count for a parallel loop.
+/// `APNC_THREADS` / available parallelism, resolved once per process and
+/// cached — [`max_threads`] sits on every parallel-region entry, so it
+/// must not re-take the environment lock per call. Runtime changes go
+/// through [`set_threads`], which bypasses this cache.
+fn auto_threads() -> usize {
+    static AUTO: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *AUTO.get_or_init(|| {
+        if let Ok(s) = std::env::var("APNC_THREADS") {
+            if let Ok(n) = s.trim().parse::<usize>() {
+                if n > 0 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Effective maximum worker count for a parallel loop starting on the
+/// current thread. Always 1 inside a parallel region or an enclosing
+/// [`sequential_scope`] — the nested-parallelism guard.
 pub fn max_threads() -> usize {
+    if in_sequential_scope() {
+        return 1;
+    }
     let o = THREAD_OVERRIDE.load(Ordering::Relaxed);
     if o > 0 {
         return o;
     }
-    if let Ok(s) = std::env::var("APNC_THREADS") {
-        if let Ok(n) = s.trim().parse::<usize>() {
-            if n > 0 {
-                return n;
-            }
-        }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    auto_threads()
 }
 
 /// Rows per parallel chunk, targeting a fixed amount of scalar work per
-/// chunk (~256k ops, comfortably above scoped-thread spawn cost: a call
-/// only goes parallel once it has >= ~2 chunks of >= ~100us work each).
-/// Depends only on the problem shape — never on the thread count — which
-/// keeps any reduction over per-chunk partials schedule-independent.
+/// chunk (~256k ops, comfortably above the pool's job-dispatch cost: a
+/// call only goes parallel once it has >= ~2 chunks of >= ~100us work
+/// each). Depends only on the problem shape — never on the thread count —
+/// which keeps any reduction over per-chunk partials schedule-independent.
 pub fn chunk_rows(total_rows: usize, ops_per_row: usize) -> usize {
     const TARGET_OPS: usize = 1 << 18;
     (TARGET_OPS / ops_per_row.max(1)).clamp(1, total_rows.max(1))
 }
 
+/// Raw-pointer wrapper that lets pool shares address disjoint regions of
+/// one buffer. Soundness is the caller's obligation: shares must never
+/// touch overlapping elements.
+struct SendPtr<T>(*mut T);
+
+// SAFETY: access discipline (disjoint regions per share, completion
+// barrier before the owner reuses the buffer) is enforced by the two
+// partitioners below.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
 /// Process `data` in chunks of `chunk_len` elements across up to
-/// [`max_threads`] scoped threads. The closure receives the chunk index
-/// (chunk `i` covers `data[i*chunk_len .. (i+1)*chunk_len]`; the last
-/// chunk may be shorter) and the mutable chunk slice. Chunks are
-/// statically assigned round-robin, and the calling thread runs bucket 0,
-/// so a single-chunk call never spawns.
+/// [`max_threads`] shares of the persistent worker pool. The closure
+/// receives the chunk index (chunk `i` covers
+/// `data[i*chunk_len .. (i+1)*chunk_len]`; the last chunk may be shorter)
+/// and the mutable chunk slice. Chunks are assigned to shares round-robin
+/// by index (`share = i % shares` — a pure function of the problem shape,
+/// never of which threads exist), and a single-chunk call runs inline
+/// without touching the pool.
+///
+/// Nested calls — from inside another parallel region or a
+/// [`sequential_scope`] — run inline sequentially; see the module docs.
 pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
 where
     T: Send,
@@ -77,74 +129,66 @@ where
     }
     assert!(chunk_len > 0, "chunk_len must be positive");
     let n_chunks = (data.len() + chunk_len - 1) / chunk_len;
-    let threads = max_threads().min(n_chunks);
-    if threads <= 1 {
+    let shares = max_threads().min(n_chunks);
+    if shares <= 1 {
         for (i, c) in data.chunks_mut(chunk_len).enumerate() {
             f(i, c);
         }
         return;
     }
-    let mut buckets: Vec<Vec<(usize, &mut [T])>> = (0..threads).map(|_| Vec::new()).collect();
-    for (i, c) in data.chunks_mut(chunk_len).enumerate() {
-        buckets[i % threads].push((i, c));
-    }
+    let len = data.len();
+    let ptr = SendPtr(data.as_mut_ptr());
     let f = &f;
-    std::thread::scope(|scope| {
-        let mut rest = buckets.into_iter();
-        let mine = rest.next();
-        for bucket in rest {
-            scope.spawn(move || {
-                for (i, c) in bucket {
-                    f(i, c);
-                }
-            });
+    let run_share = move |share: usize| {
+        let mut i = share;
+        while i < n_chunks {
+            let start = i * chunk_len;
+            let end = (start + chunk_len).min(len);
+            // SAFETY: chunk i is touched only by share i % shares, so the
+            // reconstructed slices are disjoint across shares; `broadcast`
+            // returns only after every share finished, so no slice
+            // outlives the `&mut data` borrow.
+            let chunk = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(start), end - start) };
+            f(i, chunk);
+            i += shares;
         }
-        if let Some(bucket) = mine {
-            for (i, c) in bucket {
-                f(i, c);
-            }
-        }
-    });
+    };
+    pool::broadcast(shares, &run_share);
 }
 
-/// Compute `f(0), f(1), ..., f(n-1)` across up to [`max_threads`] scoped
-/// threads and return the results in index order. Used for per-chunk
-/// partial reductions (e.g. the assign op's combiner statistics): the
-/// caller merges the returned vector sequentially, so the reduction order
-/// is independent of the thread count.
+/// Compute `f(0), f(1), ..., f(n-1)` across up to [`max_threads`] shares
+/// of the persistent worker pool and return the results in index order.
+/// Used for per-chunk partial reductions (e.g. the assign op's combiner
+/// statistics, `eigh`'s panel dot products): the caller merges the
+/// returned vector sequentially, so the reduction order is independent of
+/// the thread count.
+///
+/// Nested calls run inline sequentially, like [`par_chunks_mut`].
 pub fn par_map_indexed<R, F>(n: usize, f: F) -> Vec<R>
 where
     R: Send,
     F: Fn(usize) -> R + Sync,
 {
-    let threads = max_threads().min(n.max(1));
-    if threads <= 1 || n <= 1 {
+    let shares = max_threads().min(n.max(1));
+    if shares <= 1 || n <= 1 {
         return (0..n).map(f).collect();
     }
     let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
     {
+        let ptr = SendPtr(slots.as_mut_ptr());
         let f = &f;
-        let mut buckets: Vec<Vec<(usize, &mut Option<R>)>> =
-            (0..threads).map(|_| Vec::new()).collect();
-        for (i, s) in slots.iter_mut().enumerate() {
-            buckets[i % threads].push((i, s));
-        }
-        std::thread::scope(|scope| {
-            let mut rest = buckets.into_iter();
-            let mine = rest.next();
-            for bucket in rest {
-                scope.spawn(move || {
-                    for (i, s) in bucket {
-                        *s = Some(f(i));
-                    }
-                });
+        let run_share = move |share: usize| {
+            let mut i = share;
+            while i < n {
+                // SAFETY: slot i is written exactly once, by share
+                // i % shares; the old value is None (nothing to drop) and
+                // `broadcast`'s completion barrier orders the writes
+                // before the collect below.
+                unsafe { ptr.0.add(i).write(Some(f(i))) };
+                i += shares;
             }
-            if let Some(bucket) = mine {
-                for (i, s) in bucket {
-                    *s = Some(f(i));
-                }
-            }
-        });
+        };
+        pool::broadcast(shares, &run_share);
     }
     slots.into_iter().map(|s| s.expect("parallel slot filled")).collect()
 }
@@ -197,7 +241,7 @@ mod tests {
     #[test]
     fn identical_results_across_thread_counts() {
         set_threads(3);
-        assert_eq!(max_threads(), 3);
+        assert!(max_threads() == 3 || in_sequential_scope());
         let run = |threads: usize| -> Vec<f64> {
             set_threads(threads);
             let mut data = vec![0.0f64; 4096];
@@ -224,5 +268,45 @@ mod tests {
         let c = chunk_rows(10_000, 256);
         assert!(c >= 1 && c <= 10_000);
         assert_eq!(c, (1 << 18) / 256);
+    }
+
+    #[test]
+    fn sequential_scope_forces_inline_execution() {
+        // inside the guard, max_threads is pinned to 1 no matter what the
+        // global override says, and parallel entry points run inline on
+        // the calling thread
+        sequential_scope(|| {
+            assert_eq!(max_threads(), 1);
+            let caller = std::thread::current().id();
+            let mut data = vec![0u8; 1024];
+            par_chunks_mut(&mut data, 8, |_, chunk| {
+                assert_eq!(std::thread::current().id(), caller);
+                chunk[0] = 1;
+            });
+            assert_eq!(data.iter().filter(|&&v| v == 1).count(), 128);
+            let ids = par_map_indexed(16, |_| std::thread::current().id());
+            assert!(ids.iter().all(|id| *id == caller));
+        });
+    }
+
+    #[test]
+    fn pool_reused_not_respawned() {
+        // warm the pool, then check repeated parallel calls bump the job
+        // counter without growing the worker set beyond what this job
+        // shape needs (other tests may run concurrently, so only
+        // monotone/relative assertions are safe)
+        let mut data = vec![0u64; 1 << 12];
+        par_chunks_mut(&mut data, 16, |i, c| c.iter_mut().for_each(|v| *v = i as u64));
+        let warm = pool_stats();
+        for _ in 0..5 {
+            par_chunks_mut(&mut data, 16, |i, c| c.iter_mut().for_each(|v| *v += i as u64));
+        }
+        let after = pool_stats();
+        // jobs flow through the persistent pool... (threads may be pinned
+        // to 1 by a racing set_threads(1); then no job is submitted, which
+        // the >= handles)
+        assert!(after.jobs_run >= warm.jobs_run);
+        assert!(after.workers_spawned >= warm.workers_spawned);
+        assert!(after.workers_spawned <= MAX_POOL_WORKERS);
     }
 }

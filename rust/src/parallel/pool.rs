@@ -1,0 +1,385 @@
+//! The persistent worker pool behind [`par_chunks_mut`] and
+//! [`par_map_indexed`] (parallel substrate v2 — see `ARCHITECTURE.md` at
+//! the repo root for where this sits in the system).
+//!
+//! [`par_chunks_mut`]: super::par_chunks_mut
+//! [`par_map_indexed`]: super::par_map_indexed
+//!
+//! PR 1's substrate spawned scoped threads on every parallel call. The
+//! ~256k-op chunk floor amortized that, but on the `eigh` hot path — a few
+//! thousand small parallel regions per decomposition — per-call spawn cost
+//! dominates. This module keeps a process-wide set of parked worker
+//! threads and hands them *jobs* through a generation-stamped slot:
+//!
+//! * **Lazy + growing.** No thread exists until the first parallel region
+//!   runs. The pool grows on demand up to `requested_shares - 1` workers
+//!   (capped at [`MAX_POOL_WORKERS`]) and never shrinks; the submitting
+//!   thread always doubles as worker 0, so a pool of `t - 1` threads
+//!   serves `t`-way regions.
+//! * **Generation-stamped job slot.** A job is a type-erased
+//!   `&(dyn Fn(share) + Sync)` published under a mutex together with a
+//!   monotonically increasing generation number. Workers park on a condvar
+//!   and run the job when they observe a new generation with their index
+//!   in range; the submitter blocks until every participating worker has
+//!   checked back in, which is also what makes lending a stack-lifetime
+//!   closure to the (detached) workers sound.
+//! * **One job at a time.** A second thread submitting concurrently parks
+//!   on the submit lock until the slot frees. Combined with the
+//!   nested-parallelism guard below, a thread that is already *inside* a
+//!   job never submits — nested parallel calls run inline — so the slot
+//!   cannot deadlock on itself.
+//! * **Panic containment.** A panicking job share is caught on the worker,
+//!   recorded in the slot, and re-thrown on the submitting thread after
+//!   the region completes; the worker thread itself survives and the pool
+//!   stays usable.
+//!
+//! Determinism is unaffected by any of this: which thread runs a share is
+//! irrelevant because share→chunk assignment is fixed by the problem
+//! shape (see the [`super`] module docs).
+
+use std::cell::Cell;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// Hard ceiling on pool threads, far above any sane `--threads` value;
+/// shares beyond what the pool covers run on the submitting thread.
+pub const MAX_POOL_WORKERS: usize = 256;
+
+thread_local! {
+    /// True while this thread is executing inside a parallel region (a
+    /// pool worker share or the submitter's own share) or inside an
+    /// explicit [`sequential_scope`].
+    static SEQUENTIAL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True when parallel entry points on this thread must run inline: either
+/// an enclosing [`sequential_scope`] is active (e.g. a MapReduce engine
+/// worker) or this thread is already executing a pool job share.
+pub fn in_sequential_scope() -> bool {
+    SEQUENTIAL.with(|s| s.get())
+}
+
+/// RAII guard: marks the current thread sequential, restoring the
+/// previous state on drop (unwind-safe).
+struct ScopeGuard {
+    prev: bool,
+}
+
+impl ScopeGuard {
+    fn enter() -> ScopeGuard {
+        ScopeGuard { prev: SEQUENTIAL.with(|s| s.replace(true)) }
+    }
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        SEQUENTIAL.with(|s| s.set(prev));
+    }
+}
+
+/// Run `f` with the parallel substrate forced sequential on this thread:
+/// every [`par_chunks_mut`] / [`par_map_indexed`] call made from inside
+/// `f` (transitively, on this thread) runs inline instead of fanning out.
+///
+/// [`par_chunks_mut`]: super::par_chunks_mut
+/// [`par_map_indexed`]: super::par_map_indexed
+///
+/// This is the nested-parallelism guard: the MapReduce engine wraps map
+/// and reduce task execution in it whenever more than one engine worker
+/// is live, so `workers` map tasks each computing a parallel kernel block
+/// don't oversubscribe the machine `workers × threads`-fold (and cannot
+/// deadlock the single-job pool). The guard is thread-local and does
+/// **not** propagate to threads spawned inside `f`.
+///
+/// Results are unaffected by construction: the substrate is bit-identical
+/// for any thread count, including 1.
+pub fn sequential_scope<R>(f: impl FnOnce() -> R) -> R {
+    let _guard = ScopeGuard::enter();
+    f()
+}
+
+/// Type-erased pointer to a job closure. The `'static` lifetime is a lie
+/// told to the type system only: `broadcast` blocks until every worker
+/// has finished with the pointer, so it never outlives the real closure.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync + 'static));
+
+// SAFETY: the pointee is Sync (shared-callable from many threads) and
+// broadcast's completion barrier bounds its lifetime.
+unsafe impl Send for JobPtr {}
+
+/// The job slot workers poll. `generation` only ever increases; a worker
+/// participates in generation `g` iff its index is below the `active`
+/// count published with `g`.
+struct Slot {
+    generation: u64,
+    job: Option<JobPtr>,
+    /// pool workers participating in the current generation
+    active: usize,
+    /// participating workers that have not yet checked back in
+    remaining: usize,
+    /// first panic payload caught on a worker during this generation
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    /// workers park here waiting for a new generation
+    work: Condvar,
+    /// the submitter parks here waiting for `remaining == 0`
+    done: Condvar,
+}
+
+struct Pool {
+    shared: &'static Shared,
+    /// serializes submitters; the guarded value is the spawned-worker count
+    submit: Mutex<usize>,
+    /// completed jobs (== generations ever published), for introspection
+    jobs: AtomicU64,
+    /// spawned workers, readable without the submit lock
+    spawned: AtomicUsize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| Pool {
+        shared: Box::leak(Box::new(Shared {
+            slot: Mutex::new(Slot {
+                generation: 0,
+                job: None,
+                active: 0,
+                remaining: 0,
+                panic: None,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        })),
+        submit: Mutex::new(0),
+        jobs: AtomicU64::new(0),
+        spawned: AtomicUsize::new(0),
+    })
+}
+
+/// Snapshot of the pool's lifetime counters (see [`pool_stats`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolStats {
+    /// worker threads ever spawned (the pool never shrinks)
+    pub workers_spawned: usize,
+    /// parallel jobs ever broadcast through the slot
+    pub jobs_run: u64,
+}
+
+/// Lifetime counters of the process-wide pool. `workers_spawned` staying
+/// flat while `jobs_run` grows is the observable form of the "pool is
+/// reused across calls, no per-call spawn" contract that
+/// `rust/tests/eigh_parity.rs` pins down.
+pub fn pool_stats() -> PoolStats {
+    match POOL.get() {
+        None => PoolStats { workers_spawned: 0, jobs_run: 0 },
+        Some(p) => PoolStats {
+            workers_spawned: p.spawned.load(Ordering::Relaxed),
+            jobs_run: p.jobs.load(Ordering::Relaxed),
+        },
+    }
+}
+
+/// Body of pool worker `w`: park until a generation arrives that includes
+/// this worker, run share `w + 1` (the submitter is share 0), check back
+/// in, repeat forever. Panics in the share are caught and forwarded.
+fn worker_loop(shared: &'static Shared, w: usize) {
+    // Everything a worker runs is already inside a parallel region;
+    // nested parallel calls from job closures must run inline.
+    SEQUENTIAL.with(|s| s.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if slot.generation != seen {
+                    seen = slot.generation;
+                    if w < slot.active {
+                        break slot.job.expect("active generation carries a job");
+                    }
+                    // not participating in this generation; keep waiting
+                }
+                slot = shared.work.wait(slot).unwrap();
+            }
+        };
+        // SAFETY: the submitter keeps the closure alive (and the slot
+        // occupied) until `remaining` drops to zero, which happens below.
+        let f = unsafe { &*job.0 };
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| f(w + 1)));
+        let mut slot = shared.slot.lock().unwrap();
+        if let Err(payload) = result {
+            slot.panic.get_or_insert(payload);
+        }
+        slot.remaining -= 1;
+        if slot.remaining == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Run `f(0), f(1), ..., f(shares - 1)`, each exactly once, distributed
+/// over the pool: the calling thread runs share 0 (plus any shares the
+/// pool cannot cover), pool worker `w` runs share `w + 1`. Blocks until
+/// every share has finished; re-throws the first panic of any share.
+/// Which thread runs which share is unspecified — callers must make
+/// share→work assignment a pure function of the problem shape.
+pub(crate) fn broadcast(shares: usize, f: &(dyn Fn(usize) + Sync)) {
+    debug_assert!(shares >= 2, "broadcast needs >= 2 shares; run inline instead");
+    let pool = pool();
+    // Serialize submitters. Holding this lock for the whole job also
+    // means the slot below is exclusively ours.
+    let mut spawned = pool.submit.lock().unwrap();
+    let want = (shares - 1).min(MAX_POOL_WORKERS);
+    while *spawned < want {
+        let shared = pool.shared;
+        let w = *spawned;
+        let res = std::thread::Builder::new()
+            .name(format!("apnc-pool-{w}"))
+            .spawn(move || worker_loop(shared, w));
+        if res.is_err() {
+            break; // resource-limited: leftovers run on this thread
+        }
+        *spawned += 1;
+        pool.spawned.store(*spawned, Ordering::Relaxed);
+    }
+    let workers = want.min(*spawned);
+    if workers == 0 {
+        // no thread could ever be spawned: run the whole job inline
+        let _guard = ScopeGuard::enter();
+        for s in 0..shares {
+            f(s);
+        }
+        return;
+    }
+    // Publish the job. SAFETY of the transmute: fat reference -> fat raw
+    // pointer of identical layout, erasing only the lifetime; the
+    // completion wait below outlives every dereference.
+    let job = JobPtr(unsafe {
+        std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync + 'static)>(f)
+    });
+    {
+        let mut slot = pool.shared.slot.lock().unwrap();
+        slot.generation += 1;
+        slot.job = Some(job);
+        slot.active = workers;
+        slot.remaining = workers;
+        slot.panic = None;
+        pool.shared.work.notify_all();
+    }
+    // Run our own share(s) — share 0, plus any beyond the pool's reach —
+    // with the nested guard up, catching panics so the completion barrier
+    // below always runs (workers still hold the closure pointer).
+    let own = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        let _guard = ScopeGuard::enter();
+        f(0);
+        for s in (workers + 1)..shares {
+            f(s);
+        }
+    }));
+    let worker_panic = {
+        let mut slot = pool.shared.slot.lock().unwrap();
+        while slot.remaining != 0 {
+            slot = pool.shared.done.wait(slot).unwrap();
+        }
+        slot.job = None;
+        // workers spawned later must not mistake this finished generation
+        // for one that includes them
+        slot.active = 0;
+        slot.panic.take()
+    };
+    pool.jobs.fetch_add(1, Ordering::Relaxed);
+    drop(spawned); // release the submit lock before unwinding
+    if let Err(payload) = own {
+        std::panic::resume_unwind(payload);
+    }
+    if let Some(payload) = worker_panic {
+        std::panic::resume_unwind(payload);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn broadcast_runs_every_share_once() {
+        let hits: Vec<AtomicUsize> = (0..11).map(|_| AtomicUsize::new(0)).collect();
+        broadcast(11, &|s| {
+            hits[s].fetch_add(1, Ordering::Relaxed);
+        });
+        for (s, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "share {s}");
+        }
+    }
+
+    #[test]
+    fn pool_is_reused_across_jobs() {
+        broadcast(3, &|_| {});
+        let before = pool_stats();
+        assert!(before.workers_spawned >= 2);
+        for _ in 0..4 {
+            broadcast(3, &|_| {});
+        }
+        let after = pool_stats();
+        assert!(after.jobs_run >= before.jobs_run + 4);
+        // other tests may grow the pool concurrently, but 3-share jobs
+        // themselves never spawn beyond 2 workers
+        assert!(after.workers_spawned >= before.workers_spawned);
+    }
+
+    #[test]
+    fn nested_broadcast_from_share_runs_inline() {
+        // a share that starts a nested parallel region must not submit to
+        // the (busy) slot; the guard routes it inline
+        let inner: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        broadcast(2, &|s| {
+            assert!(in_sequential_scope(), "share {s} not marked sequential");
+            if s == 0 {
+                super::super::par_map_indexed(4, |i| {
+                    inner[i].fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        for h in &inner {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn panicking_share_propagates_and_pool_survives() {
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            broadcast(4, &|s| {
+                if s == 3 {
+                    panic!("boom in share 3");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "share panic must reach the submitter");
+        // the pool still works afterwards
+        let ran = AtomicUsize::new(0);
+        broadcast(4, &|_| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn sequential_scope_restores_state() {
+        assert!(!in_sequential_scope());
+        let out = sequential_scope(|| {
+            assert!(in_sequential_scope());
+            sequential_scope(|| assert!(in_sequential_scope()));
+            assert!(in_sequential_scope());
+            7
+        });
+        assert_eq!(out, 7);
+        assert!(!in_sequential_scope());
+    }
+}

@@ -8,9 +8,13 @@
 //! [`Kernel::apply_f32`]).
 //!
 //! All three ops are tiled over row chunks and run on the shared parallel
-//! core ([`crate::parallel`]). Chunk shapes depend only on the problem
-//! size and partial reductions merge in chunk order, so outputs are
-//! bit-identical for any thread count.
+//! core ([`crate::parallel`], a persistent worker pool). Chunk shapes
+//! depend only on the problem size and partial reductions merge in chunk
+//! order, so outputs are bit-identical for any thread count. When these
+//! ops are invoked from multi-worker MapReduce map tasks, the engine's
+//! nested-parallelism guard ([`crate::parallel::sequential_scope`]) runs
+//! them inline on the worker thread — same bytes, no `workers × threads`
+//! oversubscription.
 
 use super::{AssignOut, DistKind};
 use crate::kernels::Kernel;

@@ -1,0 +1,154 @@
+//! Determinism + pool-lifecycle contract for the parallel `eigh` and the
+//! persistent worker pool (parallel substrate v2).
+//!
+//! (1) `linalg::eigh` must be **bit-identical** across thread counts —
+//! its Householder panels, Q accumulation, and QL rotation batches all
+//! reduce in fixed chunk order. (2) The pool must be *reused* across
+//! repeated `eigh`/`gram` calls (jobs flow, worker set stays bounded)
+//! while staying deterministic. (3) Reference/kernel ops invoked from
+//! multi-worker MapReduce map tasks must run under the
+//! nested-parallelism guard: sequential (`max_threads() == 1`), same
+//! bytes, no deadlock against the single-job pool.
+//!
+//! NOTE on the global thread override: `parallel::set_threads` is
+//! process-wide, so every test that flips it serializes on
+//! `THREADS_LOCK`. Tests that only rely on the guard (which pins the
+//! thread count regardless of the override) don't need the lock.
+
+use std::sync::Mutex;
+
+use apnc::kernels::Kernel;
+use apnc::linalg::{eigh, Eigh, Matrix};
+use apnc::mapreduce::{Engine, EngineConfig};
+use apnc::parallel;
+use apnc::rng::Pcg;
+
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+fn random_spd(n: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg::seeded(seed);
+    let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+    let mut a = b.matmul_nt(&b);
+    for i in 0..n {
+        a[(i, i)] += 1.0;
+    }
+    a
+}
+
+fn eigh_bits(e: &Eigh) -> (Vec<u64>, Vec<u64>) {
+    (
+        e.values.iter().map(|v| v.to_bits()).collect(),
+        e.vectors.data().iter().map(|v| v.to_bits()).collect(),
+    )
+}
+
+#[test]
+fn eigh_bit_identical_across_thread_counts() {
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    // n large enough that tred2's panels, the Q accumulation, and tql2's
+    // rotation batches all span several chunks (the parallel path must
+    // actually engage for threads > 1)
+    let a = random_spd(768, 7001);
+    let run = |threads: usize| {
+        parallel::set_threads(threads);
+        let e = eigh(&a);
+        parallel::set_threads(0);
+        e
+    };
+    let base = eigh_bits(&run(1));
+    for t in [2, 7, 8] {
+        let got = eigh_bits(&run(t));
+        assert_eq!(got.0, base.0, "eigenvalues differ, threads={t}");
+        assert_eq!(got.1, base.1, "eigenvectors differ, threads={t}");
+    }
+}
+
+#[test]
+fn pool_survives_repeated_eigh_and_gram_calls() {
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    parallel::set_threads(4);
+    let a = random_spd(768, 7002);
+    let mut rng = Pcg::seeded(7003);
+    let pts: Vec<f32> = (0..512 * 8).map(|_| rng.normal() as f32).collect();
+    let kernel = Kernel::Rbf { gamma: 0.2 };
+
+    let e0 = eigh_bits(&eigh(&a));
+    let g0: Vec<u64> = kernel.gram(&pts, 8).data().iter().map(|v| v.to_bits()).collect();
+    let warm = parallel::pool_stats();
+    assert!(warm.jobs_run > 0, "sized to engage the pool at 4 threads");
+    assert!(warm.workers_spawned >= 1);
+
+    // repeated calls reuse the pool (no per-call spawn) and stay
+    // bit-deterministic, also when the thread count changes in between
+    for t in [4usize, 2, 7, 4] {
+        parallel::set_threads(t);
+        let e = eigh_bits(&eigh(&a));
+        assert_eq!(e, e0, "eigh drifted on reuse, threads={t}");
+        let g: Vec<u64> = kernel.gram(&pts, 8).data().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(g, g0, "gram drifted on reuse, threads={t}");
+    }
+    let after = parallel::pool_stats();
+    assert!(after.jobs_run > warm.jobs_run, "jobs must flow through the persistent pool");
+    assert!(
+        after.workers_spawned <= warm.workers_spawned.max(6),
+        "pool grew past what 7 threads need: {} -> {}",
+        warm.workers_spawned,
+        after.workers_spawned
+    );
+    parallel::set_threads(0);
+}
+
+#[test]
+fn nested_engine_worker_calls_are_guarded_and_deterministic() {
+    // map tasks big enough that gram would fan out if unguarded; with
+    // several engine workers the guard must pin them to one thread, the
+    // job must complete (no deadlock against the single-job pool), and
+    // the bytes must match a single-worker run
+    let mut rng = Pcg::seeded(7004);
+    let blocks: Vec<Vec<f32>> = (0..6)
+        .map(|_| (0..300 * 6).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let kernel = Kernel::Rbf { gamma: 0.4 };
+    let run = |workers: usize| {
+        let engine = Engine::new(EngineConfig::with_workers(workers));
+        engine.run_map(&blocks, |_, block: &Vec<f32>, _ctx| {
+            let g = kernel.gram(block, 6);
+            let checksum: f64 = g.data().iter().sum();
+            (parallel::max_threads(), checksum.to_bits())
+        })
+    };
+    let multi = run(4);
+    for (i, (threads_seen, _)) in multi.outputs.iter().enumerate() {
+        assert_eq!(*threads_seen, 1, "map task {i} not guarded under 4 workers");
+    }
+    let single = run(1);
+    let multi_sums: Vec<u64> = multi.outputs.iter().map(|(_, s)| *s).collect();
+    let single_sums: Vec<u64> = single.outputs.iter().map(|(_, s)| *s).collect();
+    assert_eq!(multi_sums, single_sums, "guarded vs unguarded bytes differ");
+}
+
+#[test]
+fn single_reducer_keeps_the_pool() {
+    // the Property-4.3 coefficient reducer is the one task allowed to fan
+    // out: with a single reduce group the engine must NOT guard it
+    use apnc::mapreduce::{Emitter, Job, TaskCtx};
+    struct OneGroup;
+    impl Job for OneGroup {
+        type Input = u32;
+        type Key = u8;
+        type Value = u32;
+        type Output = usize;
+        fn map(&self, _id: usize, input: &u32, _ctx: &mut TaskCtx, emit: &mut Emitter<u8, u32>) {
+            emit.emit(0, *input);
+        }
+        fn reduce(&self, _key: u8, _values: Vec<u32>, _ctx: &mut TaskCtx) -> usize {
+            // not wrapped in sequential_scope => sees the global setting
+            apnc::parallel::max_threads()
+        }
+    }
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    parallel::set_threads(5);
+    let run = Engine::new(EngineConfig::with_workers(4)).run(&OneGroup, &[1u32, 2, 3, 4]);
+    parallel::set_threads(0);
+    assert_eq!(run.outputs, vec![5], "lone reducer must keep full pool access");
+}
