@@ -4,7 +4,8 @@
 #   make test        — tier-1 tests (cargo test -q)
 #   make doc         — rustdoc gate: cargo doc --no-deps with warnings
 #                      denied (broken intra-doc links fail the build)
-#   make verify      — build + test + doc
+#   make lint        — cargo fmt --check + clippy --all-targets -D warnings
+#   make verify      — build + test + doc + lint
 #   make bench-json  — regenerate $(BENCH_OUT) from the perf trajectory
 #                      suites (kernels, linalg, pipeline); records are
 #                      JSON-lines appended by each suite
@@ -14,7 +15,7 @@ CARGO   ?= cargo
 MANIFEST = rust/Cargo.toml
 BENCH_OUT ?= BENCH_PR2.json
 
-.PHONY: build test doc verify bench-json
+.PHONY: build test doc lint verify bench-json
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -25,7 +26,11 @@ test:
 doc:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --manifest-path $(MANIFEST)
 
-verify: build test doc
+lint:
+	$(CARGO) fmt --manifest-path $(MANIFEST) -- --check
+	$(CARGO) clippy --all-targets --manifest-path $(MANIFEST) -- -D warnings
+
+verify: build test doc lint
 
 # cargo bench runs the bench binaries with cwd = the package root
 # (rust/), so hand them an absolute path or the records land in

@@ -26,17 +26,16 @@ fn main() -> anyhow::Result<()> {
     println!("compute backend: {}\n", if compute.is_pjrt() { "PJRT artifacts" } else { "rust reference" });
 
     for method in [Method::Nystrom, Method::StableDist] {
-        let cfg = PipelineConfig {
-            method,
-            l: 256,
-            m: 256,
-            workers: 8,
-            block_rows: 1024,
-            max_iters: 20,
-            sample_mode: SampleMode::Exact,
-            seed: 11,
-            ..Default::default()
-        };
+        let cfg = PipelineConfig::builder()
+            .method(method)
+            .l(256)
+            .m(256)
+            .workers(8)
+            .block_rows(1024)
+            .max_iters(20)
+            .sample_mode(SampleMode::Exact)
+            .seed(11)
+            .build()?;
         let out = Pipeline::with_compute(cfg, compute.clone()).run(&ds)?;
         println!("{:<9} NMI = {:.4}  purity = {:.4}  ({} iters)", method.label(), out.nmi, out.purity, out.iters_run);
         println!(

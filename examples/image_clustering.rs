@@ -45,18 +45,17 @@ fn main() -> anyhow::Result<()> {
 
     // APNC family
     for method in [Method::Nystrom, Method::StableDist, Method::EnsembleNystrom] {
-        let cfg = PipelineConfig {
-            method,
-            l,
-            m: 256,
-            ensemble_q: 4,
-            workers: 8,
-            max_iters: 20,
-            sample_mode: SampleMode::Exact,
-            kernel: Some(kernel),
-            seed: 5,
-            ..Default::default()
-        };
+        let cfg = PipelineConfig::builder()
+            .method(method)
+            .l(l)
+            .m(256)
+            .ensemble_q(4)
+            .workers(8)
+            .max_iters(20)
+            .sample_mode(SampleMode::Exact)
+            .kernel(kernel)
+            .seed(5)
+            .build()?;
         let out = Pipeline::with_compute(cfg, compute.clone()).run(&ds)?;
         println!(
             "{:<10} NMI = {:.4}   (embed {:.2?} + cluster {:.2?}, m = {})",

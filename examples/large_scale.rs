@@ -37,18 +37,17 @@ fn main() -> anyhow::Result<()> {
     );
 
     for method in [Method::Nystrom, Method::StableDist] {
-        let cfg = PipelineConfig {
-            method,
-            l,
-            m,
-            workers: nodes,
-            block_rows: 1024,
-            max_iters: 20,
-            tol: 0.0,
-            sample_mode: SampleMode::Exact,
-            seed: 31,
-            ..Default::default()
-        };
+        let cfg = PipelineConfig::builder()
+            .method(method)
+            .l(l)
+            .m(m)
+            .workers(nodes)
+            .block_rows(1024)
+            .max_iters(20)
+            .tol(0.0)
+            .sample_mode(SampleMode::Exact)
+            .seed(31)
+            .build()?;
         let t0 = std::time::Instant::now();
         let out = Pipeline::with_compute(cfg, compute.clone()).run(&ds)?;
         let total = t0.elapsed();

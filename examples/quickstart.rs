@@ -1,9 +1,13 @@
-//! Quickstart: the paper's motivating story in one binary.
+//! Quickstart: the paper's motivating story in one binary, plus the
+//! train/serve split.
 //!
 //! Concentric rings are the canonical dataset plain k-means cannot
-//! cluster. We run (1) plain k-means in input space, and (2) the APNC
+//! cluster. We run (1) plain k-means in input space, (2) the APNC
 //! kernel-k-means pipeline (sample → Nyström coefficients → MapReduce
-//! embedding → MapReduce Lloyd), and print both NMIs.
+//! embedding → MapReduce Lloyd), and then (3) the serving path: fit a
+//! model, save it, reload it, and predict out-of-sample — bit-identical
+//! to the batch labels, because embedding a point needs only kernel
+//! evaluations against the fitted sample set (Property 4.2).
 //!
 //!     cargo run --release --example quickstart
 //!
@@ -15,6 +19,7 @@ use apnc::coordinator::driver::{Pipeline, PipelineConfig};
 use apnc::data::registry;
 use apnc::embedding::Method;
 use apnc::metrics::nmi;
+use apnc::model::ApncModel;
 use apnc::runtime::Compute;
 
 fn main() -> anyhow::Result<()> {
@@ -34,16 +39,17 @@ fn main() -> anyhow::Result<()> {
     // 2. APNC kernel k-means on the simulated MapReduce cluster
     let compute = Compute::auto(&Compute::default_artifact_dir());
     println!("compute backend: {}", if compute.is_pjrt() { "PJRT artifacts" } else { "rust reference" });
-    let cfg = PipelineConfig {
-        method: Method::Nystrom,
-        l: 128,
-        m: 128,
-        workers: 4,
-        restarts: 3,
-        seed: 7,
-        ..Default::default()
-    };
-    let out = Pipeline::with_compute(cfg, compute).run(&ds)?;
+    let cfg = PipelineConfig::builder()
+        .method(Method::Nystrom)
+        .l(128)
+        .m(128)
+        .workers(4)
+        .restarts(3)
+        .seed(7)
+        .build()?;
+    let pipeline = Pipeline::with_compute(cfg, compute);
+    // run_fitted = batch clustering + the servable model, from one fit
+    let (model, out) = pipeline.run_fitted(&ds)?;
     println!(
         "APNC-Nys kernel kk NMI = {:.3}   (l = {}, m = {}, {} Lloyd iterations)",
         out.nmi, out.l_actual, out.m_actual, out.iters_run
@@ -60,6 +66,26 @@ fn main() -> anyhow::Result<()> {
         out.iters_run
     );
     assert!(out.nmi > km_nmi, "kernel clustering should beat plain k-means here");
+
+    // 3. the train/serve split: save → load → predict. Prediction
+    //    re-embeds each point from (L, R) alone (Property 4.2).
+    let path = std::env::temp_dir().join(format!("apnc-quickstart-{}.apncm", std::process::id()));
+    model.save(&path)?;
+    let served = ApncModel::load(&path)?;
+    std::fs::remove_file(&path).ok();
+    let predicted = served.predict_batch(&ds.x, 0)?;
+    assert_eq!(
+        predicted, out.labels,
+        "a saved + reloaded model must reproduce the batch labels bit-for-bit"
+    );
+    println!(
+        "serving path OK: saved model ({} samples, m = {}) reloaded and re-predicted \
+         all {} points identically",
+        served.l(),
+        served.m(),
+        ds.n
+    );
+
     println!("\nquickstart OK: APNC ({:.3}) > k-means ({km_nmi:.3})", out.nmi);
     Ok(())
 }

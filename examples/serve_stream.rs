@@ -1,0 +1,108 @@
+//! Sustained many-client serving through the train/serve split.
+//!
+//! The production story the ROADMAP's north star asks for, end to end:
+//!
+//! 1. **fit** an APNC model on a registry dataset (sample → Nyström
+//!    coefficients → MapReduce embedding → Lloyd centroids),
+//! 2. **save** it to the versioned binary model format,
+//! 3. **load** it into a *fresh* [`ApncModel`] (as a serving process
+//!    would), and
+//! 4. drive sustained batched prediction from many concurrent clients
+//!    through the cloneable [`ModelHandle`] — the same channel pattern the
+//!    PJRT service uses, so the non-`Sync` compute backend lives on one
+//!    thread while any number of clients submit.
+//!
+//! Every response is asserted bit-identical to in-memory
+//! `predict_batch` on the originally fitted model: the determinism
+//! contract (identical output for any thread count, worker count, chunk
+//! size, or client interleaving) extends to the serving path.
+//!
+//!     cargo run --release --example serve_stream \
+//!         [-- --n 4000 --clients 4 --rounds 6 --batch-rows 256 --threads 0]
+
+use std::time::Instant;
+
+use apnc::cli::Args;
+use apnc::coordinator::driver::{Pipeline, PipelineConfig};
+use apnc::data::registry;
+use apnc::embedding::Method;
+use apnc::model::serve::drive_clients;
+use apnc::model::ApncModel;
+use apnc::runtime::Compute;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let n = args.usize_or("n", 4_000)?;
+    let clients = args.usize_or("clients", 4)?.max(1);
+    let rounds = args.usize_or("rounds", 6)?.max(1);
+    let batch_rows = args.usize_or("batch-rows", 256)?.max(1);
+    let threads = args.usize_or("threads", 0)?;
+
+    // ---- 1. fit ---------------------------------------------------------
+    let ds = registry::generate("rings", n, 7);
+    let compute = Compute::auto(&Compute::default_artifact_dir());
+    println!(
+        "fit: {} (n = {}, d = {}, k = {}) on backend {}",
+        ds.name,
+        ds.n,
+        ds.d,
+        ds.k,
+        if compute.is_pjrt() { "pjrt" } else { "reference" }
+    );
+    let cfg = PipelineConfig::builder()
+        .method(Method::Nystrom)
+        .l(96)
+        .m(64)
+        .workers(4)
+        .restarts(2)
+        .threads(threads)
+        .seed(7)
+        .build()?;
+    let (model, report) = Pipeline::with_compute(cfg, compute.clone()).fit(&ds)?;
+    println!(
+        "fitted: l = {}, m = {}, k = {} in {} Lloyd iterations ({:.2?} total)",
+        model.l(),
+        model.m(),
+        model.k(),
+        report.iters_run,
+        report.times.total()
+    );
+
+    // ---- 2. save + 3. load into a fresh model ---------------------------
+    let path = std::env::temp_dir().join(format!("apnc-serve-stream-{}.apncm", std::process::id()));
+    model.save(&path)?;
+    let bytes = std::fs::metadata(&path)?.len();
+    let served = ApncModel::load_with(&path, compute)?;
+    std::fs::remove_file(&path).ok();
+    println!("model round-trip: {bytes} bytes on disk");
+
+    // oracle: in-memory batched prediction on the *originally fitted* model
+    let want = model.predict_batch(&ds.x, batch_rows)?;
+
+    // ---- 4. concurrent batched serving ----------------------------------
+    // each client sweeps every batch slice `rounds` times at its own
+    // round-robin offset, so requests from different clients interleave
+    // arbitrarily; drive_clients asserts every response bit-identical to
+    // the in-memory oracle
+    let handle = served.serve()?;
+    let n_slices = ds.n.div_ceil(batch_rows);
+    let requests = rounds * n_slices;
+    let t0 = Instant::now();
+    let total_rows = drive_clients(&handle, &ds.x, ds.d, &want, clients, requests, batch_rows);
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "served {} batches from {} clients: {} rows in {:.2}s ({:.0} rows/s)",
+        clients * requests,
+        clients,
+        total_rows,
+        secs,
+        total_rows as f64 / secs.max(1e-9)
+    );
+    println!(
+        "every response bit-identical to in-memory prediction (threads = {}, any value \
+         gives the same labels)",
+        if threads == 0 { "auto".to_string() } else { threads.to_string() }
+    );
+    println!("\nserve_stream OK");
+    Ok(())
+}

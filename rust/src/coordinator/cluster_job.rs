@@ -66,6 +66,19 @@ pub struct ClusterOut {
     pub metrics: JobMetrics,
 }
 
+/// Result of the Lloyd iterations alone (no final labeling pass) — the
+/// centroids are what the serving path persists in an
+/// [`crate::model::ApncModel`]; labels come from a separate
+/// [`assign_labels`] pass (batch self-prediction).
+pub struct LloydOut {
+    /// (k, m) final centroid embeddings
+    pub centroids: Vec<f32>,
+    /// objective value per iteration (masked sum of min distances)
+    pub obj_curve: Vec<f64>,
+    pub iters_run: usize,
+    pub metrics: JobMetrics,
+}
+
 /// One Lloyd iteration as a MapReduce job.
 struct IterJob<'a> {
     compute: &'a Compute,
@@ -213,7 +226,9 @@ pub fn init_centroids_kpp(
 }
 
 /// Run Algorithm 2 to convergence (or `max_iters`), with restarts: the
-/// attempt with the lowest final objective wins.
+/// attempt with the lowest final objective wins. Composes
+/// [`run_lloyd`] with a final [`assign_labels`] pass over the winning
+/// centroids.
 pub fn run(
     engine: &Engine,
     compute: &Compute,
@@ -222,11 +237,38 @@ pub fn run(
     dist: DistKind,
     cfg: &ClusterConfig,
 ) -> Result<ClusterOut> {
+    let lloyd = run_lloyd(engine, compute, blocks, m, dist, cfg)?;
+    let (labels, assign_metrics) =
+        assign_labels(engine, compute, blocks, m, dist, &lloyd.centroids, cfg.k)?;
+    let mut metrics = lloyd.metrics;
+    metrics.merge(&assign_metrics);
+    Ok(ClusterOut {
+        centroids: lloyd.centroids,
+        labels,
+        obj_curve: lloyd.obj_curve,
+        iters_run: lloyd.iters_run,
+        metrics,
+    })
+}
+
+/// Lloyd iterations with restarts, *without* the final labeling pass:
+/// the attempt with the lowest final objective wins. Used by
+/// [`crate::coordinator::driver::Pipeline::fit`], which persists the
+/// winning centroids in the model and leaves labeling to the prediction
+/// path.
+pub fn run_lloyd(
+    engine: &Engine,
+    compute: &Compute,
+    blocks: &[DataBlock],
+    m: usize,
+    dist: DistKind,
+    cfg: &ClusterConfig,
+) -> Result<LloydOut> {
     let restarts = cfg.restarts.max(1);
-    let mut best: Option<ClusterOut> = None;
+    let mut best: Option<LloydOut> = None;
     for attempt in 0..restarts {
         let seed = cfg.seed.wrapping_add(attempt as u64 * 0x9E37);
-        let mut out = run_once(engine, compute, blocks, m, dist, cfg, seed)?;
+        let mut out = lloyd_once(engine, compute, blocks, m, dist, cfg, seed)?;
         let better = match &best {
             None => true,
             Some(b) => {
@@ -247,7 +289,7 @@ pub fn run(
     Ok(best.expect("restarts >= 1"))
 }
 
-fn run_once(
+fn lloyd_once(
     engine: &Engine,
     compute: &Compute,
     blocks: &[DataBlock],
@@ -255,7 +297,7 @@ fn run_once(
     dist: DistKind,
     cfg: &ClusterConfig,
     seed: u64,
-) -> Result<ClusterOut> {
+) -> Result<LloydOut> {
     let k = cfg.k;
     let mut centroids = match cfg.init {
         Init::Random => init_centroids(blocks, m, k, seed),
@@ -291,23 +333,39 @@ fn run_once(
         }
     }
 
-    // final assignment pass (map-only; labels stay block-local like any
-    // MapReduce output written to the DFS)
+    Ok(LloydOut { centroids, obj_curve, iters_run, metrics })
+}
+
+/// Batch assignment of every block to its nearest centroid: the map-only
+/// final labeling pass (labels stay block-local like any MapReduce output
+/// written to the DFS). This is exactly the serving path's per-block
+/// prediction run as one MapReduce job — the batch self-prediction inside
+/// [`crate::coordinator::driver::Pipeline::run`] and
+/// [`crate::model::ApncModel::predict_batch`] produce bit-identical
+/// labels because every per-row result is independent of batching.
+pub fn assign_labels(
+    engine: &Engine,
+    compute: &Compute,
+    blocks: &[DataBlock],
+    m: usize,
+    dist: DistKind,
+    centroids: &[f32],
+    k: usize,
+) -> Result<(Vec<u32>, JobMetrics)> {
+    assert_eq!(centroids.len(), k * m, "centroid shape");
+    let mut metrics = JobMetrics::default();
     engine.broadcast_cost(&mut metrics, centroids.len() * 4);
-    let cent_ref = &centroids;
+    // each task carries its backend Result out of the engine, so a
+    // shape/ABI mismatch surfaces as an Err, not a worker panic
     let label_run = engine.run_map(blocks, |_id, block: &DataBlock, _ctx| {
-        compute
-            .assign(&block.x, block.rows, m, cent_ref, k, dist)
-            .expect("assign artifact execution failed")
-            .assign
+        compute.assign(&block.x, block.rows, m, centroids, k, dist).map(|out| out.assign)
     });
     metrics.merge(&label_run.metrics);
     let mut labels = Vec::with_capacity(blocks.iter().map(|b| b.rows).sum());
     for block_labels in label_run.outputs {
-        labels.extend(block_labels);
+        labels.extend(block_labels?);
     }
-
-    Ok(ClusterOut { centroids, labels, obj_curve, iters_run, metrics })
+    Ok((labels, metrics))
 }
 
 #[cfg(test)]

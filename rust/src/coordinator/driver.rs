@@ -1,9 +1,22 @@
 //! End-to-end pipeline driver: sample → fit coefficients → embed → cluster.
 //!
 //! This is the leader process of the system. It owns the engine (cluster
-//! shape), the compute backend (PJRT artifacts or the rust reference), the
-//! simulated DFS holding intermediate embeddings, and produces the full
-//! result record the experiment harnesses (tables 2/3) consume.
+//! shape), the compute backend (PJRT artifacts or the rust reference), and
+//! the simulated DFS holding intermediate embeddings. The public API is a
+//! train/serve split:
+//!
+//! * [`Pipeline::fit`] runs Algorithms 3/4 + 1 + the Lloyd iterations of
+//!   Algorithm 2 and returns a persistable [`ApncModel`] (coefficients +
+//!   final centroids + provenance) plus a [`FitReport`] with the fitted
+//!   embeddings and the full cost/timing record.
+//! * [`Pipeline::run`] is a thin composition: `fit` followed by batch
+//!   self-prediction (the final labeling pass of Algorithm 2) over the
+//!   fitted embeddings, producing the [`PipelineOutput`] record the
+//!   experiment harnesses (tables 2/3) consume.
+//!
+//! Configuration errors surface at construction through
+//! [`PipelineConfig::validate`] / [`PipelineConfig::builder`], not as
+//! mid-run failures.
 
 use std::time::{Duration, Instant};
 
@@ -17,6 +30,7 @@ use crate::data::Dataset;
 use crate::embedding::Method;
 use crate::kernels::Kernel;
 use crate::mapreduce::{dfs::Dfs, Engine, EngineConfig, FaultPlan, JobMetrics};
+use crate::model::{ApncModel, Provenance};
 use crate::rng::Pcg;
 use crate::runtime::Compute;
 use anyhow::{ensure, Result};
@@ -81,6 +95,112 @@ impl Default for PipelineConfig {
     }
 }
 
+impl PipelineConfig {
+    /// Start a builder pre-loaded with the defaults. [`PipelineConfigBuilder::build`]
+    /// validates, so a bad configuration is rejected at construction
+    /// instead of surfacing as a mid-run failure.
+    pub fn builder() -> PipelineConfigBuilder {
+        PipelineConfigBuilder { cfg: PipelineConfig::default() }
+    }
+
+    /// Check every dataset-independent invariant. [`Pipeline::fit`] (and
+    /// therefore [`Pipeline::run`]) calls this first; the builder calls it
+    /// at `build()`.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.l > 0, "config: l (sample count) must be >= 1");
+        ensure!(self.m > 0, "config: m (embedding dimensionality) must be >= 1");
+        ensure!(self.workers > 0, "config: workers must be >= 1");
+        ensure!(
+            self.t_frac > 0.0 && self.t_frac <= 1.0,
+            "config: t_frac must be in (0, 1], got {}",
+            self.t_frac
+        );
+        ensure!(self.dfs_replication > 0, "config: dfs_replication must be >= 1");
+        ensure!(self.block_rows > 0, "config: block_rows must be >= 1");
+        ensure!(self.ensemble_q > 0, "config: ensemble_q must be >= 1");
+        ensure!(self.max_iters > 0, "config: max_iters must be >= 1");
+        Ok(())
+    }
+}
+
+/// Non-breaking builder for [`PipelineConfig`]: chain setters over the
+/// defaults, then [`PipelineConfigBuilder::build`] validates up front.
+#[derive(Clone, Debug)]
+pub struct PipelineConfigBuilder {
+    cfg: PipelineConfig,
+}
+
+macro_rules! builder_setter {
+    ($(#[$doc:meta])* $name:ident: $ty:ty) => {
+        $(#[$doc])*
+        pub fn $name(mut self, v: $ty) -> Self {
+            self.cfg.$name = v;
+            self
+        }
+    };
+}
+
+impl PipelineConfigBuilder {
+    builder_setter!(method: Method);
+    builder_setter!(
+        /// target sample count l
+        l: usize
+    );
+    builder_setter!(
+        /// target embedding dimensionality m
+        m: usize
+    );
+    builder_setter!(
+        /// SD: t as a fraction of l (paper: 0.4); must be in (0, 1]
+        t_frac: f64
+    );
+    builder_setter!(
+        /// ensemble Nyström blocks
+        ensemble_q: usize
+    );
+    builder_setter!(
+        /// clusters; 0 = use the dataset's class count
+        k: usize
+    );
+    builder_setter!(max_iters: usize);
+    builder_setter!(
+        /// independent clustering restarts (lowest final objective wins)
+        restarts: usize
+    );
+    builder_setter!(tol: f64);
+    builder_setter!(
+        /// simulated cluster nodes
+        workers: usize
+    );
+    builder_setter!(
+        /// compute threads (0 = auto); outputs identical for any value
+        threads: usize
+    );
+    builder_setter!(
+        /// points per input split
+        block_rows: usize
+    );
+    builder_setter!(seed: u64);
+    builder_setter!(sample_mode: SampleMode);
+    builder_setter!(faults: FaultPlan);
+    builder_setter!(
+        /// DFS replication for intermediate embeddings
+        dfs_replication: usize
+    );
+
+    /// Override the dataset registry's kernel choice.
+    pub fn kernel(mut self, kernel: Kernel) -> Self {
+        self.cfg.kernel = Some(kernel);
+        self
+    }
+
+    /// Validate and produce the configuration.
+    pub fn build(self) -> Result<PipelineConfig> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+}
+
 /// Wall-clock of each phase.
 #[derive(Clone, Debug, Default)]
 pub struct PhaseTimes {
@@ -126,6 +246,28 @@ impl PipelineOutput {
     }
 }
 
+/// Everything [`Pipeline::fit`] measured while producing the model: the
+/// fitted embeddings (the DFS-resident intermediate Algorithm 1 wrote),
+/// the Lloyd objective curve, and the per-phase cost record. Together
+/// with the [`ApncModel`] this is the full fit-side state;
+/// [`Pipeline::run`] consumes it for batch self-prediction without
+/// re-embedding.
+pub struct FitReport {
+    /// embedding blocks aligned with the input splits (x = (rows, m))
+    pub embeddings: Vec<DataBlock>,
+    /// objective value per Lloyd iteration (winning restart)
+    pub obj_curve: Vec<f64>,
+    /// actual sample count drawn (Bernoulli mode: random around l)
+    pub l_actual: usize,
+    /// actual embedding dimensionality (Nyström caps at l)
+    pub m_actual: usize,
+    pub iters_run: usize,
+    pub times: PhaseTimes,
+    pub sample_metrics: JobMetrics,
+    pub embed_metrics: JobMetrics,
+    pub cluster_metrics: JobMetrics,
+}
+
 /// The pipeline: engine + compute backend bound to a config.
 pub struct Pipeline {
     pub config: PipelineConfig,
@@ -150,9 +292,14 @@ impl Pipeline {
         Pipeline { config, compute, engine }
     }
 
-    /// Run the full APNC pipeline on a dataset.
-    pub fn run(&self, ds: &Dataset) -> Result<PipelineOutput> {
+    /// Fit a servable [`ApncModel`] on a dataset: sample → coefficient fit
+    /// → embed → Lloyd iterations. No labeling pass runs here — the model
+    /// (with its final centroids) plus the [`FitReport`] (with the fitted
+    /// embeddings) carry everything the batch path and the serving path
+    /// need.
+    pub fn fit(&self, ds: &Dataset) -> Result<(ApncModel, FitReport)> {
         let cfg = &self.config;
+        cfg.validate()?;
         // unconditional: threads == 0 restores auto resolution, so a
         // previous run's explicit override never leaks into this one
         crate::parallel::set_threads(cfg.threads);
@@ -206,7 +353,7 @@ impl Pipeline {
         let embed_time = t1.elapsed();
         dfs.put("embeddings", embed_out.blocks.clone(), DataBlock::byte_size);
 
-        // ---- Algorithm 2: cluster the embeddings --------------------------
+        // ---- Algorithm 2: Lloyd iterations over the embeddings ------------
         let t2 = Instant::now();
         let cluster_cfg = ClusterConfig {
             k,
@@ -216,7 +363,7 @@ impl Pipeline {
             restarts: cfg.restarts,
             ..Default::default()
         };
-        let cluster_out = cluster_job::run(
+        let lloyd = cluster_job::run_lloyd(
             &self.engine,
             &self.compute,
             &embed_out.blocks,
@@ -226,19 +373,19 @@ impl Pipeline {
         )?;
         let cluster_time = t2.elapsed();
 
-        let nmi = crate::metrics::nmi(&cluster_out.labels, &ds.labels);
-        let ari = crate::metrics::ari(&cluster_out.labels, &ds.labels);
-        let purity = crate::metrics::purity(&cluster_out.labels, &ds.labels);
-
-        Ok(PipelineOutput {
-            labels: cluster_out.labels,
-            nmi,
-            ari,
-            purity,
-            obj_curve: cluster_out.obj_curve,
+        let model = ApncModel::from_parts(
+            coeffs,
+            lloyd.centroids,
+            k,
+            Provenance { dataset: ds.name.clone(), seed: cfg.seed },
+            self.compute.clone(),
+        )?;
+        let report = FitReport {
+            embeddings: embed_out.blocks,
+            obj_curve: lloyd.obj_curve,
             l_actual: sample_out.indices.len(),
             m_actual: embed_out.m,
-            iters_run: cluster_out.iters_run,
+            iters_run: lloyd.iters_run,
             times: PhaseTimes {
                 sample: sample_time,
                 coeff_fit: fit.fit_time,
@@ -247,8 +394,70 @@ impl Pipeline {
             },
             sample_metrics: sample_out.metrics,
             embed_metrics: embed_out.metrics,
-            cluster_metrics: cluster_out.metrics,
-        })
+            cluster_metrics: lloyd.metrics,
+        };
+        Ok((model, report))
+    }
+
+    /// Run the full APNC pipeline on a dataset: [`Pipeline::fit`] followed
+    /// by batch self-prediction (Algorithm 2's final labeling pass) over
+    /// the fitted embeddings. Output is identical to the pre-split
+    /// monolithic `run` for a fixed seed.
+    pub fn run(&self, ds: &Dataset) -> Result<PipelineOutput> {
+        Ok(self.run_fitted(ds)?.1)
+    }
+
+    /// [`Pipeline::run`], but also hands back the fitted [`ApncModel`] —
+    /// callers that want the batch clustering *and* a servable model fit
+    /// exactly once instead of calling `run` + `fit`.
+    pub fn run_fitted(&self, ds: &Dataset) -> Result<(ApncModel, PipelineOutput)> {
+        let (model, report) = self.fit(ds)?;
+        let FitReport {
+            embeddings,
+            obj_curve,
+            l_actual,
+            m_actual,
+            iters_run,
+            mut times,
+            sample_metrics,
+            embed_metrics,
+            mut cluster_metrics,
+        } = report;
+
+        // batch self-prediction over the embeddings fit already computed
+        // (no re-embedding: per-row labels are identical either way)
+        let t3 = Instant::now();
+        let (labels, assign_metrics) = cluster_job::assign_labels(
+            &self.engine,
+            &self.compute,
+            &embeddings,
+            m_actual,
+            model.dist(),
+            model.centroids(),
+            model.k(),
+        )?;
+        times.cluster += t3.elapsed();
+        cluster_metrics.merge(&assign_metrics);
+
+        let nmi = crate::metrics::nmi(&labels, &ds.labels);
+        let ari = crate::metrics::ari(&labels, &ds.labels);
+        let purity = crate::metrics::purity(&labels, &ds.labels);
+
+        let output = PipelineOutput {
+            labels,
+            nmi,
+            ari,
+            purity,
+            obj_curve,
+            l_actual,
+            m_actual,
+            iters_run,
+            times,
+            sample_metrics,
+            embed_metrics,
+            cluster_metrics,
+        };
+        Ok((model, output))
     }
 }
 
@@ -334,6 +543,75 @@ mod tests {
         let per_iter = out.cluster_metrics.shuffle_bytes / iters;
         let bound = blocks * (3 * out.m_actual * 4 + 3 * 4 + 64);
         assert!(per_iter <= bound, "per-iter shuffle {per_iter} > bound {bound}");
+    }
+
+    #[test]
+    fn builder_rejects_bad_configs_up_front() {
+        assert!(PipelineConfig::builder().l(0).build().is_err());
+        assert!(PipelineConfig::builder().m(0).build().is_err());
+        assert!(PipelineConfig::builder().workers(0).build().is_err());
+        assert!(PipelineConfig::builder().t_frac(0.0).build().is_err());
+        assert!(PipelineConfig::builder().t_frac(1.5).build().is_err());
+        assert!(PipelineConfig::builder().dfs_replication(0).build().is_err());
+        assert!(PipelineConfig::builder().block_rows(0).build().is_err());
+        let cfg = PipelineConfig::builder()
+            .method(Method::StableDist)
+            .l(96)
+            .m(192)
+            .t_frac(0.5)
+            .seed(3)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.method, Method::StableDist);
+        assert_eq!((cfg.l, cfg.m), (96, 192));
+        assert_eq!(cfg.t_frac, 0.5);
+        // untouched fields keep the defaults
+        assert_eq!(cfg.workers, PipelineConfig::default().workers);
+    }
+
+    #[test]
+    fn fit_rejects_invalid_config_before_running() {
+        let ds = registry::generate("moons", 100, 15);
+        let mut cfg = quick_cfg(Method::Nystrom);
+        cfg.t_frac = 0.0;
+        let err = Pipeline::with_compute(cfg, Compute::reference()).fit(&ds).unwrap_err();
+        assert!(err.to_string().contains("t_frac"), "{err}");
+    }
+
+    #[test]
+    fn run_is_fit_plus_self_prediction() {
+        // the behavior-preservation contract of the API split: run() and
+        // fit() agree on the curve, and the model's out-of-sample predict
+        // reproduces the batch labels bit-for-bit (Property 4.2 — the
+        // embedding of a point depends only on (L, R), not on batching)
+        let ds = registry::generate("moons", 400, 16);
+        let p = Pipeline::with_compute(quick_cfg(Method::Nystrom), Compute::reference());
+        let out = p.run(&ds).unwrap();
+        let (model, report) = p.fit(&ds).unwrap();
+        assert_eq!(report.obj_curve, out.obj_curve);
+        assert_eq!(report.iters_run, out.iters_run);
+        assert_eq!(report.l_actual, out.l_actual);
+        assert_eq!(report.m_actual, out.m_actual);
+        assert_eq!(model.m(), out.m_actual);
+        let predicted = model.predict_batch(&ds.x, 0).unwrap();
+        assert_eq!(predicted, out.labels);
+        // run_fitted = run + the model, from a single fit
+        let (model2, out2) = p.run_fitted(&ds).unwrap();
+        assert_eq!(out2.labels, out.labels);
+        assert_eq!(out2.obj_curve, out.obj_curve);
+        assert_eq!(model2.centroids(), model.centroids());
+    }
+
+    #[test]
+    fn fitted_model_carries_provenance() {
+        let ds = registry::generate("rings", 300, 17);
+        let cfg = quick_cfg(Method::Nystrom);
+        let seed = cfg.seed;
+        let (model, _) = Pipeline::with_compute(cfg, Compute::reference()).fit(&ds).unwrap();
+        assert_eq!(model.provenance().dataset, "rings");
+        assert_eq!(model.provenance().seed, seed);
+        assert_eq!(model.d(), ds.d);
+        assert_eq!(model.k(), ds.k);
     }
 
     #[test]

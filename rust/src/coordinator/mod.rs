@@ -7,7 +7,9 @@
 //!   map-only embedding of every block, local portion concatenation
 //! * [`cluster_job`] — Algorithm 2: Lloyd iterations over embeddings with
 //!   the (Z, g) combiner pattern
-//! * [`driver`]    — the end-to-end pipeline + configuration
+//! * [`driver`]    — the end-to-end pipeline + configuration, split into
+//!   `fit` (returns a persistable [`crate::model::ApncModel`]) and `run`
+//!   (fit + batch self-prediction)
 //!
 //! Every job reports [`crate::mapreduce::JobMetrics`], and the driver
 //! asserts the paper's network-cost structure in its tests: the embedding

@@ -46,6 +46,26 @@ impl Method {
         }
     }
 
+    /// Stable integer code used by the persisted model format
+    /// ([`crate::model::format`]).
+    pub fn code(self) -> u32 {
+        match self {
+            Method::Nystrom => 0,
+            Method::StableDist => 1,
+            Method::EnsembleNystrom => 2,
+        }
+    }
+
+    /// Inverse of [`Method::code`]; `None` for unknown codes.
+    pub fn from_code(code: u32) -> Option<Method> {
+        match code {
+            0 => Some(Method::Nystrom),
+            1 => Some(Method::StableDist),
+            2 => Some(Method::EnsembleNystrom),
+            _ => None,
+        }
+    }
+
     pub fn label(self) -> &'static str {
         match self {
             Method::Nystrom => "APNC-Nys",
@@ -153,6 +173,14 @@ mod tests {
         assert_eq!(Method::Nystrom.dist(), DistKind::L2Sq);
         assert_eq!(Method::EnsembleNystrom.dist(), DistKind::L2Sq);
         assert_eq!(Method::StableDist.dist(), DistKind::L1);
+    }
+
+    #[test]
+    fn method_codes_roundtrip() {
+        for m in [Method::Nystrom, Method::StableDist, Method::EnsembleNystrom] {
+            assert_eq!(Method::from_code(m.code()), Some(m));
+        }
+        assert_eq!(Method::from_code(3), None);
     }
 
     #[test]

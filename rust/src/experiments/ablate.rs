@@ -43,17 +43,17 @@ impl Default for AblateConfig {
 }
 
 fn base(cfg: &AblateConfig) -> PipelineConfig {
-    PipelineConfig {
-        method: Method::Nystrom,
-        l: 192,
-        m: 128,
-        workers: 4,
-        max_iters: 15,
-        restarts: 2,
-        sample_mode: SampleMode::Exact,
-        seed: cfg.seed,
-        ..Default::default()
-    }
+    PipelineConfig::builder()
+        .method(Method::Nystrom)
+        .l(192)
+        .m(128)
+        .workers(4)
+        .max_iters(15)
+        .restarts(2)
+        .sample_mode(SampleMode::Exact)
+        .seed(cfg.seed)
+        .build()
+        .expect("static base config is valid")
 }
 
 /// Run all ablations on the covtype mirror.

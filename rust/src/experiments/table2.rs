@@ -146,25 +146,24 @@ fn run_method(
             .labels
         }
         Table2Method::ApncNys | Table2Method::ApncSd => {
-            let pcfg = PipelineConfig {
-                method: if method == Table2Method::ApncNys {
+            let pcfg = PipelineConfig::builder()
+                .method(if method == Table2Method::ApncNys {
                     Method::Nystrom
                 } else {
                     Method::StableDist
-                },
-                l,
-                m: cfg.m,
-                t_frac: 0.4,
-                k: ds.k,
-                max_iters: 30,
-                tol: 1e-5,
-                workers: 4,
-                block_rows: 1024,
-                seed,
-                sample_mode: SampleMode::Exact,
-                kernel: Some(kernel),
-                ..Default::default()
-            };
+                })
+                .l(l)
+                .m(cfg.m)
+                .t_frac(0.4)
+                .k(ds.k)
+                .max_iters(30)
+                .tol(1e-5)
+                .workers(4)
+                .block_rows(1024)
+                .seed(seed)
+                .sample_mode(SampleMode::Exact)
+                .kernel(kernel)
+                .build()?;
             Pipeline::with_compute(pcfg, compute.clone()).run(ds)?.labels
         }
     };

@@ -141,25 +141,24 @@ pub fn run(cfg: &Table3Config, compute: &Compute) -> Result<Vec<SubTable>> {
                                 .push(crate::metrics::nmi(&r.labels, &ds.labels));
                         }
                         Table3Method::ApncNys | Table3Method::ApncSd => {
-                            let pcfg = PipelineConfig {
-                                method: if method == Table3Method::ApncNys {
+                            let pcfg = PipelineConfig::builder()
+                                .method(if method == Table3Method::ApncNys {
                                     Method::Nystrom
                                 } else {
                                     Method::StableDist
-                                },
-                                l,
-                                m: cfg.m,
-                                t_frac: 0.4,
-                                k: ds.k,
-                                max_iters: cfg.max_iters,
-                                tol: 0.0, // paper: fixed 20 iterations
-                                workers: cfg.nodes,
-                                block_rows: 1024,
-                                seed,
-                                sample_mode: SampleMode::Exact,
-                                kernel: Some(kernel),
-                                ..Default::default()
-                            };
+                                })
+                                .l(l)
+                                .m(cfg.m)
+                                .t_frac(0.4)
+                                .k(ds.k)
+                                .max_iters(cfg.max_iters)
+                                .tol(0.0) // paper: fixed 20 iterations
+                                .workers(cfg.nodes)
+                                .block_rows(1024)
+                                .seed(seed)
+                                .sample_mode(SampleMode::Exact)
+                                .kernel(kernel)
+                                .build()?;
                             let r = Pipeline::with_compute(pcfg, compute.clone()).run(&ds)?;
                             let cell = &mut cells[mi][li];
                             cell.scores.push(r.nmi);

@@ -83,6 +83,19 @@ impl Kernel {
         }
     }
 
+    /// Rebuild a kernel from its ABI pair ([`Kernel::code`] +
+    /// [`Kernel::params`]) — the inverse used by the persisted model
+    /// format ([`crate::model::format`]). Unknown codes are an error.
+    pub fn from_abi(code: i32, params: [f32; 4]) -> anyhow::Result<Kernel> {
+        Ok(match code {
+            0 => Kernel::Linear,
+            1 => Kernel::Rbf { gamma: params[0] },
+            2 => Kernel::Poly { c: params[0], degree: params[1] },
+            3 => Kernel::Tanh { a: params[0], b: params[1] },
+            other => anyhow::bail!("unknown kernel code {other}"),
+        })
+    }
+
     /// Evaluate on a pair of points.
     pub fn eval(&self, x: &[f32], z: &[f32]) -> f64 {
         debug_assert_eq!(x.len(), z.len());
@@ -264,6 +277,19 @@ mod tests {
         assert_eq!(ks[1].params()[0], 0.3);
         assert_eq!(ks[2].params()[1], 5.0);
         assert_eq!(ks[3].params()[1], 0.11);
+    }
+
+    #[test]
+    fn abi_roundtrip_rebuilds_every_kernel() {
+        for k in [
+            Kernel::Linear,
+            Kernel::Rbf { gamma: 0.3 },
+            Kernel::Poly { c: 1.0, degree: 5.0 },
+            Kernel::Tanh { a: 0.0045, b: 0.11 },
+        ] {
+            assert_eq!(Kernel::from_abi(k.code(), k.params()).unwrap(), k);
+        }
+        assert!(Kernel::from_abi(42, [0.0; 4]).is_err());
     }
 
     #[test]

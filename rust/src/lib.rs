@@ -30,18 +30,36 @@
 //!
 //! ## Quick start
 //!
+//! The public API is a train/serve split: `fit` produces a persistable
+//! [`model::ApncModel`] (save → load → predict out-of-sample via the
+//! paper's Property 4.2 kernelization), and `run` is fit + batch
+//! self-prediction:
+//!
 //! ```no_run
 //! use apnc::coordinator::driver::{Pipeline, PipelineConfig};
 //! use apnc::data::registry;
+//! use apnc::model::ApncModel;
 //!
 //! let ds = registry::generate("rings", 2_000, 1);
-//! let cfg = PipelineConfig::default();
-//! let out = Pipeline::new(cfg).run(&ds).unwrap();
+//! let cfg = PipelineConfig::builder().l(128).m(128).build().unwrap();
+//! let pipeline = Pipeline::new(cfg);
+//!
+//! // one-shot batch clustering (fit + self-prediction)
+//! let out = pipeline.run(&ds).unwrap();
 //! println!("NMI = {:.3}", out.nmi);
+//!
+//! // train/serve split: fit once, persist, serve out-of-sample traffic
+//! let (model, report) = pipeline.fit(&ds).unwrap();
+//! println!("fitted m = {} in {} Lloyd iterations", model.m(), report.iters_run);
+//! model.save(std::path::Path::new("rings.apncm")).unwrap();
+//! let served = ApncModel::load(std::path::Path::new("rings.apncm")).unwrap();
+//! let labels = served.predict_batch(&ds.x, 0).unwrap();
+//! assert_eq!(labels.len(), ds.n);
 //! ```
 //!
-//! See `examples/` for runnable end-to-end drivers and `repro --help` for
-//! the table-regeneration CLI.
+//! See `examples/` for runnable end-to-end drivers (including
+//! `serve_stream`, a many-client serving demo) and `repro --help` for the
+//! table-regeneration + fit/predict/serve CLI.
 //!
 //! ## Architecture
 //!
@@ -64,6 +82,7 @@ pub mod kernels;
 pub mod linalg;
 pub mod mapreduce;
 pub mod metrics;
+pub mod model;
 pub mod parallel;
 pub mod prop;
 pub mod rng;

@@ -5,22 +5,34 @@
 //!   table2 [flags]              regenerate Table 2 (medium-scale NMI)
 //!   table3 [flags]              regenerate Table 3 (large-scale NMI + times)
 //!   run    [flags]              run one APNC pipeline on one dataset
+//!   fit    [flags]              fit a model and save it (train/serve split)
+//!   predict [flags]             load a saved model, label a dataset
+//!   serve  [flags]              load a saved model, drive concurrent clients
 //!   backend                     report which compute backend is active
 //!
 //! Common flags: --runs N --scale S --seed S --only DATASET
-//! `run` flags: --dataset NAME --method nys|sd|enys --l N --m N --k N
+//! `run`/`fit` flags: --dataset NAME --method nys|sd|enys --l N --m N --k N
 //!              --workers N (simulated cluster nodes)
 //!              --threads N (persistent compute pool size, 0 = auto;
 //!                           results are identical for any value)
 //!              --iters N --n N --reference (force rust backend)
+//!              fit only: --out PATH (model file, default <dataset>.apncm)
+//! `predict` flags: --model PATH [--input FILE | --dataset NAME --n N]
+//!              --chunk N (rows per prediction chunk, 0 = default)
+//! `serve` flags: --model PATH --clients N --requests N --batch-rows N
 
-use anyhow::{bail, Result};
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
 use apnc::cli::Args;
 use apnc::coordinator::driver::{Pipeline, PipelineConfig};
 use apnc::coordinator::sample::SampleMode;
 use apnc::data::registry;
 use apnc::embedding::Method;
 use apnc::experiments::{ablate, table1, table2, table3};
+use apnc::model::serve::drive_clients;
+use apnc::model::ApncModel;
 use apnc::runtime::Compute;
 
 fn compute_backend(args: &Args) -> Compute {
@@ -28,6 +40,63 @@ fn compute_backend(args: &Args) -> Compute {
         Compute::reference()
     } else {
         Compute::auto(&Compute::default_artifact_dir())
+    }
+}
+
+fn parse_method(args: &Args) -> Result<Method> {
+    Ok(match args.get_or("method", "nys") {
+        "nys" => Method::Nystrom,
+        "sd" => Method::StableDist,
+        "enys" => Method::EnsembleNystrom,
+        other => bail!("unknown --method '{other}' (nys|sd|enys)"),
+    })
+}
+
+/// Shared `run`/`fit` pipeline configuration from CLI flags, validated
+/// up front by the builder.
+fn pipeline_config(args: &Args) -> Result<PipelineConfig> {
+    PipelineConfig::builder()
+        .method(parse_method(args)?)
+        .l(args.usize_or("l", 256)?)
+        .m(args.usize_or("m", 256)?)
+        .t_frac(args.f64_or("t-frac", 0.4)?)
+        .ensemble_q(args.usize_or("ensemble-q", 4)?)
+        .k(args.usize_or("k", 0)?)
+        .max_iters(args.usize_or("iters", 20)?)
+        .restarts(args.usize_or("restarts", 1)?)
+        .workers(args.usize_or("workers", 4)?)
+        .threads(args.usize_or("threads", 0)?)
+        .block_rows(args.usize_or("block-rows", 1024)?)
+        .seed(args.u64_or("seed", 42)?)
+        .sample_mode(if args.has("bernoulli") { SampleMode::Bernoulli } else { SampleMode::Exact })
+        .build()
+}
+
+/// Load the `--model` file on the selected backend and check it against
+/// the dataset it is about to label (shared by `predict` and `serve`).
+fn load_model_checked(args: &Args, ds: &apnc::data::Dataset) -> Result<ApncModel> {
+    let Some(model_path) = args.get("model") else {
+        bail!("{} needs --model PATH (produce one with `repro fit`)", args.subcommand);
+    };
+    let model = ApncModel::load_with(Path::new(model_path), compute_backend(args))?;
+    ensure!(
+        model.d() == ds.d,
+        "model was fitted on d = {} but the dataset has d = {}",
+        model.d(),
+        ds.d
+    );
+    Ok(model)
+}
+
+/// `--input FILE` or a registry dataset (`--dataset`, `--n`, `--data-seed`).
+fn load_dataset(args: &Args) -> Result<apnc::data::Dataset> {
+    match args.get("input") {
+        Some(path) => apnc::data::io::load(Path::new(path)),
+        None => {
+            let name = args.get_or("dataset", "rings").to_string();
+            let n = args.usize_or("n", 0)?;
+            Ok(registry::generate(&name, n, args.u64_or("data-seed", 7)?))
+        }
     }
 }
 
@@ -78,41 +147,16 @@ fn cmd_table3(args: &Args) -> Result<()> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let dataset = args.get_or("dataset", "rings").to_string();
-    let method = match args.get_or("method", "nys") {
-        "nys" => Method::Nystrom,
-        "sd" => Method::StableDist,
-        "enys" => Method::EnsembleNystrom,
-        other => bail!("unknown --method '{other}' (nys|sd|enys)"),
-    };
-    let cfg = PipelineConfig {
-        method,
-        l: args.usize_or("l", 256)?,
-        m: args.usize_or("m", 256)?,
-        t_frac: args.f64_or("t-frac", 0.4)?,
-        ensemble_q: args.usize_or("ensemble-q", 4)?,
-        k: args.usize_or("k", 0)?,
-        max_iters: args.usize_or("iters", 20)?,
-        restarts: args.usize_or("restarts", 1)?,
-        workers: args.usize_or("workers", 4)?,
-        threads: args.usize_or("threads", 0)?,
-        block_rows: args.usize_or("block-rows", 1024)?,
-        seed: args.u64_or("seed", 42)?,
-        sample_mode: if args.has("bernoulli") { SampleMode::Bernoulli } else { SampleMode::Exact },
-        ..Default::default()
-    };
-    let n = args.usize_or("n", 0)?;
-    let ds = match args.get("input") {
-        Some(path) => apnc::data::io::load(std::path::Path::new(path))?,
-        None => registry::generate(&dataset, n, args.u64_or("data-seed", 7)?),
-    };
+    let cfg = pipeline_config(args)?;
+    let ds = load_dataset(args)?;
     let compute = compute_backend(args);
     eprintln!(
-        "run: dataset={dataset} n={} d={} k={} method={} backend={}",
+        "run: dataset={} n={} d={} k={} method={} backend={}",
+        ds.name,
         ds.n,
         ds.d,
         ds.k,
-        method.label(),
+        cfg.method.label(),
         if compute.is_pjrt() { "pjrt" } else { "reference" }
     );
     let out = Pipeline::with_compute(cfg, compute).run(&ds)?;
@@ -134,6 +178,98 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fit(args: &Args) -> Result<()> {
+    let cfg = pipeline_config(args)?;
+    let ds = load_dataset(args)?;
+    let out_path = args
+        .get("out")
+        .map(String::from)
+        .unwrap_or_else(|| format!("{}.apncm", ds.name));
+    let compute = compute_backend(args);
+    eprintln!(
+        "fit: dataset={} n={} d={} k={} method={} backend={}",
+        ds.name,
+        ds.n,
+        ds.d,
+        ds.k,
+        cfg.method.label(),
+        if compute.is_pjrt() { "pjrt" } else { "reference" }
+    );
+    let (model, report) = Pipeline::with_compute(cfg, compute).fit(&ds)?;
+    model.save(Path::new(&out_path))?;
+    let bytes = std::fs::metadata(&out_path).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "fitted {} model: l = {}, m = {}, k = {} ({} Lloyd iterations)",
+        model.method().label(),
+        model.l(),
+        model.m(),
+        model.k(),
+        report.iters_run
+    );
+    println!(
+        "times: sample {:.2?}, coeff fit {:.2?}, embed {:.2?}, cluster {:.2?}",
+        report.times.sample, report.times.coeff_fit, report.times.embed, report.times.cluster
+    );
+    println!("wrote {out_path} ({bytes} bytes)");
+    println!("serve it with: repro predict --model {out_path} --dataset {}", ds.name);
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    let model = load_model_checked(args, &ds)?;
+    println!(
+        "model: {} fitted on '{}' (seed {}): l = {}, m = {}, k = {}, kernel = {:?}",
+        model.method().label(),
+        model.provenance().dataset,
+        model.provenance().seed,
+        model.l(),
+        model.m(),
+        model.k(),
+        model.kernel()
+    );
+    let t0 = Instant::now();
+    let labels = model.predict_batch(&ds.x, args.usize_or("chunk", 0)?)?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "predicted {} points in {:.2}s ({:.0} rows/s)",
+        ds.n,
+        secs,
+        ds.n as f64 / secs.max(1e-9)
+    );
+    let mut counts = vec![0usize; model.k()];
+    for &l in &labels {
+        counts[l as usize] += 1;
+    }
+    println!("cluster sizes: {counts:?}");
+    println!("NMI vs ground truth = {:.4}", apnc::metrics::nmi(&labels, &ds.labels));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let clients = args.usize_or("clients", 4)?.max(1);
+    let requests = args.usize_or("requests", 8)?.max(1);
+    let batch_rows = args.usize_or("batch-rows", 512)?.max(1);
+    let ds = load_dataset(args)?;
+    let model = load_model_checked(args, &ds)?;
+    // oracle for the determinism check: direct in-memory prediction
+    let want = model.predict_batch(&ds.x, 0)?;
+    let handle = model.serve()?;
+    let t0 = Instant::now();
+    let total_rows = drive_clients(&handle, &ds.x, ds.d, &want, clients, requests, batch_rows);
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "served {} requests from {} clients: {} rows in {:.2}s ({:.0} rows/s)",
+        clients * requests,
+        clients,
+        total_rows,
+        secs,
+        total_rows as f64 / secs.max(1e-9)
+    );
+    println!("every response was bit-identical to in-memory prediction");
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_str() {
@@ -141,13 +277,16 @@ fn main() -> Result<()> {
         "table2" => cmd_table2(&args)?,
         "table3" => cmd_table3(&args)?,
         "run" => cmd_run(&args)?,
+        "fit" => cmd_fit(&args)?,
+        "predict" => cmd_predict(&args)?,
+        "serve" => cmd_serve(&args)?,
         "gen" => {
             // freeze a mirrored dataset to disk for repeatable sweeps
             let name = args.get_or("dataset", "rings").to_string();
             let n = args.usize_or("n", 0)?;
             let out = args.get("out").map(String::from).unwrap_or(format!("{name}.apnc"));
             let ds = registry::generate(&name, n, args.u64_or("data-seed", 7)?);
-            apnc::data::io::save(&ds, std::path::Path::new(&out))?;
+            apnc::data::io::save(&ds, Path::new(&out))?;
             println!("wrote {} (n = {}, d = {}, k = {})", out, ds.n, ds.d, ds.k);
         }
         "ablate" => {
@@ -165,10 +304,12 @@ fn main() -> Result<()> {
         }
         "" | "help" => {
             println!("repro — Embed and Conquer (kernel k-means on MapReduce) reproduction");
-            println!("usage: repro <table1|table2|table3|run|backend> [flags]");
+            println!("usage: repro <table1|table2|table3|run|fit|predict|serve|backend> [flags]");
             println!("see the module docs in rust/src/main.rs and README.md");
         }
-        other => bail!("unknown subcommand '{other}' (try: table1 table2 table3 run ablate backend)"),
+        other => bail!(
+            "unknown subcommand '{other}' (try: table1 table2 table3 run fit predict serve ablate backend)"
+        ),
     }
     Ok(())
 }

@@ -1,0 +1,390 @@
+//! Versioned binary persistence for [`ApncModel`] — magic + header + f32
+//! payload + checksum, no dependencies beyond `std`.
+//!
+//! Layout (little-endian; every byte after the 8-byte magic feeds an
+//! FNV-1a/64 checksum appended at the end):
+//!
+//! ```text
+//! "APNCMODL"                                magic (8 bytes, unhashed)
+//! u32 version (= 1)
+//! u32 method code | i32 kernel code | f32 kernel params[4]
+//! u64 d | u64 k | u64 seed
+//! u32 name_len | dataset name (utf8)        provenance
+//! u32 q                                     coefficient block count
+//! per block: u64 l_b | u64 m_b
+//!            | f32 samples[l_b * d]         L^(b)
+//!            | f32 r_t[l_b * m_b]           R^(b) transposed
+//! f32 centroids[k * m]                      m = sum of m_b
+//! u64 fnv1a-64 checksum                     over all hashed bytes
+//! ```
+//!
+//! `load` rejects wrong magic, unknown versions, implausible header
+//! values, truncated payloads (any short read), checksum mismatches
+//! (any flipped byte), and trailing garbage — a bad model file is an
+//! error, never a panic or a silently wrong model.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::{ApncModel, Provenance};
+use crate::embedding::{ApncCoeffs, CoeffBlock, Method};
+use crate::kernels::Kernel;
+use crate::runtime::Compute;
+use anyhow::{anyhow, ensure, Context, Result};
+
+/// File magic. The version is a separate header field so readers can give
+/// a precise "unsupported version" error.
+pub const MAGIC: &[u8; 8] = b"APNCMODL";
+/// Current format version.
+pub const VERSION: u32 = 1;
+
+/// Header sanity caps: anything beyond these is a corrupted or hostile
+/// file, rejected before any large allocation.
+const MAX_NAME_LEN: usize = 4096;
+const MAX_BLOCKS: usize = 1 << 12;
+const MAX_DIM: u64 = 1 << 24;
+const MAX_ELEMS: u64 = 1 << 31;
+
+/// FNV-1a 64-bit rolling hash.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+}
+
+struct HashWriter<W: Write> {
+    w: W,
+    hash: Fnv,
+}
+
+impl<W: Write> HashWriter<W> {
+    fn put(&mut self, bytes: &[u8]) -> Result<()> {
+        self.hash.update(bytes);
+        self.w.write_all(bytes).context("writing model file")?;
+        Ok(())
+    }
+
+    fn u32(&mut self, v: u32) -> Result<()> {
+        self.put(&v.to_le_bytes())
+    }
+
+    fn i32(&mut self, v: i32) -> Result<()> {
+        self.put(&v.to_le_bytes())
+    }
+
+    fn u64(&mut self, v: u64) -> Result<()> {
+        self.put(&v.to_le_bytes())
+    }
+
+    fn f32s(&mut self, vs: &[f32]) -> Result<()> {
+        for &v in vs {
+            self.put(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+}
+
+struct HashReader<R: Read> {
+    r: R,
+    hash: Fnv,
+}
+
+impl<R: Read> HashReader<R> {
+    fn bytes(&mut self, buf: &mut [u8]) -> Result<()> {
+        self.r.read_exact(buf).context("model file truncated")?;
+        self.hash.update(buf);
+        Ok(())
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.bytes(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        let mut b = [0u8; 4];
+        self.bytes(&mut b)?;
+        Ok(i32::from_le_bytes(b))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.bytes(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let mut b = [0u8; 4];
+        self.bytes(&mut b)?;
+        Ok(f32::from_le_bytes(b))
+    }
+
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(n);
+        let mut b = [0u8; 4];
+        for _ in 0..n {
+            self.bytes(&mut b)?;
+            out.push(f32::from_le_bytes(b));
+        }
+        Ok(out)
+    }
+}
+
+/// Checked element count for a payload section. `cap` is the number of
+/// f32s the file could possibly hold (on-disk size / 4), so a corrupted
+/// header can never trigger a large allocation: any section claiming
+/// more elements than the file has bytes is rejected before its
+/// `Vec::with_capacity`.
+fn elems(a: u64, b: u64, cap: u64, what: &str) -> Result<usize> {
+    a.checked_mul(b)
+        .filter(|&n| n <= MAX_ELEMS.min(cap))
+        .map(|n| n as usize)
+        .ok_or_else(|| anyhow!("model header implies an implausible {what} size ({a} x {b})"))
+}
+
+/// Write `model` to `path`.
+///
+/// Enforces the same header caps as [`load`], so a model that saves
+/// successfully is always loadable — a fit that exceeds a cap fails
+/// here with a clear error instead of producing an unreadable file.
+pub fn save(model: &ApncModel, path: &Path) -> Result<()> {
+    let coeffs = model.coeffs();
+    ensure!(
+        coeffs.blocks.len() <= MAX_BLOCKS,
+        "model has {} coefficient blocks; the format caps at {MAX_BLOCKS} (lower ensemble_q)",
+        coeffs.blocks.len()
+    );
+    ensure!(coeffs.d as u64 <= MAX_DIM, "model dimensionality d = {} exceeds the format cap", coeffs.d);
+    ensure!(model.k() as u64 <= MAX_DIM, "model cluster count k = {} exceeds the format cap", model.k());
+    for (bi, b) in coeffs.blocks.iter().enumerate() {
+        ensure!(
+            b.l as u64 <= MAX_DIM && b.m as u64 <= MAX_DIM,
+            "block {bi} dims (l = {}, m = {}) exceed the format cap",
+            b.l,
+            b.m
+        );
+    }
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = HashWriter { w: BufWriter::new(file), hash: Fnv::new() };
+    w.w.write_all(MAGIC).context("writing model magic")?;
+    w.u32(VERSION)?;
+    w.u32(coeffs.method.code())?;
+    w.i32(coeffs.kernel.code())?;
+    w.f32s(&coeffs.kernel.params())?;
+    w.u64(coeffs.d as u64)?;
+    w.u64(model.k() as u64)?;
+    w.u64(model.provenance().seed)?;
+    let name = model.provenance().dataset.as_bytes();
+    ensure!(name.len() <= MAX_NAME_LEN, "dataset name too long to persist ({})", name.len());
+    w.u32(name.len() as u32)?;
+    w.put(name)?;
+    w.u32(coeffs.blocks.len() as u32)?;
+    for b in &coeffs.blocks {
+        w.u64(b.l as u64)?;
+        w.u64(b.m as u64)?;
+        w.f32s(&b.samples)?;
+        w.f32s(&b.r_t)?;
+    }
+    w.f32s(model.centroids())?;
+    let checksum = w.hash.0;
+    w.w.write_all(&checksum.to_le_bytes()).context("writing model checksum")?;
+    w.w.flush().context("flushing model file")?;
+    Ok(())
+}
+
+/// Read a model from `path`, binding it to `compute`.
+pub fn load(path: &Path, compute: Compute) -> Result<ApncModel> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    // allocation bound for every payload section (see `elems`)
+    let max_elems = file.metadata().context("stat model file")?.len() / 4;
+    let mut r = HashReader { r: BufReader::new(file), hash: Fnv::new() };
+    let mut magic = [0u8; 8];
+    r.r.read_exact(&mut magic).context("reading model magic")?;
+    ensure!(&magic == MAGIC, "{} is not an APNC model file", path.display());
+    let version = r.u32()?;
+    ensure!(version == VERSION, "unsupported model version {version} (this build reads {VERSION})");
+    let method_code = r.u32()?;
+    let method = Method::from_code(method_code)
+        .ok_or_else(|| anyhow!("unknown method code {method_code}"))?;
+    let kernel_code = r.i32()?;
+    let mut params = [0f32; 4];
+    for p in &mut params {
+        *p = r.f32()?;
+    }
+    let kernel = Kernel::from_abi(kernel_code, params)?;
+    let d = r.u64()?;
+    ensure!(d >= 1 && d <= MAX_DIM, "bad model dimensionality d = {d}");
+    let k = r.u64()?;
+    ensure!(k >= 1 && k <= MAX_DIM, "bad model cluster count k = {k}");
+    let seed = r.u64()?;
+    let name_len = r.u32()? as usize;
+    ensure!(name_len <= MAX_NAME_LEN, "unreasonable dataset name length {name_len}");
+    let mut name_buf = vec![0u8; name_len];
+    r.bytes(&mut name_buf)?;
+    let dataset = String::from_utf8(name_buf).context("model dataset name is not utf8")?;
+    let q = r.u32()? as usize;
+    ensure!(q >= 1 && q <= MAX_BLOCKS, "bad coefficient block count {q}");
+    let mut blocks = Vec::with_capacity(q);
+    for bi in 0..q {
+        let l = r.u64()?;
+        ensure!(l >= 1 && l <= MAX_DIM, "block {bi}: bad sample count l = {l}");
+        let m = r.u64()?;
+        ensure!(m >= 1 && m <= MAX_DIM, "block {bi}: bad dimensionality m = {m}");
+        let samples = r.f32_vec(elems(l, d, max_elems, "sample block")?)?;
+        let r_t = r.f32_vec(elems(l, m, max_elems, "coefficient block")?)?;
+        blocks.push(CoeffBlock { samples, l: l as usize, r_t, m: m as usize });
+    }
+    let m_total: u64 = blocks.iter().map(|b| b.m as u64).sum();
+    let centroids = r.f32_vec(elems(k, m_total, max_elems, "centroid matrix")?)?;
+    // checksum: everything hashed so far must match the trailer
+    let want = r.hash.0;
+    let mut ck = [0u8; 8];
+    r.r.read_exact(&mut ck).context("reading model checksum (truncated file?)")?;
+    ensure!(
+        u64::from_le_bytes(ck) == want,
+        "model checksum mismatch — {} is corrupted",
+        path.display()
+    );
+    let mut probe = [0u8; 1];
+    ensure!(
+        r.r.read(&mut probe).context("probing for trailing bytes")? == 0,
+        "trailing bytes after model payload"
+    );
+    let coeffs = ApncCoeffs { method, d: d as usize, kernel, blocks };
+    ApncModel::from_parts(coeffs, centroids, k as usize, Provenance { dataset, seed }, compute)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::toy_model;
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("apnc-model-fmt-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let model = toy_model(2, 4, 6, 3, 5, 11);
+        let path = tmp("roundtrip");
+        model.save(&path).unwrap();
+        let back = ApncModel::load_with(&path, Compute::reference()).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.method(), model.method());
+        assert_eq!(back.kernel(), model.kernel());
+        assert_eq!((back.d(), back.m(), back.l(), back.k()), (4, 6, 12, 5));
+        assert_eq!(back.centroids(), model.centroids());
+        assert_eq!(back.provenance(), model.provenance());
+        for (a, b) in back.coeffs().blocks.iter().zip(&model.coeffs().blocks) {
+            assert_eq!(a.samples, b.samples);
+            assert_eq!(a.r_t, b.r_t);
+            assert_eq!((a.l, a.m), (b.l, b.m));
+        }
+    }
+
+    #[test]
+    fn save_rejects_models_the_format_cannot_represent() {
+        // one block over the format's q cap: must fail at save with a
+        // clear error, never produce a file load() would reject
+        let blocks: Vec<CoeffBlock> = (0..MAX_BLOCKS + 1)
+            .map(|_| CoeffBlock { samples: vec![1.0], l: 1, r_t: vec![1.0], m: 1 })
+            .collect();
+        let m_total = blocks.len();
+        let coeffs =
+            ApncCoeffs { method: Method::EnsembleNystrom, d: 1, kernel: Kernel::Linear, blocks };
+        let model = ApncModel::from_parts(
+            coeffs,
+            vec![0.0f32; 2 * m_total],
+            2,
+            Provenance { dataset: "big".into(), seed: 0 },
+            Compute::reference(),
+        )
+        .unwrap();
+        let path = tmp("block-cap");
+        let err = model.save(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("coefficient blocks"), "{err}");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmp("garbage");
+        std::fs::write(&path, b"definitely not a model").unwrap();
+        let err = ApncModel::load_with(&path, Compute::reference()).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("not an APNC model"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_version() {
+        let model = toy_model(1, 3, 4, 2, 2, 12);
+        let path = tmp("version");
+        model.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8] = 0xFE; // version field follows the 8-byte magic
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ApncModel::load_with(&path, Compute::reference()).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("unsupported model version"), "{err}");
+    }
+
+    #[test]
+    fn rejects_any_truncation() {
+        let model = toy_model(1, 3, 5, 2, 2, 13);
+        let path = tmp("trunc");
+        model.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        for cut in [4usize, 11, 20, bytes.len() / 2, bytes.len() - 1] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(
+                ApncModel::load_with(&path, Compute::reference()).is_err(),
+                "truncation at {cut} accepted"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checksum_catches_every_flipped_payload_byte() {
+        let model = toy_model(1, 3, 4, 2, 2, 14);
+        let path = tmp("flip");
+        model.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // flip one byte in several spots across header and payload
+        for pos in [9usize, 30, bytes.len() / 2, bytes.len() - 9] {
+            let mut corrupt = bytes.clone();
+            corrupt[pos] ^= 0x40;
+            std::fs::write(&path, &corrupt).unwrap();
+            assert!(
+                ApncModel::load_with(&path, Compute::reference()).is_err(),
+                "flipped byte at {pos} accepted"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let model = toy_model(1, 3, 4, 2, 2, 15);
+        let path = tmp("trailing");
+        model.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.push(0);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ApncModel::load_with(&path, Compute::reference()).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("trailing bytes"), "{err}");
+    }
+}

@@ -1,0 +1,357 @@
+//! The fitted-model subsystem: the train/serve split of the pipeline.
+//!
+//! [`crate::coordinator::driver::Pipeline::fit`] produces an [`ApncModel`]
+//! — the fitted coefficients ([`ApncCoeffs`]), the final cluster centroids
+//! in embedding space, and provenance — which is everything needed to
+//! assign *new* points to the fitted clusters. This is the paper's
+//! Property 4.2 (kernelization) put to work: embedding an out-of-sample
+//! point `x` needs only the kernel evaluations `kappa(x, L)` against the
+//! fitted sample set and one multiply by the block-diagonal `R`, never the
+//! training data itself. Nearest-centroid assignment in embedding space
+//! (Property 4.4's distance `e`) then serves the clustering to points the
+//! pipeline has never seen.
+//!
+//! The model is persistable ([`ApncModel::save`] / [`ApncModel::load`],
+//! a versioned binary format in [`format`]) and servable
+//! ([`ApncModel::serve`] returns a cloneable channel-backed
+//! [`serve::ModelHandle`], mirroring the PJRT service pattern). All
+//! compute runs through the [`crate::runtime::Compute`] facade, so both
+//! the PJRT artifact backend and the rust reference serve predictions,
+//! and every hot loop lands on the shared parallel core
+//! ([`crate::parallel`]) with its bit-identical-for-any-thread-count
+//! contract. Per-row outputs are also independent of request batching, so
+//! `predict`, chunked [`ApncModel::predict_batch`], and concurrent
+//! serving all produce identical labels.
+
+pub mod format;
+pub mod serve;
+
+use std::path::Path;
+
+use crate::embedding::{ApncCoeffs, Method};
+use crate::kernels::Kernel;
+use crate::runtime::{Compute, DistKind};
+use anyhow::{ensure, Result};
+
+/// Default rows per [`ApncModel::predict_batch`] chunk (bounds the
+/// transient embedding buffer at ~`4 * m * DEFAULT_CHUNK_ROWS` bytes).
+pub const DEFAULT_CHUNK_ROWS: usize = 1024;
+
+/// Where a model came from: enough to reproduce the fit.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Provenance {
+    /// name of the dataset the model was fitted on
+    pub dataset: String,
+    /// pipeline seed the fit ran under
+    pub seed: u64,
+}
+
+/// A fitted APNC model: coefficients + final centroids + provenance,
+/// bound to a compute backend. See the [module docs](self) for the
+/// out-of-sample kernelization argument.
+#[derive(Clone)]
+pub struct ApncModel {
+    coeffs: ApncCoeffs,
+    /// (k, m) row-major final centroid embeddings
+    centroids: Vec<f32>,
+    k: usize,
+    dist: DistKind,
+    provenance: Provenance,
+    compute: Compute,
+}
+
+impl ApncModel {
+    /// Assemble a model from fitted parts, validating shape consistency.
+    pub fn from_parts(
+        coeffs: ApncCoeffs,
+        centroids: Vec<f32>,
+        k: usize,
+        provenance: Provenance,
+        compute: Compute,
+    ) -> Result<ApncModel> {
+        ensure!(coeffs.d > 0, "model: d must be >= 1");
+        ensure!(!coeffs.blocks.is_empty(), "model: coefficient blocks are empty");
+        for (i, b) in coeffs.blocks.iter().enumerate() {
+            ensure!(b.l > 0 && b.m > 0, "model: block {i} has degenerate dims l={} m={}", b.l, b.m);
+            ensure!(
+                b.samples.len() == b.l * coeffs.d,
+                "model: block {i} samples have {} elements, expected {}",
+                b.samples.len(),
+                b.l * coeffs.d
+            );
+            ensure!(
+                b.r_t.len() == b.l * b.m,
+                "model: block {i} r_t has {} elements, expected {}",
+                b.r_t.len(),
+                b.l * b.m
+            );
+        }
+        ensure!(k >= 1, "model: k must be >= 1");
+        let m = coeffs.m();
+        ensure!(
+            centroids.len() == k * m,
+            "model: centroids have {} elements, expected k * m = {}",
+            centroids.len(),
+            k * m
+        );
+        let dist = coeffs.dist();
+        Ok(ApncModel { coeffs, centroids, k, dist, provenance, compute })
+    }
+
+    /// Feature dimensionality the model was fitted on.
+    pub fn d(&self) -> usize {
+        self.coeffs.d
+    }
+
+    /// Embedding dimensionality m (sum over coefficient blocks).
+    pub fn m(&self) -> usize {
+        self.coeffs.m()
+    }
+
+    /// Fitted sample count l (sum over coefficient blocks).
+    pub fn l(&self) -> usize {
+        self.coeffs.l()
+    }
+
+    /// Number of clusters.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Embedding-space distance the model assigns under.
+    pub fn dist(&self) -> DistKind {
+        self.dist
+    }
+
+    /// Which APNC instance fitted the coefficients.
+    pub fn method(&self) -> Method {
+        self.coeffs.method
+    }
+
+    /// Kernel the coefficients were fitted with.
+    pub fn kernel(&self) -> Kernel {
+        self.coeffs.kernel
+    }
+
+    /// The fitted coefficients (Property 4.3 block-diagonal `R` + `L`).
+    pub fn coeffs(&self) -> &ApncCoeffs {
+        &self.coeffs
+    }
+
+    /// (k, m) row-major final centroid embeddings.
+    pub fn centroids(&self) -> &[f32] {
+        &self.centroids
+    }
+
+    pub fn provenance(&self) -> &Provenance {
+        &self.provenance
+    }
+
+    /// Swap the compute backend (e.g. reference ↔ PJRT). Predictions are
+    /// backend-agnostic up to f32 rounding at padded shapes.
+    pub fn with_compute(mut self, compute: Compute) -> ApncModel {
+        self.compute = compute;
+        self
+    }
+
+    /// Embed out-of-sample points: `y_i = R kappa(L, x_i)` (Property 4.2 —
+    /// only kernel evaluations against the fitted sample set are needed).
+    /// `x` is `(rows, d)` row-major with `rows = x.len() / d`; returns
+    /// `(rows, m)` row-major.
+    pub fn embed(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let d = self.coeffs.d;
+        ensure!(
+            x.len() % d == 0,
+            "input length {} is not a multiple of the fitted dimensionality d = {d}",
+            x.len()
+        );
+        self.coeffs.embed_block(&self.compute, x, x.len() / d)
+    }
+
+    /// Assign each point of `x` (`(rows, d)` row-major) to its nearest
+    /// fitted centroid in embedding space.
+    pub fn predict(&self, x: &[f32]) -> Result<Vec<u32>> {
+        let rows = x.len() / self.coeffs.d;
+        let y = self.embed(x)?;
+        if rows == 0 {
+            return Ok(Vec::new());
+        }
+        let out = self.compute.assign(&y, rows, self.m(), &self.centroids, self.k, self.dist)?;
+        Ok(out.assign)
+    }
+
+    /// [`ApncModel::predict`] in chunks of `chunk_rows` points
+    /// (0 = [`DEFAULT_CHUNK_ROWS`]), bounding peak memory for large
+    /// batches. Every per-row result is independent of the chunking, so
+    /// labels are bit-identical to an unchunked `predict` for any chunk
+    /// size, thread count, or request interleaving.
+    pub fn predict_batch(&self, x: &[f32], chunk_rows: usize) -> Result<Vec<u32>> {
+        let d = self.coeffs.d;
+        ensure!(
+            x.len() % d == 0,
+            "input length {} is not a multiple of the fitted dimensionality d = {d}",
+            x.len()
+        );
+        let rows = x.len() / d;
+        let chunk = if chunk_rows == 0 { DEFAULT_CHUNK_ROWS } else { chunk_rows };
+        let mut labels = Vec::with_capacity(rows);
+        let mut start = 0usize;
+        while start < rows {
+            let take = (rows - start).min(chunk);
+            labels.extend(self.predict(&x[start * d..(start + take) * d])?);
+            start += take;
+        }
+        Ok(labels)
+    }
+
+    /// Write the model to `path` in the versioned binary format
+    /// (see [`format`]).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        format::save(self, path)
+    }
+
+    /// Read a model from `path`, binding it to the auto compute backend
+    /// (PJRT when artifacts exist, reference otherwise).
+    pub fn load(path: &Path) -> Result<ApncModel> {
+        Self::load_with(path, Compute::auto(&Compute::default_artifact_dir()))
+    }
+
+    /// Read a model from `path` with an explicit compute backend.
+    pub fn load_with(path: &Path, compute: Compute) -> Result<ApncModel> {
+        format::load(path, compute)
+    }
+
+    /// Move the model onto a dedicated serving thread and return a
+    /// cloneable request handle (see [`serve`]).
+    pub fn serve(self) -> Result<serve::ModelHandle> {
+        serve::ModelHandle::start(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::CoeffBlock;
+    use crate::rng::Pcg;
+
+    pub(crate) fn toy_model(
+        q: usize,
+        d: usize,
+        l: usize,
+        m: usize,
+        k: usize,
+        seed: u64,
+    ) -> ApncModel {
+        let mut rng = Pcg::seeded(seed);
+        let blocks = (0..q)
+            .map(|_| CoeffBlock {
+                samples: (0..l * d).map(|_| rng.normal() as f32).collect(),
+                l,
+                r_t: (0..l * m).map(|_| rng.normal() as f32 * 0.2).collect(),
+                m,
+            })
+            .collect();
+        let coeffs =
+            ApncCoeffs { method: Method::Nystrom, d, kernel: Kernel::Rbf { gamma: 0.3 }, blocks };
+        let centroids: Vec<f32> = (0..k * coeffs.m()).map(|_| rng.normal() as f32).collect();
+        ApncModel::from_parts(
+            coeffs,
+            centroids,
+            k,
+            Provenance { dataset: "toy".into(), seed },
+            Compute::reference(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn accessors_report_fitted_dims() {
+        let model = toy_model(2, 5, 7, 3, 4, 1);
+        assert_eq!(model.d(), 5);
+        assert_eq!(model.m(), 6);
+        assert_eq!(model.l(), 14);
+        assert_eq!(model.k(), 4);
+        assert_eq!(model.dist(), DistKind::L2Sq);
+        assert_eq!(model.method(), Method::Nystrom);
+        assert_eq!(model.centroids().len(), 24);
+        assert_eq!(model.provenance().dataset, "toy");
+    }
+
+    #[test]
+    fn predict_is_embed_plus_nearest_centroid() {
+        let model = toy_model(1, 4, 6, 5, 3, 2);
+        let mut rng = Pcg::seeded(3);
+        let x: Vec<f32> = (0..9 * 4).map(|_| rng.normal() as f32).collect();
+        let labels = model.predict(&x).unwrap();
+        assert_eq!(labels.len(), 9);
+        let y = model.embed(&x).unwrap();
+        let m = model.m();
+        for (r, &lab) in labels.iter().enumerate() {
+            let yr = &y[r * m..(r + 1) * m];
+            let dist_to = |c: usize| -> f32 {
+                model.centroids()[c * m..(c + 1) * m]
+                    .iter()
+                    .zip(yr)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum()
+            };
+            for c in 0..model.k() {
+                assert!(dist_to(lab as usize) <= dist_to(c) + 1e-6, "row {r}: {lab} vs {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn predict_batch_is_chunk_invariant() {
+        let model = toy_model(2, 3, 5, 4, 3, 4);
+        let mut rng = Pcg::seeded(5);
+        let x: Vec<f32> = (0..23 * 3).map(|_| rng.normal() as f32).collect();
+        let whole = model.predict(&x).unwrap();
+        for chunk in [0usize, 1, 3, 7, 100] {
+            assert_eq!(model.predict_batch(&x, chunk).unwrap(), whole, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn empty_batch_predicts_empty() {
+        let model = toy_model(1, 3, 4, 2, 2, 6);
+        assert!(model.predict(&[]).unwrap().is_empty());
+        assert!(model.predict_batch(&[], 16).unwrap().is_empty());
+    }
+
+    #[test]
+    fn ragged_input_is_an_error() {
+        let model = toy_model(1, 3, 4, 2, 2, 7);
+        assert!(model.embed(&[1.0, 2.0]).is_err());
+        assert!(model.predict(&[1.0, 2.0, 3.0, 4.0]).is_err());
+        assert!(model.predict_batch(&[1.0], 8).is_err());
+    }
+
+    #[test]
+    fn from_parts_rejects_inconsistent_shapes() {
+        let model = toy_model(1, 3, 4, 2, 2, 8);
+        let coeffs = model.coeffs().clone();
+        let prov = model.provenance().clone();
+        // wrong centroid length
+        assert!(ApncModel::from_parts(
+            coeffs.clone(),
+            vec![0.0; 3],
+            2,
+            prov.clone(),
+            Compute::reference()
+        )
+        .is_err());
+        // k = 0
+        assert!(ApncModel::from_parts(
+            coeffs.clone(),
+            vec![],
+            0,
+            prov.clone(),
+            Compute::reference()
+        )
+        .is_err());
+        // empty block list
+        let empty = ApncCoeffs { blocks: vec![], ..coeffs };
+        assert!(ApncModel::from_parts(empty, vec![], 2, prov, Compute::reference()).is_err());
+    }
+}

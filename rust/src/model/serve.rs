@@ -1,0 +1,198 @@
+//! Channel-based serving front-end for a fitted [`ApncModel`].
+//!
+//! Mirrors the [`crate::runtime::service::PjrtService`] pattern: a single
+//! dedicated thread owns the model (and therefore the compute backend —
+//! whose PJRT handle is not `Sync`), and any number of client threads talk
+//! to it through a cloneable [`ModelHandle`]. Requests drain in arrival
+//! order; each prediction is independent per row, so responses are
+//! bit-identical to calling [`ApncModel::predict_batch`] directly on the
+//! in-memory model, regardless of how many clients interleave or how many
+//! compute threads the parallel core uses.
+//!
+//! The serving thread exits when the last handle is dropped.
+
+use std::sync::mpsc;
+
+use super::ApncModel;
+use anyhow::{anyhow, Context, Result};
+
+enum Request {
+    Predict { x: Vec<f32>, chunk_rows: usize, reply: mpsc::Sender<Result<Vec<u32>>> },
+}
+
+/// Cloneable handle to a model serving thread. Clone one per client;
+/// clones share the same fitted model and request queue.
+#[derive(Clone)]
+pub struct ModelHandle {
+    tx: mpsc::Sender<Request>,
+    d: usize,
+    m: usize,
+    k: usize,
+}
+
+impl ModelHandle {
+    /// Move `model` onto a dedicated serving thread and return the first
+    /// handle ([`ApncModel::serve`] is the usual entry point).
+    pub fn start(model: ApncModel) -> Result<ModelHandle> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (d, m, k) = (model.d(), model.m(), model.k());
+        std::thread::Builder::new()
+            .name("apnc-model-serve".into())
+            .spawn(move || {
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Predict { x, chunk_rows, reply } => {
+                            let _ = reply.send(model.predict_batch(&x, chunk_rows));
+                        }
+                    }
+                }
+            })
+            .context("spawning model serving thread")?;
+        Ok(ModelHandle { tx, d, m, k })
+    }
+
+    /// Predict labels for `x` (`(rows, d)` row-major) with the default
+    /// chunking.
+    pub fn predict(&self, x: &[f32]) -> Result<Vec<u32>> {
+        self.predict_batch(x, 0)
+    }
+
+    /// Predict labels for `x` in server-side chunks of `chunk_rows`
+    /// (0 = [`super::DEFAULT_CHUNK_ROWS`]).
+    pub fn predict_batch(&self, x: &[f32], chunk_rows: usize) -> Result<Vec<u32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Predict { x: x.to_vec(), chunk_rows, reply })
+            .map_err(|_| anyhow!("model server is gone"))?;
+        rx.recv().map_err(|_| anyhow!("model server dropped the reply"))?
+    }
+
+    /// Feature dimensionality the served model expects.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Embedding dimensionality of the served model.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Cluster count of the served model.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+}
+
+/// Verification traffic driver shared by `repro serve` and
+/// `examples/serve_stream.rs`: `clients` concurrent clients (cloned
+/// handles) each issue `requests` batched predictions over
+/// `batch_rows`-row slices of `x` ((rows, d) row-major), round-robin
+/// with a per-client offset so requests from different clients
+/// interleave arbitrarily. Every response is asserted bit-identical to
+/// `oracle` (the in-memory `predict_batch` labels) — panicking on
+/// divergence, since a mismatch means the determinism contract is
+/// broken. Returns the total rows served.
+pub fn drive_clients(
+    handle: &ModelHandle,
+    x: &[f32],
+    d: usize,
+    oracle: &[u32],
+    clients: usize,
+    requests: usize,
+    batch_rows: usize,
+) -> usize {
+    assert!(d > 0 && x.len() % d == 0, "x must be (rows, d) row-major");
+    let rows = x.len() / d;
+    assert_eq!(oracle.len(), rows, "oracle must label every row of x");
+    assert!(rows > 0, "need at least one row of traffic");
+    let clients = clients.max(1);
+    let batch = batch_rows.max(1);
+    let slices: Vec<std::ops::Range<usize>> =
+        (0..rows).step_by(batch).map(|lo| lo..(lo + batch).min(rows)).collect();
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let h = handle.clone();
+            let slices = &slices;
+            joins.push(scope.spawn(move || {
+                let mut served = 0usize;
+                for r in 0..requests {
+                    let s = &slices[(c + r * clients) % slices.len()];
+                    let got =
+                        h.predict(&x[s.start * d..s.end * d]).expect("serving request failed");
+                    assert_eq!(
+                        &got[..],
+                        &oracle[s.clone()],
+                        "client {c} request {r} diverged from in-memory prediction"
+                    );
+                    served += s.len();
+                }
+                served
+            }));
+        }
+        joins.into_iter().map(|j| j.join().expect("client thread panicked")).sum()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::toy_model;
+    use crate::rng::Pcg;
+
+    #[test]
+    fn served_predictions_match_in_memory() {
+        let model = toy_model(1, 4, 6, 5, 3, 20);
+        let mut rng = Pcg::seeded(21);
+        let x: Vec<f32> = (0..50 * 4).map(|_| rng.normal() as f32).collect();
+        let want = model.predict_batch(&x, 0).unwrap();
+        let handle = model.clone().serve().unwrap();
+        assert_eq!((handle.d(), handle.m(), handle.k()), (4, 5, 3));
+        assert_eq!(handle.predict(&x).unwrap(), want);
+        assert_eq!(handle.predict_batch(&x, 7).unwrap(), want);
+    }
+
+    #[test]
+    fn concurrent_clients_get_identical_answers() {
+        let model = toy_model(2, 3, 5, 4, 4, 22);
+        let mut rng = Pcg::seeded(23);
+        let x: Vec<f32> = (0..64 * 3).map(|_| rng.normal() as f32).collect();
+        let want = model.predict_batch(&x, 0).unwrap();
+        let handle = model.serve().unwrap();
+        std::thread::scope(|scope| {
+            for t in 0..6usize {
+                let h = handle.clone();
+                let x = &x;
+                let want = &want;
+                scope.spawn(move || {
+                    for round in 0..4 {
+                        // vary the chunking per client and round; answers
+                        // must not change
+                        let chunk = 1 + (t + round) % 9;
+                        assert_eq!(&h.predict_batch(x, chunk).unwrap(), want);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn drive_clients_verifies_and_counts_rows() {
+        let model = toy_model(1, 3, 6, 4, 3, 25);
+        let mut rng = Pcg::seeded(26);
+        let x: Vec<f32> = (0..40 * 3).map(|_| rng.normal() as f32).collect();
+        let want = model.predict_batch(&x, 0).unwrap();
+        let handle = model.serve().unwrap();
+        // 40 rows at batch 16 -> slices of 16/16/8; 2 clients x 3 requests
+        // sweep (16 + 8 + 16) and (16 + 16 + 8) rows respectively
+        let rows = super::drive_clients(&handle, &x, 3, &want, 2, 3, 16);
+        assert_eq!(rows, 80);
+    }
+
+    #[test]
+    fn empty_request_round_trips() {
+        let model = toy_model(1, 3, 4, 2, 2, 24);
+        let handle = model.serve().unwrap();
+        assert!(handle.predict(&[]).unwrap().is_empty());
+        assert!(handle.predict(&[1.0]).is_err(), "ragged input must surface as Err");
+    }
+}

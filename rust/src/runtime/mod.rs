@@ -20,8 +20,9 @@ pub mod manifest;
 pub mod pad;
 pub mod reference;
 pub mod service;
+pub mod xla_shim;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 use std::path::Path;
 
 use crate::kernels::Kernel;
@@ -180,7 +181,16 @@ impl Compute {
                             Tensor::f32_shared(vec![4], params.clone()),
                         ],
                     )?;
-                    y.extend(unpad2(outs[0].as_f32(), pb, pm, chunk, m));
+                    ensure!(!outs.is_empty(), "embed artifact returned no outputs");
+                    let y_p = outs[0].try_f32()?;
+                    ensure!(
+                        y_p.len() == pb * pm,
+                        "embed artifact output has {} elements, expected {} x {}",
+                        y_p.len(),
+                        pb,
+                        pm
+                    );
+                    y.extend(unpad2(y_p, pb, pm, chunk, m));
                     start += chunk;
                 }
                 Ok(y)
@@ -233,16 +243,42 @@ impl Compute {
                             Tensor::I32Scalar(dist.code()),
                         ],
                     )?;
-                    let assign = outs[0].as_i32();
+                    ensure!(
+                        outs.len() >= 4,
+                        "assign artifact returned {} outputs, expected 4",
+                        outs.len()
+                    );
+                    let assign = outs[0].try_i32()?;
+                    ensure!(
+                        assign.len() >= chunk,
+                        "assign artifact returned {} labels for a {chunk}-row chunk",
+                        assign.len()
+                    );
                     out.assign.extend(assign[..chunk].iter().map(|&v| v as u32));
-                    let z = unpad2(outs[1].as_f32(), pk, pm, k, m);
+                    let z_p = outs[1].try_f32()?;
+                    ensure!(
+                        z_p.len() == pk * pm,
+                        "assign artifact Z has {} elements, expected {} x {}",
+                        z_p.len(),
+                        pk,
+                        pm
+                    );
+                    let z = unpad2(z_p, pk, pm, k, m);
                     for (acc, v) in out.z.iter_mut().zip(&z) {
                         *acc += v;
                     }
-                    for (acc, v) in out.g.iter_mut().zip(&outs[2].as_f32()[..k]) {
+                    let g_p = outs[2].try_f32()?;
+                    ensure!(
+                        g_p.len() >= k,
+                        "assign artifact g has {} elements, expected >= {k}",
+                        g_p.len()
+                    );
+                    for (acc, v) in out.g.iter_mut().zip(&g_p[..k]) {
                         *acc += v;
                     }
-                    out.obj += outs[3].as_f32()[0] as f64;
+                    let obj_p = outs[3].try_f32()?;
+                    ensure!(!obj_p.is_empty(), "assign artifact returned an empty objective");
+                    out.obj += obj_p[0] as f64;
                     start += chunk;
                 }
                 Ok(out)
@@ -285,7 +321,16 @@ impl Compute {
                             Tensor::f32_shared(vec![4], params.clone()),
                         ],
                     )?;
-                    out.extend(unpad2(outs[0].as_f32(), pb, pl, chunk, l));
+                    ensure!(!outs.is_empty(), "kmat artifact returned no outputs");
+                    let k_p = outs[0].try_f32()?;
+                    ensure!(
+                        k_p.len() == pb * pl,
+                        "kmat artifact output has {} elements, expected {} x {}",
+                        k_p.len(),
+                        pb,
+                        pl
+                    );
+                    out.extend(unpad2(k_p, pb, pl, chunk, l));
                     start += chunk;
                 }
                 Ok(out)

@@ -16,6 +16,12 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{mpsc, Arc};
 
+// The native `xla` crate is absent from the reproduction container; the
+// shim mirrors its API and fails fast at client startup (Compute::auto
+// then falls back to the reference backend). Swap this line for `use xla;`
+// when the real crate is vendored.
+use crate::runtime::xla_shim as xla;
+
 use super::manifest::Manifest;
 
 /// A plain (shape, data) tensor that can cross threads. Data is
@@ -48,17 +54,21 @@ pub enum OutTensor {
 }
 
 impl OutTensor {
-    pub fn as_f32(&self) -> &[f32] {
+    /// Borrow as f32, or an error when the backend returned a different
+    /// dtype (a shape/ABI mismatch is an error, not a process abort).
+    pub fn try_f32(&self) -> Result<&[f32]> {
         match self {
-            OutTensor::F32(v) => v,
-            OutTensor::I32(_) => panic!("expected f32 output, got i32"),
+            OutTensor::F32(v) => Ok(v),
+            OutTensor::I32(_) => Err(anyhow!("expected f32 output, got i32")),
         }
     }
 
-    pub fn as_i32(&self) -> &[i32] {
+    /// Borrow as i32, or an error when the backend returned a different
+    /// dtype.
+    pub fn try_i32(&self) -> Result<&[i32]> {
         match self {
-            OutTensor::I32(v) => v,
-            OutTensor::F32(_) => panic!("expected i32 output, got f32"),
+            OutTensor::I32(v) => Ok(v),
+            OutTensor::F32(_) => Err(anyhow!("expected i32 output, got f32")),
         }
     }
 }
@@ -167,6 +177,21 @@ fn ensure_compiled<'c>(
         cache.insert(artifact.to_string(), exe);
     }
     Ok(cache.get(artifact).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_tensor_dtype_mismatch_is_an_error() {
+        let f = OutTensor::F32(vec![1.0, 2.0]);
+        let i = OutTensor::I32(vec![3, 4]);
+        assert_eq!(f.try_f32().unwrap(), &[1.0, 2.0]);
+        assert_eq!(i.try_i32().unwrap(), &[3, 4]);
+        assert!(f.try_i32().is_err());
+        assert!(i.try_f32().is_err());
+    }
 }
 
 fn run(exe: &xla::PjRtLoadedExecutable, inputs: Vec<Tensor>) -> Result<Vec<OutTensor>> {

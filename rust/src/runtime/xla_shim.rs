@@ -1,0 +1,121 @@
+//! Build shim for the `xla` FFI crate.
+//!
+//! The reproduction container does not ship the `xla` crate (it wraps the
+//! native PJRT/XLA runtime), so this module mirrors the exact slice of its
+//! API that [`super::service`] uses. Every entry point fails fast with
+//! [`Unavailable`]: `PjRtClient::cpu()` errors before any artifact is
+//! touched, [`super::Compute::auto`] reports the failure and falls back to
+//! the pure-rust reference backend, and the rest of the service code stays
+//! compiled and type-checked against the real call shapes. Swapping in the
+//! real crate is a one-line change in `service.rs` (`use xla;` instead of
+//! `use crate::runtime::xla_shim as xla;`) plus the Cargo dependency.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error every shim entry point returns: the native runtime is absent.
+#[derive(Clone, Copy, Debug)]
+pub struct Unavailable;
+
+impl fmt::Display for Unavailable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "the xla/PJRT native runtime is not linked into this build")
+    }
+}
+
+/// Output element dtypes the service decodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[allow(dead_code)]
+pub enum ElementType {
+    F32,
+    S32,
+    Pred,
+}
+
+/// Host literal (stub: never holds data — construction is allowed so the
+/// request path type-checks, but no execution can produce one).
+#[derive(Clone, Debug, Default)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn scalar<T>(_v: T) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Unavailable> {
+        Err(Unavailable)
+    }
+
+    pub fn to_literal_sync(&self) -> Result<Literal, Unavailable> {
+        Err(Unavailable)
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Unavailable> {
+        Err(Unavailable)
+    }
+
+    pub fn ty(&self) -> Result<ElementType, Unavailable> {
+        Err(Unavailable)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+/// Parsed HLO module text.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<Literal>>, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+/// The PJRT client. `cpu()` is the process's single entry point to the
+/// native runtime; in this shim it always errors, which
+/// [`super::service::PjrtService::start`] surfaces as a startup failure.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Unavailable> {
+        Err(Unavailable)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Unavailable> {
+        Err(Unavailable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_startup_fails_fast() {
+        let err = PjRtClient::cpu().err().expect("shim must not pretend to start");
+        assert!(err.to_string().contains("not linked"));
+    }
+}

@@ -1,0 +1,193 @@
+//! Model persistence + serving integration tests: the determinism
+//! contract extended to the serving path.
+//!
+//! save → load → predict must be bit-identical to the in-memory model,
+//! across methods, thread counts, chunk sizes, and concurrent clients;
+//! corrupted or truncated model files must be rejected with an error.
+
+use apnc::coordinator::driver::{Pipeline, PipelineConfig};
+use apnc::data::{registry, Dataset};
+use apnc::embedding::Method;
+use apnc::model::ApncModel;
+use apnc::runtime::Compute;
+
+fn fit_model(method: Method, seed: u64) -> (Dataset, ApncModel) {
+    let ds = registry::generate("moons", 400, seed);
+    let mut b = PipelineConfig::builder()
+        .method(method)
+        .l(48)
+        .m(32)
+        .max_iters(10)
+        .workers(3)
+        .block_rows(128)
+        .seed(seed);
+    if method == Method::StableDist {
+        // SD needs more projections than Nystrom needs eigenvectors
+        b = b.m(96).l(64);
+    }
+    let cfg = b.build().unwrap();
+    let (model, _report) =
+        Pipeline::with_compute(cfg, Compute::reference()).fit(&ds).unwrap();
+    (ds, model)
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("apnc-roundtrip-{name}-{}", std::process::id()))
+}
+
+fn roundtrip_bit_identical(method: Method, tag: &str, seed: u64) {
+    let (ds, model) = fit_model(method, seed);
+    let path = tmp(tag);
+    model.save(&path).unwrap();
+    let loaded = ApncModel::load_with(&path, Compute::reference()).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(loaded.method(), method);
+    assert_eq!(loaded.kernel(), model.kernel());
+    assert_eq!((loaded.d(), loaded.m(), loaded.l(), loaded.k()), (model.d(), model.m(), model.l(), model.k()));
+    assert_eq!(loaded.dist(), model.dist());
+    assert_eq!(loaded.centroids(), model.centroids());
+    assert_eq!(loaded.provenance(), model.provenance());
+
+    // training data and fresh out-of-sample points, several chunkings:
+    // labels must be bit-identical between the in-memory and loaded model
+    let fresh = registry::generate("moons", 150, seed ^ 0xFF);
+    for x in [&ds.x, &fresh.x] {
+        let want = model.predict_batch(x, 0).unwrap();
+        for chunk in [0usize, 1, 7, 64, 10_000] {
+            assert_eq!(loaded.predict_batch(x, chunk).unwrap(), want, "chunk={chunk}");
+        }
+        assert_eq!(loaded.predict(x).unwrap(), want);
+    }
+}
+
+#[test]
+fn nystrom_roundtrip_bit_identical() {
+    roundtrip_bit_identical(Method::Nystrom, "nys", 101);
+}
+
+#[test]
+fn stable_dist_roundtrip_bit_identical() {
+    roundtrip_bit_identical(Method::StableDist, "sd", 102);
+}
+
+#[test]
+fn ensemble_roundtrip_preserves_every_block() {
+    // q > 1 exercises the multi-block section of the format
+    let (ds, model) = fit_model(Method::EnsembleNystrom, 103);
+    assert!(model.coeffs().blocks.len() > 1, "ensemble should fit multiple blocks");
+    let path = tmp("enys");
+    model.save(&path).unwrap();
+    let loaded = ApncModel::load_with(&path, Compute::reference()).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.coeffs().blocks.len(), model.coeffs().blocks.len());
+    assert_eq!(loaded.predict_batch(&ds.x, 0).unwrap(), model.predict_batch(&ds.x, 0).unwrap());
+}
+
+#[test]
+fn predictions_identical_for_any_thread_count() {
+    let (ds, model) = fit_model(Method::Nystrom, 104);
+    let want = model.predict_batch(&ds.x, 0).unwrap();
+    for threads in [1usize, 2, 7, 8] {
+        apnc::parallel::set_threads(threads);
+        let got = model.predict_batch(&ds.x, 0).unwrap();
+        apnc::parallel::set_threads(0);
+        assert_eq!(got, want, "threads={threads}");
+    }
+}
+
+#[test]
+fn run_fit_and_serving_agree_end_to_end() {
+    // the acceptance contract: Pipeline::run labels == fit + model
+    // self-prediction == save/load/serve prediction, for both methods
+    for (method, seed) in [(Method::Nystrom, 105u64), (Method::StableDist, 106)] {
+        let (ds, model) = fit_model(method, seed);
+        let cfg_labels = {
+            let mut b = PipelineConfig::builder()
+                .method(method)
+                .l(48)
+                .m(32)
+                .max_iters(10)
+                .workers(3)
+                .block_rows(128)
+                .seed(seed);
+            if method == Method::StableDist {
+                b = b.m(96).l(64);
+            }
+            Pipeline::with_compute(b.build().unwrap(), Compute::reference())
+                .run(&ds)
+                .unwrap()
+                .labels
+        };
+        let direct = model.predict_batch(&ds.x, 0).unwrap();
+        assert_eq!(direct, cfg_labels, "{method:?}: model predict != batch labels");
+
+        let path = tmp(&format!("serve-{seed}"));
+        model.save(&path).unwrap();
+        let handle =
+            ApncModel::load_with(&path, Compute::reference()).unwrap().serve().unwrap();
+        std::fs::remove_file(&path).ok();
+        let d = ds.d;
+        std::thread::scope(|scope| {
+            for t in 0..4usize {
+                let h = handle.clone();
+                let x = &ds.x;
+                let want = &direct;
+                scope.spawn(move || {
+                    // each client predicts interleaved batches; every label
+                    // must match the in-memory prediction bit-for-bit
+                    let rows = x.len() / d;
+                    let batch = 64usize;
+                    let mut lo = (t * 17) % rows;
+                    for _ in 0..6 {
+                        let hi = (lo + batch).min(rows);
+                        let got = h.predict(&x[lo * d..hi * d]).unwrap();
+                        assert_eq!(&got[..], &want[lo..hi], "client {t} batch at {lo}");
+                        lo = (lo + batch) % rows.max(1);
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[test]
+fn corrupted_and_truncated_files_are_rejected() {
+    let (_ds, model) = fit_model(Method::Nystrom, 107);
+    let path = tmp("corrupt");
+    model.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    // truncations at several depths (magic, header, payload, checksum)
+    for cut in [0usize, 3, 8, 24, bytes.len() / 3, bytes.len() - 1] {
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        assert!(
+            ApncModel::load_with(&path, Compute::reference()).is_err(),
+            "truncation at {cut} bytes was accepted"
+        );
+    }
+
+    // single flipped bytes anywhere must be caught (checksum or header
+    // validation), never silently accepted
+    for pos in [8usize, 12, 40, bytes.len() / 2, bytes.len() - 4] {
+        let mut corrupt = bytes.clone();
+        corrupt[pos] ^= 0x10;
+        std::fs::write(&path, &corrupt).unwrap();
+        assert!(
+            ApncModel::load_with(&path, Compute::reference()).is_err(),
+            "flipped byte at {pos} was accepted"
+        );
+    }
+
+    // wrong magic
+    let mut wrong = bytes.clone();
+    wrong[..4].copy_from_slice(b"NOPE");
+    std::fs::write(&path, &wrong).unwrap();
+    let err = ApncModel::load_with(&path, Compute::reference()).unwrap_err().to_string();
+    assert!(err.contains("not an APNC model"), "{err}");
+
+    // intact bytes still load (the fixture itself is valid)
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(ApncModel::load_with(&path, Compute::reference()).is_ok());
+    std::fs::remove_file(&path).ok();
+}
