@@ -7,13 +7,13 @@
 #   make lint        — cargo fmt --check + clippy --all-targets -D warnings
 #   make verify      — build + test + doc + lint
 #   make bench-json  — regenerate $(BENCH_OUT) from the perf trajectory
-#                      suites (kernels, linalg, pipeline); records are
-#                      JSON-lines appended by each suite
-#   make bench-json BENCH_OUT=BENCH_PR3.json  — next PR's baseline
+#                      suites (kernels, linalg, pipeline, serving);
+#                      records are JSON-lines appended by each suite
+#   make bench-json BENCH_OUT=BENCH_PR5.json  — next PR's baseline
 
 CARGO   ?= cargo
 MANIFEST = rust/Cargo.toml
-BENCH_OUT ?= BENCH_PR2.json
+BENCH_OUT ?= BENCH_PR4.json
 
 .PHONY: build test doc lint verify bench-json
 
@@ -40,4 +40,5 @@ bench-json:
 	$(CARGO) bench --manifest-path $(MANIFEST) --bench bench_kernels -- --json $(abspath $(BENCH_OUT))
 	$(CARGO) bench --manifest-path $(MANIFEST) --bench bench_linalg -- --json $(abspath $(BENCH_OUT))
 	$(CARGO) bench --manifest-path $(MANIFEST) --bench bench_pipeline -- --json $(abspath $(BENCH_OUT))
+	$(CARGO) bench --manifest-path $(MANIFEST) --bench bench_serving -- --json $(abspath $(BENCH_OUT))
 	@echo "wrote $(BENCH_OUT)"

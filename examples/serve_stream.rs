@@ -8,9 +8,11 @@
 //! 3. **load** it into a *fresh* [`ApncModel`] (as a serving process
 //!    would), and
 //! 4. drive sustained batched prediction from many concurrent clients
-//!    through the cloneable [`ModelHandle`] — the same channel pattern the
-//!    PJRT service uses, so the non-`Sync` compute backend lives on one
-//!    thread while any number of clients submit.
+//!    through the **sharded front-end** (`--shards N` model threads
+//!    behind one round-robin `ShardedHandle`) — the same
+//!    single-owner-thread pattern the PJRT service uses, N times over.
+//!    The batch is `Arc`-shared: every request carries a row range, not
+//!    a copy.
 //!
 //! Every response is asserted bit-identical to in-memory
 //! `predict_batch` on the originally fitted model: the determinism
@@ -18,21 +20,24 @@
 //! size, or client interleaving) extends to the serving path.
 //!
 //!     cargo run --release --example serve_stream \
-//!         [-- --n 4000 --clients 4 --rounds 6 --batch-rows 256 --threads 0]
+//!         [-- --n 4000 --shards 2 --clients 4 --rounds 6 --batch-rows 256 \
+//!          --threads 0]
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use apnc::cli::Args;
 use apnc::coordinator::driver::{Pipeline, PipelineConfig};
 use apnc::data::registry;
 use apnc::embedding::Method;
-use apnc::model::serve::drive_clients;
+use apnc::model::shard::drive_clients;
 use apnc::model::ApncModel;
 use apnc::runtime::Compute;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
     let n = args.usize_or("n", 4_000)?;
+    let shards = args.usize_or("shards", 2)?.max(1);
     let clients = args.usize_or("clients", 4)?.max(1);
     let rounds = args.usize_or("rounds", 6)?.max(1);
     let batch_rows = args.usize_or("batch-rows", 256)?.max(1);
@@ -79,25 +84,35 @@ fn main() -> anyhow::Result<()> {
     // oracle: in-memory batched prediction on the *originally fitted* model
     let want = model.predict_batch(&ds.x, batch_rows)?;
 
-    // ---- 4. concurrent batched serving ----------------------------------
+    // ---- 4. concurrent sharded serving ----------------------------------
     // each client sweeps every batch slice `rounds` times at its own
     // round-robin offset, so requests from different clients interleave
-    // arbitrarily; drive_clients asserts every response bit-identical to
-    // the in-memory oracle
-    let handle = served.serve()?;
+    // arbitrarily across the shards; drive_clients asserts every response
+    // bit-identical to the in-memory oracle. The batch is shared through
+    // one Arc — zero bytes copied per request.
+    let handle = served.serve_sharded(shards)?;
+    let x: Arc<[f32]> = ds.x.as_slice().into();
     let n_slices = ds.n.div_ceil(batch_rows);
     let requests = rounds * n_slices;
     let t0 = Instant::now();
-    let total_rows = drive_clients(&handle, &ds.x, ds.d, &want, clients, requests, batch_rows);
+    let report = drive_clients(&handle, &x, ds.d, &want, clients, requests, batch_rows);
     let secs = t0.elapsed().as_secs_f64();
     println!(
-        "served {} batches from {} clients: {} rows in {:.2}s ({:.0} rows/s)",
+        "served {} batches from {} clients over {} shard(s): {} rows in {:.2}s ({:.0} rows/s)",
         clients * requests,
         clients,
-        total_rows,
+        shards,
+        report.total_rows,
         secs,
-        total_rows as f64 / secs.max(1e-9)
+        report.total_rows as f64 / secs.max(1e-9)
     );
+    for (i, rows) in report.per_shard_rows.iter().enumerate() {
+        println!(
+            "  shard {i}: {} rows ({:.0} rows/s)",
+            rows,
+            *rows as f64 / secs.max(1e-9)
+        );
+    }
     println!(
         "every response bit-identical to in-memory prediction (threads = {}, any value \
          gives the same labels)",

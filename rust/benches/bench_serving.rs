@@ -1,0 +1,79 @@
+//! Serving-tier throughput: the sharded front-end vs in-memory
+//! prediction.
+//!
+//! Cases pin the PR-4 serving trajectory: an in-memory `predict_batch`
+//! baseline, then `drive_clients` traffic through 1/2/8 shards under
+//! concurrent clients (zero-copy `Arc`-shared batch, round-robin
+//! routing). All shards deref one shared model, so the shard sweep
+//! measures pure request-level parallelism — the paper's Property 4.2
+//! row-independence cashed in as throughput. Every driven response is
+//! asserted bit-identical to the in-memory oracle, so the bench doubles
+//! as a determinism soak.
+
+use std::sync::Arc;
+
+use apnc::bench::Bench;
+use apnc::embedding::{ApncCoeffs, CoeffBlock, Method};
+use apnc::kernels::Kernel;
+use apnc::model::shard::drive_clients;
+use apnc::model::{ApncModel, Provenance};
+use apnc::rng::Pcg;
+use apnc::runtime::Compute;
+
+/// Synthetic fitted model (random coefficients are fine: serving cost is
+/// shape-dependent, not value-dependent).
+fn synth_model(d: usize, l: usize, m: usize, k: usize, seed: u64) -> ApncModel {
+    let mut rng = Pcg::seeded(seed);
+    let blocks = vec![CoeffBlock {
+        samples: (0..l * d).map(|_| rng.normal() as f32).collect(),
+        l,
+        r_t: (0..l * m).map(|_| rng.normal() as f32 * 0.2).collect(),
+        m,
+    }];
+    let coeffs = ApncCoeffs { method: Method::Nystrom, d, kernel: Kernel::Rbf { gamma: 0.3 }, blocks };
+    let centroids: Vec<f32> = (0..k * m).map(|_| rng.normal() as f32).collect();
+    ApncModel::from_parts(
+        coeffs,
+        centroids,
+        k,
+        Provenance { dataset: "bench-serving".into(), seed },
+        Compute::reference(),
+    )
+    .unwrap()
+}
+
+fn main() {
+    let b = Bench::new("serving");
+    let fast = std::env::var("APNC_BENCH_FAST").is_ok();
+    let (d, l, m, k) = (16usize, 128usize, 64usize, 10usize);
+    let rows = if fast { 1024 } else { 8192 };
+    let batch_rows = 512usize;
+
+    let model = synth_model(d, l, m, k, 2024);
+    let mut rng = Pcg::seeded(2025);
+    let x: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32).collect();
+    let oracle = model.predict_batch(&x, 0).unwrap();
+    let shared: Arc<[f32]> = x.as_slice().into();
+
+    // baseline: one in-memory chunked predict over the whole batch
+    let s = b.run(&format!("inmem_predict_{rows}x{d}"), || {
+        std::hint::black_box(
+            model.predict_batch(std::hint::black_box(&x), batch_rows).unwrap(),
+        );
+    });
+    b.throughput(&s, rows, "row");
+
+    // sharded serving: each client sweeps every slice once per drive, so
+    // one drive serves clients * rows rows
+    let n_slices = rows.div_ceil(batch_rows);
+    for (shards, clients) in [(1usize, 4usize), (2, 4), (8, 8)] {
+        let handle = model.clone().serve_sharded(shards).unwrap();
+        let name = format!("serve_{shards}shard_{clients}cli_{rows}x{d}");
+        let st = b.run(&name, || {
+            let report =
+                drive_clients(&handle, &shared, d, &oracle, clients, n_slices, batch_rows);
+            std::hint::black_box(report.total_rows);
+        });
+        b.throughput(&st, clients * rows, "row");
+    }
+}

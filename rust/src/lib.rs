@@ -57,9 +57,16 @@
 //! assert_eq!(labels.len(), ds.n);
 //! ```
 //!
+//! For serving traffic, [`model::ApncModel::serve`] moves the model onto
+//! a dedicated thread behind a cloneable handle, and
+//! [`model::ApncModel::serve_sharded`] stands up N model threads behind a
+//! round-robin [`model::shard::ShardedHandle`] (zero-copy `Arc`-shared
+//! request payloads; responses bit-identical to in-memory prediction for
+//! any shard count).
+//!
 //! See `examples/` for runnable end-to-end drivers (including
-//! `serve_stream`, a many-client serving demo) and `repro --help` for the
-//! table-regeneration + fit/predict/serve CLI.
+//! `serve_stream`, a many-client sharded serving demo) and `repro --help`
+//! for the table-regeneration + fit/predict/serve CLI.
 //!
 //! ## Architecture
 //!

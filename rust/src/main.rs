@@ -19,9 +19,11 @@
 //!              fit only: --out PATH (model file, default <dataset>.apncm)
 //! `predict` flags: --model PATH [--input FILE | --dataset NAME --n N]
 //!              --chunk N (rows per prediction chunk, 0 = default)
-//! `serve` flags: --model PATH --clients N --requests N --batch-rows N
+//! `serve` flags: --model PATH --shards N (serving threads, default 1)
+//!              --clients N --requests N --batch-rows N
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
@@ -31,7 +33,7 @@ use apnc::coordinator::sample::SampleMode;
 use apnc::data::registry;
 use apnc::embedding::Method;
 use apnc::experiments::{ablate, table1, table2, table3};
-use apnc::model::serve::drive_clients;
+use apnc::model::shard::drive_clients;
 use apnc::model::ApncModel;
 use apnc::runtime::Compute;
 
@@ -247,6 +249,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    let shards = args.usize_or("shards", 1)?.max(1);
     let clients = args.usize_or("clients", 4)?.max(1);
     let requests = args.usize_or("requests", 8)?.max(1);
     let batch_rows = args.usize_or("batch-rows", 512)?.max(1);
@@ -254,18 +257,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let model = load_model_checked(args, &ds)?;
     // oracle for the determinism check: direct in-memory prediction
     let want = model.predict_batch(&ds.x, 0)?;
-    let handle = model.serve()?;
+    let handle = model.serve_sharded(shards)?;
+    // the batch is Arc-shared: every request carries a range, not a copy
+    let x: Arc<[f32]> = ds.x.as_slice().into();
     let t0 = Instant::now();
-    let total_rows = drive_clients(&handle, &ds.x, ds.d, &want, clients, requests, batch_rows);
+    let report = drive_clients(&handle, &x, ds.d, &want, clients, requests, batch_rows);
     let secs = t0.elapsed().as_secs_f64();
     println!(
-        "served {} requests from {} clients: {} rows in {:.2}s ({:.0} rows/s)",
+        "served {} requests from {} clients over {} shard(s): {} rows in {:.2}s ({:.0} rows/s)",
         clients * requests,
         clients,
-        total_rows,
+        shards,
+        report.total_rows,
         secs,
-        total_rows as f64 / secs.max(1e-9)
+        report.total_rows as f64 / secs.max(1e-9)
     );
+    for (i, rows) in report.per_shard_rows.iter().enumerate() {
+        println!("  shard {i}: {} rows ({:.0} rows/s)", rows, *rows as f64 / secs.max(1e-9));
+    }
     println!("every response was bit-identical to in-memory prediction");
     Ok(())
 }

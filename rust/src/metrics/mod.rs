@@ -5,15 +5,32 @@
 //! provided for additional diagnostics, and a paired t-test used for the
 //! bold-facing rule in Tables 2/3.
 
-/// Contingency table between two labelings (dense, clusters x classes).
+/// Map arbitrary `u32` label ids to dense `0..count` indexes in
+/// first-appearance order. Labels are ids, not indexes: sizing a dense
+/// table by `max(label) + 1` lets one stray large label (e.g. a sentinel
+/// `u32::MAX`) allocate a multi-GB table, so every metric goes through
+/// this compaction instead. All metrics below are invariant to
+/// relabeling, so the index order never matters.
+fn compact_labels(labels: &[u32]) -> (Vec<usize>, usize) {
+    let mut index = std::collections::HashMap::new();
+    let mut dense = Vec::with_capacity(labels.len());
+    for &l in labels {
+        let next = index.len();
+        dense.push(*index.entry(l).or_insert(next));
+    }
+    (dense, index.len())
+}
+
+/// Contingency table between two labelings (dense over the *distinct*
+/// labels of each side, clusters x classes).
 fn contingency(pred: &[u32], truth: &[u32]) -> (Vec<Vec<f64>>, Vec<f64>, Vec<f64>, f64) {
     assert_eq!(pred.len(), truth.len());
     assert!(!pred.is_empty(), "empty labeling");
-    let kp = *pred.iter().max().unwrap() as usize + 1;
-    let kt = *truth.iter().max().unwrap() as usize + 1;
+    let (pred, kp) = compact_labels(pred);
+    let (truth, kt) = compact_labels(truth);
     let mut table = vec![vec![0.0; kt]; kp];
-    for (&p, &t) in pred.iter().zip(truth) {
-        table[p as usize][t as usize] += 1.0;
+    for (&p, &t) in pred.iter().zip(&truth) {
+        table[p][t] += 1.0;
     }
     let rows: Vec<f64> = table.iter().map(|r| r.iter().sum()).collect();
     let mut cols = vec![0.0; kt];
@@ -126,6 +143,25 @@ mod tests {
         let truth: Vec<u32> = (0..400).map(|i| (i / 200) as u32).collect();
         let pred: Vec<u32> = (0..400).map(|i| (i % 2) as u32).collect();
         assert!(nmi(&pred, &truth) < 0.05);
+    }
+
+    #[test]
+    fn sparse_high_labels_stay_cheap_and_exact() {
+        // labels are ids, not indexes: a stray huge u32 (sentinel, hash,
+        // bug) must not size the dense table by max(label) + 1 — this
+        // allocated a multi-GB table and aborted evaluation before the
+        // compaction fix. The partitions below are identical up to
+        // relabeling, so every metric must still be exact.
+        let truth = [0u32, 0, 1, 1, 2, 2];
+        let pred = [7u32, 7, 4_000_000_000, 4_000_000_000, 9, 9];
+        assert!((nmi(&pred, &truth) - 1.0).abs() < 1e-12);
+        assert!((ari(&pred, &truth) - 1.0).abs() < 1e-12);
+        assert!((purity(&pred, &truth) - 1.0).abs() < 1e-12);
+        // and a non-trivial agreement pattern with u32::MAX present
+        let truth2 = [0u32, 0, 0, 1, 1, 1];
+        let pred2 = [u32::MAX, u32::MAX, 5, 5, 5, 5];
+        assert!(nmi(&pred2, &truth2) > 0.0 && nmi(&pred2, &truth2) < 1.0);
+        assert!((purity(&pred2, &truth2) - 5.0 / 6.0).abs() < 1e-12);
     }
 
     #[test]

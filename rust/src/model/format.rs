@@ -157,6 +157,10 @@ fn elems(a: u64, b: u64, cap: u64, what: &str) -> Result<usize> {
 /// Enforces the same header caps as [`load`], so a model that saves
 /// successfully is always loadable — a fit that exceeds a cap fails
 /// here with a clear error instead of producing an unreadable file.
+/// The write is atomic at the filesystem level: bytes go to a `.tmp`
+/// sibling that is renamed over `path` only after a successful flush,
+/// so a mid-write failure (full disk, killed process) never clobbers an
+/// existing good model file.
 pub fn save(model: &ApncModel, path: &Path) -> Result<()> {
     let coeffs = model.coeffs();
     ensure!(
@@ -174,6 +178,32 @@ pub fn save(model: &ApncModel, path: &Path) -> Result<()> {
             b.m
         );
     }
+    let name = model.provenance().dataset.as_bytes();
+    ensure!(name.len() <= MAX_NAME_LEN, "dataset name too long to persist ({})", name.len());
+    // unique temp sibling: same directory so the rename stays on one
+    // filesystem, pid + sequence so concurrent saves to the same path
+    // never interleave into one temp file
+    static SAVE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = SAVE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let tmp = {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(format!(".tmp.{}.{seq}", std::process::id()));
+        std::path::PathBuf::from(os)
+    };
+    let result = write_payload(model, &tmp).and_then(|()| {
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("moving {} into place at {}", tmp.display(), path.display()))
+    });
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+/// The serialization body of [`save`]: every header/payload/checksum
+/// byte to `path` (the temp sibling), flushed.
+fn write_payload(model: &ApncModel, path: &Path) -> Result<()> {
+    let coeffs = model.coeffs();
     let file = std::fs::File::create(path)
         .with_context(|| format!("creating {}", path.display()))?;
     let mut w = HashWriter { w: BufWriter::new(file), hash: Fnv::new() };
@@ -186,7 +216,6 @@ pub fn save(model: &ApncModel, path: &Path) -> Result<()> {
     w.u64(model.k() as u64)?;
     w.u64(model.provenance().seed)?;
     let name = model.provenance().dataset.as_bytes();
-    ensure!(name.len() <= MAX_NAME_LEN, "dataset name too long to persist ({})", name.len());
     w.u32(name.len() as u32)?;
     w.put(name)?;
     w.u32(coeffs.blocks.len() as u32)?;
@@ -316,6 +345,63 @@ mod tests {
         let err = model.save(&path).unwrap_err().to_string();
         std::fs::remove_file(&path).ok();
         assert!(err.contains("coefficient blocks"), "{err}");
+    }
+
+    /// Files next to `path` whose names extend `path`'s file name with
+    /// `.tmp` (the atomic-save temp siblings).
+    fn stray_tmp_siblings(path: &std::path::Path) -> Vec<String> {
+        let stem = format!("{}.tmp", path.file_name().unwrap().to_string_lossy());
+        std::fs::read_dir(path.parent().unwrap())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with(&stem))
+            .collect()
+    }
+
+    #[test]
+    fn failed_save_leaves_an_existing_model_intact() {
+        // atomicity: a save that fails pre-write validation must not
+        // clobber the good file already at the path
+        let good = toy_model(1, 3, 4, 2, 2, 16);
+        let path = tmp("atomic");
+        good.save(&path).unwrap();
+        let before = std::fs::read(&path).unwrap();
+
+        let blocks: Vec<CoeffBlock> = (0..MAX_BLOCKS + 1)
+            .map(|_| CoeffBlock { samples: vec![1.0], l: 1, r_t: vec![1.0], m: 1 })
+            .collect();
+        let m_total = blocks.len();
+        let coeffs =
+            ApncCoeffs { method: Method::EnsembleNystrom, d: 1, kernel: Kernel::Linear, blocks };
+        let bad = ApncModel::from_parts(
+            coeffs,
+            vec![0.0f32; 2 * m_total],
+            2,
+            Provenance { dataset: "big".into(), seed: 0 },
+            Compute::reference(),
+        )
+        .unwrap();
+        assert!(bad.save(&path).is_err());
+        assert_eq!(std::fs::read(&path).unwrap(), before, "good model was clobbered");
+        assert!(stray_tmp_siblings(&path).is_empty(), "stray .tmp file");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn failed_publish_cleans_up_its_temp_file() {
+        // drive the post-write failure branch: the payload writes fine
+        // but the rename cannot land (destination is a directory) — the
+        // save must error and remove its temp sibling
+        let model = toy_model(1, 3, 4, 2, 2, 17);
+        let dir = tmp("as-dir");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(model.save(&dir).is_err(), "saving over a directory must fail");
+        assert!(
+            stray_tmp_siblings(&dir).is_empty(),
+            "temp sibling leaked after a failed publish"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

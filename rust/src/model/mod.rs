@@ -14,7 +14,10 @@
 //! The model is persistable ([`ApncModel::save`] / [`ApncModel::load`],
 //! a versioned binary format in [`format`]) and servable
 //! ([`ApncModel::serve`] returns a cloneable channel-backed
-//! [`serve::ModelHandle`], mirroring the PJRT service pattern). All
+//! [`serve::ModelHandle`] on the shared single-owner-thread core;
+//! [`ApncModel::serve_sharded`] stands up N model threads behind one
+//! round-robin [`shard::ShardedHandle`] with zero-copy `Arc`-shared
+//! request payloads). All
 //! compute runs through the [`crate::runtime::Compute`] facade, so both
 //! the PJRT artifact backend and the rust reference serve predictions,
 //! and every hot loop lands on the shared parallel core
@@ -25,6 +28,7 @@
 
 pub mod format;
 pub mod serve;
+pub mod shard;
 
 use std::path::Path;
 
@@ -225,6 +229,13 @@ impl ApncModel {
     /// cloneable request handle (see [`serve`]).
     pub fn serve(self) -> Result<serve::ModelHandle> {
         serve::ModelHandle::start(self)
+    }
+
+    /// Stand up `n_shards` serving threads (at least 1) behind one
+    /// round-robin front-end (see [`shard`]). Responses are bit-identical
+    /// to [`ApncModel::predict_batch`] for any shard count.
+    pub fn serve_sharded(self, n_shards: usize) -> Result<shard::ShardedHandle> {
+        shard::ShardedHandle::start(self, n_shards)
     }
 }
 

@@ -1,30 +1,63 @@
-//! Channel-based serving front-end for a fitted [`ApncModel`].
+//! Channel-based serving for a fitted [`ApncModel`]: one shard.
 //!
-//! Mirrors the [`crate::runtime::service::PjrtService`] pattern: a single
-//! dedicated thread owns the model (and therefore the compute backend —
-//! whose PJRT handle is not `Sync`), and any number of client threads talk
-//! to it through a cloneable [`ModelHandle`]. Requests drain in arrival
-//! order; each prediction is independent per row, so responses are
-//! bit-identical to calling [`ApncModel::predict_batch`] directly on the
-//! in-memory model, regardless of how many clients interleave or how many
-//! compute threads the parallel core uses.
+//! A [`ModelHandle`] is one model thread behind a cloneable request
+//! handle, built on the shared single-owner-thread core
+//! (`runtime::service::ServiceCore`, the `PjrtService` pattern): the
+//! dedicated thread holds an `Arc` of the model and any number of client
+//! threads submit requests over an mpsc channel. [`ApncModel`] is
+//! `Sync` on either backend — the non-`Sync` PJRT client lives on its
+//! own service thread, the model only holds the channel handle — so the
+//! sharded front-end ([`crate::model::shard::ShardedHandle`]) stands up
+//! N of these over **one** shared model, never per-shard copies.
 //!
-//! The serving thread exits when the last handle is dropped.
+//! Two serving-tier contracts live here:
+//!
+//! * **Zero-copy requests.** The request payload is an `Arc<[f32]>` plus
+//!   a row range, never an owned copy of the batch: clients that hold a
+//!   shared batch ([`ModelHandle::predict_shared`]) pay zero bytes per
+//!   request, and the convenience slice APIs pay exactly one `Arc::from`
+//!   copy at the submission boundary (not one per hop).
+//! * **Explained death.** The serving thread records why it stopped —
+//!   explicit [`ModelHandle::shutdown`], all handles dropped, or a
+//!   captured panic message — and every subsequent client call surfaces
+//!   that cause in its `Err` instead of a bare "model server is gone".
+//!
+//! Each prediction is independent per row, so responses are bit-identical
+//! to calling [`ApncModel::predict_batch`] directly on the in-memory
+//! model, regardless of how many clients interleave, which shard serves
+//! the request, or how many compute threads the parallel core uses.
 
-use std::sync::mpsc;
+use std::ops::{ControlFlow, Range};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 
 use super::ApncModel;
-use anyhow::{anyhow, Context, Result};
+use crate::runtime::service::ServiceCore;
+use anyhow::{ensure, Result};
 
 enum Request {
-    Predict { x: Vec<f32>, chunk_rows: usize, reply: mpsc::Sender<Result<Vec<u32>>> },
+    Predict {
+        /// shared batch — cloning the Arc is the whole "copy"
+        x: Arc<[f32]>,
+        /// row range of `x` this request predicts
+        rows: Range<usize>,
+        chunk_rows: usize,
+        reply: mpsc::Sender<Result<Vec<u32>>>,
+    },
+    /// Stop serving; subsequent requests fail with the recorded cause.
+    Shutdown { reply: mpsc::Sender<()> },
+    #[cfg(test)]
+    CrashForTest(String),
 }
 
 /// Cloneable handle to a model serving thread. Clone one per client;
 /// clones share the same fitted model and request queue.
 #[derive(Clone)]
 pub struct ModelHandle {
-    tx: mpsc::Sender<Request>,
+    core: ServiceCore<Request>,
+    /// rows successfully predicted by this shard (serving-side counter,
+    /// shared by all clones of the handle)
+    served_rows: Arc<AtomicUsize>,
     d: usize,
     m: usize,
     k: usize,
@@ -34,21 +67,37 @@ impl ModelHandle {
     /// Move `model` onto a dedicated serving thread and return the first
     /// handle ([`ApncModel::serve`] is the usual entry point).
     pub fn start(model: ApncModel) -> Result<ModelHandle> {
-        let (tx, rx) = mpsc::channel::<Request>();
+        Self::start_shard(Arc::new(model), "apnc-model-serve")
+    }
+
+    /// Shard-aware constructor: every shard of a front-end holds a clone
+    /// of the same `Arc` — one model in memory no matter the shard count.
+    pub(crate) fn start_shard(model: Arc<ApncModel>, name: &str) -> Result<ModelHandle> {
         let (d, m, k) = (model.d(), model.m(), model.k());
-        std::thread::Builder::new()
-            .name("apnc-model-serve".into())
-            .spawn(move || {
-                while let Ok(req) = rx.recv() {
-                    match req {
-                        Request::Predict { x, chunk_rows, reply } => {
-                            let _ = reply.send(model.predict_batch(&x, chunk_rows));
-                        }
+        let served_rows = Arc::new(AtomicUsize::new(0));
+        let served = served_rows.clone();
+        let core = ServiceCore::spawn(
+            name,
+            move || Ok(model),
+            move |model, req| match req {
+                Request::Predict { x, rows, chunk_rows, reply } => {
+                    let d = model.d();
+                    let r = model.predict_batch(&x[rows.start * d..rows.end * d], chunk_rows);
+                    if let Ok(labels) = &r {
+                        served.fetch_add(labels.len(), Ordering::Relaxed);
                     }
+                    let _ = reply.send(r);
+                    ControlFlow::Continue(())
                 }
-            })
-            .context("spawning model serving thread")?;
-        Ok(ModelHandle { tx, d, m, k })
+                Request::Shutdown { reply } => {
+                    let _ = reply.send(());
+                    ControlFlow::Break("shut down by explicit request".to_string())
+                }
+                #[cfg(test)]
+                Request::CrashForTest(msg) => panic!("{msg}"),
+            },
+        )?;
+        Ok(ModelHandle { core, served_rows, d, m, k })
     }
 
     /// Predict labels for `x` (`(rows, d)` row-major) with the default
@@ -58,13 +107,72 @@ impl ModelHandle {
     }
 
     /// Predict labels for `x` in server-side chunks of `chunk_rows`
-    /// (0 = [`super::DEFAULT_CHUNK_ROWS`]).
+    /// (0 = [`super::DEFAULT_CHUNK_ROWS`]). The borrowed slice is copied
+    /// **once** into a shared buffer at this boundary; callers that issue
+    /// many requests over one batch should hold the `Arc<[f32]>`
+    /// themselves and use [`ModelHandle::predict_shared`] (zero copies).
     pub fn predict_batch(&self, x: &[f32], chunk_rows: usize) -> Result<Vec<u32>> {
+        ensure!(
+            x.len() % self.d == 0,
+            "input length {} is not a multiple of the served dimensionality d = {}",
+            x.len(),
+            self.d
+        );
+        let rows = x.len() / self.d;
+        self.predict_shared(&Arc::from(x), 0..rows, chunk_rows)
+    }
+
+    /// Predict labels for rows `rows` of the shared batch `x`
+    /// (`(total_rows, d)` row-major). This is the zero-copy serving hot
+    /// path: the request carries a clone of the `Arc` and the row range —
+    /// no bytes of the batch are copied per request.
+    pub fn predict_shared(
+        &self,
+        x: &Arc<[f32]>,
+        rows: Range<usize>,
+        chunk_rows: usize,
+    ) -> Result<Vec<u32>> {
+        ensure!(
+            x.len() % self.d == 0,
+            "shared batch length {} is not a multiple of the served dimensionality d = {}",
+            x.len(),
+            self.d
+        );
+        let total = x.len() / self.d;
+        ensure!(
+            rows.start <= rows.end && rows.end <= total,
+            "row range {}..{} out of bounds for a {total}-row batch",
+            rows.start,
+            rows.end
+        );
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Predict { x: x.to_vec(), chunk_rows, reply })
-            .map_err(|_| anyhow!("model server is gone"))?;
-        rx.recv().map_err(|_| anyhow!("model server dropped the reply"))?
+        self.core.send(Request::Predict { x: x.clone(), rows, chunk_rows, reply })?;
+        match rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(self.core.death()),
+        }
+    }
+
+    /// Gracefully stop the serving thread (drains nothing: requests
+    /// already queued behind the shutdown fail with the recorded cause).
+    /// Subsequent calls on any clone of this handle return an `Err`
+    /// explaining the shutdown. Idempotent.
+    pub fn shutdown(&self) {
+        let (reply, rx) = mpsc::channel();
+        if self.core.send(Request::Shutdown { reply }).is_ok() {
+            let _ = rx.recv();
+        }
+    }
+
+    /// Rows successfully predicted by this serving thread so far (shared
+    /// across clones; the sharded front-end reports these per shard).
+    pub fn rows_served(&self) -> usize {
+        self.served_rows.load(Ordering::Relaxed)
+    }
+
+    #[cfg(test)]
+    pub(crate) fn crash_for_test(&self, msg: &str) {
+        let _ = self.core.send(Request::CrashForTest(msg.to_string()));
     }
 
     /// Feature dimensionality the served model expects.
@@ -83,61 +191,11 @@ impl ModelHandle {
     }
 }
 
-/// Verification traffic driver shared by `repro serve` and
-/// `examples/serve_stream.rs`: `clients` concurrent clients (cloned
-/// handles) each issue `requests` batched predictions over
-/// `batch_rows`-row slices of `x` ((rows, d) row-major), round-robin
-/// with a per-client offset so requests from different clients
-/// interleave arbitrarily. Every response is asserted bit-identical to
-/// `oracle` (the in-memory `predict_batch` labels) — panicking on
-/// divergence, since a mismatch means the determinism contract is
-/// broken. Returns the total rows served.
-pub fn drive_clients(
-    handle: &ModelHandle,
-    x: &[f32],
-    d: usize,
-    oracle: &[u32],
-    clients: usize,
-    requests: usize,
-    batch_rows: usize,
-) -> usize {
-    assert!(d > 0 && x.len() % d == 0, "x must be (rows, d) row-major");
-    let rows = x.len() / d;
-    assert_eq!(oracle.len(), rows, "oracle must label every row of x");
-    assert!(rows > 0, "need at least one row of traffic");
-    let clients = clients.max(1);
-    let batch = batch_rows.max(1);
-    let slices: Vec<std::ops::Range<usize>> =
-        (0..rows).step_by(batch).map(|lo| lo..(lo + batch).min(rows)).collect();
-    std::thread::scope(|scope| {
-        let mut joins = Vec::new();
-        for c in 0..clients {
-            let h = handle.clone();
-            let slices = &slices;
-            joins.push(scope.spawn(move || {
-                let mut served = 0usize;
-                for r in 0..requests {
-                    let s = &slices[(c + r * clients) % slices.len()];
-                    let got =
-                        h.predict(&x[s.start * d..s.end * d]).expect("serving request failed");
-                    assert_eq!(
-                        &got[..],
-                        &oracle[s.clone()],
-                        "client {c} request {r} diverged from in-memory prediction"
-                    );
-                    served += s.len();
-                }
-                served
-            }));
-        }
-        joins.into_iter().map(|j| j.join().expect("client thread panicked")).sum()
-    })
-}
-
 #[cfg(test)]
 mod tests {
     use super::super::tests::toy_model;
     use crate::rng::Pcg;
+    use std::sync::Arc;
 
     #[test]
     fn served_predictions_match_in_memory() {
@@ -149,6 +207,26 @@ mod tests {
         assert_eq!((handle.d(), handle.m(), handle.k()), (4, 5, 3));
         assert_eq!(handle.predict(&x).unwrap(), want);
         assert_eq!(handle.predict_batch(&x, 7).unwrap(), want);
+    }
+
+    #[test]
+    fn shared_batch_subranges_label_the_right_rows() {
+        let model = toy_model(1, 3, 6, 4, 3, 27);
+        let mut rng = Pcg::seeded(28);
+        let x: Vec<f32> = (0..30 * 3).map(|_| rng.normal() as f32).collect();
+        let want = model.predict_batch(&x, 0).unwrap();
+        let shared: Arc<[f32]> = x.as_slice().into();
+        let handle = model.serve().unwrap();
+        for (lo, hi) in [(0usize, 30usize), (0, 7), (7, 19), (29, 30), (12, 12)] {
+            assert_eq!(
+                handle.predict_shared(&shared, lo..hi, 0).unwrap(),
+                &want[lo..hi],
+                "rows {lo}..{hi}"
+            );
+        }
+        // out-of-bounds and inverted ranges are client-side errors
+        assert!(handle.predict_shared(&shared, 0..31, 0).is_err());
+        assert!(handle.predict_shared(&shared, 20..10, 0).is_err());
     }
 
     #[test]
@@ -176,16 +254,40 @@ mod tests {
     }
 
     #[test]
-    fn drive_clients_verifies_and_counts_rows() {
-        let model = toy_model(1, 3, 6, 4, 3, 25);
-        let mut rng = Pcg::seeded(26);
-        let x: Vec<f32> = (0..40 * 3).map(|_| rng.normal() as f32).collect();
-        let want = model.predict_batch(&x, 0).unwrap();
+    fn rows_served_counts_successful_predictions() {
+        let model = toy_model(1, 3, 6, 4, 3, 29);
+        let mut rng = Pcg::seeded(30);
+        let x: Vec<f32> = (0..25 * 3).map(|_| rng.normal() as f32).collect();
         let handle = model.serve().unwrap();
-        // 40 rows at batch 16 -> slices of 16/16/8; 2 clients x 3 requests
-        // sweep (16 + 8 + 16) and (16 + 16 + 8) rows respectively
-        let rows = super::drive_clients(&handle, &x, 3, &want, 2, 3, 16);
-        assert_eq!(rows, 80);
+        assert_eq!(handle.rows_served(), 0);
+        handle.predict(&x).unwrap();
+        assert_eq!(handle.rows_served(), 25);
+        let shared: Arc<[f32]> = x.as_slice().into();
+        handle.predict_shared(&shared, 5..15, 0).unwrap();
+        assert_eq!(handle.rows_served(), 35);
+    }
+
+    #[test]
+    fn shutdown_cause_reaches_clients() {
+        let model = toy_model(1, 3, 4, 2, 2, 31);
+        let handle = model.serve().unwrap();
+        let clone = handle.clone();
+        handle.shutdown();
+        handle.shutdown(); // idempotent
+        for h in [&handle, &clone] {
+            let err = h.predict(&[1.0, 2.0, 3.0]).unwrap_err().to_string();
+            assert!(err.contains("shut down by explicit request"), "{err}");
+        }
+    }
+
+    #[test]
+    fn panicking_server_reports_the_panic_to_clients() {
+        let model = toy_model(1, 3, 4, 2, 2, 32);
+        let handle = model.serve().unwrap();
+        handle.crash_for_test("injected serving panic");
+        let err = handle.predict(&[1.0, 2.0, 3.0]).unwrap_err().to_string();
+        assert!(err.contains("panicked"), "{err}");
+        assert!(err.contains("injected serving panic"), "{err}");
     }
 
     #[test]

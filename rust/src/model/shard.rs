@@ -1,0 +1,313 @@
+//! Sharded serving front-end: N model threads behind one cloneable
+//! [`ShardedHandle`].
+//!
+//! The paper's Property 4.2 makes out-of-sample prediction embarrassingly
+//! parallel: each row needs only kernel evaluations against the fitted
+//! sample set, so request-level parallelism across model threads is free
+//! of cross-request state (the same row-independence that distributed
+//! kernel k-means systems exploit for throughput). A single
+//! [`ModelHandle`] serializes all traffic through one model thread; the
+//! sharded front-end stands up `n_shards` of them and routes each request
+//! round-robin over an atomic counter.
+//!
+//! **Shard topology.** All shards of a front-end deref **one** shared
+//! `Arc<ApncModel>` — N serving threads, one copy of the coefficients
+//! and centroids in memory, on either backend. ([`ApncModel`] is `Sync`
+//! even when PJRT-backed: the non-`Sync` PJRT client lives on its own
+//! service thread and the model holds only the channel handle. PJRT
+//! executions therefore still funnel through that single service thread
+//! — shard scaling buys compute parallelism on the reference backend,
+//! and queueing/isolation on PJRT.)
+//!
+//! **Determinism.** Every per-row result is independent of batching,
+//! chunking, thread count, and which shard computes it (all shards hold
+//! bit-identical coefficients and run the same deterministic compute
+//! core), so responses are bit-identical to in-memory
+//! [`ApncModel::predict_batch`] for any shard count, routing order, or
+//! client interleaving — the substrate's determinism contract extended to
+//! the sharded serving tier, pinned by `rust/tests/model_roundtrip.rs`.
+//!
+//! **Zero-copy.** Requests carry `Arc<[f32]>` + row range (see
+//! [`crate::model::serve`]); [`drive_clients`] shares one `Arc` across
+//! every client, request, and shard.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::serve::ModelHandle;
+use super::ApncModel;
+use anyhow::Result;
+
+/// Cloneable handle to a sharded serving front-end. Clones share the
+/// shard set *and* the round-robin cursor, so traffic from every clone
+/// spreads over all shards.
+#[derive(Clone)]
+pub struct ShardedHandle {
+    /// never empty ([`ShardedHandle::start`] clamps to >= 1 shard)
+    shards: Arc<Vec<ModelHandle>>,
+    next: Arc<AtomicUsize>,
+}
+
+impl ShardedHandle {
+    /// Stand up `n_shards` model threads (at least 1) serving `model`
+    /// and return the routing handle ([`ApncModel::serve_sharded`] is the
+    /// usual entry point).
+    pub fn start(model: ApncModel, n_shards: usize) -> Result<ShardedHandle> {
+        let n = n_shards.max(1);
+        // one model in memory, N serving threads (see the module docs)
+        let shared = Arc::new(model);
+        let shards = (0..n)
+            .map(|i| ModelHandle::start_shard(shared.clone(), &format!("apnc-model-shard-{i}")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardedHandle { shards: Arc::new(shards), next: Arc::new(AtomicUsize::new(0)) })
+    }
+
+    /// Round-robin pick of the shard serving the next request.
+    fn route(&self) -> &ModelHandle {
+        &self.shards[self.next.fetch_add(1, Ordering::Relaxed) % self.shards.len()]
+    }
+
+    /// Predict labels for `x` (`(rows, d)` row-major) on the next shard
+    /// in round-robin order, with the default chunking.
+    pub fn predict(&self, x: &[f32]) -> Result<Vec<u32>> {
+        self.route().predict(x)
+    }
+
+    /// Predict labels for `x` in server-side chunks of `chunk_rows`
+    /// (0 = [`super::DEFAULT_CHUNK_ROWS`]) on the next shard in
+    /// round-robin order. Copies the borrowed slice once; prefer
+    /// [`ShardedHandle::predict_shared`] on the hot path.
+    pub fn predict_batch(&self, x: &[f32], chunk_rows: usize) -> Result<Vec<u32>> {
+        self.route().predict_batch(x, chunk_rows)
+    }
+
+    /// Zero-copy prediction of rows `rows` of the shared batch `x` on the
+    /// next shard in round-robin order (see
+    /// [`ModelHandle::predict_shared`]).
+    pub fn predict_shared(
+        &self,
+        x: &Arc<[f32]>,
+        rows: Range<usize>,
+        chunk_rows: usize,
+    ) -> Result<Vec<u32>> {
+        self.route().predict_shared(x, rows, chunk_rows)
+    }
+
+    /// Number of shards behind this handle.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Direct handle to shard `i` (for lifecycle control — e.g.
+    /// [`ModelHandle::shutdown`] — and per-shard introspection).
+    pub fn shard(&self, i: usize) -> &ModelHandle {
+        &self.shards[i]
+    }
+
+    /// Rows successfully served so far, per shard.
+    pub fn per_shard_rows(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.rows_served()).collect()
+    }
+
+    /// Feature dimensionality the served model expects.
+    pub fn d(&self) -> usize {
+        self.shards[0].d()
+    }
+
+    /// Embedding dimensionality of the served model.
+    pub fn m(&self) -> usize {
+        self.shards[0].m()
+    }
+
+    /// Cluster count of the served model.
+    pub fn k(&self) -> usize {
+        self.shards[0].k()
+    }
+}
+
+/// What [`drive_clients`] served: aggregate and per-shard row counts
+/// (the per-shard split is the delta of [`ShardedHandle::per_shard_rows`]
+/// over the drive).
+#[derive(Clone, Debug)]
+pub struct DriveReport {
+    /// total rows predicted across all clients and shards
+    pub total_rows: usize,
+    /// rows served by each shard during the drive
+    pub per_shard_rows: Vec<usize>,
+}
+
+/// Verification traffic driver shared by `repro serve` and
+/// `examples/serve_stream.rs`: `clients` concurrent clients (cloned
+/// handles) each issue `requests` batched predictions over
+/// `batch_rows`-row slices of the shared batch `x` ((rows, d) row-major),
+/// round-robin with a per-client offset so requests from different
+/// clients interleave arbitrarily across shards. The batch is shared —
+/// every request clones the `Arc`, no per-request copy. Every response is
+/// asserted bit-identical to `oracle` (the in-memory `predict_batch`
+/// labels) — panicking on divergence, since a mismatch means the
+/// determinism contract is broken. Returns aggregate and per-shard row
+/// counts.
+pub fn drive_clients(
+    handle: &ShardedHandle,
+    x: &Arc<[f32]>,
+    d: usize,
+    oracle: &[u32],
+    clients: usize,
+    requests: usize,
+    batch_rows: usize,
+) -> DriveReport {
+    assert!(d > 0 && x.len() % d == 0, "x must be (rows, d) row-major");
+    let rows = x.len() / d;
+    assert_eq!(oracle.len(), rows, "oracle must label every row of x");
+    assert!(rows > 0, "need at least one row of traffic");
+    let clients = clients.max(1);
+    let batch = batch_rows.max(1);
+    let slices: Vec<Range<usize>> =
+        (0..rows).step_by(batch).map(|lo| lo..(lo + batch).min(rows)).collect();
+    let before = handle.per_shard_rows();
+    let total_rows = std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let h = handle.clone();
+            let slices = &slices;
+            let x = x.clone();
+            joins.push(scope.spawn(move || {
+                let mut served = 0usize;
+                for r in 0..requests {
+                    // offset by client, stride 1: every client sweeps
+                    // every slice (a stride of `clients` would trap each
+                    // client in a gcd(clients, n_slices)-sized subset)
+                    let s = slices[(c + r) % slices.len()].clone();
+                    let got =
+                        h.predict_shared(&x, s.clone(), 0).expect("serving request failed");
+                    assert_eq!(
+                        &got[..],
+                        &oracle[s.clone()],
+                        "client {c} request {r} diverged from in-memory prediction"
+                    );
+                    served += s.len();
+                }
+                served
+            }));
+        }
+        joins.into_iter().map(|j| j.join().expect("client thread panicked")).sum()
+    });
+    let per_shard_rows = handle
+        .per_shard_rows()
+        .iter()
+        .zip(&before)
+        .map(|(after, before)| after - before)
+        .collect();
+    DriveReport { total_rows, per_shard_rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::toy_model;
+    use super::*;
+    use crate::rng::Pcg;
+
+    #[test]
+    fn sharded_predictions_match_in_memory_for_any_shard_count() {
+        let model = toy_model(1, 4, 6, 5, 3, 40);
+        let mut rng = Pcg::seeded(41);
+        let x: Vec<f32> = (0..48 * 4).map(|_| rng.normal() as f32).collect();
+        let want = model.predict_batch(&x, 0).unwrap();
+        for shards in [1usize, 2, 8] {
+            let handle = model.clone().serve_sharded(shards).unwrap();
+            assert_eq!(handle.shard_count(), shards);
+            assert_eq!((handle.d(), handle.m(), handle.k()), (4, 5, 3));
+            // more requests than shards: every shard serves at least once
+            for _ in 0..(2 * shards + 1) {
+                assert_eq!(handle.predict(&x).unwrap(), want, "shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_requests_over_every_shard() {
+        let model = toy_model(1, 3, 6, 4, 3, 42);
+        let mut rng = Pcg::seeded(43);
+        let x: Vec<f32> = (0..16 * 3).map(|_| rng.normal() as f32).collect();
+        let handle = model.serve_sharded(4).unwrap();
+        let shared: Arc<[f32]> = x.as_slice().into();
+        for _ in 0..8 {
+            handle.predict_shared(&shared, 0..16, 0).unwrap();
+        }
+        let per_shard = handle.per_shard_rows();
+        assert_eq!(per_shard, vec![32, 32, 32, 32], "8 requests x 16 rows over 4 shards");
+    }
+
+    #[test]
+    fn clones_share_the_round_robin_cursor() {
+        let model = toy_model(1, 3, 5, 3, 2, 44);
+        let mut rng = Pcg::seeded(45);
+        let x: Vec<f32> = (0..10 * 3).map(|_| rng.normal() as f32).collect();
+        let handle = model.serve_sharded(2).unwrap();
+        let clone = handle.clone();
+        let shared: Arc<[f32]> = x.as_slice().into();
+        // alternating submitters still alternate shards
+        for _ in 0..3 {
+            handle.predict_shared(&shared, 0..10, 0).unwrap();
+            clone.predict_shared(&shared, 0..10, 0).unwrap();
+        }
+        assert_eq!(handle.per_shard_rows(), vec![30, 30]);
+    }
+
+    #[test]
+    fn drive_clients_verifies_and_reports_per_shard() {
+        let model = toy_model(1, 3, 6, 4, 3, 25);
+        let mut rng = Pcg::seeded(26);
+        let x: Vec<f32> = (0..40 * 3).map(|_| rng.normal() as f32).collect();
+        let want = model.predict_batch(&x, 0).unwrap();
+        let handle = model.serve_sharded(2).unwrap();
+        let shared: Arc<[f32]> = x.as_slice().into();
+        // 40 rows at batch 16 -> slices of 16/16/8; 2 clients x 3 requests
+        // sweep (16 + 16 + 8) and (16 + 8 + 16) rows respectively
+        let report = drive_clients(&handle, &shared, 3, &want, 2, 3, 16);
+        assert_eq!(report.total_rows, 80);
+        assert_eq!(report.per_shard_rows.len(), 2);
+        assert_eq!(report.per_shard_rows.iter().sum::<usize>(), 80);
+        assert!(
+            report.per_shard_rows.iter().all(|&r| r > 0),
+            "both shards must see traffic: {:?}",
+            report.per_shard_rows
+        );
+    }
+
+    #[test]
+    fn dead_shard_errors_carry_the_cause_and_the_rest_keep_serving() {
+        let model = toy_model(1, 3, 6, 4, 3, 46);
+        let mut rng = Pcg::seeded(47);
+        let x: Vec<f32> = (0..12 * 3).map(|_| rng.normal() as f32).collect();
+        let want = model.predict_batch(&x, 0).unwrap();
+        let handle = model.serve_sharded(3).unwrap();
+        handle.shard(1).shutdown();
+        let shared: Arc<[f32]> = x.as_slice().into();
+        let (mut oks, mut errs) = (0usize, 0usize);
+        // sequential round robin from a fresh cursor: shards 0,1,2,0,1,2
+        for i in 0..6 {
+            match handle.predict_shared(&shared, 0..12, 0) {
+                Ok(labels) => {
+                    assert_eq!(labels, want, "request {i}");
+                    oks += 1;
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    assert!(msg.contains("shut down by explicit request"), "{msg}");
+                    errs += 1;
+                }
+            }
+        }
+        assert_eq!((oks, errs), (4, 2));
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let model = toy_model(1, 3, 4, 2, 2, 48);
+        let handle = model.serve_sharded(0).unwrap();
+        assert_eq!(handle.shard_count(), 1);
+        assert!(handle.predict(&[]).unwrap().is_empty());
+    }
+}

@@ -64,6 +64,12 @@ pub fn kmat(x: &[f32], rows: usize, d: usize, samples: &[f32], l: usize, kernel:
 /// chunks; per row the accumulation stays in sample order (a contiguous
 /// AXPY over the output row), so results are bit-identical for any
 /// thread count.
+///
+/// Every term is accumulated — there is deliberately **no** `kv == 0.0`
+/// fast-path skip: skipping a zero kernel value silently changes the
+/// output when `r_t` contains non-finite entries (skipped `0` vs the
+/// IEEE product `0 * inf = NaN`), diverging from the PJRT backend's full
+/// matmul. Pinned by `zero_kernel_rows_propagate_nonfinite_coeffs`.
 pub fn embed(
     x: &[f32],
     rows: usize,
@@ -87,9 +93,6 @@ pub fn embed(
         for (ri, yrow) in yrows.chunks_mut(m).enumerate() {
             let krow = &kb_ref[(row0 + ri) * l..(row0 + ri + 1) * l];
             for (j, &kv) in krow.iter().enumerate() {
-                if kv == 0.0 {
-                    continue;
-                }
                 let rrow = &r_t[j * m..(j + 1) * m];
                 for (o, &rv) in yrow.iter_mut().zip(rrow) {
                     *o += kv * rv;
@@ -249,6 +252,23 @@ mod tests {
                 assert!((y[r * m + c] - want).abs() < 1e-5);
             }
         }
+    }
+
+    #[test]
+    fn zero_kernel_rows_propagate_nonfinite_coeffs() {
+        // A zero x row under the linear kernel gives an exactly-zero
+        // kappa row. With an inf coefficient, IEEE says 0 * inf = NaN —
+        // the old kv == 0.0 fast path skipped the term and silently
+        // returned 0 instead.
+        let x = vec![0.0f32; 3]; // 1 row, d = 3
+        let s = vec![1.0f32, 0.0, 0.0, 0.0, 1.0, 0.0]; // l = 2
+        let mut rt = vec![1.0f32; 2 * 2]; // (l, m) = (2, 2)
+        rt[0] = f32::INFINITY;
+        let kb = kmat(&x, 1, 3, &s, 2, Kernel::Linear);
+        assert_eq!(kb, vec![0.0, 0.0], "zero row under linear kernel");
+        let y = embed(&x, 1, 3, &s, 2, &rt, 2, Kernel::Linear);
+        assert!(y[0].is_nan(), "0 * inf must propagate as NaN, got {}", y[0]);
+        assert_eq!(y[1], 0.0, "finite column stays exact");
     }
 
     #[test]

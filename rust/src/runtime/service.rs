@@ -1,4 +1,5 @@
-//! The PJRT compute service.
+//! The PJRT compute service, and the single-owner-thread pattern it
+//! shares with the model serving tier.
 //!
 //! A single dedicated thread owns the `PjRtClient` and the compiled
 //! executables (the `xla` crate's handles wrap raw pointers and are not
@@ -10,11 +11,22 @@
 //! Executables compile lazily on first use and are cached for the process
 //! lifetime (the paper's "load once per mapper" — Algorithm 1 line 3 —
 //! amortized across all blocks).
+//!
+//! The generic half of the pattern lives in `ServiceCore` (crate-private):
+//! state is constructed *on* the owner thread (so it never needs `Send`),
+//! requests carry their own reply channels, and the thread records an
+//! **epitaph** — why it stopped serving — that client-side errors surface
+//! instead of a bare "server is gone".
+//! [`crate::model::serve::ModelHandle`] and the sharded front-end
+//! ([`crate::model::shard`]) run on the same core.
 
 use anyhow::{anyhow, Context, Result};
+use std::any::Any;
 use std::collections::HashMap;
+use std::ops::ControlFlow;
 use std::path::PathBuf;
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
 
 // The native `xla` crate is absent from the reproduction container; the
 // shim mirrors its API and fails fast at client startup (Compute::auto
@@ -23,6 +35,144 @@ use std::sync::{mpsc, Arc};
 use crate::runtime::xla_shim as xla;
 
 use super::manifest::Manifest;
+
+/// Best-effort stringification of a panic payload (`&str` / `String`
+/// cover `panic!` and `assert!`; anything else keeps a generic marker).
+fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// The single-owner-thread pattern: one dedicated thread owns non-`Sync`
+/// (or non-`Send`) state, any number of cloned handles submit requests
+/// over an mpsc channel, and every request carries its own reply channel.
+///
+/// Two behaviors the ad-hoc versions lacked, now shared by every service:
+///
+/// * **State is built on the owner thread** (`init` runs there), so state
+///   never needs `Send` — required by the PJRT client, whose handles wrap
+///   raw pointers. `init` failures propagate out of [`ServiceCore::spawn`]
+///   (fail-fast startup handshake).
+/// * **Death is explained, not silent.** The owner thread records an
+///   epitaph — clean shutdown, an explicit [`ControlFlow::Break`] reason,
+///   or a captured panic message — and [`ServiceCore::death`] folds it
+///   into the client-side error instead of a bare "server is gone".
+pub(crate) struct ServiceCore<Req> {
+    tx: mpsc::Sender<Req>,
+    epitaph: Arc<Mutex<Option<String>>>,
+    name: Arc<str>,
+}
+
+// Manual impl: `#[derive(Clone)]` would wrongly require `Req: Clone`.
+impl<Req> Clone for ServiceCore<Req> {
+    fn clone(&self) -> Self {
+        ServiceCore {
+            tx: self.tx.clone(),
+            epitaph: self.epitaph.clone(),
+            name: self.name.clone(),
+        }
+    }
+}
+
+fn record_epitaph(slot: &Mutex<Option<String>>, why: String) {
+    let mut guard = slot.lock().unwrap_or_else(|p| p.into_inner());
+    // first cause wins (e.g. an explicit Break followed by thread exit)
+    guard.get_or_insert(why);
+}
+
+impl<Req: Send + 'static> ServiceCore<Req> {
+    /// Spawn the owner thread: run `init` on it (blocking `spawn` until it
+    /// succeeds or fails), then serve requests with `handle` until every
+    /// sender is dropped, `handle` breaks with a reason, or it panics.
+    pub(crate) fn spawn<S, I, H>(name: &str, init: I, mut handle: H) -> Result<ServiceCore<Req>>
+    where
+        S: 'static,
+        I: FnOnce() -> Result<S> + Send + 'static,
+        H: FnMut(&mut S, Req) -> ControlFlow<String> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Req>();
+        let epitaph: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let ep = epitaph.clone();
+        std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(move || {
+                // init is panic-caught too: a constructor that panics
+                // (e.g. inside FFI) must still yield an explained
+                // startup error, not a bare "died during startup"
+                let init_result =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(init));
+                let mut state = match init_result {
+                    Ok(Ok(s)) => {
+                        let _ = ready_tx.send(Ok(()));
+                        s
+                    }
+                    Ok(Err(e)) => {
+                        record_epitaph(&ep, format!("failed to start: {e:#}"));
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                    Err(payload) => {
+                        let why = format!(
+                            "panicked during startup: {}",
+                            panic_message(payload.as_ref())
+                        );
+                        record_epitaph(&ep, why.clone());
+                        let _ = ready_tx.send(Err(anyhow!(why)));
+                        return;
+                    }
+                };
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    while let Ok(req) = rx.recv() {
+                        if let ControlFlow::Break(why) = handle(&mut state, req) {
+                            return why;
+                        }
+                    }
+                    "shut down (all client handles dropped)".to_string()
+                }));
+                match outcome {
+                    Ok(why) => record_epitaph(&ep, why),
+                    Err(payload) => record_epitaph(
+                        &ep,
+                        format!("panicked: {}", panic_message(payload.as_ref())),
+                    ),
+                }
+            })
+            .with_context(|| format!("spawning {name} thread"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("{name} died during startup without reporting a cause"))??;
+        Ok(ServiceCore { tx, epitaph, name: Arc::from(name) })
+    }
+
+    /// Submit a request; a closed channel becomes the epitaph-explained
+    /// death error instead of a bare disconnect.
+    pub(crate) fn send(&self, req: Req) -> Result<()> {
+        self.tx.send(req).map_err(|_| self.death())
+    }
+
+    /// Explain why the owner thread is gone. A panicking thread drops
+    /// in-flight reply senders *before* the panic is caught and recorded,
+    /// so a client can observe the disconnect first — wait briefly for the
+    /// epitaph instead of reporting an uncaused death.
+    pub(crate) fn death(&self) -> anyhow::Error {
+        for _ in 0..200 {
+            {
+                let guard = self.epitaph.lock().unwrap_or_else(|p| p.into_inner());
+                if let Some(why) = guard.as_ref() {
+                    return anyhow!("{} stopped: {why}", self.name);
+                }
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        anyhow!("{} is gone (thread exited without recording a cause)", self.name)
+    }
+}
 
 /// A plain (shape, data) tensor that can cross threads. Data is
 /// `Arc`-backed so broadcast operands (the sample set, R^T, centroids)
@@ -86,75 +236,59 @@ enum Request {
 /// Cloneable handle to the service thread.
 #[derive(Clone)]
 pub struct PjrtService {
-    tx: mpsc::Sender<Request>,
+    core: ServiceCore<Request>,
 }
 
 impl PjrtService {
     /// Start the service for a manifest. Fails fast if the PJRT client
     /// cannot start.
     pub fn start(manifest: &Manifest) -> Result<PjrtService> {
-        let (tx, rx) = mpsc::channel::<Request>();
         let paths: HashMap<String, PathBuf> =
             manifest.artifacts.iter().map(|a| (a.name.clone(), a.path.clone())).collect();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        std::thread::Builder::new()
-            .name("pjrt-service".into())
-            .spawn(move || service_main(rx, paths, ready_tx))
-            .context("spawning pjrt service thread")?;
-        ready_rx.recv().context("pjrt service died during startup")??;
-        Ok(PjrtService { tx })
+        let core = ServiceCore::spawn(
+            "pjrt-service",
+            // client + executable cache are built on the owner thread:
+            // neither is Send (raw-pointer handles)
+            move || {
+                let client = xla::PjRtClient::cpu()
+                    .map_err(|e| anyhow!("starting PJRT CPU client: {e}"))?;
+                let cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+                Ok((client, cache))
+            },
+            move |state, req| {
+                let (client, cache) = state;
+                match req {
+                    Request::Warm { artifact, reply } => {
+                        let r = ensure_compiled(client, cache, &paths, &artifact).map(|_| ());
+                        let _ = reply.send(r);
+                    }
+                    Request::Exec { artifact, inputs, reply } => {
+                        let r = match ensure_compiled(client, cache, &paths, &artifact) {
+                            Ok(exe) => run(exe, inputs),
+                            Err(e) => Err(e),
+                        };
+                        let _ = reply.send(r);
+                    }
+                }
+                ControlFlow::Continue(())
+            },
+        )?;
+        Ok(PjrtService { core })
     }
 
     /// Execute `artifact` with `inputs`; returns the flattened tuple
     /// outputs in order.
     pub fn exec(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Vec<OutTensor>> {
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Exec { artifact: artifact.to_string(), inputs, reply })
-            .map_err(|_| anyhow!("pjrt service is gone"))?;
-        rx.recv().map_err(|_| anyhow!("pjrt service dropped the reply"))?
+        self.core.send(Request::Exec { artifact: artifact.to_string(), inputs, reply })?;
+        rx.recv().map_err(|_| self.core.death())?
     }
 
     /// Compile `artifact` now (hides compile latency at startup).
     pub fn warm(&self, artifact: &str) -> Result<()> {
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Warm { artifact: artifact.to_string(), reply })
-            .map_err(|_| anyhow!("pjrt service is gone"))?;
-        rx.recv().map_err(|_| anyhow!("pjrt service dropped the reply"))?
-    }
-}
-
-fn service_main(
-    rx: mpsc::Receiver<Request>,
-    paths: HashMap<String, PathBuf>,
-    ready: mpsc::Sender<Result<()>>,
-) {
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => {
-            let _ = ready.send(Ok(()));
-            c
-        }
-        Err(e) => {
-            let _ = ready.send(Err(anyhow!("starting PJRT CPU client: {e}")));
-            return;
-        }
-    };
-    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
-    while let Ok(req) = rx.recv() {
-        match req {
-            Request::Warm { artifact, reply } => {
-                let r = ensure_compiled(&client, &mut cache, &paths, &artifact).map(|_| ());
-                let _ = reply.send(r);
-            }
-            Request::Exec { artifact, inputs, reply } => {
-                let r = match ensure_compiled(&client, &mut cache, &paths, &artifact) {
-                    Ok(exe) => run(exe, inputs),
-                    Err(e) => Err(e),
-                };
-                let _ = reply.send(r);
-            }
-        }
+        self.core.send(Request::Warm { artifact: artifact.to_string(), reply })?;
+        rx.recv().map_err(|_| self.core.death())?
     }
 }
 
@@ -177,21 +311,6 @@ fn ensure_compiled<'c>(
         cache.insert(artifact.to_string(), exe);
     }
     Ok(cache.get(artifact).unwrap())
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn out_tensor_dtype_mismatch_is_an_error() {
-        let f = OutTensor::F32(vec![1.0, 2.0]);
-        let i = OutTensor::I32(vec![3, 4]);
-        assert_eq!(f.try_f32().unwrap(), &[1.0, 2.0]);
-        assert_eq!(i.try_i32().unwrap(), &[3, 4]);
-        assert!(f.try_i32().is_err());
-        assert!(i.try_f32().is_err());
-    }
 }
 
 fn run(exe: &xla::PjRtLoadedExecutable, inputs: Vec<Tensor>) -> Result<Vec<OutTensor>> {
@@ -228,4 +347,100 @@ fn run(exe: &xla::PjRtLoadedExecutable, inputs: Vec<Tensor>) -> Result<Vec<OutTe
             }
         })
         .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_tensor_dtype_mismatch_is_an_error() {
+        let f = OutTensor::F32(vec![1.0, 2.0]);
+        let i = OutTensor::I32(vec![3, 4]);
+        assert_eq!(f.try_f32().unwrap(), &[1.0, 2.0]);
+        assert_eq!(i.try_i32().unwrap(), &[3, 4]);
+        assert!(f.try_i32().is_err());
+        assert!(i.try_f32().is_err());
+    }
+
+    enum EchoReq {
+        Add { v: u64, reply: mpsc::Sender<Result<u64>> },
+        Crash(String),
+        Quit,
+    }
+
+    fn echo_core() -> ServiceCore<EchoReq> {
+        ServiceCore::spawn(
+            "echo-service",
+            || Ok(0u64),
+            |total, req| match req {
+                EchoReq::Add { v, reply } => {
+                    *total += v;
+                    let _ = reply.send(Ok(*total));
+                    ControlFlow::Continue(())
+                }
+                EchoReq::Crash(msg) => panic!("{msg}"),
+                EchoReq::Quit => ControlFlow::Break("quit requested".to_string()),
+            },
+        )
+        .unwrap()
+    }
+
+    fn add(core: &ServiceCore<EchoReq>, v: u64) -> Result<u64> {
+        let (reply, rx) = mpsc::channel();
+        core.send(EchoReq::Add { v, reply })?;
+        rx.recv().map_err(|_| core.death())?
+    }
+
+    #[test]
+    fn owner_thread_serves_and_keeps_state() {
+        let core = echo_core();
+        assert_eq!(add(&core, 3).unwrap(), 3);
+        assert_eq!(add(&core, 4).unwrap(), 7);
+        let clone = core.clone();
+        assert_eq!(add(&clone, 1).unwrap(), 8);
+    }
+
+    #[test]
+    fn init_failure_propagates_from_spawn() {
+        let err = ServiceCore::<EchoReq>::spawn(
+            "doomed-service",
+            || -> Result<u64> { Err(anyhow!("no device")) },
+            |_, _| ControlFlow::Continue(()),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("no device"), "{err}");
+    }
+
+    #[test]
+    fn init_panic_is_reported_with_its_message() {
+        let err = ServiceCore::<EchoReq>::spawn(
+            "panicky-service",
+            || -> Result<u64> { panic!("boom at startup") },
+            |_, _| ControlFlow::Continue(()),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("panicked during startup"), "{err}");
+        assert!(err.contains("boom at startup"), "{err}");
+    }
+
+    #[test]
+    fn panic_is_captured_in_the_epitaph() {
+        let core = echo_core();
+        core.send(EchoReq::Crash("echo blew up".into())).unwrap();
+        let err = add(&core, 1).unwrap_err().to_string();
+        assert!(err.contains("panicked"), "{err}");
+        assert!(err.contains("echo blew up"), "{err}");
+        assert!(err.contains("echo-service"), "{err}");
+    }
+
+    #[test]
+    fn explicit_break_is_the_recorded_cause() {
+        let core = echo_core();
+        core.send(EchoReq::Quit).unwrap();
+        let err = add(&core, 1).unwrap_err().to_string();
+        assert!(err.contains("quit requested"), "{err}");
+    }
 }

@@ -2,12 +2,17 @@
 //! contract extended to the serving path.
 //!
 //! save → load → predict must be bit-identical to the in-memory model,
-//! across methods, thread counts, chunk sizes, and concurrent clients;
-//! corrupted or truncated model files must be rejected with an error.
+//! across methods, thread counts, chunk sizes, shard counts, and
+//! concurrent clients; a dead shard must fail requests with its recorded
+//! cause; corrupted or truncated model files must be rejected with an
+//! error.
+
+use std::sync::Arc;
 
 use apnc::coordinator::driver::{Pipeline, PipelineConfig};
 use apnc::data::{registry, Dataset};
 use apnc::embedding::Method;
+use apnc::model::shard::drive_clients;
 use apnc::model::ApncModel;
 use apnc::runtime::Compute;
 
@@ -149,6 +154,83 @@ fn run_fit_and_serving_agree_end_to_end() {
             }
         });
     }
+}
+
+#[test]
+fn sharded_serving_bit_identical_across_shard_counts() {
+    // the PR-4 acceptance contract: N shards, >= 4 concurrent clients,
+    // labels bit-identical to in-memory predict_batch for N in {1, 2, 8}
+    let (ds, model) = fit_model(Method::Nystrom, 110);
+    let want = model.predict_batch(&ds.x, 0).unwrap();
+    let x: Arc<[f32]> = ds.x.as_slice().into();
+    for shards in [1usize, 2, 8] {
+        let handle = model.clone().serve_sharded(shards).unwrap();
+        assert_eq!(handle.shard_count(), shards);
+        // drive_clients asserts every response equals the oracle
+        let report = drive_clients(&handle, &x, ds.d, &want, 4, 12, 64);
+        assert_eq!(
+            report.total_rows,
+            report.per_shard_rows.iter().sum::<usize>(),
+            "shards={shards}: per-shard counts must cover the traffic"
+        );
+        assert_eq!(report.per_shard_rows.len(), shards);
+        if shards > 1 {
+            assert!(
+                report.per_shard_rows.iter().filter(|&&r| r > 0).count() > 1,
+                "shards={shards}: round robin must spread load, got {:?}",
+                report.per_shard_rows
+            );
+        }
+        // direct calls through the router agree too
+        assert_eq!(handle.predict(&ds.x).unwrap(), want, "shards={shards}");
+        assert_eq!(handle.predict_batch(&ds.x, 37).unwrap(), want, "shards={shards}");
+    }
+}
+
+#[test]
+fn sharded_serving_survives_save_load() {
+    // save -> load -> shard: the served model is a fresh deserialization
+    let (ds, model) = fit_model(Method::StableDist, 111);
+    let want = model.predict_batch(&ds.x, 0).unwrap();
+    let path = tmp("sharded");
+    model.save(&path).unwrap();
+    let handle = ApncModel::load_with(&path, Compute::reference())
+        .unwrap()
+        .serve_sharded(3)
+        .unwrap();
+    std::fs::remove_file(&path).ok();
+    let x: Arc<[f32]> = ds.x.as_slice().into();
+    let report = drive_clients(&handle, &x, ds.d, &want, 4, 9, 50);
+    assert_eq!(report.total_rows, report.per_shard_rows.iter().sum::<usize>());
+}
+
+#[test]
+fn dead_shard_fails_with_cause_and_others_keep_serving() {
+    let (ds, model) = fit_model(Method::Nystrom, 112);
+    let rows = 48usize;
+    let want = model.predict_batch(&ds.x[..rows * ds.d], 0).unwrap();
+    let handle = model.serve_sharded(3).unwrap();
+    handle.shard(1).shutdown();
+    let x: Arc<[f32]> = ds.x.as_slice().into();
+    let (mut oks, mut errs) = (0usize, 0usize);
+    // fresh round-robin cursor: requests land on shards 0,1,2,0,1,2
+    for i in 0..6 {
+        match handle.predict_shared(&x, 0..rows, 0) {
+            Ok(labels) => {
+                assert_eq!(labels, want, "request {i}");
+                oks += 1;
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(
+                    msg.contains("shut down by explicit request"),
+                    "dead-shard error must carry its cause, got: {msg}"
+                );
+                errs += 1;
+            }
+        }
+    }
+    assert_eq!((oks, errs), (4, 2), "exactly the dead shard's turns must fail");
 }
 
 #[test]
