@@ -23,7 +23,10 @@ fn main() -> anyhow::Result<()> {
         ds.n, ds.d, ds.k
     );
     let compute = Compute::auto(&Compute::default_artifact_dir());
-    println!("compute backend: {}\n", if compute.is_pjrt() { "PJRT artifacts" } else { "rust reference" });
+    println!(
+        "compute backend: {}\n",
+        if compute.is_pjrt() { "PJRT artifacts" } else { "rust reference" }
+    );
 
     for method in [Method::Nystrom, Method::StableDist] {
         let cfg = PipelineConfig::builder()
@@ -37,7 +40,13 @@ fn main() -> anyhow::Result<()> {
             .seed(11)
             .build()?;
         let out = Pipeline::with_compute(cfg, compute.clone()).run(&ds)?;
-        println!("{:<9} NMI = {:.4}  purity = {:.4}  ({} iters)", method.label(), out.nmi, out.purity, out.iters_run);
+        println!(
+            "{:<9} NMI = {:.4}  purity = {:.4}  ({} iters)",
+            method.label(),
+            out.nmi,
+            out.purity,
+            out.iters_run
+        );
         println!(
             "  embedding:  {:>10} B broadcast, {:>6} B shuffled (must be 0), wall {:.2?}",
             out.embed_metrics.broadcast_bytes, out.embed_metrics.shuffle_bytes, out.times.embed
@@ -56,7 +65,9 @@ fn main() -> anyhow::Result<()> {
         let tasks = ds.n.div_ceil(1024);
         let bound = tasks * (out.m_actual * ds.k * 4 + ds.k * 4 + 64);
         assert!(per_iter <= bound, "shuffle/iter {per_iter} exceeded O(tasks*k*m) bound {bound}");
-        println!("  check OK: shuffle/iter <= O(map_tasks * k * m) bound ({per_iter} <= {bound})\n");
+        println!(
+            "  check OK: shuffle/iter <= O(map_tasks * k * m) bound ({per_iter} <= {bound})\n"
+        );
     }
     Ok(())
 }

@@ -33,7 +33,11 @@ fn main() -> anyhow::Result<()> {
     let compute = Compute::auto(&Compute::default_artifact_dir());
     println!(
         "compute backend: {}",
-        if compute.is_pjrt() { "PJRT artifacts (production path)" } else { "rust reference (run `make artifacts`!)" }
+        if compute.is_pjrt() {
+            "PJRT artifacts (production path)"
+        } else {
+            "rust reference (run `make artifacts`!)"
+        }
     );
 
     for method in [Method::Nystrom, Method::StableDist] {

@@ -38,7 +38,10 @@ fn main() -> anyhow::Result<()> {
 
     // 2. APNC kernel k-means on the simulated MapReduce cluster
     let compute = Compute::auto(&Compute::default_artifact_dir());
-    println!("compute backend: {}", if compute.is_pjrt() { "PJRT artifacts" } else { "rust reference" });
+    println!(
+        "compute backend: {}",
+        if compute.is_pjrt() { "PJRT artifacts" } else { "rust reference" }
+    );
     let cfg = PipelineConfig::builder()
         .method(Method::Nystrom)
         .l(128)

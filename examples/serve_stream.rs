@@ -1,4 +1,5 @@
-//! Sustained many-client serving through the train/serve split.
+//! Sustained many-client serving through the train/serve split —
+//! serving tier v2.
 //!
 //! The production story the ROADMAP's north star asks for, end to end:
 //!
@@ -9,30 +10,61 @@
 //!    would), and
 //! 4. drive sustained batched prediction from many concurrent clients
 //!    through the **sharded front-end** (`--shards N` model threads
-//!    behind one round-robin `ShardedHandle`) — the same
-//!    single-owner-thread pattern the PJRT service uses, N times over.
-//!    The batch is `Arc`-shared: every request carries a row range, not
-//!    a copy.
+//!    behind one round-robin `ShardedHandle`), with **in-shard request
+//!    coalescing** (`--batch-rows`/`--batch-wait-us`: each shard fuses
+//!    its queued requests into one embed pass and demuxes the replies),
+//! 5. overlap requests from a *single* thread with the **async client
+//!    API** (`predict_async` returns a `PredictTicket` per in-flight
+//!    request), and
+//! 6. **hot-swap** the model behind the live front-end: requests keep
+//!    flowing across the swap, none are dropped, and every response's
+//!    epoch tag names the model that served it.
 //!
 //! Every response is asserted bit-identical to in-memory
-//! `predict_batch` on the originally fitted model: the determinism
-//! contract (identical output for any thread count, worker count, chunk
-//! size, or client interleaving) extends to the serving path.
+//! `predict_batch` on the model of its epoch: the determinism contract
+//! (identical output for any thread count, worker count, chunk size,
+//! shard count, coalescing window, or client interleaving) extends to
+//! the whole serving tier.
 //!
 //!     cargo run --release --example serve_stream \
-//!         [-- --n 4000 --shards 2 --clients 4 --rounds 6 --batch-rows 256 \
-//!          --threads 0]
+//!         [-- --n 4000 --shards 2 --clients 4 --rounds 6 --request-rows 256 \
+//!          --batch-rows 512 --batch-wait-us 200 --threads 0]
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use apnc::cli::Args;
 use apnc::coordinator::driver::{Pipeline, PipelineConfig};
 use apnc::data::registry;
 use apnc::embedding::Method;
+use apnc::model::serve::BatchWindow;
 use apnc::model::shard::drive_clients;
 use apnc::model::ApncModel;
 use apnc::runtime::Compute;
+
+fn fit(n: usize, threads: usize, seed: u64, compute: &Compute) -> anyhow::Result<ApncModel> {
+    let ds = registry::generate("rings", n, 7);
+    let cfg = PipelineConfig::builder()
+        .method(Method::Nystrom)
+        .l(96)
+        .m(64)
+        .workers(4)
+        .restarts(2)
+        .threads(threads)
+        .seed(seed)
+        .build()?;
+    let (model, report) = Pipeline::with_compute(cfg, compute.clone()).fit(&ds)?;
+    println!(
+        "fitted seed {}: l = {}, m = {}, k = {} in {} Lloyd iterations ({:.2?} total)",
+        seed,
+        model.l(),
+        model.m(),
+        model.k(),
+        report.iters_run,
+        report.times.total()
+    );
+    Ok(model)
+}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
@@ -40,10 +72,13 @@ fn main() -> anyhow::Result<()> {
     let shards = args.usize_or("shards", 2)?.max(1);
     let clients = args.usize_or("clients", 4)?.max(1);
     let rounds = args.usize_or("rounds", 6)?.max(1);
-    let batch_rows = args.usize_or("batch-rows", 256)?.max(1);
+    let request_rows = args.usize_or("request-rows", 256)?.max(1);
+    let batch_rows = args.usize_or("batch-rows", 512)?;
+    let batch_wait_us = args.u64_or("batch-wait-us", 200)?;
     let threads = args.usize_or("threads", 0)?;
+    let window = BatchWindow::new(batch_rows, Duration::from_micros(batch_wait_us));
 
-    // ---- 1. fit ---------------------------------------------------------
+    // ---- 1. fit (two models: the serving model and its hot-swap successor)
     let ds = registry::generate("rings", n, 7);
     let compute = Compute::auto(&Compute::default_artifact_dir());
     println!(
@@ -54,24 +89,8 @@ fn main() -> anyhow::Result<()> {
         ds.k,
         if compute.is_pjrt() { "pjrt" } else { "reference" }
     );
-    let cfg = PipelineConfig::builder()
-        .method(Method::Nystrom)
-        .l(96)
-        .m(64)
-        .workers(4)
-        .restarts(2)
-        .threads(threads)
-        .seed(7)
-        .build()?;
-    let (model, report) = Pipeline::with_compute(cfg, compute.clone()).fit(&ds)?;
-    println!(
-        "fitted: l = {}, m = {}, k = {} in {} Lloyd iterations ({:.2?} total)",
-        model.l(),
-        model.m(),
-        model.k(),
-        report.iters_run,
-        report.times.total()
-    );
+    let model = fit(n, threads, 7, &compute)?;
+    let successor = fit(n, threads, 8, &compute)?;
 
     // ---- 2. save + 3. load into a fresh model ---------------------------
     let path = std::env::temp_dir().join(format!("apnc-serve-stream-{}.apncm", std::process::id()));
@@ -81,21 +100,23 @@ fn main() -> anyhow::Result<()> {
     std::fs::remove_file(&path).ok();
     println!("model round-trip: {bytes} bytes on disk");
 
-    // oracle: in-memory batched prediction on the *originally fitted* model
-    let want = model.predict_batch(&ds.x, batch_rows)?;
+    // oracles: in-memory batched prediction per model epoch
+    let want = model.predict_batch(&ds.x, request_rows)?;
+    let want_successor = successor.predict_batch(&ds.x, request_rows)?;
 
-    // ---- 4. concurrent sharded serving ----------------------------------
+    // ---- 4. concurrent sharded serving with in-shard coalescing ---------
     // each client sweeps every batch slice `rounds` times at its own
     // round-robin offset, so requests from different clients interleave
     // arbitrarily across the shards; drive_clients asserts every response
     // bit-identical to the in-memory oracle. The batch is shared through
-    // one Arc — zero bytes copied per request.
-    let handle = served.serve_sharded(shards)?;
+    // one Arc — zero bytes copied per request — and each shard fuses its
+    // queue under the coalescing window.
+    let handle = served.serve_sharded_with(shards, window)?;
     let x: Arc<[f32]> = ds.x.as_slice().into();
-    let n_slices = ds.n.div_ceil(batch_rows);
+    let n_slices = ds.n.div_ceil(request_rows);
     let requests = rounds * n_slices;
     let t0 = Instant::now();
-    let report = drive_clients(&handle, &x, ds.d, &want, clients, requests, batch_rows);
+    let report = drive_clients(&handle, &x, ds.d, &want, clients, requests, request_rows);
     let secs = t0.elapsed().as_secs_f64();
     println!(
         "served {} batches from {} clients over {} shard(s): {} rows in {:.2}s ({:.0} rows/s)",
@@ -106,16 +127,99 @@ fn main() -> anyhow::Result<()> {
         secs,
         report.total_rows as f64 / secs.max(1e-9)
     );
-    for (i, rows) in report.per_shard_rows.iter().enumerate() {
+    for (i, stats) in handle.per_shard_stats().iter().enumerate() {
         println!(
-            "  shard {i}: {} rows ({:.0} rows/s)",
-            rows,
-            *rows as f64 / secs.max(1e-9)
+            "  shard {i}: {} rows in {} requests over {} fused batches ({:.0} rows/s)",
+            stats.rows,
+            stats.requests,
+            stats.batches,
+            stats.rows as f64 / secs.max(1e-9)
         );
     }
+
+    // ---- 5. async client API: one thread, many requests in flight ------
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..n_slices)
+        .map(|s| {
+            let lo = s * request_rows;
+            let hi = (lo + request_rows).min(ds.n);
+            (lo, hi, handle.predict_async(&x, lo..hi, 0).expect("submit"))
+        })
+        .collect();
+    let in_flight = tickets.len();
+    for (lo, hi, ticket) in tickets {
+        let got = ticket.wait()?;
+        assert_eq!(&got.labels[..], &want[lo..hi], "async rows {lo}..{hi}");
+        assert_eq!(got.epoch, 0, "still serving the initial model");
+    }
     println!(
-        "every response bit-identical to in-memory prediction (threads = {}, any value \
-         gives the same labels)",
+        "async: {} tickets in flight from one thread, redeemed in {:.2?}",
+        in_flight,
+        t0.elapsed()
+    );
+
+    // ---- 6. hot swap under live traffic ---------------------------------
+    // clients keep predicting while the main thread republishes the
+    // successor model; every response must match the oracle of the epoch
+    // that served it — old or new, never a blend.
+    let before_epoch = handle.epoch();
+    let total_rows = ds.n;
+    let (old_served, new_served) = std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let h = handle.clone();
+            let x = x.clone();
+            let (want, want_successor) = (&want, &want_successor);
+            joins.push(scope.spawn(move || {
+                let (mut old, mut new) = (0usize, 0usize);
+                for r in 0..requests {
+                    let s = ((c + r) % n_slices) * request_rows;
+                    let e = (s + request_rows).min(total_rows);
+                    let got = h.predict_async(&x, s..e, 0).expect("submit").wait().expect("wait");
+                    match got.epoch {
+                        0 => {
+                            assert_eq!(&got.labels[..], &want[s..e], "epoch 0 rows {s}..{e}");
+                            old += 1;
+                        }
+                        1 => {
+                            assert_eq!(
+                                &got.labels[..],
+                                &want_successor[s..e],
+                                "epoch 1 rows {s}..{e}"
+                            );
+                            new += 1;
+                        }
+                        other => panic!("unexpected epoch {other}"),
+                    }
+                }
+                (old, new)
+            }));
+        }
+        // let traffic build up, then swap mid-flight
+        std::thread::sleep(Duration::from_millis(2));
+        let epoch = handle.swap(Arc::new(successor.clone())).expect("swap");
+        assert_eq!(epoch, 1);
+        joins
+            .into_iter()
+            .map(|j| j.join().expect("client panicked"))
+            .fold((0usize, 0usize), |(a, b), (o, w)| (a + o, b + w))
+    });
+    assert_eq!(
+        old_served + new_served,
+        clients * requests,
+        "hot swap must not drop a request"
+    );
+    println!(
+        "hot swap: epoch {} -> {}; {} responses from the old model, {} from the new, 0 dropped",
+        before_epoch,
+        handle.epoch(),
+        old_served,
+        new_served
+    );
+
+    println!(
+        "every response bit-identical to the in-memory prediction of its epoch (threads = {}, \
+         any value gives the same labels)",
         if threads == 0 { "auto".to_string() } else { threads.to_string() }
     );
     println!("\nserve_stream OK");

@@ -62,9 +62,11 @@ fn main() {
 
     // PR-2 scaling pairs: serial vs. pooled. t1 pins the substrate to one
     // thread; tmax restores auto resolution (APNC_THREADS or all cores).
-    // Few iterations — eigh_2048 is ~77 Gflop per call.
+    // Few iterations — eigh_2048 is ~77 Gflop per call; smoke runs keep
+    // only the smallest operating point (the suite still executes).
     let heavy = Bench::new("linalg").with_iters(1, 3);
-    for &n in &[256usize, 1024, 2048] {
+    let eigh_sizes: &[usize] = if Bench::smoke() { &[256] } else { &[256, 1024, 2048] };
+    for &n in eigh_sizes {
         let a = random_spd(n, 6);
         for (label, threads) in [("t1", 1usize), ("tmax", 0)] {
             parallel::set_threads(threads);
@@ -76,7 +78,8 @@ fn main() {
     }
     let mut rng = Pcg::seeded(7);
     let d = 32usize;
-    for &n in &[1024usize, 2048] {
+    let gram_sizes: &[usize] = if Bench::smoke() { &[1024] } else { &[1024, 2048] };
+    for &n in gram_sizes {
         let pts: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
         let kernel = Kernel::Rbf { gamma: 0.05 };
         for (label, threads) in [("t1", 1usize), ("tmax", 0)] {

@@ -12,7 +12,13 @@ impl Job for SumJob {
     type Key = u32;
     type Value = Vec<f32>;
     type Output = Vec<f32>;
-    fn map(&self, _id: usize, input: &Vec<f32>, _ctx: &mut TaskCtx, emit: &mut Emitter<u32, Vec<f32>>) {
+    fn map(
+        &self,
+        _id: usize,
+        input: &Vec<f32>,
+        _ctx: &mut TaskCtx,
+        emit: &mut Emitter<u32, Vec<f32>>,
+    ) {
         emit.emit(0, input.clone());
     }
     fn combine(&self, _k: &u32, values: Vec<Vec<f32>>) -> Vec<Vec<f32>> {

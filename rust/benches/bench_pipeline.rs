@@ -12,7 +12,9 @@ use std::hint::black_box;
 
 fn main() {
     let bench = Bench::new("pipeline").with_iters(1, 3);
-    let ds = registry::generate("covtype", 8_192, 9);
+    // smoke runs (CI) shrink the dataset so the full path still executes
+    let n = if Bench::smoke() { 2_048 } else { 8_192 };
+    let ds = registry::generate("covtype", n, 9);
     let compute = Compute::auto(&Compute::default_artifact_dir());
     eprintln!(
         "pipeline bench backend: {} (compute threads: {})",
@@ -31,7 +33,7 @@ fn main() {
             seed: 9,
             ..Default::default()
         };
-        let stats = bench.run(&format!("covtype8k_{}", method.label()), || {
+        let stats = bench.run(&format!("covtype{}k_{}", n / 1024, method.label()), || {
             let out = Pipeline::with_compute(cfg.clone(), compute.clone())
                 .run(black_box(&ds))
                 .unwrap();

@@ -1,20 +1,26 @@
 //! Serving-tier throughput: the sharded front-end vs in-memory
-//! prediction.
+//! prediction, with and without in-shard request coalescing.
 //!
-//! Cases pin the PR-4 serving trajectory: an in-memory `predict_batch`
-//! baseline, then `drive_clients` traffic through 1/2/8 shards under
+//! Cases pin the serving trajectory: an in-memory `predict_batch`
+//! baseline, `drive_clients` traffic through 1/2/8 shards under
 //! concurrent clients (zero-copy `Arc`-shared batch, round-robin
-//! routing). All shards deref one shared model, so the shard sweep
-//! measures pure request-level parallelism — the paper's Property 4.2
-//! row-independence cashed in as throughput. Every driven response is
-//! asserted bit-identical to the in-memory oracle, so the bench doubles
-//! as a determinism soak.
+//! routing), then the PR-5 additions — the same 8-shard drive with small
+//! per-request slices served **unbatched vs coalesced** (the
+//! `BatchWindow` fuses each shard's queue into one embed pass per drained
+//! batch), and an async-ticket storm from a single client thread. All
+//! shards deref one shared model, so the shard sweep measures pure
+//! request-level parallelism — the paper's Property 4.2 row-independence
+//! cashed in as throughput. Every driven response is asserted
+//! bit-identical to the in-memory oracle, so the bench doubles as a
+//! determinism soak.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use apnc::bench::Bench;
 use apnc::embedding::{ApncCoeffs, CoeffBlock, Method};
 use apnc::kernels::Kernel;
+use apnc::model::serve::BatchWindow;
 use apnc::model::shard::drive_clients;
 use apnc::model::{ApncModel, Provenance};
 use apnc::rng::Pcg;
@@ -30,7 +36,8 @@ fn synth_model(d: usize, l: usize, m: usize, k: usize, seed: u64) -> ApncModel {
         r_t: (0..l * m).map(|_| rng.normal() as f32 * 0.2).collect(),
         m,
     }];
-    let coeffs = ApncCoeffs { method: Method::Nystrom, d, kernel: Kernel::Rbf { gamma: 0.3 }, blocks };
+    let coeffs =
+        ApncCoeffs { method: Method::Nystrom, d, kernel: Kernel::Rbf { gamma: 0.3 }, blocks };
     let centroids: Vec<f32> = (0..k * m).map(|_| rng.normal() as f32).collect();
     ApncModel::from_parts(
         coeffs,
@@ -44,9 +51,9 @@ fn synth_model(d: usize, l: usize, m: usize, k: usize, seed: u64) -> ApncModel {
 
 fn main() {
     let b = Bench::new("serving");
-    let fast = std::env::var("APNC_BENCH_FAST").is_ok();
+    let smoke = Bench::smoke();
     let (d, l, m, k) = (16usize, 128usize, 64usize, 10usize);
-    let rows = if fast { 1024 } else { 8192 };
+    let rows = if smoke { 1024 } else { 8192 };
     let batch_rows = 512usize;
 
     let model = synth_model(d, l, m, k, 2024);
@@ -75,5 +82,38 @@ fn main() {
             std::hint::black_box(report.total_rows);
         });
         b.throughput(&st, clients * rows, "row");
+    }
+
+    // the coalescing win: an async ticket storm holds every 32-row slice
+    // in flight at once (shard queues genuinely back up, unlike
+    // one-request-per-client sync driving), served request-by-request vs
+    // fused by the BatchWindow (one embed pass per drained queue). Same
+    // submission pattern on both sides — only the window differs.
+    let small_rows = 32usize;
+    let small_slices = rows.div_ceil(small_rows);
+    for (label, window) in [
+        ("unbatched", BatchWindow::disabled()),
+        ("batched512", BatchWindow::new(512, Duration::from_micros(200))),
+    ] {
+        let handle = model.clone().serve_sharded_with(8, window).unwrap();
+        let name = format!("serve_8shard_async_{rows}x{d}_req{small_rows}_{label}");
+        let st = b.run(&name, || {
+            let tickets: Vec<_> = (0..small_slices)
+                .map(|s| {
+                    let lo = s * small_rows;
+                    let hi = (lo + small_rows).min(rows);
+                    (lo, hi, handle.predict_async(&shared, lo..hi, 0).unwrap())
+                })
+                .collect();
+            for (lo, hi, t) in tickets {
+                let got = t.wait().unwrap();
+                assert_eq!(&got.labels[..], &oracle[lo..hi], "async rows {lo}..{hi}");
+            }
+        });
+        b.throughput(&st, rows, "row");
+        let stats = handle.per_shard_stats();
+        let (reqs, batches): (usize, usize) =
+            (stats.iter().map(|s| s.requests).sum(), stats.iter().map(|s| s.batches).sum());
+        println!("bench serving/{name}: fused {reqs} requests into {batches} batches");
     }
 }

@@ -55,7 +55,8 @@ fn run_once(
     let l = cfg.l.min(n);
     // sample l points uniformly
     let idx = rng.choose(n, l);
-    let samples: Vec<f32> = idx.iter().flat_map(|&i| x[i * d..(i + 1) * d].iter().copied()).collect();
+    let samples: Vec<f32> =
+        idx.iter().flat_map(|&i| x[i * d..(i + 1) * d].iter().copied()).collect();
     // K_LL (+ ridge) and its Cholesky factor. The neural (tanh) kernel is
     // indefinite, so K_LL can have negative eigenvalues: grow the ridge
     // geometrically until the factorization succeeds (Gershgorin bounds
@@ -187,7 +188,13 @@ fn run_once(
 }
 
 /// Approx KKM over raw points.
-pub fn cluster(x: &[f32], n: usize, d: usize, kernel: Kernel, cfg: &ApproxKkmConfig) -> BaselineOut {
+pub fn cluster(
+    x: &[f32],
+    n: usize,
+    d: usize,
+    kernel: Kernel,
+    cfg: &ApproxKkmConfig,
+) -> BaselineOut {
     assert_eq!(x.len(), n * d);
     assert!(cfg.k >= 1 && cfg.k <= n);
     let mut best: Option<BaselineOut> = None;

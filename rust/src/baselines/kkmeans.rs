@@ -203,7 +203,13 @@ mod tests {
         // with a linear kernel, kernel k-means optimizes the same objective
         // as plain k-means; on clean blobs both should match ground truth
         let ds = synth::gaussian_manifold("b", 200, 6, 3, 3, 0.15, 0.0, synth::Warp::None, 6);
-        let out = cluster(&ds.x, ds.n, ds.d, Kernel::Linear, &KkmConfig { k: 3, restarts: 3, ..Default::default() });
+        let out = cluster(
+            &ds.x,
+            ds.n,
+            ds.d,
+            Kernel::Linear,
+            &KkmConfig { k: 3, restarts: 3, ..Default::default() },
+        );
         assert!(nmi(&out.labels, &ds.labels) > 0.9);
     }
 
@@ -219,8 +225,20 @@ mod tests {
     #[test]
     fn objective_nonincreasing_over_restarts_best() {
         let ds = synth::moons("m", 120, 2, 0.08, 8);
-        let one = cluster(&ds.x, ds.n, ds.d, Kernel::Rbf { gamma: 1.0 }, &KkmConfig { k: 2, restarts: 1, ..Default::default() });
-        let five = cluster(&ds.x, ds.n, ds.d, Kernel::Rbf { gamma: 1.0 }, &KkmConfig { k: 2, restarts: 5, ..Default::default() });
+        let one = cluster(
+            &ds.x,
+            ds.n,
+            ds.d,
+            Kernel::Rbf { gamma: 1.0 },
+            &KkmConfig { k: 2, restarts: 1, ..Default::default() },
+        );
+        let five = cluster(
+            &ds.x,
+            ds.n,
+            ds.d,
+            Kernel::Rbf { gamma: 1.0 },
+            &KkmConfig { k: 2, restarts: 5, ..Default::default() },
+        );
         assert!(five.objective <= one.objective + 1e-9);
     }
 }

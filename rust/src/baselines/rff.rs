@@ -168,7 +168,8 @@ mod tests {
         let ds = synth::gaussian_manifold("g", 300, 6, 3, 3, 0.25, 0.0, synth::Warp::None, 32);
         let mut rng = Pcg::seeded(33);
         let gamma = crate::kernels::self_tune_gamma(&ds.x, ds.d, &mut rng);
-        let cfg = RffConfig { k: 3, features: 256, gamma, restarts: 3, seed: 34, ..Default::default() };
+        let cfg =
+            RffConfig { k: 3, features: 256, gamma, restarts: 3, seed: 34, ..Default::default() };
         let out = cluster(&ds.x, ds.n, ds.d, &cfg);
         assert!(nmi(&out.labels, &ds.labels) > 0.8, "nmi {}", nmi(&out.labels, &ds.labels));
         let sv = cluster_sv(&ds.x, ds.n, ds.d, &cfg);

@@ -147,8 +147,20 @@ mod tests {
         let ds = synth::gaussian_manifold("g", 600, 8, 6, 4, 0.5, 0.4, synth::Warp::Tanh, 43);
         let mut rng = Pcg::seeded(44);
         let gamma = crate::kernels::self_tune_gamma(&ds.x, ds.d, &mut rng);
-        let tiny = cluster(&ds.x, ds.n, ds.d, Kernel::Rbf { gamma }, &TwoStageConfig { k: 6, l: 12, restarts: 3, ..Default::default() });
-        let big = cluster(&ds.x, ds.n, ds.d, Kernel::Rbf { gamma }, &TwoStageConfig { k: 6, l: 300, restarts: 3, ..Default::default() });
+        let tiny = cluster(
+            &ds.x,
+            ds.n,
+            ds.d,
+            Kernel::Rbf { gamma },
+            &TwoStageConfig { k: 6, l: 12, restarts: 3, ..Default::default() },
+        );
+        let big = cluster(
+            &ds.x,
+            ds.n,
+            ds.d,
+            Kernel::Rbf { gamma },
+            &TwoStageConfig { k: 6, l: 300, restarts: 3, ..Default::default() },
+        );
         let nmi_tiny = nmi(&tiny.labels, &ds.labels);
         let nmi_big = nmi(&big.labels, &ds.labels);
         assert!(nmi_big > nmi_tiny - 0.05, "l=300 ({nmi_big}) should beat l=12 ({nmi_tiny})");

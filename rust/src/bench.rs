@@ -71,10 +71,18 @@ fn json_escape(s: &str) -> String {
 }
 
 impl Bench {
+    /// True when the run should shrink to smoke-test scale: CI sets
+    /// `APNC_BENCH_SMOKE=1` so every suite compiles *and executes* on
+    /// every PR without burning minutes (`APNC_BENCH_FAST=1`, the older
+    /// knob, means the same thing). Suites consult this for their problem
+    /// sizes; [`Bench::new`] also shortens warmup/iteration counts.
+    pub fn smoke() -> bool {
+        std::env::var_os("APNC_BENCH_SMOKE").is_some()
+            || std::env::var_os("APNC_BENCH_FAST").is_some()
+    }
+
     pub fn new(suite: &str) -> Self {
-        // APNC_BENCH_FAST=1 shrinks every suite (used by `cargo test`-adjacent
-        // smoke checks and CI-style runs).
-        let fast = std::env::var("APNC_BENCH_FAST").is_ok();
+        let fast = Self::smoke();
         Bench {
             suite: suite.to_string(),
             warmup: if fast { 1 } else { 3 },
@@ -222,7 +230,8 @@ mod tests {
 
     #[test]
     fn json_records_appended_on_drop() {
-        let path = std::env::temp_dir().join(format!("apnc_bench_json_{}.jsonl", std::process::id()));
+        let path =
+            std::env::temp_dir().join(format!("apnc_bench_json_{}.jsonl", std::process::id()));
         let _ = std::fs::remove_file(&path);
         {
             let b = Bench::new("jsuite").with_iters(0, 1).with_json(&path);

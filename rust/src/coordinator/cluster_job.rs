@@ -442,8 +442,10 @@ mod tests {
         let (blocks_large, _) = blob_blocks(400, 4, 3);
         let engine = Engine::new(EngineConfig::with_workers(4));
         let cfg = ClusterConfig { k: 3, max_iters: 5, tol: 0.0, seed: 7, ..Default::default() };
-        let small = run(&engine, &Compute::reference(), &blocks_small, 4, DistKind::L2Sq, &cfg).unwrap();
-        let large = run(&engine, &Compute::reference(), &blocks_large, 4, DistKind::L2Sq, &cfg).unwrap();
+        let small =
+            run(&engine, &Compute::reference(), &blocks_small, 4, DistKind::L2Sq, &cfg).unwrap();
+        let large =
+            run(&engine, &Compute::reference(), &blocks_large, 4, DistKind::L2Sq, &cfg).unwrap();
         // 10x the data: shuffle bytes grow only with the number of map
         // tasks (combiner output), not with n
         let per_task_small = small.metrics.shuffle_bytes as f64 / small.metrics.map_tasks as f64;
@@ -455,8 +457,24 @@ mod tests {
     fn deterministic_across_worker_counts() {
         let (blocks, _) = blob_blocks(40, 5, 4);
         let cfg = ClusterConfig { k: 3, max_iters: 8, tol: 0.0, seed: 8, ..Default::default() };
-        let a = run(&Engine::new(EngineConfig::with_workers(1)), &Compute::reference(), &blocks, 5, DistKind::L2Sq, &cfg).unwrap();
-        let b = run(&Engine::new(EngineConfig::with_workers(8)), &Compute::reference(), &blocks, 5, DistKind::L2Sq, &cfg).unwrap();
+        let a = run(
+            &Engine::new(EngineConfig::with_workers(1)),
+            &Compute::reference(),
+            &blocks,
+            5,
+            DistKind::L2Sq,
+            &cfg,
+        )
+        .unwrap();
+        let b = run(
+            &Engine::new(EngineConfig::with_workers(8)),
+            &Compute::reference(),
+            &blocks,
+            5,
+            DistKind::L2Sq,
+            &cfg,
+        )
+        .unwrap();
         assert_eq!(a.labels, b.labels);
         assert_eq!(a.centroids, b.centroids);
         assert_eq!(a.obj_curve, b.obj_curve);

@@ -121,10 +121,20 @@ mod tests {
     #[test]
     fn broadcast_cost_scales_with_workers_and_blocks() {
         let (blocks, coeffs, _) = setup(100, 4, 16, 8);
-        let w2 = run(&Engine::new(EngineConfig::with_workers(2)), &Compute::reference(), &coeffs, &blocks)
-            .unwrap();
-        let w8 = run(&Engine::new(EngineConfig::with_workers(8)), &Compute::reference(), &coeffs, &blocks)
-            .unwrap();
+        let w2 = run(
+            &Engine::new(EngineConfig::with_workers(2)),
+            &Compute::reference(),
+            &coeffs,
+            &blocks,
+        )
+        .unwrap();
+        let w8 = run(
+            &Engine::new(EngineConfig::with_workers(8)),
+            &Compute::reference(),
+            &coeffs,
+            &blocks,
+        )
+        .unwrap();
         assert_eq!(w8.metrics.broadcast_bytes, 4 * w2.metrics.broadcast_bytes);
     }
 

@@ -156,8 +156,22 @@ mod tests {
     #[test]
     fn sample_schedule_independent() {
         let bs = blocks(3000, 2, 300, 3);
-        let a = run(&Engine::new(EngineConfig::with_workers(1)), &bs, 2, 3000, 100, SampleMode::Bernoulli);
-        let b = run(&Engine::new(EngineConfig::with_workers(8)), &bs, 2, 3000, 100, SampleMode::Bernoulli);
+        let a = run(
+            &Engine::new(EngineConfig::with_workers(1)),
+            &bs,
+            2,
+            3000,
+            100,
+            SampleMode::Bernoulli,
+        );
+        let b = run(
+            &Engine::new(EngineConfig::with_workers(8)),
+            &bs,
+            2,
+            3000,
+            100,
+            SampleMode::Bernoulli,
+        );
         assert_eq!(a.indices, b.indices);
         assert_eq!(a.samples, b.samples);
     }

@@ -60,15 +60,96 @@ pub struct Spec {
 pub fn specs() -> Vec<Spec> {
     use KernelChoice::*;
     vec![
-        Spec { name: "usps", kind: "Digit Images", paper_n: 9_298, paper_d: 256, default_n: 9_298, d: 64, k: 10, kernel: Neural },
-        Spec { name: "pie", kind: "Face Images", paper_n: 11_554, paper_d: 4_096, default_n: 11_554, d: 256, k: 68, kernel: SelfTunedRbf },
-        Spec { name: "mnist", kind: "Digit Images", paper_n: 70_000, paper_d: 784, default_n: 14_000, d: 64, k: 10, kernel: Polynomial },
-        Spec { name: "rcv1", kind: "Documents", paper_n: 193_844, paper_d: 47_236, default_n: 20_000, d: 256, k: 103, kernel: SelfTunedRbf },
-        Spec { name: "covtype", kind: "Multivariate", paper_n: 581_012, paper_d: 54, default_n: 40_000, d: 64, k: 7, kernel: SelfTunedRbf },
-        Spec { name: "imagenet", kind: "Images", paper_n: 1_262_102, paper_d: 900, default_n: 60_000, d: 256, k: 164, kernel: SelfTunedRbf },
-        Spec { name: "imagenet-50k", kind: "Images", paper_n: 50_000, paper_d: 900, default_n: 10_000, d: 256, k: 164, kernel: SelfTunedRbf },
-        Spec { name: "rings", kind: "Synthetic", paper_n: 0, paper_d: 0, default_n: 3_000, d: 16, k: 2, kernel: ScaledRbf(3.0) },
-        Spec { name: "moons", kind: "Synthetic", paper_n: 0, paper_d: 0, default_n: 2_000, d: 8, k: 2, kernel: ScaledRbf(10.0) },
+        Spec {
+            name: "usps",
+            kind: "Digit Images",
+            paper_n: 9_298,
+            paper_d: 256,
+            default_n: 9_298,
+            d: 64,
+            k: 10,
+            kernel: Neural,
+        },
+        Spec {
+            name: "pie",
+            kind: "Face Images",
+            paper_n: 11_554,
+            paper_d: 4_096,
+            default_n: 11_554,
+            d: 256,
+            k: 68,
+            kernel: SelfTunedRbf,
+        },
+        Spec {
+            name: "mnist",
+            kind: "Digit Images",
+            paper_n: 70_000,
+            paper_d: 784,
+            default_n: 14_000,
+            d: 64,
+            k: 10,
+            kernel: Polynomial,
+        },
+        Spec {
+            name: "rcv1",
+            kind: "Documents",
+            paper_n: 193_844,
+            paper_d: 47_236,
+            default_n: 20_000,
+            d: 256,
+            k: 103,
+            kernel: SelfTunedRbf,
+        },
+        Spec {
+            name: "covtype",
+            kind: "Multivariate",
+            paper_n: 581_012,
+            paper_d: 54,
+            default_n: 40_000,
+            d: 64,
+            k: 7,
+            kernel: SelfTunedRbf,
+        },
+        Spec {
+            name: "imagenet",
+            kind: "Images",
+            paper_n: 1_262_102,
+            paper_d: 900,
+            default_n: 60_000,
+            d: 256,
+            k: 164,
+            kernel: SelfTunedRbf,
+        },
+        Spec {
+            name: "imagenet-50k",
+            kind: "Images",
+            paper_n: 50_000,
+            paper_d: 900,
+            default_n: 10_000,
+            d: 256,
+            k: 164,
+            kernel: SelfTunedRbf,
+        },
+        Spec {
+            name: "rings",
+            kind: "Synthetic",
+            paper_n: 0,
+            paper_d: 0,
+            default_n: 3_000,
+            d: 16,
+            k: 2,
+            kernel: ScaledRbf(3.0),
+        },
+        Spec {
+            name: "moons",
+            kind: "Synthetic",
+            paper_n: 0,
+            paper_d: 0,
+            default_n: 2_000,
+            d: 8,
+            k: 2,
+            kernel: ScaledRbf(10.0),
+        },
     ]
 }
 
@@ -84,17 +165,45 @@ pub fn generate(name: &str, n: usize, seed: u64) -> Dataset {
     match s.name {
         // digit images: moderately curved manifold, balanced classes,
         // non-negative pixels for the polynomial kernel
-        "usps" => synth::gaussian_manifold("usps", n, s.d, s.k, 8, 0.40, 0.1, Warp::Pixel, seed ^ 0x01),
-        "mnist" => synth::gaussian_manifold("mnist", n, s.d, s.k, 10, 0.45, 0.1, Warp::Pixel, seed ^ 0x02),
+        "usps" => {
+            synth::gaussian_manifold("usps", n, s.d, s.k, 8, 0.40, 0.1, Warp::Pixel, seed ^ 0x01)
+        }
+        "mnist" => {
+            synth::gaussian_manifold("mnist", n, s.d, s.k, 10, 0.45, 0.1, Warp::Pixel, seed ^ 0x02)
+        }
         // faces: many classes, high ambient dim, strong manifold curvature
-        "pie" => synth::gaussian_manifold("pie", n, s.d, s.k, 12, 0.55, 0.3, Warp::Tanh, seed ^ 0x03),
+        "pie" => {
+            synth::gaussian_manifold("pie", n, s.d, s.k, 12, 0.55, 0.3, Warp::Tanh, seed ^ 0x03)
+        }
         // documents: sparse non-negative topic mixtures, imbalanced
         "rcv1" => synth::topic_mixture("rcv1", n, s.d, s.k, seed ^ 0x04),
         // cartographic variables: few classes, folded (non-linear) boundaries
-        "covtype" => synth::gaussian_manifold("covtype", n, s.d, s.k, 6, 0.65, 0.9, Warp::Fold, seed ^ 0x05),
+        "covtype" => {
+            synth::gaussian_manifold("covtype", n, s.d, s.k, 6, 0.65, 0.9, Warp::Fold, seed ^ 0x05)
+        }
         // imagenet features: many classes, heavy overlap (low achievable NMI)
-        "imagenet" => synth::gaussian_manifold("imagenet", n, s.d, s.k, 16, 0.85, 0.6, Warp::Tanh, seed ^ 0x06),
-        "imagenet-50k" => synth::gaussian_manifold("imagenet-50k", n, s.d, s.k, 16, 0.85, 0.6, Warp::Tanh, seed ^ 0x06),
+        "imagenet" => synth::gaussian_manifold(
+            "imagenet",
+            n,
+            s.d,
+            s.k,
+            16,
+            0.85,
+            0.6,
+            Warp::Tanh,
+            seed ^ 0x06,
+        ),
+        "imagenet-50k" => synth::gaussian_manifold(
+            "imagenet-50k",
+            n,
+            s.d,
+            s.k,
+            16,
+            0.85,
+            0.6,
+            Warp::Tanh,
+            seed ^ 0x06,
+        ),
         "rings" => synth::rings("rings", n, s.d, s.k, 0.06, seed ^ 0x07),
         "moons" => synth::moons("moons", n, s.d, 0.06, seed ^ 0x08),
         other => unreachable!("spec exists but no generator: {other}"),

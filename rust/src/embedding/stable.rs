@@ -26,7 +26,14 @@ pub const EIG_EPS: f64 = 1e-10;
 /// `samples`: (l, d) row-major; `m` target dimensionality; `t` the number
 /// of sample points summed per direction (the paper fixes t = 0.4 * l in
 /// its experiments). `t` is clamped to [1, l].
-pub fn fit(samples: &[f32], d: usize, kernel: Kernel, m: usize, t: usize, rng: &mut Pcg) -> ApncCoeffs {
+pub fn fit(
+    samples: &[f32],
+    d: usize,
+    kernel: Kernel,
+    m: usize,
+    t: usize,
+    rng: &mut Pcg,
+) -> ApncCoeffs {
     assert!(d > 0 && samples.len() % d == 0);
     let l = samples.len() / d;
     assert!(l > 0, "empty sample set");

@@ -83,7 +83,8 @@ pub fn run(cfg: &AblateConfig, compute: &Compute) -> Result<Vec<Row>> {
                 },
                 &mut rng,
             );
-            let embed = crate::coordinator::embed_job::run(&p.engine, compute, &fit.coeffs, &blocks)?;
+            let embed =
+                crate::coordinator::embed_job::run(&p.engine, compute, &fit.coeffs, &blocks)?;
             (embed.blocks, embed.m, fit.coeffs.dist())
         };
         for (label, init) in [("kpp", Init::KppSample), ("random", Init::Random)] {

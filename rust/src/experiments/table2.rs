@@ -141,7 +141,14 @@ fn run_method(
                 ds.n,
                 ds.d,
                 kernel,
-                &ApproxKkmConfig { k: ds.k, l, max_iters: 30, seed, restarts: 1, ..Default::default() },
+                &ApproxKkmConfig {
+                    k: ds.k,
+                    l,
+                    max_iters: 30,
+                    seed,
+                    restarts: 1,
+                    ..Default::default()
+                },
             )
             .labels
         }

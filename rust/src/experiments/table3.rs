@@ -100,7 +100,7 @@ pub fn run(cfg: &Table3Config, compute: &Compute) -> Result<Vec<SubTable>> {
     let methods = vec![Table3Method::TwoStages, Table3Method::ApncNys, Table3Method::ApncSd];
     let mut out = Vec::new();
     for name in ["rcv1", "covtype", "imagenet"] {
-        if cfg.only.as_deref().map_or(false, |o| o != name) {
+        if cfg.only.as_deref().is_some_and(|o| o != name) {
             continue;
         }
         let spec = registry::spec(name).unwrap();
@@ -181,7 +181,8 @@ pub fn run(cfg: &Table3Config, compute: &Compute) -> Result<Vec<SubTable>> {
                 }
             }
         }
-        let avg = |v: &[f64]| if v.is_empty() { 0.0 } else { v.iter().sum::<f64>() / v.len() as f64 };
+        let avg =
+            |v: &[f64]| if v.is_empty() { 0.0 } else { v.iter().sum::<f64>() / v.len() as f64 };
         out.push(SubTable {
             dataset: name.to_string(),
             n,

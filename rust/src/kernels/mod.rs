@@ -113,8 +113,16 @@ impl Kernel {
         }
     }
 
-    kernel_apply_impl!(apply_f32, f32, "Elementwise kernel map over a precomputed f32 dot-product entry.");
-    kernel_apply_impl!(apply_f64, f64, "Elementwise kernel map over a precomputed f64 dot-product entry.");
+    kernel_apply_impl!(
+        apply_f32,
+        f32,
+        "Elementwise kernel map over a precomputed f32 dot-product entry."
+    );
+    kernel_apply_impl!(
+        apply_f64,
+        f64,
+        "Elementwise kernel map over a precomputed f64 dot-product entry."
+    );
 
     /// Kernel matrix between row-point sets `a` (na x d) and `b` (nb x d),
     /// in f64 for downstream eigendecomposition.

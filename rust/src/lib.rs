@@ -62,7 +62,12 @@
 //! [`model::ApncModel::serve_sharded`] stands up N model threads behind a
 //! round-robin [`model::shard::ShardedHandle`] (zero-copy `Arc`-shared
 //! request payloads; responses bit-identical to in-memory prediction for
-//! any shard count).
+//! any shard count). Serving tier v2 layers on: in-shard request
+//! coalescing ([`model::serve::BatchWindow`] — each shard fuses its
+//! queued requests into one embed pass and demuxes the replies), an
+//! async non-blocking client API ([`model::serve::PredictTicket`]), and
+//! hot model swap ([`model::shard::ShardedHandle::swap`] — epoch-tagged
+//! republication behind live traffic, no request dropped).
 //!
 //! See `examples/` for runnable end-to-end drivers (including
 //! `serve_stream`, a many-client sharded serving demo) and `repro --help`

@@ -20,11 +20,16 @@
 //! `predict` flags: --model PATH [--input FILE | --dataset NAME --n N]
 //!              --chunk N (rows per prediction chunk, 0 = default)
 //! `serve` flags: --model PATH --shards N (serving threads, default 1)
-//!              --clients N --requests N --batch-rows N
+//!              --clients N --requests N
+//!              --request-rows N (rows per client request, default 512)
+//!              --batch-rows N (in-shard coalescing window: fuse queued
+//!                              requests up to N pending rows; 0 = off)
+//!              --batch-wait-us U (hold a coalescing window open up to
+//!                              U microseconds for stragglers)
 
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Result};
 use apnc::cli::Args;
@@ -33,6 +38,7 @@ use apnc::coordinator::sample::SampleMode;
 use apnc::data::registry;
 use apnc::embedding::Method;
 use apnc::experiments::{ablate, table1, table2, table3};
+use apnc::model::serve::BatchWindow;
 use apnc::model::shard::drive_clients;
 use apnc::model::ApncModel;
 use apnc::runtime::Compute;
@@ -165,7 +171,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("NMI      = {:.4}", out.nmi);
     println!("ARI      = {:.4}", out.ari);
     println!("purity   = {:.4}", out.purity);
-    println!("l actual = {}, m actual = {}, iterations = {}", out.l_actual, out.m_actual, out.iters_run);
+    println!(
+        "l actual = {}, m actual = {}, iterations = {}",
+        out.l_actual, out.m_actual, out.iters_run
+    );
     println!(
         "times: sample {:.2?}, coeff fit {:.2?}, embed {:.2?}, cluster {:.2?}",
         out.times.sample, out.times.coeff_fit, out.times.embed, out.times.cluster
@@ -252,16 +261,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let shards = args.usize_or("shards", 1)?.max(1);
     let clients = args.usize_or("clients", 4)?.max(1);
     let requests = args.usize_or("requests", 8)?.max(1);
-    let batch_rows = args.usize_or("batch-rows", 512)?.max(1);
+    let request_rows = args.usize_or("request-rows", 512)?.max(1);
+    // server-side coalescing window (0 rows = serve requests unfused)
+    let batch_rows = args.usize_or("batch-rows", 0)?;
+    let batch_wait_us = args.u64_or("batch-wait-us", 200)?;
+    let window = BatchWindow::new(batch_rows, Duration::from_micros(batch_wait_us));
     let ds = load_dataset(args)?;
     let model = load_model_checked(args, &ds)?;
     // oracle for the determinism check: direct in-memory prediction
     let want = model.predict_batch(&ds.x, 0)?;
-    let handle = model.serve_sharded(shards)?;
+    let handle = model.serve_sharded_with(shards, window)?;
     // the batch is Arc-shared: every request carries a range, not a copy
     let x: Arc<[f32]> = ds.x.as_slice().into();
     let t0 = Instant::now();
-    let report = drive_clients(&handle, &x, ds.d, &want, clients, requests, batch_rows);
+    let report = drive_clients(&handle, &x, ds.d, &want, clients, requests, request_rows);
     let secs = t0.elapsed().as_secs_f64();
     println!(
         "served {} requests from {} clients over {} shard(s): {} rows in {:.2}s ({:.0} rows/s)",
@@ -272,10 +285,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         secs,
         report.total_rows as f64 / secs.max(1e-9)
     );
-    for (i, rows) in report.per_shard_rows.iter().enumerate() {
-        println!("  shard {i}: {} rows ({:.0} rows/s)", rows, *rows as f64 / secs.max(1e-9));
+    if window.is_enabled() {
+        println!(
+            "coalescing: window = {} rows / {} us held open per batch",
+            window.max_rows, batch_wait_us
+        );
     }
-    println!("every response was bit-identical to in-memory prediction");
+    for (i, stats) in handle.per_shard_stats().iter().enumerate() {
+        println!(
+            "  shard {i}: {} rows in {} requests over {} fused batches ({:.0} rows/s)",
+            stats.rows,
+            stats.requests,
+            stats.batches,
+            stats.rows as f64 / secs.max(1e-9)
+        );
+    }
+    println!(
+        "every response was bit-identical to in-memory prediction (model epoch {})",
+        handle.epoch()
+    );
     Ok(())
 }
 

@@ -300,7 +300,13 @@ mod tests {
         type Key = u32;
         type Value = u64;
         type Output = (u32, u64);
-        fn map(&self, _id: usize, input: &Vec<u32>, ctx: &mut TaskCtx, emit: &mut Emitter<u32, u64>) {
+        fn map(
+            &self,
+            _id: usize,
+            input: &Vec<u32>,
+            ctx: &mut TaskCtx,
+            emit: &mut Emitter<u32, u64>,
+        ) {
             ctx.count("points", input.len() as u64);
             for &w in input {
                 emit.emit(w, 1);
@@ -345,7 +351,13 @@ mod tests {
             type Key = u32;
             type Value = u64;
             type Output = (u32, u64);
-            fn map(&self, _id: usize, input: &Vec<u32>, _ctx: &mut TaskCtx, emit: &mut Emitter<u32, u64>) {
+            fn map(
+                &self,
+                _id: usize,
+                input: &Vec<u32>,
+                _ctx: &mut TaskCtx,
+                emit: &mut Emitter<u32, u64>,
+            ) {
                 for &w in input {
                     emit.emit(w, 1);
                 }

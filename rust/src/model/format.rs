@@ -168,8 +168,16 @@ pub fn save(model: &ApncModel, path: &Path) -> Result<()> {
         "model has {} coefficient blocks; the format caps at {MAX_BLOCKS} (lower ensemble_q)",
         coeffs.blocks.len()
     );
-    ensure!(coeffs.d as u64 <= MAX_DIM, "model dimensionality d = {} exceeds the format cap", coeffs.d);
-    ensure!(model.k() as u64 <= MAX_DIM, "model cluster count k = {} exceeds the format cap", model.k());
+    ensure!(
+        coeffs.d as u64 <= MAX_DIM,
+        "model dimensionality d = {} exceeds the format cap",
+        coeffs.d
+    );
+    ensure!(
+        model.k() as u64 <= MAX_DIM,
+        "model cluster count k = {} exceeds the format cap",
+        model.k()
+    );
     for (bi, b) in coeffs.blocks.iter().enumerate() {
         ensure!(
             b.l as u64 <= MAX_DIM && b.m as u64 <= MAX_DIM,

@@ -17,14 +17,19 @@
 //! [`serve::ModelHandle`] on the shared single-owner-thread core;
 //! [`ApncModel::serve_sharded`] stands up N model threads behind one
 //! round-robin [`shard::ShardedHandle`] with zero-copy `Arc`-shared
-//! request payloads). All
+//! request payloads). Serving tier v2 adds in-shard request coalescing
+//! ([`ApncModel::serve_with`] / [`ApncModel::serve_sharded_with`] take a
+//! [`serve::BatchWindow`]: one fused embed pass per drained queue), an
+//! async client API ([`serve::PredictTicket`]), and hot model swap
+//! (epoch-tagged republication behind live traffic — see
+//! [`shard::ShardedHandle::swap`]). All
 //! compute runs through the [`crate::runtime::Compute`] facade, so both
 //! the PJRT artifact backend and the rust reference serve predictions,
 //! and every hot loop lands on the shared parallel core
 //! ([`crate::parallel`]) with its bit-identical-for-any-thread-count
 //! contract. Per-row outputs are also independent of request batching, so
-//! `predict`, chunked [`ApncModel::predict_batch`], and concurrent
-//! serving all produce identical labels.
+//! `predict`, chunked [`ApncModel::predict_batch`], concurrent serving,
+//! and coalesced serving all produce identical labels.
 
 pub mod format;
 pub mod serve;
@@ -226,9 +231,18 @@ impl ApncModel {
     }
 
     /// Move the model onto a dedicated serving thread and return a
-    /// cloneable request handle (see [`serve`]).
+    /// cloneable request handle (see [`serve`]). Coalescing is disabled;
+    /// use [`ApncModel::serve_with`] to set a [`serve::BatchWindow`].
     pub fn serve(self) -> Result<serve::ModelHandle> {
         serve::ModelHandle::start(self)
+    }
+
+    /// [`ApncModel::serve`] with in-shard request coalescing: the serving
+    /// thread drains its queue under `window` and answers each drained
+    /// batch with one fused `predict_batch` pass. Responses are
+    /// bit-identical for every window.
+    pub fn serve_with(self, window: serve::BatchWindow) -> Result<serve::ModelHandle> {
+        serve::ModelHandle::start_with(self, window)
     }
 
     /// Stand up `n_shards` serving threads (at least 1) behind one
@@ -236,6 +250,17 @@ impl ApncModel {
     /// to [`ApncModel::predict_batch`] for any shard count.
     pub fn serve_sharded(self, n_shards: usize) -> Result<shard::ShardedHandle> {
         shard::ShardedHandle::start(self, n_shards)
+    }
+
+    /// [`ApncModel::serve_sharded`] with per-shard request coalescing
+    /// under `window`. Responses stay bit-identical for any shard count,
+    /// window, or interleaving.
+    pub fn serve_sharded_with(
+        self,
+        n_shards: usize,
+        window: serve::BatchWindow,
+    ) -> Result<shard::ShardedHandle> {
+        shard::ShardedHandle::start_with(self, n_shards, window)
     }
 }
 

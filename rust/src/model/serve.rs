@@ -3,20 +3,39 @@
 //! A [`ModelHandle`] is one model thread behind a cloneable request
 //! handle, built on the shared single-owner-thread core
 //! (`runtime::service::ServiceCore`, the `PjrtService` pattern): the
-//! dedicated thread holds an `Arc` of the model and any number of client
-//! threads submit requests over an mpsc channel. [`ApncModel`] is
-//! `Sync` on either backend — the non-`Sync` PJRT client lives on its
-//! own service thread, the model only holds the channel handle — so the
-//! sharded front-end ([`crate::model::shard::ShardedHandle`]) stands up
-//! N of these over **one** shared model, never per-shard copies.
+//! dedicated thread reads the current model from an epoch-tagged
+//! publication slot and any number of client threads submit requests over
+//! an mpsc channel. [`ApncModel`] is `Sync` on either backend — the
+//! non-`Sync` PJRT client lives on its own service thread, the model only
+//! holds the channel handle — so the sharded front-end
+//! ([`crate::model::shard::ShardedHandle`]) stands up N of these over
+//! **one** shared slot, never per-shard copies.
 //!
-//! Two serving-tier contracts live here:
+//! The serving-tier contracts that live here:
 //!
 //! * **Zero-copy requests.** The request payload is an `Arc<[f32]>` plus
 //!   a row range, never an owned copy of the batch: clients that hold a
 //!   shared batch ([`ModelHandle::predict_shared`]) pay zero bytes per
 //!   request, and the convenience slice APIs pay exactly one `Arc::from`
 //!   copy at the submission boundary (not one per hop).
+//! * **In-shard request coalescing.** With a [`BatchWindow`] enabled, the
+//!   shard drains its queue — up to `max_rows` pending rows or `max_wait`
+//!   of extra latency — and serves the coalesced requests with **one**
+//!   fused [`ApncModel::predict_batch`] (one embed pass instead of N),
+//!   demuxing the label vector back per request. Per-row predictions are
+//!   independent of batching, so fused responses stay bit-identical to
+//!   unbatched serving (pinned in `rust/tests/model_roundtrip.rs`).
+//! * **Async, non-blocking clients.** [`ModelHandle::predict_async`]
+//!   submits without waiting and returns a [`PredictTicket`]; a client
+//!   overlaps any number of in-flight requests from one thread and
+//!   redeems each ticket by [`PredictTicket::poll`] (non-blocking) or
+//!   [`PredictTicket::wait`] (blocking).
+//! * **Hot model swap.** The serving thread loads the model from the
+//!   shared publication slot once per coalesced batch, so
+//!   [`ModelHandle::swap`] (and the sharded front-end's swap) republishes
+//!   a new model behind live traffic without dropping a request. Each
+//!   [`Prediction`] carries the epoch of the model that produced it; a
+//!   batch is served entirely by one epoch, never a blend.
 //! * **Explained death.** The serving thread records why it stopped —
 //!   explicit [`ModelHandle::shutdown`], all handles dropped, or a
 //!   captured panic message — and every subsequent client call surfaces
@@ -24,70 +43,275 @@
 //!
 //! Each prediction is independent per row, so responses are bit-identical
 //! to calling [`ApncModel::predict_batch`] directly on the in-memory
-//! model, regardless of how many clients interleave, which shard serves
-//! the request, or how many compute threads the parallel core uses.
+//! model with the same epoch, regardless of how many clients interleave,
+//! which shard serves the request, how requests coalesce, or how many
+//! compute threads the parallel core uses.
 
 use std::ops::{ControlFlow, Range};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, RwLock};
+use std::time::{Duration, Instant};
 
 use super::ApncModel;
 use crate::runtime::service::ServiceCore;
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
+
+/// In-shard request coalescing policy: how long a shard may hold the
+/// first pending request while it gathers more, and how many rows it
+/// aims to fuse into one `predict_batch` pass.
+///
+/// * `max_rows <= 1` disables coalescing (every request is served the
+///   moment it is received — the pre-v2 behavior, and the default).
+/// * While fewer than `max_rows` rows are pending, the shard waits up to
+///   `max_wait` (measured from the first request of the batch) for more
+///   traffic. `max_wait` of zero gathers only what is already queued.
+/// * `max_rows` is a drain threshold, not a hard cap: the request that
+///   crosses it is still included in the fused batch.
+///
+/// Responses are bit-identical for every window — coalescing trades a
+/// bounded latency budget for fewer embed passes, never accuracy.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatchWindow {
+    /// stop draining once this many rows are pending (<= 1 disables)
+    pub max_rows: usize,
+    /// longest a shard holds the batch open waiting for more requests
+    pub max_wait: Duration,
+}
+
+impl BatchWindow {
+    /// Coalescing off: serve every request individually (also the
+    /// `Default`).
+    pub fn disabled() -> BatchWindow {
+        BatchWindow { max_rows: 0, max_wait: Duration::ZERO }
+    }
+
+    /// Coalesce up to `max_rows` pending rows, holding the batch open at
+    /// most `max_wait` for stragglers.
+    pub fn new(max_rows: usize, max_wait: Duration) -> BatchWindow {
+        BatchWindow { max_rows, max_wait }
+    }
+
+    /// Whether this window ever fuses two requests.
+    pub fn is_enabled(&self) -> bool {
+        self.max_rows > 1
+    }
+}
+
+/// The epoch-tagged publication slot behind a serving thread (the
+/// `ArcSwap` pattern on std: an `RwLock`-guarded `Arc` — readers clone
+/// the `Arc` under a briefly-held read lock, writers republish under the
+/// write lock and bump the epoch).
+///
+/// Every shard of a front-end holds the *same* slot, and loads it once
+/// per coalesced batch: a swap takes effect atomically between batches,
+/// each response is attributable to exactly one epoch, and no request is
+/// dropped (requests already queued are simply served by whichever model
+/// is published when their batch starts).
+pub(crate) struct ModelSlot {
+    published: RwLock<(Arc<ApncModel>, u64)>,
+}
+
+impl ModelSlot {
+    pub(crate) fn new(model: Arc<ApncModel>) -> Arc<ModelSlot> {
+        Arc::new(ModelSlot { published: RwLock::new((model, 0)) })
+    }
+
+    /// The current model and its epoch (epoch 0 is the model the serving
+    /// tier started with; each swap increments it).
+    pub(crate) fn load(&self) -> (Arc<ApncModel>, u64) {
+        let guard = self.published.read().unwrap_or_else(|p| p.into_inner());
+        (guard.0.clone(), guard.1)
+    }
+
+    /// Publish `model` as the new serving model and return its epoch.
+    /// The replacement must expect the same feature dimensionality `d` —
+    /// in-flight requests were validated against the current `d`, and a
+    /// swap must never turn them into misshaped inputs.
+    pub(crate) fn swap(&self, model: Arc<ApncModel>) -> Result<u64> {
+        let mut guard = self.published.write().unwrap_or_else(|p| p.into_inner());
+        ensure!(
+            model.d() == guard.0.d(),
+            "hot swap rejected: replacement model expects d = {} but the \
+             serving tier was started with d = {}",
+            model.d(),
+            guard.0.d()
+        );
+        guard.0 = model;
+        guard.1 += 1;
+        Ok(guard.1)
+    }
+}
+
+/// A served prediction: the labels for the requested rows, tagged with
+/// the epoch of the model that produced them (see [`ModelHandle::swap`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Prediction {
+    /// nearest-centroid label per requested row
+    pub labels: Vec<u32>,
+    /// which published model served this request (0 = the initial model)
+    pub epoch: u64,
+}
+
+/// Serving-side counters for one shard (shared by every clone of its
+/// handle). `batches < requests` means the coalescing window fused
+/// traffic; `rows` counts successfully predicted rows.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// predict requests served (successful or not)
+    pub requests: usize,
+    /// fused dispatches (each is one `predict_batch` pass)
+    pub batches: usize,
+    /// rows successfully predicted
+    pub rows: usize,
+}
+
+#[derive(Default)]
+struct Counters {
+    requests: AtomicUsize,
+    batches: AtomicUsize,
+    rows: AtomicUsize,
+}
+
+struct PredictReq {
+    /// shared batch — cloning the Arc is the whole "copy"
+    x: Arc<[f32]>,
+    /// row range of `x` this request predicts
+    rows: Range<usize>,
+    chunk_rows: usize,
+    reply: mpsc::Sender<Result<Prediction>>,
+}
 
 enum Request {
-    Predict {
-        /// shared batch — cloning the Arc is the whole "copy"
-        x: Arc<[f32]>,
-        /// row range of `x` this request predicts
-        rows: Range<usize>,
-        chunk_rows: usize,
-        reply: mpsc::Sender<Result<Vec<u32>>>,
-    },
+    Predict(PredictReq),
     /// Stop serving; subsequent requests fail with the recorded cause.
     Shutdown { reply: mpsc::Sender<()> },
     #[cfg(test)]
     CrashForTest(String),
 }
 
+/// One in-flight prediction: redeem with [`PredictTicket::poll`]
+/// (non-blocking) or [`PredictTicket::wait`] (blocking). The result is
+/// yielded exactly once; after that the ticket is spent. Dropping an
+/// unredeemed ticket abandons the response (the serving thread is not
+/// blocked by it — replies are fire-and-forget sends).
+pub struct PredictTicket {
+    /// `None` once the result has been yielded (the ticket is spent)
+    rx: Option<mpsc::Receiver<Result<Prediction>>>,
+    core: ServiceCore<Request>,
+}
+
+impl PredictTicket {
+    /// Non-blocking check: `None` while the prediction is still in
+    /// flight; `Some(result)` exactly once when it lands (or when the
+    /// serving thread died — the error carries the recorded cause).
+    pub fn poll(&mut self) -> Option<Result<Prediction>> {
+        let rx = self.rx.as_ref()?;
+        match rx.try_recv() {
+            Ok(r) => {
+                self.rx = None;
+                Some(r)
+            }
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                self.rx = None;
+                Some(Err(self.core.death()))
+            }
+        }
+    }
+
+    /// Block until the prediction lands. Errs with the serving thread's
+    /// recorded cause of death if it stopped first, or if the ticket was
+    /// already redeemed by [`PredictTicket::poll`].
+    pub fn wait(mut self) -> Result<Prediction> {
+        match self.rx.take() {
+            Some(rx) => rx.recv().unwrap_or_else(|_| Err(self.core.death())),
+            None => Err(anyhow!("predict ticket already redeemed")),
+        }
+    }
+
+    /// Whether the result has already been yielded.
+    pub fn is_spent(&self) -> bool {
+        self.rx.is_none()
+    }
+}
+
 /// Cloneable handle to a model serving thread. Clone one per client;
-/// clones share the same fitted model and request queue.
+/// clones share the same published model, request queue, and counters.
 #[derive(Clone)]
 pub struct ModelHandle {
     core: ServiceCore<Request>,
-    /// rows successfully predicted by this shard (serving-side counter,
-    /// shared by all clones of the handle)
-    served_rows: Arc<AtomicUsize>,
+    slot: Arc<ModelSlot>,
+    stats: Arc<Counters>,
+    /// stable for the handle's lifetime: swaps must preserve `d`
     d: usize,
-    m: usize,
-    k: usize,
 }
 
 impl ModelHandle {
-    /// Move `model` onto a dedicated serving thread and return the first
-    /// handle ([`ApncModel::serve`] is the usual entry point).
+    /// Move `model` onto a dedicated serving thread with coalescing
+    /// disabled ([`ApncModel::serve`] is the usual entry point).
     pub fn start(model: ApncModel) -> Result<ModelHandle> {
-        Self::start_shard(Arc::new(model), "apnc-model-serve")
+        Self::start_with(model, BatchWindow::disabled())
     }
 
-    /// Shard-aware constructor: every shard of a front-end holds a clone
-    /// of the same `Arc` — one model in memory no matter the shard count.
-    pub(crate) fn start_shard(model: Arc<ApncModel>, name: &str) -> Result<ModelHandle> {
-        let (d, m, k) = (model.d(), model.m(), model.k());
-        let served_rows = Arc::new(AtomicUsize::new(0));
-        let served = served_rows.clone();
+    /// Move `model` onto a dedicated serving thread that coalesces
+    /// traffic per `window` ([`ApncModel::serve_with`] is the usual
+    /// entry point).
+    pub fn start_with(model: ApncModel, window: BatchWindow) -> Result<ModelHandle> {
+        Self::start_shard(ModelSlot::new(Arc::new(model)), "apnc-model-serve", window)
+    }
+
+    /// Shard-aware constructor: every shard of a front-end reads the same
+    /// [`ModelSlot`] — one published model no matter the shard count, and
+    /// one `swap` republishes for all shards at once.
+    pub(crate) fn start_shard(
+        slot: Arc<ModelSlot>,
+        name: &str,
+        window: BatchWindow,
+    ) -> Result<ModelHandle> {
+        let d = slot.load().0.d();
+        let stats = Arc::new(Counters::default());
+        let counters = stats.clone();
+        let served_slot = slot.clone();
         let core = ServiceCore::spawn(
             name,
-            move || Ok(model),
-            move |model, req| match req {
-                Request::Predict { x, rows, chunk_rows, reply } => {
-                    let d = model.d();
-                    let r = model.predict_batch(&x[rows.start * d..rows.end * d], chunk_rows);
-                    if let Ok(labels) = &r {
-                        served.fetch_add(labels.len(), Ordering::Relaxed);
+            move || Ok(served_slot),
+            move |slot, req, drain| match req {
+                Request::Predict(first) => {
+                    let mut batch = vec![first];
+                    let mut pending_rows = batch[0].rows.len();
+                    // a non-predict request pulled mid-drain: handled
+                    // after the batch it terminated is served
+                    let mut follow = None;
+                    if window.is_enabled() {
+                        // an already-expired deadline (max_wait == 0)
+                        // degenerates to a non-blocking try_recv: gather
+                        // only what is queued
+                        let deadline = Instant::now() + window.max_wait;
+                        while pending_rows < window.max_rows {
+                            match drain.next_before(deadline) {
+                                Some(Request::Predict(p)) => {
+                                    pending_rows += p.rows.len();
+                                    batch.push(p);
+                                }
+                                Some(other) => {
+                                    follow = Some(other);
+                                    break;
+                                }
+                                None => break,
+                            }
+                        }
                     }
-                    let _ = reply.send(r);
-                    ControlFlow::Continue(())
+                    serve_batch(slot, &counters, batch);
+                    match follow {
+                        None => ControlFlow::Continue(()),
+                        Some(Request::Shutdown { reply }) => {
+                            let _ = reply.send(());
+                            ControlFlow::Break("shut down by explicit request".to_string())
+                        }
+                        Some(Request::Predict(_)) => unreachable!("drain loop keeps predicts"),
+                        #[cfg(test)]
+                        Some(Request::CrashForTest(msg)) => panic!("{msg}"),
+                    }
                 }
                 Request::Shutdown { reply } => {
                     let _ = reply.send(());
@@ -97,7 +321,7 @@ impl ModelHandle {
                 Request::CrashForTest(msg) => panic!("{msg}"),
             },
         )?;
-        Ok(ModelHandle { core, served_rows, d, m, k })
+        Ok(ModelHandle { core, slot, stats, d })
     }
 
     /// Predict labels for `x` (`(rows, d)` row-major) with the default
@@ -132,6 +356,20 @@ impl ModelHandle {
         rows: Range<usize>,
         chunk_rows: usize,
     ) -> Result<Vec<u32>> {
+        Ok(self.predict_async(x, rows, chunk_rows)?.wait()?.labels)
+    }
+
+    /// Submit a prediction without blocking and return a
+    /// [`PredictTicket`] for it. A single client thread can keep any
+    /// number of requests in flight (across shards, via the sharded
+    /// front-end) and redeem the tickets as they land; the response also
+    /// carries the model [`Prediction::epoch`] that served it.
+    pub fn predict_async(
+        &self,
+        x: &Arc<[f32]>,
+        rows: Range<usize>,
+        chunk_rows: usize,
+    ) -> Result<PredictTicket> {
         ensure!(
             x.len() % self.d == 0,
             "shared batch length {} is not a multiple of the served dimensionality d = {}",
@@ -146,11 +384,23 @@ impl ModelHandle {
             rows.end
         );
         let (reply, rx) = mpsc::channel();
-        self.core.send(Request::Predict { x: x.clone(), rows, chunk_rows, reply })?;
-        match rx.recv() {
-            Ok(r) => r,
-            Err(_) => Err(self.core.death()),
-        }
+        self.core.send(Request::Predict(PredictReq { x: x.clone(), rows, chunk_rows, reply }))?;
+        Ok(PredictTicket { rx: Some(rx), core: self.core.clone() })
+    }
+
+    /// Publish `model` as the new serving model (hot swap) and return its
+    /// epoch. Takes effect atomically between coalesced batches: requests
+    /// already queued are served by whichever model is published when
+    /// their batch starts, none are dropped, and every response's
+    /// [`Prediction::epoch`] names the model that produced it. The
+    /// replacement must expect the same feature dimensionality `d`.
+    pub fn swap(&self, model: Arc<ApncModel>) -> Result<u64> {
+        self.slot.swap(model)
+    }
+
+    /// Epoch of the currently published model (0 until the first swap).
+    pub fn epoch(&self) -> u64 {
+        self.slot.load().1
     }
 
     /// Gracefully stop the serving thread (drains nothing: requests
@@ -167,7 +417,16 @@ impl ModelHandle {
     /// Rows successfully predicted by this serving thread so far (shared
     /// across clones; the sharded front-end reports these per shard).
     pub fn rows_served(&self) -> usize {
-        self.served_rows.load(Ordering::Relaxed)
+        self.stats.rows.load(Ordering::Relaxed)
+    }
+
+    /// Serving-side counters: requests, fused batches, rows.
+    pub fn stats(&self) -> ShardStats {
+        ShardStats {
+            requests: self.stats.requests.load(Ordering::Relaxed),
+            batches: self.stats.batches.load(Ordering::Relaxed),
+            rows: self.stats.rows.load(Ordering::Relaxed),
+        }
     }
 
     #[cfg(test)]
@@ -175,25 +434,80 @@ impl ModelHandle {
         let _ = self.core.send(Request::CrashForTest(msg.to_string()));
     }
 
-    /// Feature dimensionality the served model expects.
+    /// Feature dimensionality the served model expects (stable across
+    /// swaps — see [`ModelHandle::swap`]).
     pub fn d(&self) -> usize {
         self.d
     }
 
-    /// Embedding dimensionality of the served model.
+    /// Embedding dimensionality of the currently published model.
     pub fn m(&self) -> usize {
-        self.m
+        self.slot.load().0.m()
     }
 
-    /// Cluster count of the served model.
+    /// Cluster count of the currently published model.
     pub fn k(&self) -> usize {
-        self.k
+        self.slot.load().0.k()
+    }
+}
+
+/// Serve one coalesced batch: load the published model once (one epoch
+/// for the whole batch), run **one** fused `predict_batch` over the
+/// gathered rows, and demux the labels back per request. A batch of one
+/// request predicts straight from the shared payload — no copy at all.
+fn serve_batch(slot: &ModelSlot, counters: &Counters, batch: Vec<PredictReq>) {
+    let (model, epoch) = slot.load();
+    let d = model.d();
+    counters.requests.fetch_add(batch.len(), Ordering::Relaxed);
+    counters.batches.fetch_add(1, Ordering::Relaxed);
+    if batch.len() == 1 {
+        let PredictReq { x, rows, chunk_rows, reply } = batch.into_iter().next().unwrap();
+        let r = model
+            .predict_batch(&x[rows.start * d..rows.end * d], chunk_rows)
+            .map(|labels| {
+                counters.rows.fetch_add(labels.len(), Ordering::Relaxed);
+                Prediction { labels, epoch }
+            });
+        let _ = reply.send(r);
+        return;
+    }
+    // one contiguous buffer for the fused embed pass; per-request rows
+    // are copied once here, in arrival order, so the demux below is a
+    // plain running offset
+    let total: usize = batch.iter().map(|p| p.rows.len()).sum();
+    let mut fused = Vec::with_capacity(total * d);
+    for p in &batch {
+        fused.extend_from_slice(&p.x[p.rows.start * d..p.rows.end * d]);
+    }
+    match model.predict_batch(&fused, 0) {
+        Ok(labels) => {
+            counters.rows.fetch_add(labels.len(), Ordering::Relaxed);
+            let mut off = 0usize;
+            for p in batch {
+                let take = p.rows.len();
+                let slice = labels[off..off + take].to_vec();
+                off += take;
+                let _ = p.reply.send(Ok(Prediction { labels: slice, epoch }));
+            }
+        }
+        Err(e) => {
+            // anyhow::Error is not Clone: every coalesced request gets
+            // the formatted cause
+            let n = batch.len();
+            let why = format!("{e:#}");
+            for p in batch {
+                let _ = p
+                    .reply
+                    .send(Err(anyhow!("fused batch of {n} requests failed: {why}")));
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::super::tests::toy_model;
+    use super::*;
     use crate::rng::Pcg;
     use std::sync::Arc;
 
@@ -254,6 +568,110 @@ mod tests {
     }
 
     #[test]
+    fn coalesced_serving_is_bit_identical_and_fuses() {
+        let model = toy_model(1, 4, 6, 5, 3, 60);
+        let mut rng = Pcg::seeded(61);
+        let x: Vec<f32> = (0..64 * 4).map(|_| rng.normal() as f32).collect();
+        let want = model.predict_batch(&x, 0).unwrap();
+        // window big enough to fuse the whole backlog
+        let handle = model
+            .serve_with(BatchWindow::new(10_000, Duration::from_millis(50)))
+            .unwrap();
+        let shared: Arc<[f32]> = x.as_slice().into();
+        // submit a burst of async requests before redeeming any ticket:
+        // the shard drains them into fused predict_batch passes
+        let mut tickets = Vec::new();
+        for lo in (0..64usize).step_by(8) {
+            tickets.push(handle.predict_async(&shared, lo..lo + 8, 0).unwrap());
+        }
+        for (i, t) in tickets.into_iter().enumerate() {
+            let got = t.wait().unwrap();
+            assert_eq!(got.epoch, 0);
+            assert_eq!(&got.labels[..], &want[i * 8..(i + 1) * 8], "request {i}");
+        }
+        let stats = handle.stats();
+        assert_eq!(stats.requests, 8);
+        assert_eq!(stats.rows, 64);
+        assert!(
+            stats.batches < stats.requests,
+            "a queued burst under a generous window must fuse: {stats:?}"
+        );
+    }
+
+    #[test]
+    fn ticket_poll_yields_exactly_once() {
+        let model = toy_model(1, 3, 6, 4, 3, 62);
+        let mut rng = Pcg::seeded(63);
+        let x: Vec<f32> = (0..12 * 3).map(|_| rng.normal() as f32).collect();
+        let want = model.predict_batch(&x, 0).unwrap();
+        let handle = model.serve().unwrap();
+        let shared: Arc<[f32]> = x.as_slice().into();
+        let mut ticket = handle.predict_async(&shared, 0..12, 0).unwrap();
+        assert!(!ticket.is_spent());
+        // spin until the prediction lands
+        let got = loop {
+            if let Some(r) = ticket.poll() {
+                break r.unwrap();
+            }
+            std::thread::yield_now();
+        };
+        assert_eq!(got.labels, want);
+        assert!(ticket.is_spent());
+        assert!(ticket.poll().is_none(), "a spent ticket yields nothing further");
+
+        // wait() after the submit also redeems; a second redemption errs
+        let t2 = handle.predict_async(&shared, 3..9, 0).unwrap();
+        assert_eq!(t2.wait().unwrap().labels, &want[3..9]);
+    }
+
+    #[test]
+    fn ticket_on_dead_server_carries_the_cause() {
+        let model = toy_model(1, 3, 4, 2, 2, 64);
+        let handle = model.serve().unwrap();
+        let shared: Arc<[f32]> = vec![0.0f32; 6].into();
+        // the crash is queued first, so the async request behind it is
+        // never served: its ticket must surface the recorded cause —
+        // whether the submit raced the thread's exit or not
+        handle.crash_for_test("async serving panic");
+        let err = match handle.predict_async(&shared, 0..2, 0) {
+            Ok(ticket) => ticket.wait().unwrap_err().to_string(),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("async serving panic"), "{err}");
+    }
+
+    #[test]
+    fn hot_swap_tags_epochs_and_preserves_d() {
+        let model = toy_model(1, 3, 6, 4, 3, 65);
+        let mut rng = Pcg::seeded(66);
+        let x: Vec<f32> = (0..20 * 3).map(|_| rng.normal() as f32).collect();
+        let want_a = model.predict_batch(&x, 0).unwrap();
+        // second model: same shapes, different coefficients
+        let other = toy_model(1, 3, 6, 4, 5, 99);
+        let want_b = other.predict_batch(&x, 0).unwrap();
+        let handle = model.serve().unwrap();
+        let shared: Arc<[f32]> = x.as_slice().into();
+        assert_eq!(handle.epoch(), 0);
+        assert_eq!(handle.k(), 3);
+
+        let t = handle.predict_async(&shared, 0..20, 0).unwrap().wait().unwrap();
+        assert_eq!((t.epoch, t.labels), (0, want_a.clone()));
+
+        assert_eq!(handle.swap(Arc::new(other)).unwrap(), 1);
+        assert_eq!(handle.epoch(), 1);
+        assert_eq!(handle.k(), 5, "k reads the published model");
+        let t = handle.predict_async(&shared, 0..20, 0).unwrap().wait().unwrap();
+        assert_eq!((t.epoch, t.labels), (1, want_b));
+
+        // a replacement with a different d is rejected, serving continues
+        let misfit = toy_model(1, 7, 6, 4, 3, 67);
+        let err = handle.swap(Arc::new(misfit)).unwrap_err().to_string();
+        assert!(err.contains("hot swap rejected"), "{err}");
+        assert_eq!(handle.epoch(), 1);
+        assert_eq!(handle.predict(&x).unwrap(), handle.predict(&x).unwrap());
+    }
+
+    #[test]
     fn rows_served_counts_successful_predictions() {
         let model = toy_model(1, 3, 6, 4, 3, 29);
         let mut rng = Pcg::seeded(30);
@@ -265,6 +683,8 @@ mod tests {
         let shared: Arc<[f32]> = x.as_slice().into();
         handle.predict_shared(&shared, 5..15, 0).unwrap();
         assert_eq!(handle.rows_served(), 35);
+        let stats = handle.stats();
+        assert_eq!((stats.requests, stats.batches, stats.rows), (2, 2, 35));
     }
 
     #[test]

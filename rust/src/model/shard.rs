@@ -30,12 +30,21 @@
 //! **Zero-copy.** Requests carry `Arc<[f32]>` + row range (see
 //! [`crate::model::serve`]); [`drive_clients`] shares one `Arc` across
 //! every client, request, and shard.
+//!
+//! **Serving tier v2.** Each shard coalesces its own queue under the
+//! front-end's [`BatchWindow`] (one fused embed pass per drained batch);
+//! [`ShardedHandle::predict_async`] submits without blocking and returns
+//! a [`PredictTicket`]; and [`ShardedHandle::swap`] republishes a new
+//! model behind all shards at once — every shard reads the same
+//! epoch-tagged publication slot, so a swap is atomic per coalesced
+//! batch, drops no request, and every [`crate::model::serve::Prediction`]
+//! names the epoch that served it.
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use super::serve::ModelHandle;
+use super::serve::{BatchWindow, ModelHandle, PredictTicket, ShardStats};
 use super::ApncModel;
 use anyhow::Result;
 
@@ -51,14 +60,28 @@ pub struct ShardedHandle {
 
 impl ShardedHandle {
     /// Stand up `n_shards` model threads (at least 1) serving `model`
-    /// and return the routing handle ([`ApncModel::serve_sharded`] is the
+    /// with coalescing disabled ([`ApncModel::serve_sharded`] is the
     /// usual entry point).
     pub fn start(model: ApncModel, n_shards: usize) -> Result<ShardedHandle> {
+        Self::start_with(model, n_shards, BatchWindow::disabled())
+    }
+
+    /// Stand up `n_shards` model threads (at least 1), each coalescing
+    /// its queue under `window` ([`ApncModel::serve_sharded_with`] is the
+    /// usual entry point).
+    pub fn start_with(
+        model: ApncModel,
+        n_shards: usize,
+        window: BatchWindow,
+    ) -> Result<ShardedHandle> {
         let n = n_shards.max(1);
-        // one model in memory, N serving threads (see the module docs)
-        let shared = Arc::new(model);
+        // one model in memory behind one publication slot, N serving
+        // threads (see the module docs)
+        let slot = super::serve::ModelSlot::new(Arc::new(model));
         let shards = (0..n)
-            .map(|i| ModelHandle::start_shard(shared.clone(), &format!("apnc-model-shard-{i}")))
+            .map(|i| {
+                ModelHandle::start_shard(slot.clone(), &format!("apnc-model-shard-{i}"), window)
+            })
             .collect::<Result<Vec<_>>>()?;
         Ok(ShardedHandle { shards: Arc::new(shards), next: Arc::new(AtomicUsize::new(0)) })
     }
@@ -94,6 +117,44 @@ impl ShardedHandle {
         self.route().predict_shared(x, rows, chunk_rows)
     }
 
+    /// Submit a prediction to the next shard in round-robin order without
+    /// blocking; redeem the returned [`PredictTicket`] by
+    /// [`PredictTicket::poll`] or [`PredictTicket::wait`]. One client
+    /// thread can keep requests in flight on every shard at once — the
+    /// non-blocking fan-out the one-thread-per-call sync API cannot do.
+    pub fn predict_async(
+        &self,
+        x: &Arc<[f32]>,
+        rows: Range<usize>,
+        chunk_rows: usize,
+    ) -> Result<PredictTicket> {
+        self.route().predict_async(x, rows, chunk_rows)
+    }
+
+    /// Hot-swap the served model behind **all** shards at once and return
+    /// its epoch. Every shard reads the same publication slot, loaded
+    /// once per coalesced batch: no request is dropped, each batch is
+    /// served entirely by one model, and every
+    /// [`crate::model::serve::Prediction::epoch`] names which one. The
+    /// replacement must expect the same feature dimensionality `d` as the
+    /// model the front-end started with.
+    pub fn swap(&self, model: Arc<ApncModel>) -> Result<u64> {
+        self.shards[0].swap(model)
+    }
+
+    /// Epoch of the currently published model (0 until the first swap).
+    pub fn epoch(&self) -> u64 {
+        self.shards[0].epoch()
+    }
+
+    /// Gracefully stop every shard (see [`ModelHandle::shutdown`]).
+    /// Subsequent requests on any clone fail with the recorded cause.
+    pub fn shutdown(&self) {
+        for shard in self.shards.iter() {
+            shard.shutdown();
+        }
+    }
+
     /// Number of shards behind this handle.
     pub fn shard_count(&self) -> usize {
         self.shards.len()
@@ -108,6 +169,13 @@ impl ShardedHandle {
     /// Rows successfully served so far, per shard.
     pub fn per_shard_rows(&self) -> Vec<usize> {
         self.shards.iter().map(|s| s.rows_served()).collect()
+    }
+
+    /// Serving-side counters per shard (requests, fused batches, rows):
+    /// `batches < requests` on a shard means its coalescing window fused
+    /// traffic.
+    pub fn per_shard_stats(&self) -> Vec<ShardStats> {
+        self.shards.iter().map(|s| s.stats()).collect()
     }
 
     /// Feature dimensionality the served model expects.
@@ -309,5 +377,82 @@ mod tests {
         let handle = model.serve_sharded(0).unwrap();
         assert_eq!(handle.shard_count(), 1);
         assert!(handle.predict(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn batched_front_end_is_bit_identical_to_unbatched() {
+        let model = toy_model(1, 4, 6, 5, 3, 50);
+        let mut rng = Pcg::seeded(51);
+        let x: Vec<f32> = (0..40 * 4).map(|_| rng.normal() as f32).collect();
+        let want = model.predict_batch(&x, 0).unwrap();
+        let handle = model
+            .serve_sharded_with(2, BatchWindow::new(256, std::time::Duration::from_micros(200)))
+            .unwrap();
+        let shared: Arc<[f32]> = x.as_slice().into();
+        let report = drive_clients(&handle, &shared, 4, &want, 4, 10, 8);
+        assert_eq!(report.total_rows, 4 * 10 * 8);
+        let stats = handle.per_shard_stats();
+        assert_eq!(stats.iter().map(|s| s.requests).sum::<usize>(), 40);
+        assert_eq!(stats.iter().map(|s| s.rows).sum::<usize>(), 320);
+    }
+
+    #[test]
+    fn async_tickets_fan_out_over_shards_from_one_thread() {
+        let model = toy_model(1, 3, 6, 4, 3, 52);
+        let mut rng = Pcg::seeded(53);
+        let x: Vec<f32> = (0..32 * 3).map(|_| rng.normal() as f32).collect();
+        let want = model.predict_batch(&x, 0).unwrap();
+        let handle = model.serve_sharded(4).unwrap();
+        let shared: Arc<[f32]> = x.as_slice().into();
+        // one thread, 8 requests in flight across 4 shards
+        let tickets: Vec<_> = (0..8usize)
+            .map(|i| {
+                let lo = (i * 4) % 32;
+                (lo, handle.predict_async(&shared, lo..lo + 4, 0).unwrap())
+            })
+            .collect();
+        for (lo, t) in tickets {
+            let got = t.wait().unwrap();
+            assert_eq!(got.epoch, 0);
+            assert_eq!(&got.labels[..], &want[lo..lo + 4], "rows {lo}..");
+        }
+        assert_eq!(handle.per_shard_rows(), vec![8, 8, 8, 8]);
+    }
+
+    #[test]
+    fn swap_republishes_for_every_shard() {
+        let model = toy_model(1, 3, 6, 4, 3, 54);
+        let other = toy_model(1, 3, 5, 6, 4, 55);
+        let mut rng = Pcg::seeded(56);
+        let x: Vec<f32> = (0..24 * 3).map(|_| rng.normal() as f32).collect();
+        let want_a = model.predict_batch(&x, 0).unwrap();
+        let want_b = other.predict_batch(&x, 0).unwrap();
+        let handle = model.serve_sharded(3).unwrap();
+        let shared: Arc<[f32]> = x.as_slice().into();
+        assert_eq!(handle.epoch(), 0);
+        for _ in 0..3 {
+            assert_eq!(handle.predict_shared(&shared, 0..24, 0).unwrap(), want_a);
+        }
+        assert_eq!(handle.swap(Arc::new(other)).unwrap(), 1);
+        assert_eq!(handle.epoch(), 1);
+        // a fresh round over every shard now serves the new model
+        for _ in 0..3 {
+            assert_eq!(handle.predict_shared(&shared, 0..24, 0).unwrap(), want_b);
+        }
+        assert_eq!((handle.m(), handle.k()), (6, 4), "dims follow the published model");
+        // d-mismatched replacement is rejected for the whole front-end
+        assert!(handle.swap(Arc::new(toy_model(1, 5, 4, 2, 2, 57))).is_err());
+        assert_eq!(handle.epoch(), 1);
+    }
+
+    #[test]
+    fn shutdown_stops_every_shard_with_the_cause() {
+        let model = toy_model(1, 3, 4, 2, 2, 58);
+        let handle = model.serve_sharded(3).unwrap();
+        handle.shutdown();
+        for i in 0..6 {
+            let err = handle.predict(&[1.0, 2.0, 3.0]).unwrap_err().to_string();
+            assert!(err.contains("shut down by explicit request"), "request {i}: {err}");
+        }
     }
 }

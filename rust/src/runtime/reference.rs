@@ -29,7 +29,14 @@ dot4_impl!(dot4f, f32);
 /// kappa(X, L): (rows, l) kernel block. GEMM-formulated — row squared
 /// norms + dot-product block + elementwise kernel map — and parallel over
 /// row chunks.
-pub fn kmat(x: &[f32], rows: usize, d: usize, samples: &[f32], l: usize, kernel: Kernel) -> Vec<f32> {
+pub fn kmat(
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    samples: &[f32],
+    l: usize,
+    kernel: Kernel,
+) -> Vec<f32> {
     assert_eq!(x.len(), rows * d);
     assert_eq!(samples.len(), l * d);
     let x_sq: Vec<f32> = (0..rows).map(|r| {

@@ -85,15 +85,50 @@ fn record_epitaph(slot: &Mutex<Option<String>>, why: String) {
     guard.get_or_insert(why);
 }
 
+/// Owner-thread view of the request queue, handed to the handler so a
+/// service can *coalesce*: after receiving one request, pull more of the
+/// backlog (bounded by a deadline) and serve them as a single fused unit.
+/// The model serving tier's in-shard request batching is built on this;
+/// services that serve strictly one request at a time ignore it.
+///
+/// Both pulls return `None` when the queue is empty at the relevant
+/// instant — including when every sender is gone, which the outer receive
+/// loop notices on its next blocking `recv`.
+pub(crate) struct Drain<'a, Req> {
+    rx: &'a mpsc::Receiver<Req>,
+}
+
+impl<Req> Drain<'_, Req> {
+    /// Pull the next queued request without blocking.
+    pub(crate) fn try_next(&self) -> Option<Req> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Pull the next request, waiting until `deadline` if the queue is
+    /// momentarily empty. Returns `None` once the deadline passes with
+    /// nothing queued.
+    pub(crate) fn next_before(&self, deadline: std::time::Instant) -> Option<Req> {
+        match deadline.checked_duration_since(std::time::Instant::now()) {
+            Some(left) if !left.is_zero() => self.rx.recv_timeout(left).ok(),
+            _ => self.rx.try_recv().ok(),
+        }
+    }
+}
+
 impl<Req: Send + 'static> ServiceCore<Req> {
     /// Spawn the owner thread: run `init` on it (blocking `spawn` until it
     /// succeeds or fails), then serve requests with `handle` until every
     /// sender is dropped, `handle` breaks with a reason, or it panics.
+    ///
+    /// `handle` also receives a [`Drain`] over the same queue, so one
+    /// handler invocation may consume *more* than its triggering request
+    /// (request coalescing); requests it does not pull arrive in later
+    /// invocations unchanged.
     pub(crate) fn spawn<S, I, H>(name: &str, init: I, mut handle: H) -> Result<ServiceCore<Req>>
     where
         S: 'static,
         I: FnOnce() -> Result<S> + Send + 'static,
-        H: FnMut(&mut S, Req) -> ControlFlow<String> + Send + 'static,
+        H: FnMut(&mut S, Req, &Drain<'_, Req>) -> ControlFlow<String> + Send + 'static,
     {
         let (tx, rx) = mpsc::channel::<Req>();
         let epitaph: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
@@ -129,7 +164,8 @@ impl<Req: Send + 'static> ServiceCore<Req> {
                 };
                 let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     while let Ok(req) = rx.recv() {
-                        if let ControlFlow::Break(why) = handle(&mut state, req) {
+                        let drain = Drain { rx: &rx };
+                        if let ControlFlow::Break(why) = handle(&mut state, req, &drain) {
                             return why;
                         }
                     }
@@ -255,7 +291,7 @@ impl PjrtService {
                 let cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
                 Ok((client, cache))
             },
-            move |state, req| {
+            move |state, req, _drain| {
                 let (client, cache) = state;
                 match req {
                     Request::Warm { artifact, reply } => {
@@ -373,7 +409,7 @@ mod tests {
         ServiceCore::spawn(
             "echo-service",
             || Ok(0u64),
-            |total, req| match req {
+            |total, req, _drain| match req {
                 EchoReq::Add { v, reply } => {
                     *total += v;
                     let _ = reply.send(Ok(*total));
@@ -406,7 +442,7 @@ mod tests {
         let err = ServiceCore::<EchoReq>::spawn(
             "doomed-service",
             || -> Result<u64> { Err(anyhow!("no device")) },
-            |_, _| ControlFlow::Continue(()),
+            |_, _, _| ControlFlow::Continue(()),
         )
         .unwrap_err()
         .to_string();
@@ -418,7 +454,7 @@ mod tests {
         let err = ServiceCore::<EchoReq>::spawn(
             "panicky-service",
             || -> Result<u64> { panic!("boom at startup") },
-            |_, _| ControlFlow::Continue(()),
+            |_, _, _| ControlFlow::Continue(()),
         )
         .unwrap_err()
         .to_string();
@@ -442,5 +478,55 @@ mod tests {
         core.send(EchoReq::Quit).unwrap();
         let err = add(&core, 1).unwrap_err().to_string();
         assert!(err.contains("quit requested"), "{err}");
+    }
+
+    enum BatchReq {
+        Add { v: u64, reply: mpsc::Sender<Result<u64>> },
+    }
+
+    #[test]
+    fn drain_coalesces_queued_requests_into_one_handler_call() {
+        // handler sums its triggering request plus everything it can
+        // drain, and replies the fused total to every participant —
+        // the shape of the serving tier's in-shard coalescing
+        let calls = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let calls_seen = calls.clone();
+        let core: ServiceCore<BatchReq> = ServiceCore::spawn(
+            "batch-service",
+            || Ok(()),
+            move |_state, req, drain| {
+                calls_seen.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let BatchReq::Add { v, reply } = req;
+                let mut total = v;
+                let mut replies = vec![reply];
+                let deadline = std::time::Instant::now() + Duration::from_millis(200);
+                // drain until the whole burst (values summing past 5) is in
+                while total <= 5 {
+                    match drain.next_before(deadline) {
+                        Some(BatchReq::Add { v, reply }) => {
+                            total += v;
+                            replies.push(reply);
+                        }
+                        None => break,
+                    }
+                }
+                for r in replies {
+                    let _ = r.send(Ok(total));
+                }
+                ControlFlow::Continue(())
+            },
+        )
+        .unwrap();
+        let mut waiters = Vec::new();
+        for v in [1u64, 2, 3] {
+            let (reply, rx) = mpsc::channel();
+            core.send(BatchReq::Add { v, reply }).unwrap();
+            waiters.push(rx);
+        }
+        // every request observes the fused total, not its own value
+        for rx in waiters {
+            assert_eq!(rx.recv().unwrap().unwrap(), 6);
+        }
+        assert_eq!(calls.load(std::sync::atomic::Ordering::Relaxed), 1);
     }
 }

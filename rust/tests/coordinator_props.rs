@@ -108,7 +108,13 @@ fn prop_lloyd_objective_monotone() {
             &blocks,
             m,
             dist,
-            &ClusterConfig { k, max_iters: 8, tol: 0.0, seed: rng.next_u64(), ..Default::default() },
+            &ClusterConfig {
+                k,
+                max_iters: 8,
+                tol: 0.0,
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
         )
         .unwrap();
         let slack = match dist {
@@ -178,7 +184,8 @@ fn prop_linearity_of_fitted_embeddings() {
 fn prop_pipeline_fault_determinism() {
     check("pipeline-fault-determinism", 0xFA, 4, |rng, case| {
         let n = sized(rng, case, 4, 300, 800);
-        let ds = synth::gaussian_manifold("p", n, 6, 3, 3, 0.4, 0.2, synth::Warp::Tanh, rng.next_u64());
+        let ds =
+            synth::gaussian_manifold("p", n, 6, 3, 3, 0.4, 0.2, synth::Warp::Tanh, rng.next_u64());
         let base = PipelineConfig {
             method: if rng.bernoulli(0.5) { Method::Nystrom } else { Method::StableDist },
             l: 32,

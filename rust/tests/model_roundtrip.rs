@@ -2,16 +2,20 @@
 //! contract extended to the serving path.
 //!
 //! save → load → predict must be bit-identical to the in-memory model,
-//! across methods, thread counts, chunk sizes, shard counts, and
-//! concurrent clients; a dead shard must fail requests with its recorded
-//! cause; corrupted or truncated model files must be rejected with an
-//! error.
+//! across methods, thread counts, chunk sizes, shard counts, coalescing
+//! windows, and concurrent (sync or async) clients; a hot swap under
+//! load must drop no request and produce responses bit-identical to
+//! exactly one model epoch — never a blend; a dead shard must fail
+//! requests with its recorded cause; corrupted or truncated model files
+//! must be rejected with an error.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use apnc::coordinator::driver::{Pipeline, PipelineConfig};
 use apnc::data::{registry, Dataset};
 use apnc::embedding::Method;
+use apnc::model::serve::BatchWindow;
 use apnc::model::shard::drive_clients;
 use apnc::model::ApncModel;
 use apnc::runtime::Compute;
@@ -49,7 +53,10 @@ fn roundtrip_bit_identical(method: Method, tag: &str, seed: u64) {
 
     assert_eq!(loaded.method(), method);
     assert_eq!(loaded.kernel(), model.kernel());
-    assert_eq!((loaded.d(), loaded.m(), loaded.l(), loaded.k()), (model.d(), model.m(), model.l(), model.k()));
+    assert_eq!(
+        (loaded.d(), loaded.m(), loaded.l(), loaded.k()),
+        (model.d(), model.m(), model.l(), model.k())
+    );
     assert_eq!(loaded.dist(), model.dist());
     assert_eq!(loaded.centroids(), model.centroids());
     assert_eq!(loaded.provenance(), model.provenance());
@@ -231,6 +238,152 @@ fn dead_shard_fails_with_cause_and_others_keep_serving() {
         }
     }
     assert_eq!((oks, errs), (4, 2), "exactly the dead shard's turns must fail");
+}
+
+#[test]
+fn coalesced_serving_bit_identical_for_any_window_and_shard_count() {
+    // the PR-5 batching pin: for every shard count, coalescing window,
+    // and client interleaving, batched serving == unbatched serving ==
+    // in-memory predict_batch, bit for bit (drive_clients asserts each
+    // response against the oracle)
+    let (ds, model) = fit_model(Method::Nystrom, 120);
+    let want = model.predict_batch(&ds.x, 0).unwrap();
+    let x: Arc<[f32]> = ds.x.as_slice().into();
+    for shards in [1usize, 2, 8] {
+        for (max_rows, wait_us) in [(0usize, 0u64), (4, 0), (64, 200), (100_000, 500)] {
+            let window = BatchWindow::new(max_rows, Duration::from_micros(wait_us));
+            let handle = model.clone().serve_sharded_with(shards, window).unwrap();
+            let report = drive_clients(&handle, &x, ds.d, &want, 4, 10, 16);
+            assert_eq!(report.total_rows, 4 * 10 * 16, "shards={shards} window={window:?}");
+            let stats = handle.per_shard_stats();
+            assert_eq!(
+                stats.iter().map(|s| s.rows).sum::<usize>(),
+                640,
+                "serving-side counters must cover the traffic: {stats:?}"
+            );
+            assert_eq!(stats.iter().map(|s| s.requests).sum::<usize>(), 40);
+            assert!(
+                stats.iter().all(|s| s.batches <= s.requests),
+                "a shard can never dispatch more batches than requests: {stats:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn async_tickets_survive_save_load_and_match_the_oracle() {
+    let (ds, model) = fit_model(Method::StableDist, 121);
+    let want = model.predict_batch(&ds.x, 0).unwrap();
+    let path = tmp("async");
+    model.save(&path).unwrap();
+    let handle = ApncModel::load_with(&path, Compute::reference())
+        .unwrap()
+        .serve_sharded_with(2, BatchWindow::new(128, Duration::from_micros(200)))
+        .unwrap();
+    std::fs::remove_file(&path).ok();
+    let x: Arc<[f32]> = ds.x.as_slice().into();
+    // one thread, every slice in flight at once across both shards
+    let batch = 25usize;
+    let tickets: Vec<_> = (0..ds.n / batch)
+        .map(|s| {
+            let lo = s * batch;
+            (lo, handle.predict_async(&x, lo..lo + batch, 0).unwrap())
+        })
+        .collect();
+    for (lo, t) in tickets {
+        let got = t.wait().unwrap();
+        assert_eq!(got.epoch, 0);
+        assert_eq!(&got.labels[..], &want[lo..lo + batch], "rows {lo}..");
+    }
+}
+
+#[test]
+fn hot_swap_under_load_never_blends_and_tags_every_epoch() {
+    // the PR-5 swap pin: concurrent clients drive a sharded, coalescing
+    // front-end across repeated swaps between two models whose labels
+    // differ on EVERY row; each response must be bit-identical to the
+    // in-memory predict_batch of the model its epoch names — a blended
+    // response cannot masquerade, because the oracles disagree everywhere
+    let (ds, model) = fit_model(Method::Nystrom, 122);
+    let (k, m) = (model.k(), model.m());
+    assert!(k >= 2, "need at least two centroids to rotate");
+    // successor: same coefficients, centroid rows rotated by one — the
+    // same geometry serves permuted labels, so every row's label changes
+    let mut rotated = vec![0f32; model.centroids().len()];
+    for c in 0..k {
+        let src = ((c + 1) % k) * m;
+        rotated[c * m..(c + 1) * m].copy_from_slice(&model.centroids()[src..src + m]);
+    }
+    let successor = ApncModel::from_parts(
+        model.coeffs().clone(),
+        rotated,
+        k,
+        model.provenance().clone(),
+        Compute::reference(),
+    )
+    .unwrap();
+    let want_a = model.predict_batch(&ds.x, 0).unwrap();
+    let want_b = successor.predict_batch(&ds.x, 0).unwrap();
+    assert!(
+        want_a.iter().zip(&want_b).all(|(a, b)| a != b),
+        "rotated centroids must relabel every row"
+    );
+
+    let window = BatchWindow::new(96, Duration::from_micros(200));
+    let handle = model.clone().serve_sharded_with(3, window).unwrap();
+    let x: Arc<[f32]> = ds.x.as_slice().into();
+    let rows = ds.n;
+    let batch = 33usize;
+    let (clients, rounds, in_flight) = (4usize, 40usize, 3usize);
+    let served = std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let h = handle.clone();
+            let x = x.clone();
+            let (want_a, want_b) = (&want_a, &want_b);
+            joins.push(scope.spawn(move || {
+                let mut count = 0usize;
+                for r in 0..rounds {
+                    // keep several async requests in flight while swaps
+                    // land underneath
+                    let tickets: Vec<_> = (0..in_flight)
+                        .map(|j| {
+                            let lo = (c * 17 + r * 31 + j * 7) % (rows - batch);
+                            (lo, h.predict_async(&x, lo..lo + batch, 0).unwrap())
+                        })
+                        .collect();
+                    for (lo, t) in tickets {
+                        let got = t.wait().unwrap();
+                        let want = if got.epoch % 2 == 0 { want_a } else { want_b };
+                        assert_eq!(
+                            &got.labels[..],
+                            &want[lo..lo + batch],
+                            "client {c} round {r}: epoch {} response must equal that \
+                             epoch's in-memory prediction",
+                            got.epoch
+                        );
+                        count += 1;
+                    }
+                }
+                count
+            }));
+        }
+        // swap back and forth underneath the live traffic: even epochs
+        // serve the original model, odd epochs the rotated successor
+        for swap_i in 0..4u64 {
+            std::thread::sleep(Duration::from_millis(3));
+            let next =
+                if swap_i % 2 == 0 { successor.clone() } else { model.clone() };
+            assert_eq!(handle.swap(Arc::new(next)).unwrap(), swap_i + 1);
+        }
+        joins.into_iter().map(|j| j.join().expect("client panicked")).sum::<usize>()
+    });
+    assert_eq!(handle.epoch(), 4);
+    // every submitted request was answered (hot swap drops nothing)
+    assert_eq!(served, clients * rounds * in_flight);
+    let stats = handle.per_shard_stats();
+    assert_eq!(stats.iter().map(|s| s.requests).sum::<usize>(), served);
+    assert_eq!(stats.iter().map(|s| s.rows).sum::<usize>(), served * batch);
 }
 
 #[test]

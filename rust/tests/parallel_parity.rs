@@ -178,7 +178,8 @@ fn reference_assign_tiled_merge_is_deterministic() {
     let mask = vec![1.0f32; rows];
     let run = |threads: usize| {
         parallel::set_threads(threads);
-        let out = reference::assign(&y, rows, m, &centroids, k, &mask, apnc::runtime::DistKind::L2Sq);
+        let out =
+            reference::assign(&y, rows, m, &centroids, k, &mask, apnc::runtime::DistKind::L2Sq);
         parallel::set_threads(0);
         out
     };
