@@ -9,16 +9,16 @@
 #   make bench-json  — regenerate $(BENCH_OUT) from the perf trajectory
 #                      suites (kernels, linalg, pipeline, serving);
 #                      records are JSON-lines appended by each suite
-#   make bench-json BENCH_OUT=BENCH_PR6.json  — next PR's baseline
+#   make bench-json BENCH_OUT=BENCH_PR7.json  — next PR's baseline
 #
 # CI (.github/workflows/ci.yml) runs `make verify` and a bench smoke:
-#   APNC_BENCH_SMOKE=1 make bench-json BENCH_OUT=BENCH_PR5.json
+#   APNC_BENCH_SMOKE=1 make bench-json BENCH_OUT=BENCH_PR6.json
 # (smoke mode shrinks every suite's problem sizes so the bench binaries
 # compile and execute on every PR instead of rotting).
 
 CARGO   ?= cargo
 MANIFEST = rust/Cargo.toml
-BENCH_OUT ?= BENCH_PR5.json
+BENCH_OUT ?= BENCH_PR6.json
 
 .PHONY: build test doc lint verify bench-json
 

@@ -42,7 +42,7 @@ fn main() {
     for workers in [1usize, 4, 16] {
         let engine = Engine::new(EngineConfig::with_workers(workers));
         let stats = bench.run(&format!("dispatch_1000_tasks_w{workers}"), || {
-            black_box(engine.run_map(black_box(&empty), |_, _, _| 0u64));
+            black_box(engine.run_map(black_box(&empty), |_, _, _| 0u64).unwrap());
         });
         bench.throughput(&stats, 1000, "task");
     }
@@ -51,7 +51,7 @@ fn main() {
     for workers in [1usize, 4, 16] {
         let engine = Engine::new(EngineConfig::with_workers(workers));
         let stats = bench.run(&format!("sum_64x4096_w{workers}"), || {
-            black_box(engine.run(&SumJob, black_box(&blocks)));
+            black_box(engine.run(&SumJob, black_box(&blocks)).unwrap());
         });
         bench.throughput(&stats, 64 * 4096, "element");
     }
@@ -63,6 +63,6 @@ fn main() {
     };
     let engine = Engine::new(cfg);
     bench.run("sum_64x4096_faults_p02", || {
-        black_box(engine.run(&SumJob, black_box(&blocks)));
+        black_box(engine.run(&SumJob, black_box(&blocks)).unwrap());
     });
 }

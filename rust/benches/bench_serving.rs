@@ -20,7 +20,7 @@ use std::time::Duration;
 use apnc::bench::Bench;
 use apnc::embedding::{ApncCoeffs, CoeffBlock, Method};
 use apnc::kernels::Kernel;
-use apnc::model::serve::BatchWindow;
+use apnc::model::serve::{is_overloaded, BatchWindow};
 use apnc::model::shard::drive_clients;
 use apnc::model::{ApncModel, Provenance};
 use apnc::rng::Pcg;
@@ -115,5 +115,42 @@ fn main() {
         let (reqs, batches): (usize, usize) =
             (stats.iter().map(|s| s.requests).sum(), stats.iter().map(|s| s.batches).sum());
         println!("bench serving/{name}: fused {reqs} requests into {batches} batches");
+    }
+
+    // overload behavior with vs without load shedding: one shard, every
+    // row its own request, submitted from a single thread far faster than
+    // the shard serves. Unbounded (queue-limit 0), the queue absorbs the
+    // whole storm in memory; bounded at 4096, the tail is shed with a
+    // typed `Overloaded` and the client backs off and resubmits — either
+    // way every request lands and verifies against the oracle, so the
+    // pair prices explicit back-pressure against unbounded queueing.
+    for (label, limit) in [("unbounded", 0usize), ("shed4096", 4096usize)] {
+        let handle =
+            model.clone().serve_sharded_bounded(1, BatchWindow::disabled(), limit).unwrap();
+        let name = format!("serve_overload_1shard_{rows}req_{label}");
+        let mut sheds = 0usize;
+        let st = b.run(&name, || {
+            let mut tickets = Vec::with_capacity(rows);
+            for lo in 0..rows {
+                let mut pause = Duration::from_micros(50);
+                loop {
+                    match handle.predict_async(&shared, lo..lo + 1, 0) {
+                        Ok(t) => break tickets.push((lo, t)),
+                        Err(e) if is_overloaded(&e) => {
+                            sheds += 1;
+                            std::thread::sleep(pause);
+                            pause = (pause * 2).min(Duration::from_millis(50));
+                        }
+                        Err(e) => panic!("storm submission failed: {e:#}"),
+                    }
+                }
+            }
+            for (lo, t) in tickets {
+                let got = t.wait().unwrap();
+                assert_eq!(&got.labels[..], &oracle[lo..lo + 1], "storm row {lo}");
+            }
+        });
+        b.throughput(&st, rows, "row");
+        println!("bench serving/{name}: {sheds} submissions shed and retried after backoff");
     }
 }

@@ -82,6 +82,15 @@ impl Args {
         }
     }
 
+    /// A probability flag: a number validated into [0, 1].
+    pub fn prob_or(&self, name: &str, default: f64) -> Result<f64> {
+        let p = self.f64_or(name, default)?;
+        if !(0.0..=1.0).contains(&p) {
+            bail!("--{name} expects a probability in [0, 1], got {p}");
+        }
+        Ok(p)
+    }
+
     /// Comma-separated usize list.
     pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
         match self.get(name) {
@@ -136,6 +145,14 @@ mod tests {
     fn bad_values_error() {
         let a = parse(&["x", "--runs", "abc"]);
         assert!(a.usize_or("runs", 1).is_err());
+    }
+
+    #[test]
+    fn probabilities_validated() {
+        let a = parse(&["chaos", "--map-prob", "0.3", "--kill-prob", "1.5"]);
+        assert_eq!(a.prob_or("map-prob", 0.0).unwrap(), 0.3);
+        assert_eq!(a.prob_or("reduce-prob", 0.25).unwrap(), 0.25);
+        assert!(a.prob_or("kill-prob", 0.0).is_err());
     }
 
     #[test]

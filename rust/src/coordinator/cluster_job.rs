@@ -312,7 +312,7 @@ fn lloyd_once(
         // broadcast Ȳ to every mapper (Algorithm 2 line 4)
         engine.broadcast_cost(&mut metrics, centroids.len() * 4);
         let job = IterJob { compute, centroids: &centroids, k, m, dist };
-        let run = engine.run(&job, blocks);
+        let run = engine.run(&job, blocks)?;
         metrics.merge(&run.metrics);
         let (z, g, obj) = run.outputs.into_iter().next().expect("one reduce group");
         obj_curve.push(obj);
@@ -359,7 +359,7 @@ pub fn assign_labels(
     // shape/ABI mismatch surfaces as an Err, not a worker panic
     let label_run = engine.run_map(blocks, |_id, block: &DataBlock, _ctx| {
         compute.assign(&block.x, block.rows, m, centroids, k, dist).map(|out| out.assign)
-    });
+    })?;
     metrics.merge(&label_run.metrics);
     let mut labels = Vec::with_capacity(blocks.iter().map(|b| b.rows).sum());
     for block_labels in label_run.outputs {

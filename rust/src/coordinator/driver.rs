@@ -325,7 +325,7 @@ impl Pipeline {
         // ---- Algorithms 3/4 map: sample L --------------------------------
         let t0 = Instant::now();
         let sample_out =
-            sample::run(&self.engine, &blocks, ds.d, ds.n, cfg.l, cfg.sample_mode);
+            sample::run(&self.engine, &blocks, ds.d, ds.n, cfg.l, cfg.sample_mode)?;
         let sample_time = t0.elapsed();
         ensure!(
             sample_out.indices.len() >= 2,

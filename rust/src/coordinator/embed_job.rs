@@ -44,7 +44,7 @@ pub fn run(
             compute
                 .embed(&data.x, data.rows, d, &blk.samples, blk.l, &blk.r_t, blk.m, coeffs.kernel)
                 .expect("embed artifact execution failed")
-        });
+        })?;
         metrics.merge(&run.metrics);
         portions.push(run.outputs);
     }
@@ -64,7 +64,7 @@ pub fn run(
             col += blk.m;
         }
         DataBlock { start: data.start, rows, x: y }
-    });
+    })?;
     metrics.merge(&concat.metrics);
 
     Ok(EmbedOut { blocks: concat.outputs, m: m_total, metrics })

@@ -7,7 +7,7 @@
 //! which is the point: only the sample crosses the network).
 
 use super::DataBlock;
-use crate::mapreduce::{Emitter, Engine, Job, JobMetrics, TaskCtx};
+use crate::mapreduce::{Emitter, Engine, Job, JobError, JobMetrics, TaskCtx};
 
 /// How to draw the sample.
 #[derive(Clone, Copy, Debug)]
@@ -105,9 +105,9 @@ pub fn run(
     n_total: usize,
     l_target: usize,
     mode: SampleMode,
-) -> SampleOut {
+) -> Result<SampleOut, JobError> {
     let job = SampleJob { d, n_total, l_target: l_target.max(1), mode };
-    let run = engine.run(&job, blocks);
+    let run = engine.run(&job, blocks)?;
     let mut samples = Vec::new();
     let mut indices = Vec::new();
     for group in run.outputs {
@@ -116,7 +116,7 @@ pub fn run(
             samples.extend(pt);
         }
     }
-    SampleOut { samples, indices, metrics: run.metrics }
+    Ok(SampleOut { samples, indices, metrics: run.metrics })
 }
 
 #[cfg(test)]
@@ -135,7 +135,7 @@ mod tests {
     fn bernoulli_sample_near_target() {
         let engine = Engine::new(EngineConfig::with_workers(4));
         let bs = blocks(5000, 3, 512, 1);
-        let out = run(&engine, &bs, 3, 5000, 200, SampleMode::Bernoulli);
+        let out = run(&engine, &bs, 3, 5000, 200, SampleMode::Bernoulli).unwrap();
         let l = out.indices.len();
         assert!((120..=280).contains(&l), "expected ~200 samples, got {l}");
         assert_eq!(out.samples.len(), l * 3);
@@ -148,7 +148,7 @@ mod tests {
     fn exact_sample_hits_target() {
         let engine = Engine::new(EngineConfig::with_workers(3));
         let bs = blocks(2000, 4, 256, 2);
-        let out = run(&engine, &bs, 4, 2000, 150, SampleMode::Exact);
+        let out = run(&engine, &bs, 4, 2000, 150, SampleMode::Exact).unwrap();
         assert_eq!(out.indices.len(), 150);
         assert_eq!(out.samples.len(), 150 * 4);
     }
@@ -163,7 +163,8 @@ mod tests {
             3000,
             100,
             SampleMode::Bernoulli,
-        );
+        )
+        .unwrap();
         let b = run(
             &Engine::new(EngineConfig::with_workers(8)),
             &bs,
@@ -171,7 +172,8 @@ mod tests {
             3000,
             100,
             SampleMode::Bernoulli,
-        );
+        )
+        .unwrap();
         assert_eq!(a.indices, b.indices);
         assert_eq!(a.samples, b.samples);
     }
@@ -180,8 +182,8 @@ mod tests {
     fn shuffle_cost_proportional_to_sample() {
         let engine = Engine::new(EngineConfig::with_workers(2));
         let bs = blocks(4000, 8, 512, 4);
-        let small = run(&engine, &bs, 8, 4000, 50, SampleMode::Bernoulli);
-        let large = run(&engine, &bs, 8, 4000, 500, SampleMode::Bernoulli);
+        let small = run(&engine, &bs, 8, 4000, 50, SampleMode::Bernoulli).unwrap();
+        let large = run(&engine, &bs, 8, 4000, 500, SampleMode::Bernoulli).unwrap();
         assert!(large.metrics.shuffle_bytes > 5 * small.metrics.shuffle_bytes);
         // shuffle carries ~l points of d f32s (plus indices/keys)
         let expected = large.indices.len() * (8 * 4 + 8 + 8 + 4);
@@ -196,7 +198,7 @@ mod tests {
     fn sample_points_come_from_dataset() {
         let engine = Engine::new(EngineConfig::with_workers(2));
         let bs = blocks(500, 2, 100, 5);
-        let out = run(&engine, &bs, 2, 500, 40, SampleMode::Exact);
+        let out = run(&engine, &bs, 2, 500, 40, SampleMode::Exact).unwrap();
         for (j, &idx) in out.indices.iter().enumerate() {
             let blk = &bs[idx as usize / 100];
             let r = idx as usize - blk.start;

@@ -69,7 +69,7 @@ pub fn run(cfg: &AblateConfig, compute: &Compute) -> Result<Vec<Row>> {
             let blocks = crate::coordinator::DataBlock::partition(&ds.x, ds.n, ds.d, 1024);
             let sample = crate::coordinator::sample::run(
                 &p.engine, &blocks, ds.d, ds.n, 192, SampleMode::Exact,
-            );
+            )?;
             let mut rng = crate::rng::Pcg::seeded(cfg.seed);
             let kernel = registry::spec("covtype").unwrap().kernel.build(&ds.x, ds.d, &mut rng);
             let fit = crate::coordinator::coeffs::fit(

@@ -67,7 +67,17 @@
 //! queued requests into one embed pass and demuxes the replies), an
 //! async non-blocking client API ([`model::serve::PredictTicket`]), and
 //! hot model swap ([`model::shard::ShardedHandle::swap`] — epoch-tagged
-//! republication behind live traffic, no request dropped).
+//! republication behind live traffic, no request dropped). Serving tier
+//! v3 makes the tier self-healing: dead shards are detected via their
+//! recorded epitaphs and respawned from the published model slot,
+//! in-flight requests transparently fail over exactly once, bounded
+//! queues shed overload with a typed [`model::serve::Overloaded`], and
+//! deadlines ([`model::shard::ShardedTicket::wait_timeout`]) expire
+//! without losing the request. The MapReduce engine mirrors this on the
+//! fit side: a seeded [`mapreduce::ChaosPlan`] injects deterministic
+//! map/reduce failures and stragglers (outputs stay bit-identical to a
+//! clean run), and retry exhaustion surfaces as a typed
+//! [`mapreduce::JobError`] — see `repro chaos` and `rust/tests/chaos.rs`.
 //!
 //! See `examples/` for runnable end-to-end drivers (including
 //! `serve_stream`, a many-client sharded serving demo) and `repro --help`

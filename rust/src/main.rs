@@ -8,6 +8,9 @@
 //!   fit    [flags]              fit a model and save it (train/serve split)
 //!   predict [flags]             load a saved model, label a dataset
 //!   serve  [flags]              load a saved model, drive concurrent clients
+//!   chaos  [flags]              end-to-end fault drill: chaotic engine run
+//!                               must be bit-identical to a clean one, then
+//!                               shards are killed under live verified traffic
 //!   backend                     report which compute backend is active
 //!
 //! Common flags: --runs N --scale S --seed S --only DATASET
@@ -26,8 +29,20 @@
 //!                              requests up to N pending rows; 0 = off)
 //!              --batch-wait-us U (hold a coalescing window open up to
 //!                              U microseconds for stragglers)
+//!              --queue-limit N (per-shard backlog bound: shed excess
+//!                              submissions with Overloaded; 0 = unbounded)
+//!              --deadline-ms T (per-request client deadline; expired
+//!                              waits are counted, the requests still land)
+//! `chaos` flags: --dataset NAME --n N --seed S
+//!              --map-prob P --reduce-prob P (per-attempt task failures)
+//!              --straggler-prob P --straggler-ms T (injected latency)
+//!              --max-attempts N (task retry budget before the job aborts)
+//!              --kill-prob P (per-round serving-shard kill probability)
+//!              --shards N --clients N --requests N --request-rows N
+//!              --queue-limit N --deadline-ms T (as for `serve`)
 
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -38,8 +53,9 @@ use apnc::coordinator::sample::SampleMode;
 use apnc::data::registry;
 use apnc::embedding::Method;
 use apnc::experiments::{ablate, table1, table2, table3};
+use apnc::mapreduce::ChaosPlan;
 use apnc::model::serve::BatchWindow;
-use apnc::model::shard::drive_clients;
+use apnc::model::shard::{drive_clients_opts, DriveOpts};
 use apnc::model::ApncModel;
 use apnc::runtime::Compute;
 
@@ -266,15 +282,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let batch_rows = args.usize_or("batch-rows", 0)?;
     let batch_wait_us = args.u64_or("batch-wait-us", 200)?;
     let window = BatchWindow::new(batch_rows, Duration::from_micros(batch_wait_us));
+    let queue_limit = args.usize_or("queue-limit", 0)?;
+    let deadline_ms = args.u64_or("deadline-ms", 0)?;
     let ds = load_dataset(args)?;
     let model = load_model_checked(args, &ds)?;
     // oracle for the determinism check: direct in-memory prediction
     let want = model.predict_batch(&ds.x, 0)?;
-    let handle = model.serve_sharded_with(shards, window)?;
+    let handle = model.serve_sharded_bounded(shards, window, queue_limit)?;
     // the batch is Arc-shared: every request carries a range, not a copy
     let x: Arc<[f32]> = ds.x.as_slice().into();
     let t0 = Instant::now();
-    let report = drive_clients(&handle, &x, ds.d, &want, clients, requests, request_rows);
+    let report = drive_clients_opts(
+        &handle,
+        &x,
+        ds.d,
+        &want,
+        DriveOpts {
+            clients,
+            requests,
+            batch_rows: request_rows,
+            deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+            ..Default::default()
+        },
+    );
     let secs = t0.elapsed().as_secs_f64();
     println!(
         "served {} requests from {} clients over {} shard(s): {} rows in {:.2}s ({:.0} rows/s)",
@@ -289,6 +319,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!(
             "coalescing: window = {} rows / {} us held open per batch",
             window.max_rows, batch_wait_us
+        );
+    }
+    if queue_limit > 0 || deadline_ms > 0 {
+        println!(
+            "back-pressure: queue limit {} -> {} overload retries; deadline {} ms -> {} expiries",
+            queue_limit, report.overload_retries, deadline_ms, report.deadline_expiries
         );
     }
     for (i, stats) in handle.per_shard_stats().iter().enumerate() {
@@ -307,6 +343,138 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// End-to-end fault drill. Phase 1 (engine): fit the same model twice —
+/// once clean, once under the seeded [`ChaosPlan`] (task failures in both
+/// phases, stragglers) — and require bit-identical predictions. Phase 2
+/// (serving): stand up a sharded, optionally queue-bounded front-end and
+/// drive verified client traffic while a chaos thread kills shards per
+/// the plan; the self-healing supervisor must respawn them with zero
+/// requests lost, duplicated, or wrong ([`drive_clients_opts`] panics on
+/// any of those).
+fn cmd_chaos(args: &Args) -> Result<()> {
+    let seed = args.u64_or("seed", 42)?;
+    let chaos = ChaosPlan {
+        map_failure_prob: args.prob_or("map-prob", 0.3)?,
+        reduce_failure_prob: args.prob_or("reduce-prob", 0.3)?,
+        straggler_prob: args.prob_or("straggler-prob", 0.05)?,
+        straggler_delay: Duration::from_millis(args.u64_or("straggler-ms", 1)?),
+        shard_kill_prob: args.prob_or("kill-prob", 0.5)?,
+        max_attempts: args.usize_or("max-attempts", 24)?,
+        seed,
+    };
+    let shards = args.usize_or("shards", 4)?.max(1);
+    let clients = args.usize_or("clients", 4)?.max(1);
+    let requests = args.usize_or("requests", 64)?.max(1);
+    let request_rows = args.usize_or("request-rows", 128)?.max(1);
+    let queue_limit = args.usize_or("queue-limit", 0)?;
+    let deadline_ms = args.u64_or("deadline-ms", 0)?;
+    let ds = match args.get("input") {
+        Some(path) => apnc::data::io::load(Path::new(path))?,
+        None => registry::generate(
+            args.get_or("dataset", "rings"),
+            args.usize_or("n", 2_000)?,
+            args.u64_or("data-seed", 7)?,
+        ),
+    };
+    let cfg = PipelineConfig::builder()
+        .method(parse_method(args)?)
+        .l(args.usize_or("l", 64)?)
+        .m(args.usize_or("m", 32)?)
+        .k(args.usize_or("k", 0)?)
+        .max_iters(args.usize_or("iters", 6)?)
+        .workers(args.usize_or("workers", 4)?)
+        .threads(args.usize_or("threads", 0)?)
+        .block_rows(args.usize_or("block-rows", 256)?)
+        .seed(seed)
+        .build()?;
+    let mut chaotic_cfg = cfg.clone();
+    chaotic_cfg.faults = chaos.clone();
+
+    // phase 1: the engine under chaos must reproduce the clean fit
+    eprintln!(
+        "chaos: engine phase — map p={} reduce p={} stragglers p={} (seed {seed})",
+        chaos.map_failure_prob, chaos.reduce_failure_prob, chaos.straggler_prob
+    );
+    let (clean_model, _) = Pipeline::with_compute(cfg, compute_backend(args)).fit(&ds)?;
+    let (chaotic_model, rep) = Pipeline::with_compute(chaotic_cfg, compute_backend(args)).fit(&ds)?;
+    let want = clean_model.predict_batch(&ds.x, 0)?;
+    ensure!(
+        chaotic_model.predict_batch(&ds.x, 0)? == want,
+        "chaos changed the fitted model's predictions — determinism contract broken"
+    );
+    let (em, cm) = (&rep.embed_metrics, &rep.cluster_metrics);
+    println!(
+        "engine: bit-identical under chaos ({} map retries, {} reduce retries, {} stragglers)",
+        em.map_retries + cm.map_retries,
+        em.reduce_retries + cm.reduce_retries,
+        em.stragglers + cm.stragglers
+    );
+
+    // phase 2: kill serving shards under live verified traffic
+    eprintln!(
+        "chaos: serving phase — {shards} shard(s), {clients} client(s) x {requests} requests, \
+         kill p={}, queue limit {queue_limit}, deadline {deadline_ms} ms",
+        chaos.shard_kill_prob
+    );
+    let handle = clean_model.serve_sharded_bounded(shards, BatchWindow::disabled(), queue_limit)?;
+    let x: Arc<[f32]> = ds.x.as_slice().into();
+    let stop = AtomicBool::new(false);
+    let t0 = Instant::now();
+    let (report, kills) = std::thread::scope(|scope| {
+        let killer = {
+            let handle = handle.clone();
+            let chaos = &chaos;
+            let stop = &stop;
+            scope.spawn(move || {
+                let mut round = 0usize;
+                let mut kills = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    if chaos.kills_shard(round) {
+                        handle.shard(round % shards).inject_crash("chaos shard kill");
+                        kills += 1;
+                    }
+                    round += 1;
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                kills
+            })
+        };
+        let report = drive_clients_opts(
+            &handle,
+            &x,
+            ds.d,
+            &want,
+            DriveOpts {
+                clients,
+                requests,
+                batch_rows: request_rows,
+                deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+                ..Default::default()
+            },
+        );
+        stop.store(true, Ordering::Relaxed);
+        (report, killer.join().expect("chaos killer thread panicked"))
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "serving: {} rows verified in {:.2}s across {} shard(s) — {} kill(s), {} respawn(s), \
+         {} overload retries, {} deadline expiries, zero requests lost",
+        report.total_rows,
+        secs,
+        shards,
+        kills,
+        handle.respawns(),
+        report.overload_retries,
+        report.deadline_expiries
+    );
+    for f in handle.failures() {
+        println!("  recorded death: {f}");
+    }
+    println!("per-shard rows: {:?}", report.per_shard_rows);
+    println!("every response was bit-identical to in-memory prediction");
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_str() {
@@ -317,6 +485,7 @@ fn main() -> Result<()> {
         "fit" => cmd_fit(&args)?,
         "predict" => cmd_predict(&args)?,
         "serve" => cmd_serve(&args)?,
+        "chaos" => cmd_chaos(&args)?,
         "gen" => {
             // freeze a mirrored dataset to disk for repeatable sweeps
             let name = args.get_or("dataset", "rings").to_string();
@@ -341,11 +510,14 @@ fn main() -> Result<()> {
         }
         "" | "help" => {
             println!("repro — Embed and Conquer (kernel k-means on MapReduce) reproduction");
-            println!("usage: repro <table1|table2|table3|run|fit|predict|serve|backend> [flags]");
+            println!(
+                "usage: repro <table1|table2|table3|run|fit|predict|serve|chaos|backend> [flags]"
+            );
             println!("see the module docs in rust/src/main.rs and README.md");
         }
         other => bail!(
-            "unknown subcommand '{other}' (try: table1 table2 table3 run fit predict serve ablate backend)"
+            "unknown subcommand '{other}' \
+             (try: table1 table2 table3 run fit predict serve chaos ablate backend)"
         ),
     }
     Ok(())

@@ -1,6 +1,13 @@
 //! The MapReduce executor: block partitioning over worker threads,
-//! map-side combining, a byte-accounted shuffle, parallel reduce, fault
-//! injection with task re-execution, and a distributed-cache broadcast.
+//! map-side combining, a byte-accounted shuffle, parallel reduce, chaos
+//! injection (task failures in both phases, stragglers) with task
+//! re-execution, and a distributed-cache broadcast.
+//!
+//! Failure semantics: each attempt's fate is drawn from the seeded
+//! [`ChaosPlan`] *before* the work runs — a node dying (or limping) when
+//! the task is scheduled onto it. A task that exhausts its attempt budget
+//! aborts the job with a typed [`JobError`] naming the phase, task, and
+//! attempt count; no worker thread ever panics on injected chaos.
 //!
 //! Nested-parallelism guard: whenever a phase runs on more than one
 //! engine worker thread, each task executes under
@@ -13,11 +20,11 @@
 //! `ARCHITECTURE.md` at the repo root.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use super::fault::FaultPlan;
+use super::fault::{ChaosPlan, Phase};
 use super::job::{Emitter, Job, Payload, TaskCtx};
 use super::metrics::JobMetrics;
 
@@ -30,12 +37,12 @@ pub struct EngineConfig {
     pub reducers: usize,
     /// job-level RNG seed (feeds per-task splits)
     pub seed: u64,
-    pub faults: FaultPlan,
+    pub faults: ChaosPlan,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { workers: 4, reducers: 0, seed: 0x5EED, faults: FaultPlan::none() }
+        EngineConfig { workers: 4, reducers: 0, seed: 0x5EED, faults: ChaosPlan::none() }
     }
 }
 
@@ -50,6 +57,54 @@ pub struct JobRun<O> {
     /// reduce outputs, sorted by key (deterministic)
     pub outputs: Vec<O>,
     pub metrics: JobMetrics,
+}
+
+/// A job aborted: some task exhausted its attempt budget under the
+/// configured [`ChaosPlan`]. Names the phase, the task, and how many
+/// attempts were burned, so the cause is never an opaque worker panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JobError {
+    pub phase: Phase,
+    pub task_id: usize,
+    pub attempts: usize,
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} task {} exceeded {} attempts (injected chaos)",
+            self.phase, self.task_id, self.attempts
+        )
+    }
+}
+
+impl std::error::Error for JobError {}
+
+/// First-failure-wins abort latch shared by a job's worker threads.
+struct Abort {
+    failed: AtomicBool,
+    first: Mutex<Option<JobError>>,
+}
+
+impl Abort {
+    fn new() -> Self {
+        Abort { failed: AtomicBool::new(false), first: Mutex::new(None) }
+    }
+
+    fn tripped(&self) -> bool {
+        self.failed.load(Ordering::Relaxed)
+    }
+
+    fn trip(&self, err: JobError) {
+        let mut slot = self.first.lock().unwrap();
+        slot.get_or_insert(err);
+        self.failed.store(true, Ordering::Relaxed);
+    }
+
+    fn into_err(self) -> Option<JobError> {
+        self.first.into_inner().unwrap()
+    }
 }
 
 /// The engine. Cheap to construct; `run` executes one job synchronously.
@@ -79,15 +134,19 @@ impl Engine {
         &self,
         blocks: &[I],
         f: impl Fn(usize, &I, &mut TaskCtx) -> O + Send + Sync,
-    ) -> JobRun<O> {
+    ) -> Result<JobRun<O>, JobError> {
         let workers = self.config.workers;
         let n_tasks = blocks.len();
         // more than one live worker => tasks must not fan out on the
         // compute pool on top of the engine's own parallelism
         let guard_nested = workers.min(n_tasks.max(1)) > 1;
+        let chaos = &self.config.faults;
+        let max_attempts = chaos.max_attempts.max(1);
         let mut metrics = JobMetrics::default();
         metrics.map_tasks = n_tasks;
         let next_task = AtomicUsize::new(0);
+        let abort = Abort::new();
+        let straggled = AtomicUsize::new(0);
         let results: Mutex<Vec<(usize, O, Duration, usize, Vec<(&'static str, u64)>)>> =
             Mutex::new(Vec::with_capacity(n_tasks));
         let map_start = Instant::now();
@@ -97,20 +156,25 @@ impl Engine {
                 scope.spawn(|| {
                     let mut local_busy = Duration::ZERO;
                     loop {
+                        if abort.tripped() {
+                            break;
+                        }
                         let t = next_task.fetch_add(1, Ordering::Relaxed);
                         if t >= n_tasks {
                             break;
                         }
                         let t0 = Instant::now();
                         let mut attempts = 0;
-                        loop {
+                        let mut done = false;
+                        while attempts < max_attempts {
                             attempts += 1;
-                            assert!(
-                                attempts <= self.config.faults.max_attempts,
-                                "map task {t} exceeded {} attempts",
-                                self.config.faults.max_attempts
-                            );
-                            if self.config.faults.fails(t, attempts - 1) {
+                            // fate drawn *before* the work, like a node
+                            // dying when the task is scheduled onto it
+                            if let Some(d) = chaos.straggles(Phase::Map, t, attempts - 1) {
+                                straggled.fetch_add(1, Ordering::Relaxed);
+                                std::thread::sleep(d);
+                            }
+                            if chaos.fails_map(t, attempts - 1) {
                                 continue;
                             }
                             let mut ctx = TaskCtx::new(self.config.seed, t);
@@ -122,6 +186,15 @@ impl Engine {
                             let elapsed = t0.elapsed();
                             local_busy += elapsed;
                             results.lock().unwrap().push((t, out, elapsed, attempts, ctx.counters));
+                            done = true;
+                            break;
+                        }
+                        if !done {
+                            abort.trip(JobError {
+                                phase: Phase::Map,
+                                task_id: t,
+                                attempts: max_attempts,
+                            });
                             break;
                         }
                     }
@@ -129,8 +202,12 @@ impl Engine {
                 });
             }
         });
+        if let Some(err) = abort.into_err() {
+            return Err(err);
+        }
         metrics.map_time = map_start.elapsed();
         metrics.map_cpu_time = *cpu_time.lock().unwrap();
+        metrics.stragglers = straggled.load(Ordering::Relaxed);
         let mut outs = results.into_inner().unwrap();
         outs.sort_by_key(|(t, ..)| *t);
         let mut ordered = Vec::with_capacity(n_tasks);
@@ -142,18 +219,22 @@ impl Engine {
             }
             ordered.push(out);
         }
-        JobRun { outputs: ordered, metrics }
+        Ok(JobRun { outputs: ordered, metrics })
     }
 
     /// Execute `job` over `blocks`. Outputs are sorted by reduce key, so
     /// results are identical for any worker count (given order-insensitive
     /// or sorted-input reducers — the engine sorts values by origin).
-    pub fn run<J: Job>(&self, job: &J, blocks: &[J::Input]) -> JobRun<J::Output> {
+    pub fn run<J: Job>(&self, job: &J, blocks: &[J::Input]) -> Result<JobRun<J::Output>, JobError> {
         let workers = self.config.workers;
         let n_tasks = blocks.len();
         let guard_nested = workers.min(n_tasks.max(1)) > 1;
+        let chaos = &self.config.faults;
+        let max_attempts = chaos.max_attempts.max(1);
         let mut metrics = JobMetrics::default();
         metrics.map_tasks = n_tasks;
+        let abort = Abort::new();
+        let straggled = AtomicUsize::new(0);
 
         // ---- map phase -----------------------------------------------------
         let next_task = AtomicUsize::new(0);
@@ -173,22 +254,25 @@ impl Engine {
                 scope.spawn(|| {
                     let mut local_busy = Duration::ZERO;
                     loop {
+                        if abort.tripped() {
+                            break;
+                        }
                         let t = next_task.fetch_add(1, Ordering::Relaxed);
                         if t >= n_tasks {
                             break;
                         }
                         let t0 = Instant::now();
                         let mut attempts = 0;
-                        let out = loop {
+                        let mut produced = None;
+                        while attempts < max_attempts {
                             attempts += 1;
-                            assert!(
-                                attempts <= self.config.faults.max_attempts,
-                                "map task {t} exceeded {} attempts",
-                                self.config.faults.max_attempts
-                            );
-                            // failure drawn *before* the work, like a node
+                            // fate drawn *before* the work, like a node
                             // dying when the task is scheduled onto it
-                            if self.config.faults.fails(t, attempts - 1) {
+                            if let Some(d) = chaos.straggles(Phase::Map, t, attempts - 1) {
+                                straggled.fetch_add(1, Ordering::Relaxed);
+                                std::thread::sleep(d);
+                            }
+                            if chaos.fails_map(t, attempts - 1) {
                                 continue;
                             }
                             let mut ctx = TaskCtx::new(self.config.seed, t);
@@ -213,22 +297,38 @@ impl Engine {
                                     pairs.push((k.clone(), v));
                                 }
                             }
-                            break MapOut {
+                            produced = Some(MapOut {
                                 task_id: t,
                                 pairs,
                                 bytes,
                                 counters: ctx.counters,
                                 attempts,
                                 task_time: t0.elapsed(),
-                            };
-                        };
-                        local_busy += out.task_time;
-                        results.lock().unwrap().push(out);
+                            });
+                            break;
+                        }
+                        match produced {
+                            Some(out) => {
+                                local_busy += out.task_time;
+                                results.lock().unwrap().push(out);
+                            }
+                            None => {
+                                abort.trip(JobError {
+                                    phase: Phase::Map,
+                                    task_id: t,
+                                    attempts: max_attempts,
+                                });
+                                break;
+                            }
+                        }
                     }
                     *cpu_time.lock().unwrap() += local_busy;
                 });
             }
         });
+        if abort.tripped() {
+            return Err(abort.into_err().expect("tripped abort carries its error"));
+        }
         metrics.map_time = map_start.elapsed();
         metrics.map_cpu_time = *cpu_time.lock().unwrap();
 
@@ -255,37 +355,71 @@ impl Engine {
         let reducers = if self.config.reducers == 0 { workers } else { self.config.reducers };
         metrics.reduce_tasks = grouped.len().min(reducers.max(1));
         // each group is taken (moved) by exactly one reducer — no deep copy
-        // of the shuffled value vectors
+        // of the shuffled value vectors. Safe under retries because the
+        // attempt's fate is drawn *before* the take: a failed attempt never
+        // consumed its group.
         let work: Vec<Mutex<Option<(J::Key, Vec<J::Value>)>>> =
             grouped.into_iter().map(|kv| Mutex::new(Some(kv))).collect();
         let n_red = work.len();
         let next_red = AtomicUsize::new(0);
+        let red_retries = AtomicUsize::new(0);
         let red_out: Mutex<Vec<(usize, J::Output)>> = Mutex::new(Vec::with_capacity(n_red));
         let work_ref = &work;
         let guard_reduce = reducers.min(n_red.max(1)) > 1;
         std::thread::scope(|scope| {
             for _ in 0..reducers.min(n_red.max(1)) {
                 scope.spawn(|| loop {
+                    if abort.tripped() {
+                        break;
+                    }
                     let i = next_red.fetch_add(1, Ordering::Relaxed);
                     if i >= n_red {
                         break;
                     }
-                    let (k, vs) =
-                        work_ref[i].lock().unwrap().take().expect("reduce group taken once");
-                    let mut ctx = TaskCtx::new(self.config.seed ^ 0xF00D, i);
-                    let out = if guard_reduce {
-                        crate::parallel::sequential_scope(|| job.reduce(k, vs, &mut ctx))
-                    } else {
-                        job.reduce(k, vs, &mut ctx)
-                    };
-                    red_out.lock().unwrap().push((i, out));
+                    let mut attempts = 0;
+                    let mut done = false;
+                    while attempts < max_attempts {
+                        attempts += 1;
+                        if let Some(d) = chaos.straggles(Phase::Reduce, i, attempts - 1) {
+                            straggled.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(d);
+                        }
+                        if chaos.fails_reduce(i, attempts - 1) {
+                            continue;
+                        }
+                        let (k, vs) =
+                            work_ref[i].lock().unwrap().take().expect("reduce group taken once");
+                        let mut ctx = TaskCtx::new(self.config.seed ^ 0xF00D, i);
+                        let out = if guard_reduce {
+                            crate::parallel::sequential_scope(|| job.reduce(k, vs, &mut ctx))
+                        } else {
+                            job.reduce(k, vs, &mut ctx)
+                        };
+                        red_out.lock().unwrap().push((i, out));
+                        red_retries.fetch_add(attempts - 1, Ordering::Relaxed);
+                        done = true;
+                        break;
+                    }
+                    if !done {
+                        abort.trip(JobError {
+                            phase: Phase::Reduce,
+                            task_id: i,
+                            attempts: max_attempts,
+                        });
+                        break;
+                    }
                 });
             }
         });
+        if let Some(err) = abort.into_err() {
+            return Err(err);
+        }
         let mut outs = red_out.into_inner().unwrap();
         outs.sort_by_key(|(i, _)| *i);
+        metrics.reduce_retries = red_retries.load(Ordering::Relaxed);
+        metrics.stragglers = straggled.load(Ordering::Relaxed);
         metrics.reduce_time = reduce_start.elapsed();
-        JobRun { outputs: outs.into_iter().map(|(_, o)| o).collect(), metrics }
+        Ok(JobRun { outputs: outs.into_iter().map(|(_, o)| o).collect(), metrics })
     }
 }
 
@@ -324,10 +458,16 @@ mod tests {
         vec![vec![1, 2, 2, 3], vec![3, 3, 4], vec![1, 4, 4, 4], vec![]]
     }
 
+    /// 8 blocks × 8 distinct words = 64 reduce groups, so probabilistic
+    /// chaos assertions below are effectively certain for any seed.
+    fn wide_blocks() -> Vec<Vec<u32>> {
+        (0..8).map(|b| (0..8).map(|i| (b * 8 + i) as u32).collect()).collect()
+    }
+
     #[test]
     fn wordcount_correct() {
         let engine = Engine::new(EngineConfig::with_workers(3));
-        let run = engine.run(&WordCount, &blocks());
+        let run = engine.run(&WordCount, &blocks()).unwrap();
         assert_eq!(run.outputs, vec![(1, 2), (2, 2), (3, 3), (4, 4)]);
         assert_eq!(run.metrics.map_tasks, 4);
         assert_eq!(run.metrics.counter("points"), 11);
@@ -335,9 +475,10 @@ mod tests {
 
     #[test]
     fn output_independent_of_worker_count() {
-        let base = Engine::new(EngineConfig::with_workers(1)).run(&WordCount, &blocks());
+        let base = Engine::new(EngineConfig::with_workers(1)).run(&WordCount, &blocks()).unwrap();
         for w in [2, 3, 8, 32] {
-            let run = Engine::new(EngineConfig::with_workers(w)).run(&WordCount, &blocks());
+            let run =
+                Engine::new(EngineConfig::with_workers(w)).run(&WordCount, &blocks()).unwrap();
             assert_eq!(run.outputs, base.outputs, "workers={w}");
             assert_eq!(run.metrics.shuffle_bytes, base.metrics.shuffle_bytes);
         }
@@ -367,8 +508,8 @@ mod tests {
             }
         }
         let engine = Engine::new(EngineConfig::with_workers(2));
-        let with = engine.run(&WordCount, &blocks());
-        let without = engine.run(&NoCombine, &blocks());
+        let with = engine.run(&WordCount, &blocks()).unwrap();
+        let without = engine.run(&NoCombine, &blocks()).unwrap();
         assert_eq!(with.outputs, without.outputs);
         assert!(with.metrics.shuffle_bytes < without.metrics.shuffle_bytes);
         assert!(with.metrics.shuffle_pairs < without.metrics.shuffle_pairs);
@@ -376,26 +517,92 @@ mod tests {
 
     #[test]
     fn outputs_identical_under_faults() {
-        let clean = Engine::new(EngineConfig::with_workers(4)).run(&WordCount, &blocks());
+        let clean = Engine::new(EngineConfig::with_workers(4)).run(&WordCount, &blocks()).unwrap();
         let cfg = EngineConfig {
             workers: 4,
-            faults: FaultPlan::with_map_failures(0.4, 123),
+            faults: ChaosPlan::with_map_failures(0.4, 123),
             ..Default::default()
         };
-        let faulty = Engine::new(cfg).run(&WordCount, &blocks());
+        let faulty = Engine::new(cfg).run(&WordCount, &blocks()).unwrap();
         assert_eq!(faulty.outputs, clean.outputs);
         assert!(faulty.metrics.map_retries > 0, "p=0.4 over 4 tasks should retry");
     }
 
     #[test]
-    #[should_panic] // the assert fires on a worker thread; scope re-panics
-    fn certain_failure_aborts() {
+    fn outputs_identical_under_reduce_faults() {
+        let clean =
+            Engine::new(EngineConfig::with_workers(4)).run(&WordCount, &wide_blocks()).unwrap();
         let cfg = EngineConfig {
-            workers: 1,
-            faults: FaultPlan { map_failure_prob: 1.0, max_attempts: 3, seed: 0 },
+            workers: 4,
+            faults: ChaosPlan {
+                reduce_failure_prob: 0.4,
+                max_attempts: 24,
+                seed: 77,
+                ..ChaosPlan::none()
+            },
             ..Default::default()
         };
-        Engine::new(cfg).run(&WordCount, &blocks());
+        let faulty = Engine::new(cfg).run(&WordCount, &wide_blocks()).unwrap();
+        assert_eq!(faulty.outputs, clean.outputs);
+        assert!(faulty.metrics.reduce_retries > 0, "p=0.4 over 64 groups should retry");
+        assert_eq!(faulty.metrics.map_retries, 0);
+    }
+
+    #[test]
+    fn stragglers_slow_but_do_not_change_outputs() {
+        let clean =
+            Engine::new(EngineConfig::with_workers(4)).run(&WordCount, &wide_blocks()).unwrap();
+        let cfg = EngineConfig {
+            workers: 4,
+            faults: ChaosPlan {
+                straggler_prob: 0.9,
+                straggler_delay: Duration::from_millis(1),
+                seed: 5,
+                ..ChaosPlan::none()
+            },
+            ..Default::default()
+        };
+        let slow = Engine::new(cfg).run(&WordCount, &wide_blocks()).unwrap();
+        assert_eq!(slow.outputs, clean.outputs);
+        assert!(slow.metrics.stragglers > 0, "p=0.9 over 8 map + 64 reduce tasks");
+        assert_eq!(slow.metrics.map_retries + slow.metrics.reduce_retries, 0);
+    }
+
+    #[test]
+    fn certain_failure_aborts_with_typed_error() {
+        let cfg = EngineConfig {
+            workers: 1,
+            faults: ChaosPlan { map_failure_prob: 1.0, max_attempts: 3, ..ChaosPlan::none() },
+            ..Default::default()
+        };
+        let err = Engine::new(cfg).run(&WordCount, &blocks()).unwrap_err();
+        assert_eq!(err, JobError { phase: Phase::Map, task_id: 0, attempts: 3 });
+        assert!(err.to_string().contains("map task 0 exceeded 3 attempts"), "{err}");
+    }
+
+    #[test]
+    fn certain_reduce_failure_names_the_reduce_phase() {
+        let cfg = EngineConfig {
+            workers: 1,
+            faults: ChaosPlan { reduce_failure_prob: 1.0, max_attempts: 2, ..ChaosPlan::none() },
+            ..Default::default()
+        };
+        let err = Engine::new(cfg).run(&WordCount, &blocks()).unwrap_err();
+        assert_eq!(err, JobError { phase: Phase::Reduce, task_id: 0, attempts: 2 });
+    }
+
+    #[test]
+    fn run_map_propagates_exhaustion() {
+        let cfg = EngineConfig {
+            workers: 2,
+            faults: ChaosPlan { map_failure_prob: 1.0, max_attempts: 2, ..ChaosPlan::none() },
+            ..Default::default()
+        };
+        let err = Engine::new(cfg)
+            .run_map(&blocks(), |_, b: &Vec<u32>, _ctx| b.len())
+            .unwrap_err();
+        assert_eq!(err.phase, Phase::Map);
+        assert_eq!(err.attempts, 2);
     }
 
     #[test]
@@ -414,8 +621,8 @@ mod tests {
             }
         }
         let inputs = vec![(); 16];
-        let a = Engine::new(EngineConfig::with_workers(1)).run(&RngJob, &inputs);
-        let b = Engine::new(EngineConfig::with_workers(7)).run(&RngJob, &inputs);
+        let a = Engine::new(EngineConfig::with_workers(1)).run(&RngJob, &inputs).unwrap();
+        let b = Engine::new(EngineConfig::with_workers(7)).run(&RngJob, &inputs).unwrap();
         assert_eq!(a.outputs, b.outputs);
     }
 
@@ -430,7 +637,7 @@ mod tests {
     #[test]
     fn empty_input_ok() {
         let engine = Engine::new(EngineConfig::with_workers(2));
-        let run = engine.run(&WordCount, &[]);
+        let run = engine.run(&WordCount, &[]).unwrap();
         assert!(run.outputs.is_empty());
         assert_eq!(run.metrics.map_tasks, 0);
     }

@@ -1,46 +1,137 @@
-//! Deterministic fault injection: MapReduce's defining runtime property is
-//! transparent task re-execution; the engine simulates worker failures so
-//! tests can assert that job *outputs are bit-identical under failures*.
+//! Deterministic chaos injection: MapReduce's defining runtime property is
+//! transparent task re-execution; the engine simulates worker failures,
+//! stragglers, and serving-shard kills so tests can assert that job
+//! *outputs are bit-identical under failures*.
+//!
+//! Every draw is a pure function of `(seed, phase, task, attempt)` — a
+//! chaos run is exactly as reproducible as a clean one, independent of
+//! worker count or scheduling order.
 
 use crate::rng::Pcg;
+use std::time::Duration;
 
-/// Failure plan for a job execution.
-#[derive(Clone, Debug)]
-pub struct FaultPlan {
-    /// probability that any given map-task *attempt* fails
-    pub map_failure_prob: f64,
-    /// maximum attempts per task before the job aborts
-    pub max_attempts: usize,
-    /// seed for the (deterministic) failure draws
-    pub seed: u64,
+/// Execution phase a chaos draw (or a [`super::JobError`]) applies to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Map,
+    Reduce,
 }
 
-impl Default for FaultPlan {
-    fn default() -> Self {
-        FaultPlan { map_failure_prob: 0.0, max_attempts: 4, seed: 0 }
+impl std::fmt::Display for Phase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Phase::Map => write!(f, "map"),
+            Phase::Reduce => write!(f, "reduce"),
+        }
     }
 }
 
-impl FaultPlan {
+// Distinct salts keep the failure/straggler/shard-kill streams independent
+// of each other for the same seed. Map failures use salt 0 so the draw
+// sequence is unchanged from the original map-only FaultPlan.
+const REDUCE_SALT: u64 = 0xC2B2_AE3D_27D4_EB4F;
+const STRAGGLE_SALT: u64 = 0x1656_67B1_9E37_79F9;
+const SHARD_SALT: u64 = 0x2722_0A95_FE2C_EF85;
+const TASK_MIX: u64 = 0xA24B_AED4_963E_E407;
+
+/// Chaos plan for a job execution (and, via [`ChaosPlan::kills_shard`],
+/// the serving tier). The historical name [`FaultPlan`] is an alias.
+#[derive(Clone, Debug)]
+pub struct ChaosPlan {
+    /// probability that any given map-task *attempt* fails
+    pub map_failure_prob: f64,
+    /// probability that any given reduce-task *attempt* fails
+    pub reduce_failure_prob: f64,
+    /// probability that any given task *attempt* is a straggler (it still
+    /// runs — after `straggler_delay` of injected latency)
+    pub straggler_prob: f64,
+    /// injected latency for straggler attempts
+    pub straggler_delay: Duration,
+    /// probability that a given serving shard is killed by the chaos
+    /// driver (`repro chaos`, `tests/chaos.rs`)
+    pub shard_kill_prob: f64,
+    /// maximum attempts per task before the job aborts
+    pub max_attempts: usize,
+    /// seed for the (deterministic) chaos draws
+    pub seed: u64,
+}
+
+/// Historical name, kept so existing call sites and configs keep working.
+pub type FaultPlan = ChaosPlan;
+
+impl Default for ChaosPlan {
+    fn default() -> Self {
+        ChaosPlan {
+            map_failure_prob: 0.0,
+            reduce_failure_prob: 0.0,
+            straggler_prob: 0.0,
+            straggler_delay: Duration::from_millis(1),
+            shard_kill_prob: 0.0,
+            max_attempts: 4,
+            seed: 0,
+        }
+    }
+}
+
+impl ChaosPlan {
     pub fn none() -> Self {
         Self::default()
     }
 
     pub fn with_map_failures(prob: f64, seed: u64) -> Self {
-        FaultPlan { map_failure_prob: prob, max_attempts: 4, seed }
+        ChaosPlan { map_failure_prob: prob, seed, ..Self::default() }
     }
 
-    /// Does attempt `attempt` of task `task_id` fail?  Deterministic in
-    /// (seed, task, attempt) — independent of scheduling.
-    pub fn fails(&self, task_id: usize, attempt: usize) -> bool {
-        if self.map_failure_prob <= 0.0 {
+    /// Failures in both phases, same seed.
+    pub fn with_failures(map_prob: f64, reduce_prob: f64, seed: u64) -> Self {
+        ChaosPlan {
+            map_failure_prob: map_prob,
+            reduce_failure_prob: reduce_prob,
+            seed,
+            ..Self::default()
+        }
+    }
+
+    /// One deterministic Bernoulli draw per (seed, salt, task, attempt).
+    fn draw(&self, salt: u64, task_id: usize, attempt: usize, p: f64) -> bool {
+        if p <= 0.0 {
             return false;
         }
-        let mut rng = Pcg::new(
-            self.seed ^ (task_id as u64).wrapping_mul(0xA24BAED4963EE407),
-            attempt as u64,
-        );
-        rng.bernoulli(self.map_failure_prob)
+        let mut rng =
+            Pcg::new(self.seed ^ salt ^ (task_id as u64).wrapping_mul(TASK_MIX), attempt as u64);
+        rng.bernoulli(p)
+    }
+
+    /// Does attempt `attempt` of map task `task_id` fail?  Deterministic in
+    /// (seed, task, attempt) — independent of scheduling. Salt 0: the draw
+    /// sequence matches the original map-only `FaultPlan::fails` exactly.
+    pub fn fails_map(&self, task_id: usize, attempt: usize) -> bool {
+        self.draw(0, task_id, attempt, self.map_failure_prob)
+    }
+
+    /// Does attempt `attempt` of reduce task `task_id` fail?  Same
+    /// deterministic contract as [`ChaosPlan::fails_map`], independent
+    /// stream.
+    pub fn fails_reduce(&self, task_id: usize, attempt: usize) -> bool {
+        self.draw(REDUCE_SALT, task_id, attempt, self.reduce_failure_prob)
+    }
+
+    /// Injected latency for this attempt, if it was drawn as a straggler.
+    /// The attempt still executes (slowly) — stragglers change timing, not
+    /// outputs.
+    pub fn straggles(&self, phase: Phase, task_id: usize, attempt: usize) -> Option<Duration> {
+        let salt = match phase {
+            Phase::Map => STRAGGLE_SALT,
+            Phase::Reduce => STRAGGLE_SALT ^ REDUCE_SALT,
+        };
+        self.draw(salt, task_id, attempt, self.straggler_prob).then_some(self.straggler_delay)
+    }
+
+    /// Is serving shard `shard` killed by this plan?  Used by the chaos
+    /// drivers to pick victims reproducibly; the serving tier itself never
+    /// consults the plan.
+    pub fn kills_shard(&self, shard: usize) -> bool {
+        self.draw(SHARD_SALT, shard, 0, self.shard_kill_prob)
     }
 }
 
@@ -50,15 +141,18 @@ mod tests {
 
     #[test]
     fn no_failures_by_default() {
-        let p = FaultPlan::none();
-        assert!((0..100).all(|t| !p.fails(t, 0)));
+        let p = ChaosPlan::none();
+        assert!((0..100).all(|t| !p.fails_map(t, 0)));
+        assert!((0..100).all(|t| !p.fails_reduce(t, 0)));
+        assert!((0..100).all(|t| p.straggles(Phase::Map, t, 0).is_none()));
+        assert!((0..100).all(|s| !p.kills_shard(s)));
     }
 
     #[test]
     fn failures_deterministic() {
-        let p = FaultPlan::with_map_failures(0.5, 7);
-        let a: Vec<bool> = (0..64).map(|t| p.fails(t, 0)).collect();
-        let b: Vec<bool> = (0..64).map(|t| p.fails(t, 0)).collect();
+        let p = ChaosPlan::with_map_failures(0.5, 7);
+        let a: Vec<bool> = (0..64).map(|t| p.fails_map(t, 0)).collect();
+        let b: Vec<bool> = (0..64).map(|t| p.fails_map(t, 0)).collect();
         assert_eq!(a, b);
         assert!(a.iter().any(|&f| f), "p=0.5 over 64 tasks must fail some");
         assert!(!a.iter().all(|&f| f));
@@ -66,9 +160,51 @@ mod tests {
 
     #[test]
     fn attempts_redrawn() {
-        let p = FaultPlan::with_map_failures(0.5, 9);
+        let p = ChaosPlan::with_map_failures(0.5, 9);
         // some task must fail attempt 0 but succeed on a retry
-        let recovered = (0..256).any(|t| p.fails(t, 0) && !p.fails(t, 1));
+        let recovered = (0..256).any(|t| p.fails_map(t, 0) && !p.fails_map(t, 1));
         assert!(recovered);
+    }
+
+    #[test]
+    fn reduce_stream_independent_of_map_stream() {
+        let p = ChaosPlan::with_failures(0.5, 0.5, 11);
+        let map: Vec<bool> = (0..256).map(|t| p.fails_map(t, 0)).collect();
+        let red: Vec<bool> = (0..256).map(|t| p.fails_reduce(t, 0)).collect();
+        assert_ne!(map, red, "map and reduce draws must be independent streams");
+        assert!(red.iter().any(|&f| f));
+        assert!(!red.iter().all(|&f| f));
+    }
+
+    #[test]
+    fn stragglers_deterministic_and_phase_split() {
+        let p = ChaosPlan {
+            straggler_prob: 0.5,
+            straggler_delay: Duration::from_millis(7),
+            seed: 21,
+            ..ChaosPlan::none()
+        };
+        let a: Vec<bool> = (0..128).map(|t| p.straggles(Phase::Map, t, 0).is_some()).collect();
+        let b: Vec<bool> = (0..128).map(|t| p.straggles(Phase::Map, t, 0).is_some()).collect();
+        assert_eq!(a, b);
+        let r: Vec<bool> = (0..128).map(|t| p.straggles(Phase::Reduce, t, 0).is_some()).collect();
+        assert_ne!(a, r, "map and reduce straggler draws must differ");
+        let delay = (0..128).find_map(|t| p.straggles(Phase::Map, t, 0));
+        assert_eq!(delay, Some(Duration::from_millis(7)));
+    }
+
+    #[test]
+    fn shard_kills_deterministic() {
+        let p = ChaosPlan { shard_kill_prob: 0.5, seed: 3, ..ChaosPlan::none() };
+        let a: Vec<bool> = (0..64).map(|s| p.kills_shard(s)).collect();
+        assert_eq!(a, (0..64).map(|s| p.kills_shard(s)).collect::<Vec<_>>());
+        assert!(a.iter().any(|&k| k));
+        assert!(!a.iter().all(|&k| k));
+    }
+
+    #[test]
+    fn fault_plan_alias_still_works() {
+        let p: FaultPlan = FaultPlan::with_map_failures(1.0, 0);
+        assert!(p.fails_map(0, 0));
     }
 }

@@ -49,6 +49,14 @@ impl<A: Payload, B: Payload, C: Payload> Payload for (A, B, C) {
 /// from (job seed, block id) — never from the worker — so outputs are
 /// identical for any worker count or schedule. Reducers receive values
 /// sorted by (origin map task, emission order).
+///
+/// Fault contract: under an injected [`super::ChaosPlan`], a failed
+/// map or reduce *attempt* re-executes the task from scratch with the
+/// same inputs and the same RNG split — `map`/`reduce` must therefore
+/// be pure functions of their arguments (every job in this crate is),
+/// which is exactly what makes chaotic runs bit-identical to clean
+/// ones. A task that exhausts its attempts surfaces as a typed
+/// [`super::JobError`] from the engine, not a worker panic.
 pub trait Job: Send + Sync {
     type Input: Sync;
     type Key: Ord + Clone + Send + Sync;

@@ -10,6 +10,10 @@ pub struct JobMetrics {
     /// map tasks that were re-executed after injected failures
     pub map_retries: usize,
     pub reduce_tasks: usize,
+    /// reduce tasks that were re-executed after injected failures
+    pub reduce_retries: usize,
+    /// task attempts that ran with injected straggler latency
+    pub stragglers: usize,
     /// key-value pairs crossing the shuffle (post-combine)
     pub shuffle_pairs: usize,
     /// serialized bytes crossing the shuffle (post-combine)
@@ -48,6 +52,8 @@ impl JobMetrics {
         self.map_tasks += other.map_tasks;
         self.map_retries += other.map_retries;
         self.reduce_tasks += other.reduce_tasks;
+        self.reduce_retries += other.reduce_retries;
+        self.stragglers += other.stragglers;
         self.shuffle_pairs += other.shuffle_pairs;
         self.shuffle_bytes += other.shuffle_bytes;
         self.broadcast_bytes += other.broadcast_bytes;

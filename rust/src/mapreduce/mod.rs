@@ -18,8 +18,15 @@
 //! * [`job`]     — the `Job` trait (map/combine/reduce) + payload sizing
 //! * [`engine`]  — the executor: partitioning, shuffle, retries, metrics
 //! * [`dfs`]     — simulated distributed block store with replication
-//! * [`fault`]   — deterministic fault-injection plans
+//! * [`fault`]   — deterministic chaos plans (task failures in both
+//!   phases, stragglers, serving-shard kills), all drawn from seeded PCG
 //! * [`metrics`] — per-job cost accounting
+//!
+//! Fault contract: every chaos draw is a pure function of
+//! `(seed, phase, task, attempt)`, so faulty runs are exactly as
+//! reproducible as clean ones and outputs stay bit-identical under
+//! injected failures. Attempt exhaustion surfaces as a typed
+//! [`JobError`], never a worker-thread panic.
 
 pub mod dfs;
 pub mod engine;
@@ -27,7 +34,7 @@ pub mod fault;
 pub mod job;
 pub mod metrics;
 
-pub use engine::{Engine, EngineConfig, JobRun};
-pub use fault::FaultPlan;
+pub use engine::{Engine, EngineConfig, JobError, JobRun};
+pub use fault::{ChaosPlan, FaultPlan, Phase};
 pub use job::{Emitter, Job, Payload, TaskCtx};
 pub use metrics::JobMetrics;

@@ -252,6 +252,18 @@ impl ApncModel {
         shard::ShardedHandle::start(self, n_shards)
     }
 
+    /// [`ApncModel::serve_with`] with a backlog bound: while
+    /// `queue_limit > 0` requests are queued, new submissions are shed
+    /// with a typed [`serve::Overloaded`] error instead of queueing
+    /// without bound (0 = unbounded).
+    pub fn serve_bounded(
+        self,
+        window: serve::BatchWindow,
+        queue_limit: usize,
+    ) -> Result<serve::ModelHandle> {
+        serve::ModelHandle::start_bounded(self, window, queue_limit)
+    }
+
     /// [`ApncModel::serve_sharded`] with per-shard request coalescing
     /// under `window`. Responses stay bit-identical for any shard count,
     /// window, or interleaving.
@@ -261,6 +273,19 @@ impl ApncModel {
         window: serve::BatchWindow,
     ) -> Result<shard::ShardedHandle> {
         shard::ShardedHandle::start_with(self, n_shards, window)
+    }
+
+    /// [`ApncModel::serve_sharded_with`] with a per-shard backlog bound:
+    /// a shard whose queue holds `queue_limit > 0` requests sheds new
+    /// submissions with a typed [`serve::Overloaded`] error — explicit
+    /// back-pressure instead of unbounded queueing (0 = unbounded).
+    pub fn serve_sharded_bounded(
+        self,
+        n_shards: usize,
+        window: serve::BatchWindow,
+        queue_limit: usize,
+    ) -> Result<shard::ShardedHandle> {
+        shard::ShardedHandle::start_bounded(self, n_shards, window, queue_limit)
     }
 }
 

@@ -40,6 +40,19 @@
 //!   explicit [`ModelHandle::shutdown`], all handles dropped, or a
 //!   captured panic message — and every subsequent client call surfaces
 //!   that cause in its `Err` instead of a bare "model server is gone".
+//! * **Bounded queues / load shedding.** A shard started with a nonzero
+//!   queue limit rejects submissions past its backlog bound with a typed
+//!   [`Overloaded`] error (check with [`is_overloaded`]) instead of
+//!   queueing without bound. Shedding happens at admission, so accepted
+//!   requests are never dropped.
+//! * **Per-request deadlines.** [`PredictTicket::wait_timeout`] bounds
+//!   how long a client blocks; an expired ticket stays redeemable — the
+//!   request is still served, the client just stopped waiting for now.
+//! * **Chaos hooks.** [`ModelHandle::inject_crash`] and
+//!   [`ModelHandle::inject_stall`] let the chaos harness kill or freeze a
+//!   serving thread through the public API, exercising the exact failure
+//!   paths real panics and overload take (`repro chaos`,
+//!   `rust/tests/chaos.rs`).
 //!
 //! Each prediction is independent per row, so responses are bit-identical
 //! to calling [`ApncModel::predict_batch`] directly on the in-memory
@@ -142,6 +155,38 @@ impl ModelSlot {
     }
 }
 
+/// Load-shedding rejection: the shard's queue was at its bound when the
+/// request arrived. Typed so callers can tell "back off and retry" apart
+/// from a dead shard — test with [`is_overloaded`] on any `anyhow::Error`
+/// from the serving tier.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Overloaded {
+    /// serving thread that shed the request
+    pub shard: String,
+    /// queue depth observed at admission
+    pub queued: usize,
+    /// the shard's configured queue bound
+    pub limit: usize,
+}
+
+impl std::fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} overloaded: {} requests queued (limit {})",
+            self.shard, self.queued, self.limit
+        )
+    }
+}
+
+impl std::error::Error for Overloaded {}
+
+/// Was this serving-tier error a load-shedding rejection (retryable with
+/// backoff) rather than a dead shard or a compute failure?
+pub fn is_overloaded(err: &anyhow::Error) -> bool {
+    err.downcast_ref::<Overloaded>().is_some()
+}
+
 /// A served prediction: the labels for the requested rows, tagged with
 /// the epoch of the model that produced them (see [`ModelHandle::swap`]).
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -165,8 +210,11 @@ pub struct ShardStats {
     pub rows: usize,
 }
 
+/// Cross-respawn shard counters: the sharded front-end passes one
+/// `Arc<Counters>` per shard slot into every generation of that shard, so
+/// stats survive a supervised respawn.
 #[derive(Default)]
-struct Counters {
+pub(crate) struct Counters {
     requests: AtomicUsize,
     batches: AtomicUsize,
     rows: AtomicUsize,
@@ -185,22 +233,64 @@ enum Request {
     Predict(PredictReq),
     /// Stop serving; subsequent requests fail with the recorded cause.
     Shutdown { reply: mpsc::Sender<()> },
-    #[cfg(test)]
-    CrashForTest(String),
+    /// Chaos: panic the serving thread with this message (a real panic
+    /// through the real epitaph path, not a simulation of one).
+    Crash(String),
+    /// Chaos: freeze the serving thread (a straggling or wedged shard);
+    /// queued work piles up behind the stall.
+    Stall(Duration),
 }
 
 /// One in-flight prediction: redeem with [`PredictTicket::poll`]
-/// (non-blocking) or [`PredictTicket::wait`] (blocking). The result is
-/// yielded exactly once; after that the ticket is spent. Dropping an
-/// unredeemed ticket abandons the response (the serving thread is not
-/// blocked by it — replies are fire-and-forget sends).
+/// (non-blocking), [`PredictTicket::wait`] (blocking), or
+/// [`PredictTicket::wait_timeout`] (blocking with a deadline; an expired
+/// ticket stays redeemable). The result is yielded exactly once; after
+/// that the ticket is spent. Dropping an unredeemed ticket abandons the
+/// response (the serving thread is not blocked by it — replies are
+/// fire-and-forget sends).
 pub struct PredictTicket {
     /// `None` once the result has been yielded (the ticket is spent)
     rx: Option<mpsc::Receiver<Result<Prediction>>>,
     core: ServiceCore<Request>,
 }
 
+/// How a redemption attempt resolved — lets the sharded front-end tell a
+/// dead shard (fail the request over) from a served result (final) and a
+/// deadline (ticket still live).
+pub(crate) enum Redemption {
+    /// the serving thread answered; the ticket is spent
+    Ready(Result<Prediction>),
+    /// the serving thread died before answering; the ticket is spent and
+    /// the error carries the recorded cause of death
+    Died(anyhow::Error),
+    /// the deadline passed with the request still in flight; the ticket
+    /// stays redeemable
+    TimedOut,
+}
+
 impl PredictTicket {
+    /// The one redemption path every public redeem builds on.
+    pub(crate) fn redeem_within(&mut self, timeout: Option<Duration>) -> Redemption {
+        let Some(rx) = self.rx.as_ref() else {
+            return Redemption::Ready(Err(anyhow!("predict ticket already redeemed")));
+        };
+        let got = match timeout {
+            Some(t) => rx.recv_timeout(t).map_err(|e| e == mpsc::RecvTimeoutError::Timeout),
+            None => rx.recv().map_err(|_| false),
+        };
+        match got {
+            Ok(r) => {
+                self.rx = None;
+                Redemption::Ready(r)
+            }
+            Err(true) => Redemption::TimedOut,
+            Err(false) => {
+                self.rx = None;
+                Redemption::Died(self.core.death())
+            }
+        }
+    }
+
     /// Non-blocking check: `None` while the prediction is still in
     /// flight; `Some(result)` exactly once when it lands (or when the
     /// serving thread died — the error carries the recorded cause).
@@ -223,9 +313,23 @@ impl PredictTicket {
     /// recorded cause of death if it stopped first, or if the ticket was
     /// already redeemed by [`PredictTicket::poll`].
     pub fn wait(mut self) -> Result<Prediction> {
-        match self.rx.take() {
-            Some(rx) => rx.recv().unwrap_or_else(|_| Err(self.core.death())),
-            None => Err(anyhow!("predict ticket already redeemed")),
+        match self.redeem_within(None) {
+            Redemption::Ready(r) => r,
+            Redemption::Died(e) => Err(e),
+            Redemption::TimedOut => unreachable!("no deadline, no timeout"),
+        }
+    }
+
+    /// Block at most `timeout` for the prediction. `None` means the
+    /// deadline expired with the request still in flight — the ticket is
+    /// *not* spent, and a later `wait`/`wait_timeout`/`poll` can still
+    /// redeem it (a deadline bounds the client's patience, it does not
+    /// cancel the request).
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Option<Result<Prediction>> {
+        match self.redeem_within(Some(timeout)) {
+            Redemption::Ready(r) => Some(r),
+            Redemption::Died(e) => Some(Err(e)),
+            Redemption::TimedOut => None,
         }
     }
 
@@ -244,6 +348,24 @@ pub struct ModelHandle {
     stats: Arc<Counters>,
     /// stable for the handle's lifetime: swaps must preserve `d`
     d: usize,
+    /// backlog bound for load shedding (0 = unbounded)
+    queue_limit: usize,
+}
+
+/// Serve non-predict requests; shared by the direct and mid-drain paths.
+fn handle_control(req: Request) -> ControlFlow<String> {
+    match req {
+        Request::Predict(_) => unreachable!("control handler never sees predicts"),
+        Request::Shutdown { reply } => {
+            let _ = reply.send(());
+            ControlFlow::Break("shut down by explicit request".to_string())
+        }
+        Request::Crash(msg) => panic!("{msg}"),
+        Request::Stall(pause) => {
+            std::thread::sleep(pause);
+            ControlFlow::Continue(())
+        }
+    }
 }
 
 impl ModelHandle {
@@ -257,19 +379,38 @@ impl ModelHandle {
     /// traffic per `window` ([`ApncModel::serve_with`] is the usual
     /// entry point).
     pub fn start_with(model: ApncModel, window: BatchWindow) -> Result<ModelHandle> {
-        Self::start_shard(ModelSlot::new(Arc::new(model)), "apnc-model-serve", window)
+        Self::start_bounded(model, window, 0)
+    }
+
+    /// Like [`ModelHandle::start_with`], with a backlog bound: while
+    /// `queue_limit > 0` requests are already queued, new submissions are
+    /// rejected with [`Overloaded`] instead of growing the queue.
+    pub fn start_bounded(
+        model: ApncModel,
+        window: BatchWindow,
+        queue_limit: usize,
+    ) -> Result<ModelHandle> {
+        Self::start_shard(
+            ModelSlot::new(Arc::new(model)),
+            "apnc-model-serve",
+            window,
+            queue_limit,
+            Arc::new(Counters::default()),
+        )
     }
 
     /// Shard-aware constructor: every shard of a front-end reads the same
     /// [`ModelSlot`] — one published model no matter the shard count, and
-    /// one `swap` republishes for all shards at once.
+    /// one `swap` republishes for all shards at once. `stats` is likewise
+    /// caller-owned so a supervised respawn keeps the slot's counters.
     pub(crate) fn start_shard(
         slot: Arc<ModelSlot>,
         name: &str,
         window: BatchWindow,
+        queue_limit: usize,
+        stats: Arc<Counters>,
     ) -> Result<ModelHandle> {
         let d = slot.load().0.d();
-        let stats = Arc::new(Counters::default());
         let counters = stats.clone();
         let served_slot = slot.clone();
         let core = ServiceCore::spawn(
@@ -304,24 +445,13 @@ impl ModelHandle {
                     serve_batch(slot, &counters, batch);
                     match follow {
                         None => ControlFlow::Continue(()),
-                        Some(Request::Shutdown { reply }) => {
-                            let _ = reply.send(());
-                            ControlFlow::Break("shut down by explicit request".to_string())
-                        }
-                        Some(Request::Predict(_)) => unreachable!("drain loop keeps predicts"),
-                        #[cfg(test)]
-                        Some(Request::CrashForTest(msg)) => panic!("{msg}"),
+                        Some(req) => handle_control(req),
                     }
                 }
-                Request::Shutdown { reply } => {
-                    let _ = reply.send(());
-                    ControlFlow::Break("shut down by explicit request".to_string())
-                }
-                #[cfg(test)]
-                Request::CrashForTest(msg) => panic!("{msg}"),
+                other => handle_control(other),
             },
         )?;
-        Ok(ModelHandle { core, slot, stats, d })
+        Ok(ModelHandle { core, slot, stats, d, queue_limit })
     }
 
     /// Predict labels for `x` (`(rows, d)` row-major) with the default
@@ -383,6 +513,19 @@ impl ModelHandle {
             rows.start,
             rows.end
         );
+        // load shedding at admission: a request either enters the queue
+        // (and will be answered) or is rejected here — never dropped later
+        if self.queue_limit > 0 {
+            let queued = self.core.queue_depth();
+            if queued >= self.queue_limit {
+                return Err(Overloaded {
+                    shard: self.core.name().to_string(),
+                    queued,
+                    limit: self.queue_limit,
+                }
+                .into());
+            }
+        }
         let (reply, rx) = mpsc::channel();
         self.core.send(Request::Predict(PredictReq { x: x.clone(), rows, chunk_rows, reply }))?;
         Ok(PredictTicket { rx: Some(rx), core: self.core.clone() })
@@ -429,9 +572,48 @@ impl ModelHandle {
         }
     }
 
-    #[cfg(test)]
-    pub(crate) fn crash_for_test(&self, msg: &str) {
-        let _ = self.core.send(Request::CrashForTest(msg.to_string()));
+    /// Chaos hook: panic the serving thread with `why`. The thread dies
+    /// through the same epitaph path a real serving panic takes; the
+    /// sharded front-end's supervision then detects and respawns it. A
+    /// no-op on an already-dead shard.
+    pub fn inject_crash(&self, why: &str) {
+        let _ = self.core.send(Request::Crash(why.to_string()));
+    }
+
+    /// Chaos hook: freeze the serving thread for `pause` (a wedged or
+    /// straggling shard). Requests submitted during the stall pile up in
+    /// the queue — with a queue limit set, this deterministically drives
+    /// the shard into [`Overloaded`] shedding.
+    pub fn inject_stall(&self, pause: Duration) {
+        let _ = self.core.send(Request::Stall(pause));
+    }
+
+    /// Is the serving thread still alive? (Supervision primitive: a dead
+    /// shard has recorded its cause of death, see
+    /// [`ModelHandle::death_cause`].)
+    pub fn is_alive(&self) -> bool {
+        self.core.is_alive()
+    }
+
+    /// The recorded cause of death (waits briefly for the epitaph if the
+    /// thread is mid-exit).
+    pub(crate) fn death_cause(&self) -> anyhow::Error {
+        self.core.death()
+    }
+
+    /// The serving thread's name.
+    pub(crate) fn name(&self) -> &str {
+        self.core.name()
+    }
+
+    /// Pending requests in this shard's queue.
+    pub fn queue_depth(&self) -> usize {
+        self.core.queue_depth()
+    }
+
+    /// The backlog bound this handle sheds at (0 = unbounded).
+    pub fn queue_limit(&self) -> usize {
+        self.queue_limit
     }
 
     /// Feature dimensionality the served model expects (stable across
@@ -632,7 +814,7 @@ mod tests {
         // the crash is queued first, so the async request behind it is
         // never served: its ticket must surface the recorded cause —
         // whether the submit raced the thread's exit or not
-        handle.crash_for_test("async serving panic");
+        handle.inject_crash("async serving panic");
         let err = match handle.predict_async(&shared, 0..2, 0) {
             Ok(ticket) => ticket.wait().unwrap_err().to_string(),
             Err(e) => e.to_string(),
@@ -704,7 +886,7 @@ mod tests {
     fn panicking_server_reports_the_panic_to_clients() {
         let model = toy_model(1, 3, 4, 2, 2, 32);
         let handle = model.serve().unwrap();
-        handle.crash_for_test("injected serving panic");
+        handle.inject_crash("injected serving panic");
         let err = handle.predict(&[1.0, 2.0, 3.0]).unwrap_err().to_string();
         assert!(err.contains("panicked"), "{err}");
         assert!(err.contains("injected serving panic"), "{err}");
@@ -716,5 +898,64 @@ mod tests {
         let handle = model.serve().unwrap();
         assert!(handle.predict(&[]).unwrap().is_empty());
         assert!(handle.predict(&[1.0]).is_err(), "ragged input must surface as Err");
+    }
+
+    #[test]
+    fn expired_deadline_leaves_ticket_redeemable() {
+        let model = toy_model(1, 3, 6, 4, 3, 72);
+        let mut rng = Pcg::seeded(73);
+        let x: Vec<f32> = (0..10 * 3).map(|_| rng.normal() as f32).collect();
+        let want = model.predict_batch(&x, 0).unwrap();
+        let handle = model.serve().unwrap();
+        // freeze the shard so the short deadline below reliably expires
+        handle.inject_stall(Duration::from_millis(300));
+        let shared: Arc<[f32]> = x.as_slice().into();
+        let mut ticket = handle.predict_async(&shared, 0..10, 0).unwrap();
+        assert!(ticket.wait_timeout(Duration::from_millis(20)).is_none());
+        assert!(!ticket.is_spent(), "an expired deadline must not spend the ticket");
+        // the request was never lost: a later redeem yields the answer
+        let got = ticket
+            .wait_timeout(Duration::from_secs(30))
+            .expect("served once the stall ends")
+            .unwrap();
+        assert_eq!(got.labels, want);
+        assert!(ticket.is_spent());
+    }
+
+    #[test]
+    fn bounded_queue_sheds_overload_and_recovers() {
+        let model = toy_model(1, 3, 6, 4, 3, 70);
+        let mut rng = Pcg::seeded(71);
+        let x: Vec<f32> = (0..8 * 3).map(|_| rng.normal() as f32).collect();
+        let want = model.predict_batch(&x, 0).unwrap();
+        let handle = ModelHandle::start_bounded(model, BatchWindow::disabled(), 2).unwrap();
+        assert_eq!(handle.queue_limit(), 2);
+        // freeze the shard so submissions pile up deterministically: the
+        // stall is dequeued (or still queued) while we submit, so at most
+        // queue_limit predicts are admitted and the rest are shed
+        handle.inject_stall(Duration::from_millis(400));
+        let shared: Arc<[f32]> = x.as_slice().into();
+        let mut accepted = Vec::new();
+        let mut shed = 0usize;
+        for _ in 0..6 {
+            match handle.predict_async(&shared, 0..8, 0) {
+                Ok(t) => accepted.push(t),
+                Err(e) => {
+                    assert!(is_overloaded(&e), "unexpected error class: {e:#}");
+                    let o = e.downcast_ref::<Overloaded>().unwrap();
+                    assert_eq!(o.limit, 2);
+                    assert!(o.queued >= 2, "shed below the limit: {o}");
+                    shed += 1;
+                }
+            }
+        }
+        assert!(accepted.len() <= 2, "admitted past the queue limit");
+        assert_eq!(accepted.len() + shed, 6);
+        // accepted requests are never dropped: all served after the stall
+        for t in accepted {
+            assert_eq!(t.wait().unwrap().labels, want);
+        }
+        // and the shard recovers: fresh submissions are admitted again
+        assert_eq!(handle.predict_shared(&shared, 0..8, 0).unwrap(), want);
     }
 }

@@ -1,5 +1,5 @@
-//! Sharded serving front-end: N model threads behind one cloneable
-//! [`ShardedHandle`].
+//! Sharded serving front-end: N supervised model threads behind one
+//! cloneable [`ShardedHandle`].
 //!
 //! The paper's Property 4.2 makes out-of-sample prediction embarrassingly
 //! parallel: each row needs only kernel evaluations against the fitted
@@ -26,6 +26,8 @@
 //! [`ApncModel::predict_batch`] for any shard count, routing order, or
 //! client interleaving — the substrate's determinism contract extended to
 //! the sharded serving tier, pinned by `rust/tests/model_roundtrip.rs`.
+//! The same independence is what makes fail-over safe: any live shard can
+//! serve any request and produce the identical answer.
 //!
 //! **Zero-copy.** Requests carry `Arc<[f32]>` + row range (see
 //! [`crate::model::serve`]); [`drive_clients`] shares one `Arc` across
@@ -34,28 +36,130 @@
 //! **Serving tier v2.** Each shard coalesces its own queue under the
 //! front-end's [`BatchWindow`] (one fused embed pass per drained batch);
 //! [`ShardedHandle::predict_async`] submits without blocking and returns
-//! a [`PredictTicket`]; and [`ShardedHandle::swap`] republishes a new
+//! a [`ShardedTicket`]; and [`ShardedHandle::swap`] republishes a new
 //! model behind all shards at once — every shard reads the same
 //! epoch-tagged publication slot, so a swap is atomic per coalesced
 //! batch, drops no request, and every [`crate::model::serve::Prediction`]
 //! names the epoch that served it.
+//!
+//! **Self-healing (v3).** The front-end supervises its shards without a
+//! background thread: supervision is event-driven, at the two points a
+//! death is observable. (1) *Admission*: routing consults the shard's
+//! liveness (its `ServiceCore` epitaph) and a dead shard is healed —
+//! its recorded cause of death is appended to [`ShardedHandle::failures`]
+//! and a fresh serving thread is respawned from the **same** epoch-tagged
+//! publication slot and counters, so the replacement serves the currently
+//! published model and the shard's stats survive the respawn. (2)
+//! *Redemption*: a [`ShardedTicket`] whose shard died with the request in
+//! flight heals that shard and transparently resubmits through the
+//! front-end (bounded retries). The dead shard's reply channel died with
+//! it, so resubmission can neither duplicate nor lose a response; request
+//! payloads are shared `Arc`s, so a fail-over costs a clone, not a copy.
+//! Intentional [`ShardedHandle::shutdown`] sets a flag that disarms the
+//! healer — an explicit shutdown stays down, and its cause keeps reaching
+//! clients. [`Overloaded`] rejections are *not* failed over: shedding is
+//! back-pressure addressed to the caller (see [`DriveOpts`] for the
+//! client-side backoff driver).
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
-use super::serve::{BatchWindow, ModelHandle, PredictTicket, ShardStats};
+use super::serve::{
+    is_overloaded, BatchWindow, Counters, ModelHandle, ModelSlot, PredictTicket, Prediction,
+    Redemption, ShardStats,
+};
 use super::ApncModel;
-use anyhow::Result;
+use anyhow::{anyhow, ensure, Result};
+
+/// One supervised shard: the current generation's handle, the generation
+/// counter (bumped per respawn, and part of the respawned thread's name),
+/// and the counters that survive respawns.
+struct ShardSlot {
+    /// current generation's handle; replaced under the write lock by
+    /// [`Inner::heal`]
+    handle: RwLock<ModelHandle>,
+    /// respawn generation (0 = the original thread)
+    gen: AtomicUsize,
+    /// cross-respawn counters: every generation of this shard records
+    /// into the same cells
+    stats: Arc<Counters>,
+}
+
+/// Shared state behind every clone of a [`ShardedHandle`].
+struct Inner {
+    /// never empty ([`ShardedHandle::start`] clamps to >= 1 shard)
+    shards: Vec<ShardSlot>,
+    /// round-robin cursor, shared by all clones
+    next: AtomicUsize,
+    /// the one epoch-tagged publication slot all shards read
+    slot: Arc<ModelSlot>,
+    /// coalescing window a respawned shard inherits
+    window: BatchWindow,
+    /// backlog bound a respawned shard inherits (0 = unbounded)
+    queue_limit: usize,
+    /// feature dimensionality (stable across swaps and respawns)
+    d: usize,
+    /// shards respawned by supervision so far
+    respawns: AtomicUsize,
+    /// recorded causes of death, in heal order ("<thread name>: <cause>")
+    failures: Mutex<Vec<String>>,
+    /// set by [`ShardedHandle::shutdown`]: disarms the healer so an
+    /// explicit shutdown stays down
+    shutdown: AtomicBool,
+}
+
+impl Inner {
+    /// Current handle for shard `i` (a clone — the slot may be healed
+    /// concurrently, so callers never hold a reference into it).
+    fn shard_handle(&self, i: usize) -> ModelHandle {
+        self.shards[i].handle.read().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    /// Supervision: shard `i` was observed dead. Record its cause of
+    /// death, respawn it from the shared publication slot (same model,
+    /// same epoch, same counters), and return the fresh handle. Re-checks
+    /// liveness under the write lock so concurrent observers of the same
+    /// death heal it exactly once; declines entirely after an explicit
+    /// front-end shutdown.
+    fn heal(&self, i: usize) -> ModelHandle {
+        let slot = &self.shards[i];
+        let mut guard = slot.handle.write().unwrap_or_else(|p| p.into_inner());
+        if guard.is_alive() || self.shutdown.load(Ordering::SeqCst) {
+            return guard.clone();
+        }
+        let cause = guard.death_cause();
+        self.failures
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(format!("{}: {cause:#}", guard.name()));
+        let gen = slot.gen.fetch_add(1, Ordering::Relaxed) + 1;
+        match ModelHandle::start_shard(
+            self.slot.clone(),
+            &format!("apnc-model-shard-{i}r{gen}"),
+            self.window,
+            self.queue_limit,
+            slot.stats.clone(),
+        ) {
+            Ok(fresh) => {
+                self.respawns.fetch_add(1, Ordering::Relaxed);
+                *guard = fresh.clone();
+                fresh
+            }
+            // a thread could not be spawned: leave the dead handle in
+            // place — callers keep surfacing the recorded cause
+            Err(_) => guard.clone(),
+        }
+    }
+}
 
 /// Cloneable handle to a sharded serving front-end. Clones share the
 /// shard set *and* the round-robin cursor, so traffic from every clone
 /// spreads over all shards.
 #[derive(Clone)]
 pub struct ShardedHandle {
-    /// never empty ([`ShardedHandle::start`] clamps to >= 1 shard)
-    shards: Arc<Vec<ModelHandle>>,
-    next: Arc<AtomicUsize>,
+    inner: Arc<Inner>,
 }
 
 impl ShardedHandle {
@@ -74,27 +178,118 @@ impl ShardedHandle {
         n_shards: usize,
         window: BatchWindow,
     ) -> Result<ShardedHandle> {
-        let n = n_shards.max(1);
-        // one model in memory behind one publication slot, N serving
-        // threads (see the module docs)
-        let slot = super::serve::ModelSlot::new(Arc::new(model));
-        let shards = (0..n)
-            .map(|i| {
-                ModelHandle::start_shard(slot.clone(), &format!("apnc-model-shard-{i}"), window)
-            })
-            .collect::<Result<Vec<_>>>()?;
-        Ok(ShardedHandle { shards: Arc::new(shards), next: Arc::new(AtomicUsize::new(0)) })
+        Self::start_bounded(model, n_shards, window, 0)
     }
 
-    /// Round-robin pick of the shard serving the next request.
-    fn route(&self) -> &ModelHandle {
-        &self.shards[self.next.fetch_add(1, Ordering::Relaxed) % self.shards.len()]
+    /// Like [`ShardedHandle::start_with`], with a per-shard backlog
+    /// bound: while `queue_limit > 0` requests are queued on a shard, new
+    /// submissions routed to it are rejected with
+    /// [`crate::model::serve::Overloaded`] instead of growing the queue
+    /// ([`ApncModel::serve_sharded_bounded`] is the usual entry point).
+    pub fn start_bounded(
+        model: ApncModel,
+        n_shards: usize,
+        window: BatchWindow,
+        queue_limit: usize,
+    ) -> Result<ShardedHandle> {
+        let n = n_shards.max(1);
+        let d = model.d();
+        // one model in memory behind one publication slot, N serving
+        // threads (see the module docs)
+        let slot = ModelSlot::new(Arc::new(model));
+        let shards = (0..n)
+            .map(|i| {
+                let stats = Arc::new(Counters::default());
+                let handle = ModelHandle::start_shard(
+                    slot.clone(),
+                    &format!("apnc-model-shard-{i}"),
+                    window,
+                    queue_limit,
+                    stats.clone(),
+                )?;
+                Ok(ShardSlot { handle: RwLock::new(handle), gen: AtomicUsize::new(0), stats })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardedHandle {
+            inner: Arc::new(Inner {
+                shards,
+                next: AtomicUsize::new(0),
+                slot,
+                window,
+                queue_limit,
+                d,
+                respawns: AtomicUsize::new(0),
+                failures: Mutex::new(Vec::new()),
+                shutdown: AtomicBool::new(false),
+            }),
+        })
+    }
+
+    /// Round-robin pick of the shard index serving the next request.
+    fn route_index(&self) -> usize {
+        self.inner.next.fetch_add(1, Ordering::Relaxed) % self.inner.shards.len()
+    }
+
+    fn validate(&self, x: &Arc<[f32]>, rows: &Range<usize>) -> Result<()> {
+        ensure!(
+            x.len() % self.inner.d == 0,
+            "shared batch length {} is not a multiple of the served dimensionality d = {}",
+            x.len(),
+            self.inner.d
+        );
+        let total = x.len() / self.inner.d;
+        ensure!(
+            rows.start <= rows.end && rows.end <= total,
+            "row range {}..{} out of bounds for a {total}-row batch",
+            rows.start,
+            rows.end
+        );
+        Ok(())
+    }
+
+    /// Admission with routing-around-failures: route to the next shard;
+    /// a dead shard is healed and the probe moves on. Input is assumed
+    /// validated, so any submit error here is a shard-lifecycle error —
+    /// except [`crate::model::serve::Overloaded`], which is returned
+    /// immediately: shedding is back-pressure for the *caller* to absorb
+    /// (retry with backoff, see [`DriveOpts`]), not a fault to route
+    /// around, and bouncing it to a sibling would defeat the bound.
+    fn submit(
+        &self,
+        x: &Arc<[f32]>,
+        rows: Range<usize>,
+        chunk_rows: usize,
+    ) -> Result<(usize, PredictTicket)> {
+        let n = self.inner.shards.len();
+        let mut last_err = None;
+        // two sweeps: one probe can race a concurrent heal, a second
+        // sweep then lands on the respawned thread
+        for _ in 0..(2 * n) {
+            let i = self.route_index();
+            let mut h = self.inner.shard_handle(i);
+            if !h.is_alive() {
+                h = self.inner.heal(i);
+            }
+            match h.predict_async(x, rows.clone(), chunk_rows) {
+                Ok(t) => return Ok((i, t)),
+                Err(e) => {
+                    if is_overloaded(&e) {
+                        return Err(e);
+                    }
+                    // died between the liveness probe and the send (or
+                    // shutdown / failed respawn): heal and move on
+                    self.inner.heal(i);
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| anyhow!("no live shard accepted the request")))
     }
 
     /// Predict labels for `x` (`(rows, d)` row-major) on the next shard
     /// in round-robin order, with the default chunking.
     pub fn predict(&self, x: &[f32]) -> Result<Vec<u32>> {
-        self.route().predict(x)
+        self.predict_batch(x, 0)
     }
 
     /// Predict labels for `x` in server-side chunks of `chunk_rows`
@@ -102,111 +297,316 @@ impl ShardedHandle {
     /// round-robin order. Copies the borrowed slice once; prefer
     /// [`ShardedHandle::predict_shared`] on the hot path.
     pub fn predict_batch(&self, x: &[f32], chunk_rows: usize) -> Result<Vec<u32>> {
-        self.route().predict_batch(x, chunk_rows)
+        ensure!(
+            x.len() % self.inner.d == 0,
+            "input length {} is not a multiple of the served dimensionality d = {}",
+            x.len(),
+            self.inner.d
+        );
+        let rows = x.len() / self.inner.d;
+        self.predict_shared(&Arc::from(x), 0..rows, chunk_rows)
     }
 
     /// Zero-copy prediction of rows `rows` of the shared batch `x` on the
     /// next shard in round-robin order (see
-    /// [`ModelHandle::predict_shared`]).
+    /// [`ModelHandle::predict_shared`]), with transparent fail-over if
+    /// the serving shard dies mid-request.
     pub fn predict_shared(
         &self,
         x: &Arc<[f32]>,
         rows: Range<usize>,
         chunk_rows: usize,
     ) -> Result<Vec<u32>> {
-        self.route().predict_shared(x, rows, chunk_rows)
+        Ok(self.predict_async(x, rows, chunk_rows)?.wait()?.labels)
     }
 
     /// Submit a prediction to the next shard in round-robin order without
-    /// blocking; redeem the returned [`PredictTicket`] by
-    /// [`PredictTicket::poll`] or [`PredictTicket::wait`]. One client
-    /// thread can keep requests in flight on every shard at once — the
-    /// non-blocking fan-out the one-thread-per-call sync API cannot do.
+    /// blocking; redeem the returned [`ShardedTicket`] by
+    /// [`ShardedTicket::poll`], [`ShardedTicket::wait`], or
+    /// [`ShardedTicket::wait_timeout`]. One client thread can keep
+    /// requests in flight on every shard at once — and if a shard dies
+    /// with a ticket's request in flight, redemption transparently fails
+    /// the request over to a live shard (bounded retries; responses stay
+    /// exactly-once because the dead shard's reply channel died with it).
     pub fn predict_async(
         &self,
         x: &Arc<[f32]>,
         rows: Range<usize>,
         chunk_rows: usize,
-    ) -> Result<PredictTicket> {
-        self.route().predict_async(x, rows, chunk_rows)
+    ) -> Result<ShardedTicket> {
+        self.validate(x, &rows)?;
+        let (shard, inner) = self.submit(x, rows.clone(), chunk_rows)?;
+        Ok(ShardedTicket {
+            inner: Some(inner),
+            handle: self.clone(),
+            x: x.clone(),
+            rows,
+            chunk_rows,
+            shard,
+            // any live shard answers identically, so one fail-over
+            // normally suffices; budget one probe per shard anyway
+            retries_left: 1 + self.inner.shards.len(),
+        })
     }
 
     /// Hot-swap the served model behind **all** shards at once and return
-    /// its epoch. Every shard reads the same publication slot, loaded
-    /// once per coalesced batch: no request is dropped, each batch is
-    /// served entirely by one model, and every
+    /// its epoch. Every shard — including any respawned later — reads the
+    /// same publication slot, loaded once per coalesced batch: no request
+    /// is dropped, each batch is served entirely by one model, and every
     /// [`crate::model::serve::Prediction::epoch`] names which one. The
     /// replacement must expect the same feature dimensionality `d` as the
     /// model the front-end started with.
     pub fn swap(&self, model: Arc<ApncModel>) -> Result<u64> {
-        self.shards[0].swap(model)
+        self.inner.slot.swap(model)
     }
 
     /// Epoch of the currently published model (0 until the first swap).
     pub fn epoch(&self) -> u64 {
-        self.shards[0].epoch()
+        self.inner.slot.load().1
     }
 
-    /// Gracefully stop every shard (see [`ModelHandle::shutdown`]).
-    /// Subsequent requests on any clone fail with the recorded cause.
+    /// Gracefully stop every shard (see [`ModelHandle::shutdown`]) and
+    /// disarm the healer: an explicit shutdown stays down, and subsequent
+    /// requests on any clone fail with the recorded cause.
     pub fn shutdown(&self) {
-        for shard in self.shards.iter() {
-            shard.shutdown();
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        for i in 0..self.inner.shards.len() {
+            self.inner.shard_handle(i).shutdown();
         }
     }
 
     /// Number of shards behind this handle.
     pub fn shard_count(&self) -> usize {
-        self.shards.len()
+        self.inner.shards.len()
     }
 
-    /// Direct handle to shard `i` (for lifecycle control — e.g.
-    /// [`ModelHandle::shutdown`] — and per-shard introspection).
-    pub fn shard(&self, i: usize) -> &ModelHandle {
-        &self.shards[i]
+    /// Handle to the current generation of shard `i` (for per-shard
+    /// introspection and chaos injection — e.g.
+    /// [`ModelHandle::inject_crash`]). A clone, not a reference: the slot
+    /// may be healed behind it, after which the clone refers to the dead
+    /// generation.
+    pub fn shard(&self, i: usize) -> ModelHandle {
+        self.inner.shard_handle(i)
     }
 
-    /// Rows successfully served so far, per shard.
+    /// Shards respawned by supervision so far (all generations, all
+    /// shards).
+    pub fn respawns(&self) -> usize {
+        self.inner.respawns.load(Ordering::Relaxed)
+    }
+
+    /// Recorded shard deaths, in heal order: `"<thread name>: <cause>"`.
+    /// A supervised respawn never swallows the cause — post-mortems read
+    /// it here even though clients saw only healed traffic.
+    pub fn failures(&self) -> Vec<String> {
+        self.inner.failures.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    /// Rows successfully served so far, per shard (cumulative across
+    /// respawned generations of each shard).
     pub fn per_shard_rows(&self) -> Vec<usize> {
-        self.shards.iter().map(|s| s.rows_served()).collect()
+        (0..self.inner.shards.len()).map(|i| self.inner.shard_handle(i).rows_served()).collect()
     }
 
     /// Serving-side counters per shard (requests, fused batches, rows):
     /// `batches < requests` on a shard means its coalescing window fused
-    /// traffic.
+    /// traffic. Counters survive supervised respawns.
     pub fn per_shard_stats(&self) -> Vec<ShardStats> {
-        self.shards.iter().map(|s| s.stats()).collect()
+        (0..self.inner.shards.len()).map(|i| self.inner.shard_handle(i).stats()).collect()
     }
 
     /// Feature dimensionality the served model expects.
     pub fn d(&self) -> usize {
-        self.shards[0].d()
+        self.inner.d
     }
 
     /// Embedding dimensionality of the served model.
     pub fn m(&self) -> usize {
-        self.shards[0].m()
+        self.inner.slot.load().0.m()
     }
 
     /// Cluster count of the served model.
     pub fn k(&self) -> usize {
-        self.shards[0].k()
+        self.inner.slot.load().0.k()
+    }
+}
+
+/// One in-flight prediction on the sharded front-end. Mirrors
+/// [`PredictTicket`] ([`ShardedTicket::poll`] / [`ShardedTicket::wait`] /
+/// [`ShardedTicket::wait_timeout`], result yielded exactly once), plus
+/// transparent fail-over: if the serving shard dies before answering,
+/// redemption heals it and resubmits the request to a live shard —
+/// bounded by a per-ticket retry budget, after which the death surfaces
+/// with its recorded cause. Resubmission cannot duplicate a response (the
+/// dead shard's reply channel is gone) and predictions are deterministic,
+/// so the fail-over is invisible in the result stream.
+pub struct ShardedTicket {
+    /// `None` once the result has been yielded (the ticket is spent)
+    inner: Option<PredictTicket>,
+    handle: ShardedHandle,
+    /// the request, retained for resubmission (shared `Arc`: a fail-over
+    /// clones a pointer, not the batch)
+    x: Arc<[f32]>,
+    rows: Range<usize>,
+    chunk_rows: usize,
+    /// shard currently holding the request
+    shard: usize,
+    retries_left: usize,
+}
+
+impl ShardedTicket {
+    /// The serving shard died before answering: heal it and resubmit to
+    /// a live shard, or surface the cause once the retry budget is spent.
+    fn fail_over(&mut self, cause: anyhow::Error) -> Result<()> {
+        if self.retries_left == 0 {
+            return Err(cause.context("shard died mid-request and the fail-over budget is spent"));
+        }
+        self.retries_left -= 1;
+        self.handle.inner.heal(self.shard);
+        let (shard, ticket) = self
+            .handle
+            .submit(&self.x, self.rows.clone(), self.chunk_rows)
+            .map_err(|e| e.context("fail-over resubmission after a shard death"))?;
+        self.shard = shard;
+        self.inner = Some(ticket);
+        Ok(())
+    }
+
+    /// Non-blocking check: `None` while the prediction is still in
+    /// flight; `Some(result)` exactly once when it lands. A shard death
+    /// observed here triggers fail-over and keeps the ticket in flight.
+    pub fn poll(&mut self) -> Option<Result<Prediction>> {
+        loop {
+            let ticket = self.inner.as_mut()?;
+            // zero timeout: recv_timeout degenerates to try_recv
+            match ticket.redeem_within(Some(Duration::ZERO)) {
+                Redemption::Ready(r) => {
+                    self.inner = None;
+                    return Some(r);
+                }
+                Redemption::TimedOut => return None,
+                Redemption::Died(cause) => {
+                    if let Err(e) = self.fail_over(cause) {
+                        self.inner = None;
+                        return Some(Err(e));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Block until the prediction lands, failing over past shard deaths.
+    pub fn wait(mut self) -> Result<Prediction> {
+        loop {
+            let Some(ticket) = self.inner.as_mut() else {
+                return Err(anyhow!("predict ticket already redeemed"));
+            };
+            match ticket.redeem_within(None) {
+                Redemption::Ready(r) => {
+                    self.inner = None;
+                    return r;
+                }
+                Redemption::TimedOut => unreachable!("no deadline, no timeout"),
+                Redemption::Died(cause) => {
+                    if let Err(e) = self.fail_over(cause) {
+                        self.inner = None;
+                        return Err(e);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Block at most `timeout` for the prediction. `None` means the
+    /// deadline expired with the request still in flight — the ticket is
+    /// *not* spent, and a later redemption can still claim the result (a
+    /// deadline bounds the client's patience, it does not cancel the
+    /// request). Shard deaths within the window are failed over.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Option<Result<Prediction>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let Some(ticket) = self.inner.as_mut() else {
+                return Some(Err(anyhow!("predict ticket already redeemed")));
+            };
+            let left = deadline.saturating_duration_since(Instant::now());
+            match ticket.redeem_within(Some(left)) {
+                Redemption::Ready(r) => {
+                    self.inner = None;
+                    return Some(r);
+                }
+                Redemption::TimedOut => return None,
+                Redemption::Died(cause) => {
+                    if let Err(e) = self.fail_over(cause) {
+                        self.inner = None;
+                        return Some(Err(e));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Whether the result has already been yielded.
+    pub fn is_spent(&self) -> bool {
+        self.inner.is_none()
+    }
+}
+
+/// Client-side driving policy for [`drive_clients_opts`]: concurrency,
+/// per-request deadline, and the backoff schedule for
+/// [`crate::model::serve::Overloaded`] rejections.
+#[derive(Clone, Copy, Debug)]
+pub struct DriveOpts {
+    /// concurrent clients (cloned handles); clamped to >= 1
+    pub clients: usize,
+    /// requests per client
+    pub requests: usize,
+    /// rows per request (slices of the shared batch); clamped to >= 1
+    pub batch_rows: usize,
+    /// per-request deadline: an expired wait is counted in
+    /// [`DriveReport::deadline_expiries`] and the ticket redeemed with a
+    /// follow-up wait (the request is never lost, the client just
+    /// stopped waiting). `None` waits indefinitely.
+    pub deadline: Option<Duration>,
+    /// submission retries an overloaded shard is given before the driver
+    /// gives up on the request
+    pub max_retries: usize,
+    /// initial backoff after an `Overloaded` rejection; doubles per
+    /// retry, capped at 50ms
+    pub backoff: Duration,
+}
+
+impl Default for DriveOpts {
+    fn default() -> DriveOpts {
+        DriveOpts {
+            clients: 1,
+            requests: 1,
+            batch_rows: 128,
+            deadline: None,
+            max_retries: 10,
+            backoff: Duration::from_micros(200),
+        }
     }
 }
 
 /// What [`drive_clients`] served: aggregate and per-shard row counts
 /// (the per-shard split is the delta of [`ShardedHandle::per_shard_rows`]
-/// over the drive).
+/// over the drive), plus the fault-tolerance tallies.
 #[derive(Clone, Debug)]
 pub struct DriveReport {
     /// total rows predicted across all clients and shards
     pub total_rows: usize,
     /// rows served by each shard during the drive
     pub per_shard_rows: Vec<usize>,
+    /// submissions that were shed with `Overloaded` and retried after
+    /// backoff
+    pub overload_retries: usize,
+    /// waits that outlived their deadline (each request was still served
+    /// and verified by a follow-up redemption)
+    pub deadline_expiries: usize,
 }
 
-/// Verification traffic driver shared by `repro serve` and
-/// `examples/serve_stream.rs`: `clients` concurrent clients (cloned
+/// Verification traffic driver shared by `repro serve`, `repro chaos`,
+/// and `examples/serve_stream.rs`: `clients` concurrent clients (cloned
 /// handles) each issue `requests` batched predictions over
 /// `batch_rows`-row slices of the shared batch `x` ((rows, d) row-major),
 /// round-robin with a per-client offset so requests from different
@@ -225,41 +625,93 @@ pub fn drive_clients(
     requests: usize,
     batch_rows: usize,
 ) -> DriveReport {
+    drive_clients_opts(
+        handle,
+        x,
+        d,
+        oracle,
+        DriveOpts { clients, requests, batch_rows, ..Default::default() },
+    )
+}
+
+/// [`drive_clients`] with the full [`DriveOpts`] policy: per-request
+/// deadlines and exponential backoff on
+/// [`crate::model::serve::Overloaded`] shedding. Panics if a request is
+/// lost, duplicated, wrong, or still shed after `max_retries` backoffs —
+/// this driver *is* the serving tier's acceptance check.
+pub fn drive_clients_opts(
+    handle: &ShardedHandle,
+    x: &Arc<[f32]>,
+    d: usize,
+    oracle: &[u32],
+    opts: DriveOpts,
+) -> DriveReport {
     assert!(d > 0 && x.len() % d == 0, "x must be (rows, d) row-major");
     let rows = x.len() / d;
     assert_eq!(oracle.len(), rows, "oracle must label every row of x");
     assert!(rows > 0, "need at least one row of traffic");
-    let clients = clients.max(1);
-    let batch = batch_rows.max(1);
+    let clients = opts.clients.max(1);
+    let batch = opts.batch_rows.max(1);
     let slices: Vec<Range<usize>> =
         (0..rows).step_by(batch).map(|lo| lo..(lo + batch).min(rows)).collect();
     let before = handle.per_shard_rows();
-    let total_rows = std::thread::scope(|scope| {
+    let (total_rows, overload_retries, deadline_expiries) = std::thread::scope(|scope| {
         let mut joins = Vec::new();
         for c in 0..clients {
             let h = handle.clone();
             let slices = &slices;
             let x = x.clone();
             joins.push(scope.spawn(move || {
-                let mut served = 0usize;
-                for r in 0..requests {
+                let (mut served, mut retried, mut expired) = (0usize, 0usize, 0usize);
+                for r in 0..opts.requests {
                     // offset by client, stride 1: every client sweeps
                     // every slice (a stride of `clients` would trap each
                     // client in a gcd(clients, n_slices)-sized subset)
                     let s = slices[(c + r) % slices.len()].clone();
-                    let got =
-                        h.predict_shared(&x, s.clone(), 0).expect("serving request failed");
+                    // admission with exponential backoff on shedding
+                    let mut pause = opts.backoff.max(Duration::from_micros(50));
+                    let mut attempt = 0usize;
+                    let mut ticket = loop {
+                        match h.predict_async(&x, s.clone(), 0) {
+                            Ok(t) => break t,
+                            Err(e) if is_overloaded(&e) && attempt < opts.max_retries => {
+                                attempt += 1;
+                                retried += 1;
+                                std::thread::sleep(pause);
+                                pause = (pause * 2).min(Duration::from_millis(50));
+                            }
+                            Err(e) => panic!("client {c} request {r} not admitted: {e:#}"),
+                        }
+                    };
+                    let got = match opts.deadline {
+                        None => ticket.wait().expect("serving request failed"),
+                        Some(deadline) => match ticket.wait_timeout(deadline) {
+                            Some(r) => r.expect("serving request failed"),
+                            None => {
+                                // bounded patience expired; the request
+                                // is still in flight and must land
+                                expired += 1;
+                                ticket
+                                    .wait_timeout(Duration::from_secs(60))
+                                    .expect("request lost after a deadline expiry")
+                                    .expect("serving request failed")
+                            }
+                        },
+                    };
                     assert_eq!(
-                        &got[..],
+                        &got.labels[..],
                         &oracle[s.clone()],
                         "client {c} request {r} diverged from in-memory prediction"
                     );
                     served += s.len();
                 }
-                served
+                (served, retried, expired)
             }));
         }
-        joins.into_iter().map(|j| j.join().expect("client thread panicked")).sum()
+        joins.into_iter().map(|j| j.join().expect("client thread panicked")).fold(
+            (0usize, 0usize, 0usize),
+            |acc, got| (acc.0 + got.0, acc.1 + got.1, acc.2 + got.2),
+        )
     });
     let per_shard_rows = handle
         .per_shard_rows()
@@ -267,7 +719,7 @@ pub fn drive_clients(
         .zip(&before)
         .map(|(after, before)| after - before)
         .collect();
-    DriveReport { total_rows, per_shard_rows }
+    DriveReport { total_rows, per_shard_rows, overload_retries, deadline_expiries }
 }
 
 #[cfg(test)]
@@ -337,6 +789,7 @@ mod tests {
         assert_eq!(report.total_rows, 80);
         assert_eq!(report.per_shard_rows.len(), 2);
         assert_eq!(report.per_shard_rows.iter().sum::<usize>(), 80);
+        assert_eq!((report.overload_retries, report.deadline_expiries), (0, 0));
         assert!(
             report.per_shard_rows.iter().all(|&r| r > 0),
             "both shards must see traffic: {:?}",
@@ -345,30 +798,96 @@ mod tests {
     }
 
     #[test]
-    fn dead_shard_errors_carry_the_cause_and_the_rest_keep_serving() {
+    fn crashed_shard_is_healed_and_its_cause_recorded() {
         let model = toy_model(1, 3, 6, 4, 3, 46);
         let mut rng = Pcg::seeded(47);
         let x: Vec<f32> = (0..12 * 3).map(|_| rng.normal() as f32).collect();
         let want = model.predict_batch(&x, 0).unwrap();
         let handle = model.serve_sharded(3).unwrap();
-        handle.shard(1).shutdown();
+        handle.shard(1).inject_crash("chaos kill");
         let shared: Arc<[f32]> = x.as_slice().into();
-        let (mut oks, mut errs) = (0usize, 0usize);
-        // sequential round robin from a fresh cursor: shards 0,1,2,0,1,2
-        for i in 0..6 {
-            match handle.predict_shared(&shared, 0..12, 0) {
-                Ok(labels) => {
-                    assert_eq!(labels, want, "request {i}");
-                    oks += 1;
-                }
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    assert!(msg.contains("shut down by explicit request"), "{msg}");
-                    errs += 1;
-                }
-            }
+        // every request succeeds: the kill is either routed around at
+        // admission (dead at probe time) or failed over at redemption
+        // (died with the request in flight) — never surfaced to clients
+        for i in 0..9 {
+            assert_eq!(handle.predict_shared(&shared, 0..12, 0).unwrap(), want, "request {i}");
         }
-        assert_eq!((oks, errs), (4, 2));
+        assert!(handle.respawns() >= 1, "the killed shard must be respawned");
+        let failures = handle.failures();
+        assert!(
+            failures.iter().any(|f| f.contains("apnc-model-shard-1") && f.contains("chaos kill")),
+            "the death's cause must be recorded, not swallowed: {failures:?}"
+        );
+        // the respawned generation carries a lineage-tagged thread name
+        assert!(handle.shard(1).is_alive());
+    }
+
+    #[test]
+    fn in_flight_requests_fail_over_when_their_shard_dies() {
+        let model = toy_model(1, 3, 6, 4, 3, 46);
+        let mut rng = Pcg::seeded(49);
+        let x: Vec<f32> = (0..12 * 3).map(|_| rng.normal() as f32).collect();
+        let want = model.predict_batch(&x, 0).unwrap();
+        let handle = model.serve_sharded(2).unwrap();
+        // wedge shard 0 briefly so the crash behind it lands *after* the
+        // request below is admitted — the in-flight fail-over path
+        let shard0 = handle.shard(0);
+        shard0.inject_stall(Duration::from_millis(50));
+        shard0.inject_crash("killed mid-flight");
+        let shared: Arc<[f32]> = x.as_slice().into();
+        // fresh cursor: this routes to shard 0
+        let ticket = handle.predict_async(&shared, 0..12, 0).unwrap();
+        let got = ticket.wait().expect("the request must fail over, not fail");
+        assert_eq!(got.labels, want);
+        assert!(handle.respawns() >= 1);
+        assert!(
+            handle.failures().iter().any(|f| f.contains("killed mid-flight")),
+            "{:?}",
+            handle.failures()
+        );
+    }
+
+    #[test]
+    fn respawned_shard_keeps_counters_and_serves_the_published_model() {
+        let model = toy_model(1, 3, 6, 4, 3, 54);
+        let other = toy_model(1, 3, 5, 6, 4, 55);
+        let mut rng = Pcg::seeded(57);
+        let x: Vec<f32> = (0..24 * 3).map(|_| rng.normal() as f32).collect();
+        let want_b = other.predict_batch(&x, 0).unwrap();
+        let handle = model.serve_sharded(2).unwrap();
+        let shared: Arc<[f32]> = x.as_slice().into();
+        // a round of traffic, then a swap, then a kill: the respawned
+        // shard must serve the *swapped* model (same publication slot)
+        for _ in 0..4 {
+            handle.predict_shared(&shared, 0..24, 0).unwrap();
+        }
+        let rows_before = handle.per_shard_rows()[0];
+        assert!(rows_before > 0);
+        assert_eq!(handle.swap(Arc::new(other)).unwrap(), 1);
+        handle.shard(0).inject_crash("generation 0 down");
+        for _ in 0..6 {
+            assert_eq!(handle.predict_shared(&shared, 0..24, 0).unwrap(), want_b);
+        }
+        assert!(handle.respawns() >= 1);
+        // counters are cumulative across the respawn, not reset with it
+        assert!(
+            handle.per_shard_rows()[0] > rows_before,
+            "stats must survive the respawn: {:?}",
+            handle.per_shard_rows()
+        );
+        assert_eq!(handle.epoch(), 1);
+    }
+
+    #[test]
+    fn explicit_shutdown_stays_down() {
+        let model = toy_model(1, 3, 4, 2, 2, 58);
+        let handle = model.serve_sharded(3).unwrap();
+        handle.shutdown();
+        for i in 0..6 {
+            let err = handle.predict(&[1.0, 2.0, 3.0]).unwrap_err().to_string();
+            assert!(err.contains("shut down by explicit request"), "request {i}: {err}");
+        }
+        assert_eq!(handle.respawns(), 0, "shutdown must disarm the healer");
     }
 
     #[test]
@@ -443,16 +962,5 @@ mod tests {
         // d-mismatched replacement is rejected for the whole front-end
         assert!(handle.swap(Arc::new(toy_model(1, 5, 4, 2, 2, 57))).is_err());
         assert_eq!(handle.epoch(), 1);
-    }
-
-    #[test]
-    fn shutdown_stops_every_shard_with_the_cause() {
-        let model = toy_model(1, 3, 4, 2, 2, 58);
-        let handle = model.serve_sharded(3).unwrap();
-        handle.shutdown();
-        for i in 0..6 {
-            let err = handle.predict(&[1.0, 2.0, 3.0]).unwrap_err().to_string();
-            assert!(err.contains("shut down by explicit request"), "request {i}: {err}");
-        }
     }
 }

@@ -25,6 +25,7 @@ use std::any::Any;
 use std::collections::HashMap;
 use std::ops::ControlFlow;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
@@ -66,6 +67,9 @@ pub(crate) struct ServiceCore<Req> {
     tx: mpsc::Sender<Req>,
     epitaph: Arc<Mutex<Option<String>>>,
     name: Arc<str>,
+    /// requests submitted but not yet pulled by the owner thread — the
+    /// queue depth bounded-queue admission (load shedding) reads
+    depth: Arc<AtomicUsize>,
 }
 
 // Manual impl: `#[derive(Clone)]` would wrongly require `Req: Clone`.
@@ -75,6 +79,7 @@ impl<Req> Clone for ServiceCore<Req> {
             tx: self.tx.clone(),
             epitaph: self.epitaph.clone(),
             name: self.name.clone(),
+            depth: self.depth.clone(),
         }
     }
 }
@@ -96,22 +101,31 @@ fn record_epitaph(slot: &Mutex<Option<String>>, why: String) {
 /// loop notices on its next blocking `recv`.
 pub(crate) struct Drain<'a, Req> {
     rx: &'a mpsc::Receiver<Req>,
+    depth: &'a AtomicUsize,
 }
 
 impl<Req> Drain<'_, Req> {
+    fn pulled<T>(&self, req: Option<T>) -> Option<T> {
+        if req.is_some() {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+        }
+        req
+    }
+
     /// Pull the next queued request without blocking.
     pub(crate) fn try_next(&self) -> Option<Req> {
-        self.rx.try_recv().ok()
+        self.pulled(self.rx.try_recv().ok())
     }
 
     /// Pull the next request, waiting until `deadline` if the queue is
     /// momentarily empty. Returns `None` once the deadline passes with
     /// nothing queued.
     pub(crate) fn next_before(&self, deadline: std::time::Instant) -> Option<Req> {
-        match deadline.checked_duration_since(std::time::Instant::now()) {
+        let got = match deadline.checked_duration_since(std::time::Instant::now()) {
             Some(left) if !left.is_zero() => self.rx.recv_timeout(left).ok(),
             _ => self.rx.try_recv().ok(),
-        }
+        };
+        self.pulled(got)
     }
 }
 
@@ -132,8 +146,10 @@ impl<Req: Send + 'static> ServiceCore<Req> {
     {
         let (tx, rx) = mpsc::channel::<Req>();
         let epitaph: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let depth: Arc<AtomicUsize> = Arc::new(AtomicUsize::new(0));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let ep = epitaph.clone();
+        let depth_owner = depth.clone();
         std::thread::Builder::new()
             .name(name.to_string())
             .spawn(move || {
@@ -164,7 +180,8 @@ impl<Req: Send + 'static> ServiceCore<Req> {
                 };
                 let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     while let Ok(req) = rx.recv() {
-                        let drain = Drain { rx: &rx };
+                        depth_owner.fetch_sub(1, Ordering::Relaxed);
+                        let drain = Drain { rx: &rx, depth: &depth_owner };
                         if let ControlFlow::Break(why) = handle(&mut state, req, &drain) {
                             return why;
                         }
@@ -183,13 +200,33 @@ impl<Req: Send + 'static> ServiceCore<Req> {
         ready_rx
             .recv()
             .map_err(|_| anyhow!("{name} died during startup without reporting a cause"))??;
-        Ok(ServiceCore { tx, epitaph, name: Arc::from(name) })
+        Ok(ServiceCore { tx, epitaph, name: Arc::from(name), depth })
     }
 
     /// Submit a request; a closed channel becomes the epitaph-explained
     /// death error instead of a bare disconnect.
     pub(crate) fn send(&self, req: Req) -> Result<()> {
-        self.tx.send(req).map_err(|_| self.death())
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        self.tx.send(req).map_err(|_| {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+            self.death()
+        })
+    }
+
+    /// Requests submitted but not yet pulled by the owner thread.
+    pub(crate) fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// `true` while the owner thread is still serving. Every exit path
+    /// records an epitaph, so a present epitaph is the death signal.
+    pub(crate) fn is_alive(&self) -> bool {
+        self.epitaph.lock().unwrap_or_else(|p| p.into_inner()).is_none()
+    }
+
+    /// The service thread's name (shards embed their slot + generation).
+    pub(crate) fn name(&self) -> &str {
+        &self.name
     }
 
     /// Explain why the owner thread is gone. A panicking thread drops
@@ -478,6 +515,24 @@ mod tests {
         core.send(EchoReq::Quit).unwrap();
         let err = add(&core, 1).unwrap_err().to_string();
         assert!(err.contains("quit requested"), "{err}");
+    }
+
+    #[test]
+    fn queue_depth_tracks_backlog_and_liveness() {
+        let core = echo_core();
+        assert!(core.is_alive());
+        assert_eq!(core.queue_depth(), 0);
+        // a served request drains back to zero (the reply arrives after
+        // the owner thread pulled the request off the queue)
+        assert_eq!(add(&core, 1).unwrap(), 1);
+        assert_eq!(core.queue_depth(), 0);
+        core.send(EchoReq::Quit).unwrap();
+        assert!(add(&core, 1).is_err(), "served past an explicit quit");
+        assert!(!core.is_alive());
+        // a send that fails outright must not leak queue depth
+        let before = core.queue_depth();
+        assert!(core.send(EchoReq::Quit).is_err());
+        assert_eq!(core.queue_depth(), before);
     }
 
     enum BatchReq {

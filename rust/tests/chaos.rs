@@ -1,0 +1,282 @@
+//! Engine-wide chaos harness: seeded fault injection across both tiers.
+//!
+//! The contract under test, end to end:
+//!
+//! * **Engine.** Task failures (map *and* reduce), stragglers, and retry
+//!   exhaustion are drawn deterministically from a [`ChaosPlan`] seed —
+//!   chaotic runs are bit-identical to clean runs (retries re-execute
+//!   pure tasks), chaos replays are bit-identical to each other, and an
+//!   exhausted task surfaces as a typed [`JobError`], never a panic.
+//! * **Serving.** A killed shard is healed by the front-end supervisor:
+//!   live traffic keeps verifying bit-identically against the in-memory
+//!   oracle with zero requests lost or duplicated across the respawn, the
+//!   dead shard's cause of death is recorded rather than swallowed,
+//!   bounded queues shed overload with a typed `Overloaded`, and expired
+//!   deadlines leave tickets redeemable.
+//!
+//! `APNC_CHAOS_PROB` (used by the CI chaos job) overrides the default
+//! failure/kill probabilities; values are clamped so the retry budget
+//! still makes exhaustion astronomically unlikely.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use apnc::coordinator::driver::{Pipeline, PipelineConfig};
+use apnc::embedding::{ApncCoeffs, CoeffBlock, Method};
+use apnc::kernels::Kernel;
+use apnc::mapreduce::{ChaosPlan, Engine, EngineConfig, JobError, Phase};
+use apnc::model::serve::{is_overloaded, BatchWindow};
+use apnc::model::shard::{drive_clients_opts, DriveOpts};
+use apnc::model::{ApncModel, Provenance};
+use apnc::rng::Pcg;
+use apnc::runtime::Compute;
+
+/// Chaos intensity: `APNC_CHAOS_PROB` if set (the CI chaos job exports
+/// 0.3), else `default`. Clamped to [0, 0.6] so a 24-attempt budget keeps
+/// per-task exhaustion below 0.6^24 ~ 5e-6 even at the knob's ceiling.
+fn chaos_prob(default: f64) -> f64 {
+    std::env::var("APNC_CHAOS_PROB")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(default)
+        .clamp(0.0, 0.6)
+}
+
+/// Synthetic fitted model through the public constructor (random
+/// coefficients: chaos semantics are value-independent) — the
+/// `bench_serving` pattern.
+fn synth_model(d: usize, l: usize, m: usize, k: usize, seed: u64) -> ApncModel {
+    let mut rng = Pcg::seeded(seed);
+    let blocks = vec![CoeffBlock {
+        samples: (0..l * d).map(|_| rng.normal() as f32).collect(),
+        l,
+        r_t: (0..l * m).map(|_| rng.normal() as f32 * 0.2).collect(),
+        m,
+    }];
+    let coeffs =
+        ApncCoeffs { method: Method::Nystrom, d, kernel: Kernel::Rbf { gamma: 0.3 }, blocks };
+    let centroids: Vec<f32> = (0..k * m).map(|_| rng.normal() as f32).collect();
+    ApncModel::from_parts(
+        coeffs,
+        centroids,
+        k,
+        Provenance { dataset: "chaos".into(), seed },
+        Compute::reference(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn shard_kills_under_live_traffic_lose_no_requests() {
+    let d = 8usize;
+    let model = synth_model(d, 64, 32, 6, 901);
+    let mut rng = Pcg::seeded(902);
+    let rows = 512usize;
+    let x: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32).collect();
+    let oracle = model.predict_batch(&x, 0).unwrap();
+    let shared: Arc<[f32]> = x.as_slice().into();
+    let shards = 4usize;
+    let handle = model.serve_sharded(shards).unwrap();
+    let plan = ChaosPlan {
+        shard_kill_prob: chaos_prob(0.5),
+        seed: 903,
+        ..ChaosPlan::default()
+    };
+    let stop = AtomicBool::new(false);
+    let (report, kills) = std::thread::scope(|scope| {
+        let killer = {
+            let handle = handle.clone();
+            let (plan, stop) = (&plan, &stop);
+            scope.spawn(move || {
+                // round 0 always fires (pins the respawn path even under
+                // APNC_CHAOS_PROB=0); later rounds are the seeded plan
+                handle.shard(0).inject_crash("live-traffic chaos kill");
+                let mut kills = 1usize;
+                let mut round = 1usize;
+                while !stop.load(Ordering::Relaxed) {
+                    if plan.kills_shard(round) {
+                        handle.shard(round % shards).inject_crash("live-traffic chaos kill");
+                        kills += 1;
+                    }
+                    round += 1;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                kills
+            })
+        };
+        // drive_clients_opts panics if any request is lost, duplicated,
+        // served twice, or answered with anything but the oracle labels
+        let report = drive_clients_opts(
+            &handle,
+            &shared,
+            d,
+            &oracle,
+            DriveOpts { clients: 4, requests: 50, batch_rows: 64, ..Default::default() },
+        );
+        stop.store(true, Ordering::Relaxed);
+        (report, killer.join().expect("chaos killer thread panicked"))
+    });
+    // every submitted request was served exactly once, bit-identically
+    assert_eq!(report.total_rows, 4 * 50 * 64, "requests lost under chaos");
+    assert!(kills >= 1);
+    assert!(handle.respawns() >= 1, "killed shards must be respawned");
+    assert!(
+        handle.failures().iter().any(|f| f.contains("live-traffic chaos kill")),
+        "the kill cause must be recorded: {:?}",
+        handle.failures()
+    );
+}
+
+#[test]
+fn one_dead_shard_of_eight_reports_its_cause_and_survivors_serve() {
+    let d = 6usize;
+    let model = synth_model(d, 48, 24, 5, 911);
+    let mut rng = Pcg::seeded(912);
+    let x: Vec<f32> = (0..64 * d).map(|_| rng.normal() as f32).collect();
+    let oracle = model.predict_batch(&x, 0).unwrap();
+    let shared: Arc<[f32]> = x.as_slice().into();
+    let handle = model.serve_sharded(8).unwrap();
+    handle.shard(3).inject_crash("epitaph probe: shard 3 down");
+    // four round-robin sweeps over all 8 shards: the dead shard's turns
+    // are routed around or failed over; every answer stays bit-identical
+    for i in 0..32 {
+        assert_eq!(handle.predict_shared(&shared, 0..64, 0).unwrap(), oracle, "request {i}");
+    }
+    assert!(handle.respawns() >= 1);
+    let failures = handle.failures();
+    assert!(
+        failures
+            .iter()
+            .any(|f| f.contains("apnc-model-shard-3") && f.contains("epitaph probe: shard 3 down")),
+        "the epitaph must name the dead shard and its cause, not be swallowed: {failures:?}"
+    );
+    // the respawned generation is live and serves
+    assert!(handle.shard(3).is_alive());
+}
+
+#[test]
+fn bounded_queues_shed_overload_with_a_typed_error() {
+    let d = 6usize;
+    let model = synth_model(d, 48, 24, 4, 921);
+    let mut rng = Pcg::seeded(922);
+    let x: Vec<f32> = (0..16 * d).map(|_| rng.normal() as f32).collect();
+    let oracle = model.predict_batch(&x, 0).unwrap();
+    let shared: Arc<[f32]> = x.as_slice().into();
+    let handle = model.serve_sharded_bounded(2, BatchWindow::disabled(), 2).unwrap();
+    // freeze both shards: submissions pile up against the queue bound
+    for i in 0..2 {
+        handle.shard(i).inject_stall(Duration::from_millis(400));
+    }
+    let mut accepted = Vec::new();
+    let mut shed = 0usize;
+    for _ in 0..12 {
+        match handle.predict_async(&shared, 0..16, 0) {
+            Ok(t) => accepted.push(t),
+            Err(e) => {
+                assert!(is_overloaded(&e), "shedding must be the typed Overloaded error: {e:#}");
+                shed += 1;
+            }
+        }
+    }
+    // 2 shards x limit 2: at most 4 admissions, the rest shed
+    assert!(accepted.len() <= 4, "admitted past the queue bound: {}", accepted.len());
+    assert!(shed >= 8, "a frozen bounded queue must shed: {shed}");
+    // accepted requests are never dropped — all land after the stall
+    for t in accepted {
+        assert_eq!(t.wait().unwrap().labels, oracle);
+    }
+    // and the tier recovers once the backlog drains
+    assert_eq!(handle.predict_shared(&shared, 0..16, 0).unwrap(), oracle);
+    assert_eq!(handle.respawns(), 0, "overload is back-pressure, not a death to heal");
+}
+
+#[test]
+fn expired_deadlines_leave_tickets_redeemable() {
+    let d = 6usize;
+    let model = synth_model(d, 48, 24, 4, 931);
+    let mut rng = Pcg::seeded(932);
+    let x: Vec<f32> = (0..24 * d).map(|_| rng.normal() as f32).collect();
+    let oracle = model.predict_batch(&x, 0).unwrap();
+    let shared: Arc<[f32]> = x.as_slice().into();
+    let handle = model.serve_sharded(2).unwrap();
+    // fresh cursor: the first submission routes to the stalled shard 0
+    handle.shard(0).inject_stall(Duration::from_millis(300));
+    let mut ticket = handle.predict_async(&shared, 0..24, 0).unwrap();
+    assert!(ticket.wait_timeout(Duration::from_millis(20)).is_none(), "deadline must expire");
+    assert!(!ticket.is_spent(), "an expired deadline must not spend the ticket");
+    // the request is still in flight, not cancelled: it lands and is
+    // redeemed exactly once
+    let got = ticket
+        .wait_timeout(Duration::from_secs(30))
+        .expect("request lost after a deadline expiry")
+        .unwrap();
+    assert_eq!(got.labels, oracle);
+    assert!(ticket.is_spent());
+}
+
+#[test]
+fn chaotic_pipeline_is_bit_identical_to_clean_and_replays_itself() {
+    let ds = apnc::data::registry::generate("rings", 600, 13);
+    let base = PipelineConfig {
+        method: Method::Nystrom,
+        l: 32,
+        m: 16,
+        workers: 4,
+        block_rows: 64,
+        max_iters: 6,
+        seed: 14,
+        ..Default::default()
+    };
+    let clean = Pipeline::with_compute(base.clone(), Compute::reference()).run(&ds).unwrap();
+    let mut chaotic_cfg = base;
+    chaotic_cfg.faults = ChaosPlan {
+        map_failure_prob: chaos_prob(0.4),
+        reduce_failure_prob: chaos_prob(0.4),
+        straggler_prob: 0.05,
+        straggler_delay: Duration::from_millis(1),
+        max_attempts: 24,
+        seed: 15,
+        ..ChaosPlan::default()
+    };
+    let chaotic =
+        Pipeline::with_compute(chaotic_cfg.clone(), Compute::reference()).run(&ds).unwrap();
+    // retries re-execute pure tasks: chaos must not change a single label
+    assert_eq!(chaotic.labels, clean.labels, "chaos changed the pipeline output");
+    let retries = chaotic.embed_metrics.map_retries + chaotic.cluster_metrics.map_retries;
+    assert!(retries > 0, "0.4 per-attempt failures must force retries");
+    // the chaos itself is seeded: a replay burns the exact same draws
+    let replay = Pipeline::with_compute(chaotic_cfg, Compute::reference()).run(&ds).unwrap();
+    assert_eq!(replay.labels, chaotic.labels);
+    assert_eq!(
+        (replay.embed_metrics.map_retries, replay.cluster_metrics.map_retries),
+        (chaotic.embed_metrics.map_retries, chaotic.cluster_metrics.map_retries),
+        "chaos draws must replay bit-identically"
+    );
+    assert_eq!(
+        (replay.embed_metrics.stragglers, replay.cluster_metrics.stragglers),
+        (chaotic.embed_metrics.stragglers, chaotic.cluster_metrics.stragglers),
+    );
+}
+
+#[test]
+fn exhausted_tasks_surface_as_typed_job_errors() {
+    // certain failure, bounded budget: the job returns a structured
+    // JobError naming phase/task/attempts — it does not panic
+    let engine = Engine::new(EngineConfig {
+        workers: 2,
+        faults: ChaosPlan {
+            map_failure_prob: 1.0,
+            max_attempts: 3,
+            seed: 9,
+            ..ChaosPlan::default()
+        },
+        ..Default::default()
+    });
+    let blocks = vec![1u32, 2, 3];
+    let err = engine.run_map(&blocks, |_, b, _| *b).unwrap_err();
+    assert_eq!(err, JobError { phase: Phase::Map, task_id: err.task_id, attempts: 3 });
+    assert!(err.task_id < blocks.len());
+    let msg = err.to_string();
+    assert!(msg.contains("map task") && msg.contains("3 attempts"), "{msg}");
+}

@@ -67,14 +67,14 @@ fn prop_sample_modes() {
         let l = sized(rng, case, 10, 10, n / 4);
         let blocks = random_blocks(rng, n, d, 128);
         let engine = Engine::new(EngineConfig::with_workers(4));
-        let exact = sample::run(&engine, &blocks, d, n, l, SampleMode::Exact);
+        let exact = sample::run(&engine, &blocks, d, n, l, SampleMode::Exact).unwrap();
         assert_eq!(exact.indices.len(), l.max(1));
         // indices unique + within range
         let mut sorted = exact.indices.clone();
         sorted.dedup();
         assert_eq!(sorted.len(), exact.indices.len());
         assert!(exact.indices.iter().all(|&i| (i as usize) < n));
-        let bern = sample::run(&engine, &blocks, d, n, l, SampleMode::Bernoulli);
+        let bern = sample::run(&engine, &blocks, d, n, l, SampleMode::Bernoulli).unwrap();
         // 6-sigma band around the binomial mean
         let mean = l as f64;
         let sd = (l as f64).sqrt().max(1.0);

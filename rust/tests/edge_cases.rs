@@ -182,8 +182,12 @@ fn heavy_fault_rate_still_correct() {
     let mut faulty = base;
     // 60% per-attempt failure: most tasks need several attempts (p^4 ~ 13%
     // of tasks would exhaust 4 attempts, so allow more)
-    faulty.faults =
-        apnc::mapreduce::FaultPlan { map_failure_prob: 0.6, max_attempts: 24, seed: 13 };
+    faulty.faults = apnc::mapreduce::FaultPlan {
+        map_failure_prob: 0.6,
+        max_attempts: 24,
+        seed: 13,
+        ..Default::default()
+    };
     let out = Pipeline::with_compute(faulty, Compute::reference()).run(&ds).unwrap();
     assert_eq!(out.labels, clean.labels);
     assert!(out.embed_metrics.map_retries + out.cluster_metrics.map_retries > 10);

@@ -116,6 +116,7 @@ fn nested_engine_worker_calls_are_guarded_and_deterministic() {
             let checksum: f64 = g.data().iter().sum();
             (parallel::max_threads(), checksum.to_bits())
         })
+        .unwrap()
     };
     let multi = run(4);
     for (i, (threads_seen, _)) in multi.outputs.iter().enumerate() {
@@ -148,7 +149,7 @@ fn single_reducer_keeps_the_pool() {
     }
     let _g = THREADS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     parallel::set_threads(5);
-    let run = Engine::new(EngineConfig::with_workers(4)).run(&OneGroup, &[1u32, 2, 3, 4]);
+    let run = Engine::new(EngineConfig::with_workers(4)).run(&OneGroup, &[1u32, 2, 3, 4]).unwrap();
     parallel::set_threads(0);
     assert_eq!(run.outputs, vec![5], "lone reducer must keep full pool access");
 }
