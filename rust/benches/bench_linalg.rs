@@ -7,7 +7,7 @@
 
 use apnc::bench::Bench;
 use apnc::kernels::Kernel;
-use apnc::linalg::{eigh, Matrix};
+use apnc::linalg::{eigh, eigh_rand, Matrix};
 use apnc::parallel;
 use apnc::rng::Pcg;
 use std::hint::black_box;
@@ -75,6 +75,26 @@ fn main() {
             });
             heavy.throughput(&stats, 9 * n * n * n, "flop");
         }
+    }
+    // PR-7 pairs: dense l^3 eigh vs. the randomized truncated solver at
+    // the m << l operating point it exists for (Table 3 shapes). Same
+    // matrix, same top-m target; the rand case re-seeds per iteration so
+    // every run draws the identical Gaussian panel.
+    let rand_sizes: &[usize] = if Bench::smoke() { &[1024] } else { &[1024, 4096] };
+    for &n in rand_sizes {
+        let a = random_spd(n, 8);
+        let m = 64usize;
+        parallel::set_threads(0);
+        let stats = heavy.run(&format!("eigh_rand_vs_dense_{n}_dense"), || {
+            black_box(eigh(black_box(&a)));
+        });
+        heavy.throughput(&stats, 9 * n * n * n, "flop");
+        let stats = heavy.run(&format!("eigh_rand_vs_dense_{n}_rand"), || {
+            let mut rng = Pcg::seeded(9);
+            black_box(eigh_rand(black_box(&a), m, 8, 2, &mut rng));
+        });
+        // 4 panel GEMMs at 2*n^2*s flops each dominate (s = m + oversample)
+        heavy.throughput(&stats, 8 * n * n * (m + 8), "flop");
     }
     let mut rng = Pcg::seeded(7);
     let d = 32usize;

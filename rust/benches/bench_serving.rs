@@ -43,7 +43,7 @@ fn synth_model(d: usize, l: usize, m: usize, k: usize, seed: u64) -> ApncModel {
         coeffs,
         centroids,
         k,
-        Provenance { dataset: "bench-serving".into(), seed },
+        Provenance { dataset: "bench-serving".into(), seed, eig: Default::default() },
         Compute::reference(),
     )
     .unwrap()

@@ -17,6 +17,7 @@
 
 use crate::embedding::{nystrom, stable, ApncCoeffs, Method};
 use crate::kernels::Kernel;
+use crate::linalg::{EigConfig, EigProvenance, EigSolver};
 use crate::rng::Pcg;
 use std::time::{Duration, Instant};
 
@@ -30,11 +31,20 @@ pub struct CoeffConfig {
     pub t_frac: f64,
     /// ensemble Nyström: number of blocks q
     pub ensemble_q: usize,
+    /// eigensolver policy for the Nyström whitening step (SD always
+    /// needs the full decomposition and ignores it)
+    pub eig: EigConfig,
 }
 
 impl Default for CoeffConfig {
     fn default() -> Self {
-        CoeffConfig { method: Method::Nystrom, m: 256, t_frac: 0.4, ensemble_q: 4 }
+        CoeffConfig {
+            method: Method::Nystrom,
+            m: 256,
+            t_frac: 0.4,
+            ensemble_q: 4,
+            eig: EigConfig::default(),
+        }
     }
 }
 
@@ -42,6 +52,8 @@ impl Default for CoeffConfig {
 pub struct CoeffOut {
     pub coeffs: ApncCoeffs,
     pub fit_time: Duration,
+    /// which eigensolver the fit actually used
+    pub eig: EigProvenance,
 }
 
 /// Fit `R` from the sampled points (single-reducer step).
@@ -55,19 +67,21 @@ pub fn fit(
     let l = samples.len() / d;
     assert!(l > 0, "coefficient fit on empty sample set");
     let t0 = Instant::now();
-    let coeffs = match cfg.method {
-        Method::Nystrom => nystrom::fit(samples, d, kernel, cfg.m),
+    let (coeffs, solver) = match cfg.method {
+        Method::Nystrom => nystrom::fit_with(samples, d, kernel, cfg.m, &cfg.eig, rng),
         Method::StableDist => {
+            // SD needs the *full* inverse square root of the centered
+            // kernel (Eq. 14), so the truncated solver does not apply.
             let t = ((l as f64 * cfg.t_frac).round() as usize).clamp(1, l);
-            stable::fit(samples, d, kernel, cfg.m, t, rng)
+            (stable::fit(samples, d, kernel, cfg.m, t, rng), EigSolver::Dense)
         }
         Method::EnsembleNystrom => {
             let q = cfg.ensemble_q.max(1).min(l);
             let m_per = (cfg.m / q).max(1);
-            nystrom::fit_ensemble(samples, d, kernel, m_per, q, rng)
+            nystrom::fit_ensemble_with(samples, d, kernel, m_per, q, &cfg.eig, rng)
         }
     };
-    CoeffOut { coeffs, fit_time: t0.elapsed() }
+    CoeffOut { coeffs, fit_time: t0.elapsed(), eig: EigProvenance::recorded(solver, &cfg.eig) }
 }
 
 #[cfg(test)]
@@ -100,7 +114,13 @@ mod tests {
             &s,
             4,
             Kernel::Rbf { gamma: 0.2 },
-            &CoeffConfig { method: Method::StableDist, m: 64, t_frac: 0.4, ensemble_q: 1 },
+            &CoeffConfig {
+                method: Method::StableDist,
+                m: 64,
+                t_frac: 0.4,
+                ensemble_q: 1,
+                ..Default::default()
+            },
             &mut Pcg::seeded(4),
         );
         assert_eq!(out.coeffs.method, Method::StableDist);
@@ -115,11 +135,52 @@ mod tests {
             &s,
             3,
             Kernel::Rbf { gamma: 0.3 },
-            &CoeffConfig { method: Method::EnsembleNystrom, m: 32, t_frac: 0.4, ensemble_q: 4 },
+            &CoeffConfig {
+                method: Method::EnsembleNystrom,
+                m: 32,
+                t_frac: 0.4,
+                ensemble_q: 4,
+                ..Default::default()
+            },
             &mut Pcg::seeded(6),
         );
         assert_eq!(out.coeffs.blocks.len(), 4);
         assert_eq!(out.coeffs.m(), 32);
         assert_eq!(out.coeffs.l(), 40);
+    }
+
+    #[test]
+    fn small_fits_record_dense_provenance() {
+        // default policy is Auto; at these sizes it resolves to dense and
+        // the provenance must say so (knobs zeroed)
+        let s = samples(30, 4, 7);
+        let out = fit(
+            &s,
+            4,
+            Kernel::Rbf { gamma: 0.2 },
+            &CoeffConfig { method: Method::Nystrom, m: 16, ..Default::default() },
+            &mut Pcg::seeded(8),
+        );
+        assert_eq!(out.eig, EigProvenance::default());
+    }
+
+    #[test]
+    fn randomized_policy_records_knobs() {
+        let s = samples(96, 4, 9);
+        let eig = EigConfig {
+            solver: EigSolver::Randomized,
+            oversample: 6,
+            power_iters: 1,
+        };
+        let out = fit(
+            &s,
+            4,
+            Kernel::Rbf { gamma: 0.2 },
+            &CoeffConfig { method: Method::Nystrom, m: 8, eig, ..Default::default() },
+            &mut Pcg::seeded(10),
+        );
+        assert_eq!(out.eig.solver, EigSolver::Randomized);
+        assert_eq!((out.eig.oversample, out.eig.power_iters), (6, 1));
+        assert_eq!(out.coeffs.m(), 8);
     }
 }

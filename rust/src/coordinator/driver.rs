@@ -29,6 +29,7 @@ use crate::data::registry::KernelChoice;
 use crate::data::Dataset;
 use crate::embedding::Method;
 use crate::kernels::Kernel;
+use crate::linalg::{EigConfig, EigProvenance, EigSolver};
 use crate::mapreduce::{dfs::Dfs, Engine, EngineConfig, FaultPlan, JobMetrics};
 use crate::model::{ApncModel, Provenance};
 use crate::rng::Pcg;
@@ -69,6 +70,13 @@ pub struct PipelineConfig {
     pub faults: FaultPlan,
     /// DFS replication for intermediate embeddings
     pub dfs_replication: usize,
+    /// eigensolver for the Nyström whitening step (`--eig-solver`):
+    /// `Auto` picks the randomized path when `m + eig_oversample < l/4`
+    pub eig_solver: EigSolver,
+    /// randomized eigensolver: extra sketch columns beyond m (>= 1)
+    pub eig_oversample: usize,
+    /// randomized eigensolver: subspace iterations (<= 8)
+    pub eig_power_iters: usize,
 }
 
 impl Default for PipelineConfig {
@@ -91,6 +99,9 @@ impl Default for PipelineConfig {
             kernel: None,
             faults: FaultPlan::none(),
             dfs_replication: 2,
+            eig_solver: EigSolver::Auto,
+            eig_oversample: 8,
+            eig_power_iters: 2,
         }
     }
 }
@@ -119,7 +130,18 @@ impl PipelineConfig {
         ensure!(self.block_rows > 0, "config: block_rows must be >= 1");
         ensure!(self.ensemble_q > 0, "config: ensemble_q must be >= 1");
         ensure!(self.max_iters > 0, "config: max_iters must be >= 1");
+        self.eig_config().validate()?;
         Ok(())
+    }
+
+    /// The eigensolver policy this config describes, in the form the
+    /// coefficient fit consumes.
+    pub fn eig_config(&self) -> EigConfig {
+        EigConfig {
+            solver: self.eig_solver,
+            oversample: self.eig_oversample,
+            power_iters: self.eig_power_iters,
+        }
     }
 }
 
@@ -186,6 +208,18 @@ impl PipelineConfigBuilder {
     builder_setter!(
         /// DFS replication for intermediate embeddings
         dfs_replication: usize
+    );
+    builder_setter!(
+        /// eigensolver for the Nyström whitening step (dense|rand|auto)
+        eig_solver: EigSolver
+    );
+    builder_setter!(
+        /// randomized eigensolver: extra sketch columns beyond m (>= 1)
+        eig_oversample: usize
+    );
+    builder_setter!(
+        /// randomized eigensolver: subspace iterations (<= 8)
+        eig_power_iters: usize
     );
 
     /// Override the dataset registry's kernel choice.
@@ -266,6 +300,8 @@ pub struct FitReport {
     pub sample_metrics: JobMetrics,
     pub embed_metrics: JobMetrics,
     pub cluster_metrics: JobMetrics,
+    /// which eigensolver the coefficient fit actually used
+    pub eig: EigProvenance,
 }
 
 /// The pipeline: engine + compute backend bound to a config.
@@ -339,6 +375,7 @@ impl Pipeline {
             m: cfg.m,
             t_frac: cfg.t_frac,
             ensemble_q: cfg.ensemble_q,
+            eig: cfg.eig_config(),
         };
         let fit = coeffs::fit(&sample_out.samples, ds.d, kernel, &coeff_cfg, &mut rng);
         let coeffs = fit.coeffs;
@@ -377,7 +414,7 @@ impl Pipeline {
             coeffs,
             lloyd.centroids,
             k,
-            Provenance { dataset: ds.name.clone(), seed: cfg.seed },
+            Provenance { dataset: ds.name.clone(), seed: cfg.seed, eig: fit.eig },
             self.compute.clone(),
         )?;
         let report = FitReport {
@@ -395,6 +432,7 @@ impl Pipeline {
             sample_metrics: sample_out.metrics,
             embed_metrics: embed_out.metrics,
             cluster_metrics: lloyd.metrics,
+            eig: fit.eig,
         };
         Ok((model, report))
     }
@@ -422,6 +460,7 @@ impl Pipeline {
             sample_metrics,
             embed_metrics,
             mut cluster_metrics,
+            eig: _,
         } = report;
 
         // batch self-prediction over the embeddings fit already computed
@@ -554,6 +593,10 @@ mod tests {
         assert!(PipelineConfig::builder().t_frac(1.5).build().is_err());
         assert!(PipelineConfig::builder().dfs_replication(0).build().is_err());
         assert!(PipelineConfig::builder().block_rows(0).build().is_err());
+        assert!(PipelineConfig::builder().eig_oversample(0).build().is_err());
+        assert!(PipelineConfig::builder().eig_power_iters(9).build().is_err());
+        assert!(PipelineConfig::builder().eig_power_iters(8).build().is_ok());
+        assert!(PipelineConfig::builder().eig_solver(EigSolver::Randomized).build().is_ok());
         let cfg = PipelineConfig::builder()
             .method(Method::StableDist)
             .l(96)
@@ -612,6 +655,8 @@ mod tests {
         assert_eq!(model.provenance().seed, seed);
         assert_eq!(model.d(), ds.d);
         assert_eq!(model.k(), ds.k);
+        // quick_cfg sizes resolve Auto -> dense; provenance records it
+        assert_eq!(model.provenance().eig, EigProvenance::default());
     }
 
     #[test]

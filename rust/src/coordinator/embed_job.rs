@@ -7,6 +7,13 @@
 //! artifact. Portions for the same block land on the same (simulated)
 //! node, so concatenation (Algorithm 1's final "join" map) is local —
 //! the job shuffles **zero** bytes, which tests assert.
+//!
+//! The job is eigensolver-agnostic by design: `(L, R)` pairs fitted via
+//! the randomized truncated solver ([`crate::linalg::eigh_rand`],
+//! selected by `PipelineConfig::eig_solver`) flow through the exact same
+//! broadcast/embed/concat path as dense-fitted ones — the solver choice
+//! is settled upstream in the coefficient reduce and recorded in the
+//! model's provenance, never re-examined here (pinned by a test below).
 
 use super::DataBlock;
 use crate::embedding::ApncCoeffs;
@@ -136,6 +143,36 @@ mod tests {
         )
         .unwrap();
         assert_eq!(w8.metrics.broadcast_bytes, 4 * w2.metrics.broadcast_bytes);
+    }
+
+    #[test]
+    fn rand_fitted_coeffs_embed_like_dense_fitted_ones() {
+        // coefficients from the randomized eigensolver ride the same
+        // broadcast/embed/concat path; the job must stay solver-agnostic
+        use crate::linalg::{EigConfig, EigSolver};
+        let (n, d, l, m) = (150, 4, 64, 6);
+        let mut rng = Pcg::seeded(92);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let samples: Vec<f32> = (0..l * d).map(|_| rng.normal() as f32).collect();
+        let eig = EigConfig { solver: EigSolver::Randomized, oversample: 8, power_iters: 2 };
+        let (coeffs, used) =
+            nystrom::fit_with(&samples, d, Kernel::Rbf { gamma: 0.2 }, m, &eig, &mut rng);
+        assert_eq!(used, EigSolver::Randomized);
+        let blocks = DataBlock::partition(&x, n, d, 40);
+        let engine = Engine::new(EngineConfig::with_workers(4));
+        let compute = Compute::reference();
+        let out = run(&engine, &compute, &coeffs, &blocks).unwrap();
+        assert_eq!(out.m, m);
+        assert_eq!(out.metrics.shuffle_bytes, 0);
+        let want = coeffs.embed_block(&compute, &x, n).unwrap();
+        let mut got = Vec::new();
+        for b in &out.blocks {
+            got.extend_from_slice(&b.x);
+        }
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5);
+        }
     }
 
     #[test]

@@ -9,7 +9,8 @@
 
 use super::{ApncCoeffs, CoeffBlock, Method};
 use crate::kernels::Kernel;
-use crate::linalg::ops::whitening_transform;
+use crate::linalg::ops::whitening_transform_with;
+use crate::linalg::{EigConfig, EigSolver};
 use crate::rng::Pcg;
 
 /// Relative eigenvalue cutoff: kernel matrices over near-duplicate samples
@@ -21,14 +22,34 @@ pub const EIG_EPS: f64 = 1e-10;
 /// Fit Nyström coefficients from the sampled points (Algorithm 3 reduce).
 ///
 /// `samples`: (l, d) row-major. `m` is capped at `l` (the whitening
-/// transform cannot produce more directions than samples).
+/// transform cannot produce more directions than samples). Always uses
+/// the exact dense eigensolver; see [`fit_with`] for the policy-driven
+/// variant.
 pub fn fit(samples: &[f32], d: usize, kernel: Kernel, m: usize) -> ApncCoeffs {
+    // the dense policy never draws from the RNG, so a throwaway is fine
+    fit_with(samples, d, kernel, m, &EigConfig::dense(), &mut Pcg::seeded(0)).0
+}
+
+/// [`fit`] with an eigensolver selection policy: the whitening step runs
+/// either the dense O(l³) decomposition or the randomized truncated
+/// O(l² (m+p)) one ([`crate::linalg::eigh_rand`]) per `eig.resolved(l, m)`.
+/// Returns the coefficients and the solver that actually ran. Only the
+/// randomized resolution draws from `rng` (the Gaussian test matrix), so
+/// dense-resolved fits are byte-identical to [`fit`].
+pub fn fit_with(
+    samples: &[f32],
+    d: usize,
+    kernel: Kernel,
+    m: usize,
+    eig: &EigConfig,
+    rng: &mut Pcg,
+) -> (ApncCoeffs, EigSolver) {
     assert!(d > 0 && samples.len() % d == 0);
     let l = samples.len() / d;
     assert!(l > 0, "empty sample set");
     let m = m.min(l).max(1);
     let k_ll = kernel.gram(samples, d);
-    let r = whitening_transform(&k_ll, m, EIG_EPS); // (m, l), f64
+    let (r, solver) = whitening_transform_with(&k_ll, m, EIG_EPS, eig, rng); // (m, l), f64
     // store transposed in f32 for the runtime ABI
     let mut r_t = vec![0.0f32; l * m];
     for i in 0..m {
@@ -36,12 +57,13 @@ pub fn fit(samples: &[f32], d: usize, kernel: Kernel, m: usize) -> ApncCoeffs {
             r_t[j * m + i] = r[(i, j)] as f32;
         }
     }
-    ApncCoeffs {
+    let coeffs = ApncCoeffs {
         method: Method::Nystrom,
         d,
         kernel,
         blocks: vec![CoeffBlock { samples: samples.to_vec(), l, r_t, m }],
-    }
+    };
+    (coeffs, solver)
 }
 
 /// Ensemble Nyström (the extension sketched at the end of Section 6):
@@ -58,6 +80,21 @@ pub fn fit_ensemble(
     q: usize,
     rng: &mut Pcg,
 ) -> ApncCoeffs {
+    fit_ensemble_with(samples, d, kernel, m_per_block, q, &EigConfig::dense(), rng).0
+}
+
+/// [`fit_ensemble`] with an eigensolver selection policy applied to each
+/// per-block fit (the policy resolves against the *block* size `l/q`).
+/// The reported solver is `Randomized` if any block used it.
+pub fn fit_ensemble_with(
+    samples: &[f32],
+    d: usize,
+    kernel: Kernel,
+    m_per_block: usize,
+    q: usize,
+    eig: &EigConfig,
+    rng: &mut Pcg,
+) -> (ApncCoeffs, EigSolver) {
     assert!(q >= 1);
     let l = samples.len() / d;
     assert!(l >= q, "need at least one sample per ensemble block");
@@ -66,6 +103,7 @@ pub fn fit_ensemble(
     let scale = 1.0 / (q as f64).sqrt();
     let per = l / q;
     let mut blocks = Vec::with_capacity(q);
+    let mut solver = EigSolver::Dense;
     for b in 0..q {
         let lo = b * per;
         let hi = if b + 1 == q { l } else { lo + per };
@@ -74,14 +112,17 @@ pub fn fit_ensemble(
             .iter()
             .flat_map(|&i| samples[i * d..(i + 1) * d].iter().copied())
             .collect();
-        let single = fit(&sub, d, kernel, m_per_block);
+        let (single, used) = fit_with(&sub, d, kernel, m_per_block, eig, rng);
+        if used == EigSolver::Randomized {
+            solver = EigSolver::Randomized;
+        }
         let mut blk = single.blocks.into_iter().next().unwrap();
         for v in &mut blk.r_t {
             *v = (*v as f64 * scale) as f32;
         }
         blocks.push(blk);
     }
-    ApncCoeffs { method: Method::EnsembleNystrom, d, kernel, blocks }
+    (ApncCoeffs { method: Method::EnsembleNystrom, d, kernel, blocks }, solver)
 }
 
 #[cfg(test)]

@@ -14,11 +14,17 @@
 //! * [`chol`] — Cholesky factorization and SPD solves
 //! * [`ops`] — centering, inverse-sqrt, pseudo-inverse helpers used by the
 //!   Nyström (Eq. 9) and stable-distribution (Eq. 14–15) derivations
+//! * [`eigh_rand()`] — randomized truncated eigendecomposition
+//!   (Halko–Tropp range finder + subspace iteration + small exact solve),
+//!   O(l² (m+p)) instead of O(l³), same bit-identical-across-threads
+//!   contract; [`EigSolver`]/[`EigConfig`] select between the two paths
 
 pub mod chol;
 pub mod eigh;
 pub mod matrix;
 pub mod ops;
+pub mod randeig;
 
 pub use eigh::{eigh, Eigh};
 pub use matrix::Matrix;
+pub use randeig::{eigh_rand, EigConfig, EigProvenance, EigSolver};

@@ -7,7 +7,9 @@
 
 use super::eigh::eigh;
 use super::matrix::Matrix;
+use super::randeig::{eigh_rand, EigConfig, EigSolver};
 use crate::parallel;
+use crate::rng::Pcg;
 
 /// Double-center a square matrix: `H A H` with `H = I - (1/n) e e^T`
 /// (paper Algorithm 4, line 8). Computed in O(n^2) via row/column/grand
@@ -85,6 +87,53 @@ pub fn whitening_transform(a: &Matrix, m: usize, eps: f64) -> Matrix {
         }
     });
     r
+}
+
+/// [`whitening_transform`] with an eigensolver selection policy: the
+/// `Dense` resolution runs the *identical* full-decomposition code path
+/// (byte-equal to calling [`whitening_transform`] directly, no RNG
+/// draws); the `Randomized` resolution computes only the leading
+/// eigenpairs via [`eigh_rand`] — O(l² (m+p)) instead of O(l³) — and
+/// builds `R` from them with the same cutoff semantics. Returns the
+/// transform and the solver that actually ran.
+pub fn whitening_transform_with(
+    a: &Matrix,
+    m: usize,
+    eps: f64,
+    eig: &EigConfig,
+    rng: &mut Pcg,
+) -> (Matrix, EigSolver) {
+    let n = a.rows();
+    let m = m.min(n);
+    match eig.resolved(n, m) {
+        EigSolver::Randomized => {
+            let dec = eigh_rand(a, m, eig.oversample, eig.power_iters, rng);
+            // dec: ascending values, matching columns. R's rows descend
+            // (row 0 = largest eigenvalue), like the dense path.
+            let max_eig = dec.values.last().copied().expect("m >= 1").max(0.0);
+            let cutoff = eps * max_eig;
+            let mut r = Matrix::zeros(m, n);
+            let rpc = parallel::chunk_rows(m, n);
+            let dec_ref = &dec;
+            parallel::par_chunks_mut(r.data_mut(), rpc * n, |chunk_idx, rrows| {
+                let row0 = chunk_idx * rpc;
+                for (ri, rrow) in rrows.chunks_mut(n).enumerate() {
+                    let j = m - 1 - (row0 + ri);
+                    let lam = dec_ref.values[j];
+                    if lam > cutoff && lam > 0.0 {
+                        let s = 1.0 / lam.sqrt();
+                        for (i, o) in rrow.iter_mut().enumerate() {
+                            *o = s * dec_ref.vectors[(i, j)];
+                        }
+                    }
+                    // else: zero row, pseudo-inverse behaviour
+                }
+            });
+            (r, EigSolver::Randomized)
+        }
+        // resolved() never returns Auto; Dense keeps the exact legacy path
+        _ => (whitening_transform(a, m, eps), EigSolver::Dense),
+    }
 }
 
 /// Full inverse square root of an SPD matrix via its eigendecomposition:
@@ -193,6 +242,40 @@ mod tests {
         assert_eq!(r.shape(), (4, 10));
         let w = r.matmul(&a).matmul(&r.transpose());
         assert!(w.sub(&Matrix::identity(4)).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn whitening_with_dense_policy_is_byte_equal_to_legacy() {
+        let mut rng = Pcg::seeded(35);
+        let a = random_spd(&mut rng, 20);
+        let want = whitening_transform(&a, 6, 1e-10);
+        let mut eig_rng = Pcg::seeded(99);
+        let before = eig_rng.clone().next_u64();
+        let (got, solver) =
+            whitening_transform_with(&a, 6, 1e-10, &EigConfig::dense(), &mut eig_rng);
+        assert_eq!(solver, EigSolver::Dense);
+        assert_eq!(eig_rng.next_u64(), before, "dense path must not draw from the RNG");
+        let bits = |m: &Matrix| m.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&got), bits(&want));
+    }
+
+    #[test]
+    fn whitening_with_randomized_policy_whitens() {
+        let mut rng = Pcg::seeded(36);
+        let n = 64;
+        let a = random_spd(&mut rng, n);
+        let cfg = EigConfig {
+            solver: EigSolver::Randomized,
+            oversample: 8,
+            power_iters: 2,
+        };
+        let mut eig_rng = Pcg::seeded(100);
+        let (r, solver) = whitening_transform_with(&a, 4, 1e-10, &cfg, &mut eig_rng);
+        assert_eq!(solver, EigSolver::Randomized);
+        assert_eq!(r.shape(), (4, n));
+        // R A R^T = I on the retained subspace
+        let w = r.matmul(&a).matmul(&r.transpose());
+        assert!(w.sub(&Matrix::identity(4)).max_abs() < 1e-6);
     }
 
     #[test]

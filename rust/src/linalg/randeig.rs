@@ -1,0 +1,461 @@
+//! Randomized truncated symmetric eigendecomposition (Halko–Martinsson–
+//! Tropp Algos 4.3/4.4/5.3) — the scalable alternative to the dense
+//! [`eigh`](super::eigh::eigh) when only the leading `m ≪ l` eigenpairs
+//! of the sampled Gram matrix are needed, which is exactly the Nyström
+//! regime (paper Eq. 9: `R = Λ_m^{-1/2} V_m^T`).
+//!
+//! The algorithm: draw a Gaussian test matrix `Ω (l × s)` with
+//! `s = m + oversample` columns from the pipeline RNG, form the sample
+//! panel `Y = A Ω`, orthonormalize, run `power_iters` subspace iterations
+//! (`Y ← A Q`, re-orthonormalize after every application — the
+//! re-orthonormalized variant of Algo 4.4, which keeps the panel from
+//! collapsing onto the dominant eigenvector), then solve the small
+//! `s × s` projected problem `B = Q^T A Q` with the exact dense `eigh`
+//! and back-project the top-`m` Ritz pairs (`V = Q W`, Algo 5.3).
+//! Total cost is O(l² s) GEMM work instead of the dense solver's O(l³).
+//!
+//! ## Determinism contract
+//!
+//! Output is **bit-identical for any thread count** at a fixed RNG
+//! state, like every other routine in this module:
+//!
+//! * the Gaussian panel is filled *sequentially* from the caller's
+//!   [`Pcg`] stream (row-major order, one `normal()` per entry);
+//! * every O(l² s) product goes through [`Matrix::matmul_nt`] /
+//!   [`Matrix::matmul`], whose per-row reduction order is fixed and
+//!   whose chunk shapes depend only on the problem size;
+//! * the O(l s²) modified Gram–Schmidt panel orthonormalization is
+//!   sequential with the shared `dot4` reduction order;
+//! * the s × s projected solve reuses the deterministic parallel
+//!   [`eigh`](super::eigh::eigh).
+//!
+//! When `m + oversample >= l` the sketch would be as large as the matrix
+//! itself, so [`eigh_rand`] falls back to the dense solver **exactly**
+//! (same bytes as selecting columns of `eigh(a)`) and consumes *no* RNG
+//! draws — callers relying on replay determinism can treat the fallback
+//! as a no-op on the stream. `rust/tests/randeig_parity.rs` pins
+//! accuracy, thread-parity, and replay; `rust/tests/edge_cases.rs` pins
+//! the fallback and the config validation rules.
+
+use super::eigh::{eigh, Eigh};
+use super::matrix::{dot4, Matrix};
+use crate::rng::Pcg;
+use anyhow::{bail, ensure, Result};
+
+/// Which eigensolver backs the sample-matrix whitening step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EigSolver {
+    /// Exact dense `tred2`/`tql2` decomposition — O(l³).
+    Dense,
+    /// Randomized truncated decomposition ([`eigh_rand`]) — O(l² (m+p)).
+    Randomized,
+    /// Pick automatically: randomized when `m + oversample < l / 4`
+    /// (the sketch is small enough to win), dense otherwise.
+    Auto,
+}
+
+impl EigSolver {
+    /// Parse a CLI value: `dense`, `rand` (or `randomized`), `auto`.
+    pub fn parse(s: &str) -> Result<EigSolver> {
+        match s {
+            "dense" => Ok(EigSolver::Dense),
+            "rand" | "randomized" => Ok(EigSolver::Randomized),
+            "auto" => Ok(EigSolver::Auto),
+            other => bail!("--eig-solver expects dense|rand|auto, got '{other}'"),
+        }
+    }
+
+    /// Stable human-readable label (also the CLI spelling).
+    pub fn label(&self) -> &'static str {
+        match self {
+            EigSolver::Dense => "dense",
+            EigSolver::Randomized => "rand",
+            EigSolver::Auto => "auto",
+        }
+    }
+
+    /// Persistence code for the model format. Only *resolved* solvers
+    /// (the one actually used for a fit) are ever stored, so `Auto` has
+    /// no code.
+    pub fn code(&self) -> u32 {
+        match self {
+            EigSolver::Dense => 0,
+            EigSolver::Randomized => 1,
+            EigSolver::Auto => unreachable!("Auto is resolved before persistence"),
+        }
+    }
+
+    /// Inverse of [`EigSolver::code`]; `None` for unknown codes.
+    pub fn from_code(code: u32) -> Option<EigSolver> {
+        match code {
+            0 => Some(EigSolver::Dense),
+            1 => Some(EigSolver::Randomized),
+            _ => None,
+        }
+    }
+}
+
+/// Eigensolver selection policy + randomized-path knobs, carried from
+/// `PipelineConfig` down to the whitening step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EigConfig {
+    /// Requested solver (possibly `Auto`).
+    pub solver: EigSolver,
+    /// Extra sketch columns beyond `m` (Halko's `p`; 5–10 is standard).
+    pub oversample: usize,
+    /// Subspace (power) iterations after the initial range pass.
+    pub power_iters: usize,
+}
+
+impl Default for EigConfig {
+    fn default() -> Self {
+        EigConfig { solver: EigSolver::Auto, oversample: 8, power_iters: 2 }
+    }
+}
+
+impl EigConfig {
+    /// The pre-existing behaviour: always the exact dense solver.
+    pub fn dense() -> Self {
+        EigConfig { solver: EigSolver::Dense, ..EigConfig::default() }
+    }
+
+    /// Validate the knobs (mirrored by `PipelineConfig::validate`).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.oversample >= 1, "eig_oversample must be >= 1 (got {})", self.oversample);
+        ensure!(
+            self.power_iters <= 8,
+            "eig_power_iters must be <= 8 (got {}); more buys nothing and costs a GEMM each",
+            self.power_iters
+        );
+        Ok(())
+    }
+
+    /// Resolve the policy for an `l × l` problem needing `m` pairs into
+    /// the solver that will actually run. `Randomized` degrades to
+    /// `Dense` when the sketch would not be smaller than the matrix
+    /// (`m + oversample >= l`); `Auto` picks `Randomized` only when the
+    /// sketch is decisively smaller (`m + oversample < l / 4`).
+    pub fn resolved(&self, l: usize, m: usize) -> EigSolver {
+        let s = m.min(l).saturating_add(self.oversample);
+        match self.solver {
+            EigSolver::Dense => EigSolver::Dense,
+            EigSolver::Randomized => {
+                if s >= l {
+                    EigSolver::Dense
+                } else {
+                    EigSolver::Randomized
+                }
+            }
+            EigSolver::Auto => {
+                if s < l / 4 {
+                    EigSolver::Randomized
+                } else {
+                    EigSolver::Dense
+                }
+            }
+        }
+    }
+}
+
+/// What solver a fit actually used — recorded in `FitReport` and
+/// persisted in the model file so served models are auditable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EigProvenance {
+    /// The resolved solver (never `Auto`).
+    pub solver: EigSolver,
+    /// Sketch oversampling actually used (0 when dense).
+    pub oversample: u32,
+    /// Power iterations actually used (0 when dense).
+    pub power_iters: u32,
+}
+
+impl Default for EigProvenance {
+    fn default() -> Self {
+        EigProvenance { solver: EigSolver::Dense, oversample: 0, power_iters: 0 }
+    }
+}
+
+impl EigProvenance {
+    /// Record a resolved solver: the randomized knobs are only
+    /// meaningful (and only stored) when the randomized path ran.
+    pub fn recorded(solver: EigSolver, cfg: &EigConfig) -> Self {
+        match solver {
+            EigSolver::Randomized => EigProvenance {
+                solver,
+                oversample: cfg.oversample as u32,
+                power_iters: cfg.power_iters as u32,
+            },
+            EigSolver::Dense => EigProvenance::default(),
+            EigSolver::Auto => unreachable!("record a resolved solver, not Auto"),
+        }
+    }
+}
+
+/// Sequential modified Gram–Schmidt over the *rows* of the transposed
+/// panel (rows are contiguous in memory, so every dot is a `dot4` over
+/// two slices). Numerically rank-deficient rows (norm underflows to 0
+/// after projection) are left as zero rows: they contribute nothing to
+/// the projected problem and their Ritz values land at ~0, below any
+/// whitening cutoff.
+fn orthonormalize_rows(p: &mut Matrix) {
+    let (s, n) = p.shape();
+    let data = p.data_mut();
+    for i in 0..s {
+        for j in 0..i {
+            let (lo, hi) = data.split_at_mut(i * n);
+            let rj = &lo[j * n..(j + 1) * n];
+            let ri = &mut hi[..n];
+            let d = dot4(ri, rj);
+            if d != 0.0 {
+                for (x, &y) in ri.iter_mut().zip(rj) {
+                    *x -= d * y;
+                }
+            }
+        }
+        let ri = &mut data[i * n..(i + 1) * n];
+        let norm = dot4(ri, ri).sqrt();
+        if norm > 0.0 {
+            let inv = 1.0 / norm;
+            for x in ri.iter_mut() {
+                *x *= inv;
+            }
+        }
+    }
+}
+
+/// Randomized truncated eigendecomposition of a symmetric matrix.
+///
+/// Returns the leading `min(m, l)` eigenpairs in the same conventions as
+/// [`eigh`](super::eigh::eigh): `values` ascending, `vectors` an
+/// `l × m` matrix with eigenvectors as *columns* (column `j` pairs with
+/// `values[j]`). Eigenvectors carry the usual sign/rotation freedom —
+/// compare subspaces, not raw columns, against the dense solver.
+///
+/// When `m + oversample >= l` the dense solver runs instead (exactly —
+/// the returned pairs are byte-equal to selecting the top columns of
+/// `eigh(a)`) and `rng` is not touched.
+///
+/// ```
+/// use apnc::linalg::{eigh_rand, Matrix};
+/// use apnc::rng::Pcg;
+///
+/// // diag(0.5^0, 0.5^1, ..): a geometrically decaying spectrum — the
+/// // shape Gram matrices have, and where the sketch converges fast.
+/// let a = Matrix::from_fn(32, 32, |r, c| if r == c { 0.5f64.powi(r as i32) } else { 0.0 });
+/// let mut rng = Pcg::seeded(7);
+/// let e = eigh_rand(&a, 4, 8, 2, &mut rng);
+/// assert_eq!(e.values.len(), 4);
+/// for (i, want) in [0.125, 0.25, 0.5, 1.0].iter().enumerate() {
+///     assert!((e.values[i] - want).abs() < 1e-9 * want);
+/// }
+/// ```
+pub fn eigh_rand(
+    a: &Matrix,
+    m: usize,
+    oversample: usize,
+    power_iters: usize,
+    rng: &mut Pcg,
+) -> Eigh {
+    assert_eq!(a.rows(), a.cols(), "eigh_rand requires a square matrix");
+    let n = a.rows();
+    let m = m.min(n);
+    if n == 0 || m == 0 {
+        return Eigh { values: vec![], vectors: Matrix::zeros(n, 0) };
+    }
+    if m + oversample >= n {
+        // Sketch would not be smaller than the matrix: exact dense
+        // fallback, bit-equal to the dense path, no RNG draws.
+        let dec = eigh(a);
+        let mut idx = dec.top_indices(m);
+        idx.reverse(); // ascending, matching the dense convention
+        let values: Vec<f64> = idx.iter().map(|&j| dec.values[j]).collect();
+        let vectors = Matrix::from_fn(n, m, |r, c| dec.vectors[(r, idx[c])]);
+        return Eigh { values, vectors };
+    }
+
+    let s = m + oversample;
+    // Kernel matrices can carry ~1e-16 asymmetry from accumulation; the
+    // algebra below assumes exact symmetry (it uses Ω^T A for (A Ω)^T).
+    let sym = a.symmetrize();
+
+    // Gaussian test matrix, stored transposed (s × l) so panel rows are
+    // contiguous. Filled sequentially: thread count cannot affect it.
+    let omega_t = Matrix::from_fn(s, n, |_, _| rng.normal());
+
+    // Range pass + subspace iterations. For symmetric A the transposed
+    // panel update is P ← P A (matmul_nt against A^T = A), orthonormalized
+    // after every application.
+    let mut q_t = omega_t.matmul_nt(&sym);
+    orthonormalize_rows(&mut q_t);
+    for _ in 0..power_iters {
+        q_t = q_t.matmul_nt(&sym);
+        orthonormalize_rows(&mut q_t);
+    }
+
+    // Projected problem: B = Q^T A Q (s × s), solved exactly.
+    let aq_t = q_t.matmul_nt(&sym); // (s × l) = Q^T A
+    let b = aq_t.matmul_nt(&q_t).symmetrize(); // (s × s)
+    let dec = eigh(&b);
+    let mut idx = dec.top_indices(m);
+    idx.reverse(); // ascending
+    let values: Vec<f64> = idx.iter().map(|&j| dec.values[j]).collect();
+
+    // Back-project the selected Ritz vectors: V^T = W^T Q^T (m × l).
+    let w_t = Matrix::from_fn(m, s, |r, c| dec.vectors[(c, idx[r])]);
+    let v_t = w_t.matmul(&q_t);
+    Eigh { values, vectors: v_t.transpose() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// SPD matrix with a prescribed (decaying) spectrum: A = V Λ V^T
+    /// where V comes from the dense eigh of a random SPD matrix.
+    fn spd_with_spectrum(n: usize, seed: u64, lambda: impl Fn(usize) -> f64) -> Matrix {
+        let mut rng = Pcg::seeded(seed);
+        let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let mut g = b.matmul_nt(&b);
+        for i in 0..n {
+            g[(i, i)] += 0.5;
+        }
+        let basis = eigh(&g).vectors; // orthonormal n × n
+        let mut scaled = basis.clone();
+        for r in 0..n {
+            for c in 0..n {
+                // column c (ascending in eigh) gets lambda(n - 1 - c) so
+                // lambda(0) is the largest prescribed value
+                scaled[(r, c)] *= lambda(n - 1 - c);
+            }
+        }
+        scaled.matmul_nt(&basis)
+    }
+
+    #[test]
+    fn recovers_decaying_spectrum() {
+        let n = 96;
+        let m = 8;
+        let a = spd_with_spectrum(n, 40, |i| 0.5f64.powi(i as i32).max(1e-12));
+        let mut rng = Pcg::seeded(41);
+        let e = eigh_rand(&a, m, 8, 2, &mut rng);
+        assert_eq!(e.values.len(), m);
+        assert_eq!(e.vectors.shape(), (n, m));
+        // values ascend and match the prescribed spectrum to high rtol
+        for (c, &v) in e.values.iter().enumerate() {
+            let want = 0.5f64.powi((m - 1 - c) as i32);
+            assert!((v - want).abs() / want < 1e-6, "c={c} got {v} want {want}");
+        }
+    }
+
+    #[test]
+    fn ritz_vectors_orthonormal() {
+        let a = spd_with_spectrum(64, 42, |i| 0.8f64.powi(i as i32).max(1e-12));
+        let mut rng = Pcg::seeded(43);
+        let e = eigh_rand(&a, 10, 8, 1, &mut rng);
+        let vtv = e.vectors.transpose().matmul(&e.vectors);
+        assert!(vtv.sub(&Matrix::identity(10)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn fallback_is_exactly_dense_and_leaves_rng_untouched() {
+        let a = spd_with_spectrum(24, 44, |i| 1.0 / (1 + i) as f64);
+        let m = 20; // m + 8 >= 24 -> dense fallback
+        let mut rng = Pcg::seeded(45);
+        let before = rng.clone().next_u64();
+        let e = eigh_rand(&a, m, 8, 2, &mut rng);
+        assert_eq!(rng.next_u64(), before, "fallback must not consume RNG draws");
+        let dense = eigh(&a);
+        let mut idx = dense.top_indices(m);
+        idx.reverse();
+        for (c, &j) in idx.iter().enumerate() {
+            assert_eq!(e.values[c].to_bits(), dense.values[j].to_bits());
+            for r in 0..24 {
+                assert_eq!(e.vectors[(r, c)].to_bits(), dense.vectors[(r, j)].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn replay_is_byte_equal() {
+        let a = spd_with_spectrum(48, 46, |i| 0.7f64.powi(i as i32).max(1e-12));
+        let run = |seed: u64| {
+            let mut rng = Pcg::seeded(seed);
+            eigh_rand(&a, 6, 8, 2, &mut rng)
+        };
+        let (e1, e2) = (run(9), run(9));
+        assert_eq!(
+            e1.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            e2.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            e1.vectors.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            e2.vectors.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn zero_sized_inputs() {
+        let a = Matrix::zeros(0, 0);
+        let mut rng = Pcg::seeded(1);
+        let e = eigh_rand(&a, 4, 8, 2, &mut rng);
+        assert!(e.values.is_empty());
+        let a = spd_with_spectrum(8, 47, |i| (i + 1) as f64);
+        let e = eigh_rand(&a, 0, 8, 2, &mut rng);
+        assert!(e.values.is_empty());
+        assert_eq!(e.vectors.shape(), (8, 0));
+    }
+
+    #[test]
+    fn solver_parse_and_labels() {
+        assert_eq!(EigSolver::parse("dense").unwrap(), EigSolver::Dense);
+        assert_eq!(EigSolver::parse("rand").unwrap(), EigSolver::Randomized);
+        assert_eq!(EigSolver::parse("randomized").unwrap(), EigSolver::Randomized);
+        assert_eq!(EigSolver::parse("auto").unwrap(), EigSolver::Auto);
+        assert!(EigSolver::parse("magic").is_err());
+        for s in [EigSolver::Dense, EigSolver::Randomized, EigSolver::Auto] {
+            assert_eq!(EigSolver::parse(s.label()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn solver_codes_roundtrip() {
+        assert_eq!(EigSolver::from_code(EigSolver::Dense.code()), Some(EigSolver::Dense));
+        assert_eq!(
+            EigSolver::from_code(EigSolver::Randomized.code()),
+            Some(EigSolver::Randomized)
+        );
+        assert_eq!(EigSolver::from_code(7), None);
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(EigConfig::default().validate().is_ok());
+        assert!(EigConfig { oversample: 0, ..EigConfig::default() }.validate().is_err());
+        assert!(EigConfig { power_iters: 9, ..EigConfig::default() }.validate().is_err());
+        assert!(EigConfig { power_iters: 8, ..EigConfig::default() }.validate().is_ok());
+    }
+
+    #[test]
+    fn auto_policy_thresholds() {
+        let auto = EigConfig::default(); // oversample 8
+        // randomized only when m + 8 < l / 4
+        assert_eq!(auto.resolved(1024, 64), EigSolver::Randomized); // 72 < 256
+        assert_eq!(auto.resolved(256, 64), EigSolver::Dense); // 72 >= 64
+        assert_eq!(auto.resolved(48, 32), EigSolver::Dense);
+        let rand = EigConfig { solver: EigSolver::Randomized, ..EigConfig::default() };
+        assert_eq!(rand.resolved(256, 64), EigSolver::Randomized); // 72 < 256
+        assert_eq!(rand.resolved(24, 20), EigSolver::Dense); // sketch >= l
+        let dense = EigConfig::dense();
+        assert_eq!(dense.resolved(1 << 20, 1), EigSolver::Dense);
+    }
+
+    #[test]
+    fn provenance_records_only_randomized_knobs() {
+        let cfg = EigConfig { solver: EigSolver::Auto, oversample: 5, power_iters: 1 };
+        let d = EigProvenance::recorded(EigSolver::Dense, &cfg);
+        assert_eq!(d, EigProvenance::default());
+        let r = EigProvenance::recorded(EigSolver::Randomized, &cfg);
+        assert_eq!(r.solver, EigSolver::Randomized);
+        assert_eq!((r.oversample, r.power_iters), (5, 1));
+    }
+}

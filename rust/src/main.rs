@@ -19,6 +19,10 @@
 //!              --threads N (persistent compute pool size, 0 = auto;
 //!                           results are identical for any value)
 //!              --iters N --n N --reference (force rust backend)
+//!              --eig-solver dense|rand|auto (Nyström whitening
+//!                           eigensolver; auto picks rand when
+//!                           m + oversample < l/4)
+//!              --eig-oversample P --eig-power-iters Q (rand solver knobs)
 //!              fit only: --out PATH (model file, default <dataset>.apncm)
 //! `predict` flags: --model PATH [--input FILE | --dataset NAME --n N]
 //!              --chunk N (rows per prediction chunk, 0 = default)
@@ -53,6 +57,7 @@ use apnc::coordinator::sample::SampleMode;
 use apnc::data::registry;
 use apnc::embedding::Method;
 use apnc::experiments::{ablate, table1, table2, table3};
+use apnc::linalg::EigSolver;
 use apnc::mapreduce::ChaosPlan;
 use apnc::model::serve::BatchWindow;
 use apnc::model::shard::{drive_clients_opts, DriveOpts};
@@ -93,6 +98,9 @@ fn pipeline_config(args: &Args) -> Result<PipelineConfig> {
         .block_rows(args.usize_or("block-rows", 1024)?)
         .seed(args.u64_or("seed", 42)?)
         .sample_mode(if args.has("bernoulli") { SampleMode::Bernoulli } else { SampleMode::Exact })
+        .eig_solver(EigSolver::parse(args.get_or("eig-solver", "auto"))?)
+        .eig_oversample(args.usize_or("eig-oversample", 8)?)
+        .eig_power_iters(args.usize_or("eig-power-iters", 2)?)
         .build()
 }
 
@@ -237,6 +245,13 @@ fn cmd_fit(args: &Args) -> Result<()> {
         "times: sample {:.2?}, coeff fit {:.2?}, embed {:.2?}, cluster {:.2?}",
         report.times.sample, report.times.coeff_fit, report.times.embed, report.times.cluster
     );
+    match report.eig.solver {
+        EigSolver::Randomized => println!(
+            "eigensolver: randomized (oversample {}, power iters {})",
+            report.eig.oversample, report.eig.power_iters
+        ),
+        _ => println!("eigensolver: dense"),
+    }
     println!("wrote {out_path} ({bytes} bytes)");
     println!("serve it with: repro predict --model {out_path} --dataset {}", ds.name);
     Ok(())

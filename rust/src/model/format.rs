@@ -6,9 +6,10 @@
 //!
 //! ```text
 //! "APNCMODL"                                magic (8 bytes, unhashed)
-//! u32 version (= 1)
+//! u32 version (= 2)
 //! u32 method code | i32 kernel code | f32 kernel params[4]
 //! u64 d | u64 k | u64 seed
+//! u32 eig solver | u32 oversample | u32 power_iters   (v2+ only)
 //! u32 name_len | dataset name (utf8)        provenance
 //! u32 q                                     coefficient block count
 //! per block: u64 l_b | u64 m_b
@@ -17,6 +18,11 @@
 //! f32 centroids[k * m]                      m = sum of m_b
 //! u64 fnv1a-64 checksum                     over all hashed bytes
 //! ```
+//!
+//! Version 2 added the eigensolver provenance triple (12 bytes after the
+//! seed). Version-1 files — written before the randomized solver existed
+//! — still load, with the provenance defaulting to the dense solver
+//! (which is what every v1 fit used).
 //!
 //! `load` rejects wrong magic, unknown versions, implausible header
 //! values, truncated payloads (any short read), checksum mismatches
@@ -29,14 +35,17 @@ use std::path::Path;
 use super::{ApncModel, Provenance};
 use crate::embedding::{ApncCoeffs, CoeffBlock, Method};
 use crate::kernels::Kernel;
+use crate::linalg::{EigProvenance, EigSolver};
 use crate::runtime::Compute;
 use anyhow::{anyhow, ensure, Context, Result};
 
 /// File magic. The version is a separate header field so readers can give
 /// a precise "unsupported version" error.
 pub const MAGIC: &[u8; 8] = b"APNCMODL";
-/// Current format version.
-pub const VERSION: u32 = 1;
+/// Current format version (v2 = v1 + eigensolver provenance).
+pub const VERSION: u32 = 2;
+/// Oldest version [`load`] still reads.
+pub const MIN_VERSION: u32 = 1;
 
 /// Header sanity caps: anything beyond these is a corrupted or hostile
 /// file, rejected before any large allocation.
@@ -223,6 +232,10 @@ fn write_payload(model: &ApncModel, path: &Path) -> Result<()> {
     w.u64(coeffs.d as u64)?;
     w.u64(model.k() as u64)?;
     w.u64(model.provenance().seed)?;
+    let eig = model.provenance().eig;
+    w.u32(eig.solver.code())?;
+    w.u32(eig.oversample)?;
+    w.u32(eig.power_iters)?;
     let name = model.provenance().dataset.as_bytes();
     w.u32(name.len() as u32)?;
     w.put(name)?;
@@ -251,7 +264,10 @@ pub fn load(path: &Path, compute: Compute) -> Result<ApncModel> {
     r.r.read_exact(&mut magic).context("reading model magic")?;
     ensure!(&magic == MAGIC, "{} is not an APNC model file", path.display());
     let version = r.u32()?;
-    ensure!(version == VERSION, "unsupported model version {version} (this build reads {VERSION})");
+    ensure!(
+        (MIN_VERSION..=VERSION).contains(&version),
+        "unsupported model version {version} (this build reads {MIN_VERSION}..={VERSION})"
+    );
     let method_code = r.u32()?;
     let method = Method::from_code(method_code)
         .ok_or_else(|| anyhow!("unknown method code {method_code}"))?;
@@ -266,6 +282,15 @@ pub fn load(path: &Path, compute: Compute) -> Result<ApncModel> {
     let k = r.u64()?;
     ensure!(k >= 1 && k <= MAX_DIM, "bad model cluster count k = {k}");
     let seed = r.u64()?;
+    let eig = if version >= 2 {
+        let code = r.u32()?;
+        let solver = EigSolver::from_code(code)
+            .ok_or_else(|| anyhow!("unknown eigensolver code {code}"))?;
+        EigProvenance { solver, oversample: r.u32()?, power_iters: r.u32()? }
+    } else {
+        // v1 predates the randomized solver: every v1 fit was dense
+        EigProvenance::default()
+    };
     let name_len = r.u32()? as usize;
     ensure!(name_len <= MAX_NAME_LEN, "unreasonable dataset name length {name_len}");
     let mut name_buf = vec![0u8; name_len];
@@ -300,7 +325,13 @@ pub fn load(path: &Path, compute: Compute) -> Result<ApncModel> {
         "trailing bytes after model payload"
     );
     let coeffs = ApncCoeffs { method, d: d as usize, kernel, blocks };
-    ApncModel::from_parts(coeffs, centroids, k as usize, Provenance { dataset, seed }, compute)
+    ApncModel::from_parts(
+        coeffs,
+        centroids,
+        k as usize,
+        Provenance { dataset, seed, eig },
+        compute,
+    )
 }
 
 #[cfg(test)]
@@ -345,7 +376,7 @@ mod tests {
             coeffs,
             vec![0.0f32; 2 * m_total],
             2,
-            Provenance { dataset: "big".into(), seed: 0 },
+            Provenance { dataset: "big".into(), seed: 0, eig: EigProvenance::default() },
             Compute::reference(),
         )
         .unwrap();
@@ -386,7 +417,7 @@ mod tests {
             coeffs,
             vec![0.0f32; 2 * m_total],
             2,
-            Provenance { dataset: "big".into(), seed: 0 },
+            Provenance { dataset: "big".into(), seed: 0, eig: EigProvenance::default() },
             Compute::reference(),
         )
         .unwrap();
@@ -467,6 +498,58 @@ mod tests {
             );
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    /// Byte offset of the v2 eigensolver triple: magic(8) + version(4) +
+    /// method(4) + kernel code(4) + params(16) + d(8) + k(8) + seed(8).
+    const EIG_OFFSET: usize = 60;
+
+    /// Recompute the trailer checksum after test-side byte surgery.
+    fn rehash(bytes: &mut Vec<u8>) {
+        let end = bytes.len() - 8;
+        let mut h = Fnv::new();
+        h.update(&bytes[8..end]);
+        let ck = h.0.to_le_bytes();
+        bytes[end..].copy_from_slice(&ck);
+    }
+
+    #[test]
+    fn loads_v1_files_with_dense_default_provenance() {
+        // back-compat: rewrite a fresh save as a version-1 file (drop the
+        // 12 eigensolver bytes, set version = 1, rehash) and load it
+        let model = toy_model(1, 3, 4, 2, 2, 18);
+        let path = tmp("v1-compat");
+        model.save(&path).unwrap();
+        let v2 = std::fs::read(&path).unwrap();
+        let mut v1 = Vec::with_capacity(v2.len() - 12);
+        v1.extend_from_slice(&v2[..8]);
+        v1.extend_from_slice(&1u32.to_le_bytes());
+        v1.extend_from_slice(&v2[12..EIG_OFFSET]);
+        v1.extend_from_slice(&v2[EIG_OFFSET + 12..]);
+        rehash(&mut v1);
+        std::fs::write(&path, &v1).unwrap();
+        let back = ApncModel::load_with(&path, Compute::reference()).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.provenance().eig, EigProvenance::default());
+        assert_eq!(back.provenance(), model.provenance());
+        assert_eq!(back.centroids(), model.centroids());
+        assert_eq!((back.d(), back.m(), back.l(), back.k()), (3, 2, 4, 2));
+    }
+
+    #[test]
+    fn rejects_unknown_eigensolver_code() {
+        // a valid checksum cannot launder a solver code this build does
+        // not know — reject with a precise error, not a silent default
+        let model = toy_model(1, 3, 4, 2, 2, 19);
+        let path = tmp("bad-solver");
+        model.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[EIG_OFFSET..EIG_OFFSET + 4].copy_from_slice(&7u32.to_le_bytes());
+        rehash(&mut bytes);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ApncModel::load_with(&path, Compute::reference()).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("unknown eigensolver code"), "{err}");
     }
 
     #[test]

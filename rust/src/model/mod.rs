@@ -39,6 +39,7 @@ use std::path::Path;
 
 use crate::embedding::{ApncCoeffs, Method};
 use crate::kernels::Kernel;
+use crate::linalg::EigProvenance;
 use crate::runtime::{Compute, DistKind};
 use anyhow::{ensure, Result};
 
@@ -53,6 +54,9 @@ pub struct Provenance {
     pub dataset: String,
     /// pipeline seed the fit ran under
     pub seed: u64,
+    /// eigensolver the coefficient fit used (dense for v1-format models,
+    /// which predate the randomized solver)
+    pub eig: EigProvenance,
 }
 
 /// A fitted APNC model: coefficients + final centroids + provenance,
@@ -319,7 +323,7 @@ mod tests {
             coeffs,
             centroids,
             k,
-            Provenance { dataset: "toy".into(), seed },
+            Provenance { dataset: "toy".into(), seed, eig: EigProvenance::default() },
             Compute::reference(),
         )
         .unwrap()

@@ -61,7 +61,7 @@ fn synth_model(d: usize, l: usize, m: usize, k: usize, seed: u64) -> ApncModel {
         coeffs,
         centroids,
         k,
-        Provenance { dataset: "chaos".into(), seed },
+        Provenance { dataset: "chaos".into(), seed, eig: Default::default() },
         Compute::reference(),
     )
     .unwrap()

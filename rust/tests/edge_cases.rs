@@ -8,6 +8,7 @@ use apnc::coordinator::DataBlock;
 use apnc::data::{registry, synth, Dataset};
 use apnc::embedding::{nystrom, Method};
 use apnc::kernels::Kernel;
+use apnc::linalg::{eigh, eigh_rand, EigConfig, EigSolver, Matrix};
 use apnc::mapreduce::{Engine, EngineConfig};
 use apnc::rng::Pcg;
 use apnc::runtime::{Compute, DistKind};
@@ -191,6 +192,87 @@ fn heavy_fault_rate_still_correct() {
     let out = Pipeline::with_compute(faulty, Compute::reference()).run(&ds).unwrap();
     assert_eq!(out.labels, clean.labels);
     assert!(out.embed_metrics.map_retries + out.cluster_metrics.map_retries > 10);
+}
+
+#[test]
+fn eigh_rand_degenerate_panel_falls_back_to_dense_exactly() {
+    // m + oversample >= l leaves no room for a sketch: the solver must
+    // hand the call to the dense path bit-for-bit and draw NOTHING from
+    // the rng (so downstream sampling stays on the dense trajectory)
+    let n = 24usize;
+    let mut rng = Pcg::seeded(21);
+    let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+    let mut a = b.matmul_nt(&b);
+    for i in 0..n {
+        a[(i, i)] += 1.0;
+    }
+    let dense = eigh(&a);
+    for m in [20usize, n] {
+        // oversample 8: m + 8 >= 24 in both cases (m == l is the extreme)
+        let mut r = Pcg::seeded(22);
+        let before = r.clone().next_u64();
+        let got = eigh_rand(&a, m, 8, 2, &mut r);
+        assert_eq!(r.next_u64(), before, "fallback consumed rng state, m={m}");
+        let want_vals: Vec<u64> = dense.values[n - m..].iter().map(|v| v.to_bits()).collect();
+        let got_vals: Vec<u64> = got.values.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got_vals, want_vals, "values not bit-equal to dense, m={m}");
+        for c in 0..m {
+            for rr in 0..n {
+                assert_eq!(
+                    got.vectors[(rr, c)].to_bits(),
+                    dense.vectors[(rr, n - m + c)].to_bits(),
+                    "vector entry ({rr},{c}) not bit-equal to dense, m={m}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn eigh_rand_survives_rank_deficient_gram() {
+    // duplicate sampled rows: K_LL has massively repeated rows (rank ~ 4
+    // for an RBF gram over 4 distinct points) — the MGS zero-norm guard
+    // must keep the sketch finite and the leading Ritz values accurate
+    let (l, d) = (48usize, 3usize);
+    let mut rng = Pcg::seeded(23);
+    let distinct: Vec<f32> = (0..4 * d).map(|_| rng.normal() as f32).collect();
+    let samples: Vec<f32> = (0..l)
+        .flat_map(|i| distinct[(i % 4) * d..(i % 4 + 1) * d].to_vec())
+        .collect();
+    let gram = Kernel::Rbf { gamma: 0.3 }.gram(&samples, d);
+    let dense = eigh(&gram);
+    let m = 6usize;
+    let got = eigh_rand(&gram, m, 8, 2, &mut Pcg::seeded(24));
+    assert!(got.values.iter().all(|v| v.is_finite()));
+    assert!(got.vectors.data().iter().all(|v| v.is_finite()));
+    // the 4 genuine eigenvalues sit at the tail of both ascending lists
+    for i in 0..4 {
+        let want = dense.values[l - 4 + i];
+        let ritz = got.values[m - 4 + i];
+        assert!(
+            (ritz - want).abs() <= 1e-8 * want.abs().max(1.0),
+            "rank-deficient Ritz value {i}: {ritz} vs dense {want}"
+        );
+    }
+    // and the full Nyström fit stays finite through the randomized path
+    let eig = EigConfig { solver: EigSolver::Randomized, oversample: 8, power_iters: 2 };
+    let (coeffs, used) =
+        nystrom::fit_with(&samples, d, Kernel::Rbf { gamma: 0.3 }, m, &eig, &mut Pcg::seeded(25));
+    assert_eq!(used, EigSolver::Randomized);
+    assert!(coeffs.blocks[0].r_t.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn builder_rejects_bad_eig_knobs() {
+    assert!(PipelineConfig::builder().eig_oversample(0).build().is_err());
+    assert!(PipelineConfig::builder().eig_power_iters(9).build().is_err());
+    let ok = PipelineConfig::builder()
+        .eig_solver(EigSolver::Randomized)
+        .eig_oversample(1)
+        .eig_power_iters(8)
+        .build()
+        .unwrap();
+    assert_eq!(ok.eig_solver, EigSolver::Randomized);
 }
 
 #[test]

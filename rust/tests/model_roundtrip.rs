@@ -15,6 +15,7 @@ use std::time::Duration;
 use apnc::coordinator::driver::{Pipeline, PipelineConfig};
 use apnc::data::{registry, Dataset};
 use apnc::embedding::Method;
+use apnc::linalg::{EigProvenance, EigSolver};
 use apnc::model::serve::BatchWindow;
 use apnc::model::shard::drive_clients;
 use apnc::model::ApncModel;
@@ -379,6 +380,88 @@ fn hot_swap_under_load_never_blends_and_tags_every_epoch() {
     let stats = handle.per_shard_stats();
     assert_eq!(stats.iter().map(|s| s.requests).sum::<usize>(), served);
     assert_eq!(stats.iter().map(|s| s.rows).sum::<usize>(), served * batch);
+}
+
+#[test]
+fn rand_solver_model_roundtrips_bit_identical_with_provenance() {
+    // a model fitted through the randomized eigensolver must persist like
+    // any other — bit-identical predictions after save/load — and the
+    // file must carry the solver + knobs it was fitted with
+    let ds = registry::generate("moons", 400, 130);
+    let cfg = PipelineConfig::builder()
+        .method(Method::Nystrom)
+        .l(96)
+        .m(16) // m + oversample = 24 < l: the sketch path engages
+        .max_iters(10)
+        .workers(3)
+        .block_rows(128)
+        .seed(130)
+        .eig_solver(EigSolver::Randomized)
+        .eig_oversample(8)
+        .eig_power_iters(2)
+        .build()
+        .unwrap();
+    let (model, report) = Pipeline::with_compute(cfg, Compute::reference()).fit(&ds).unwrap();
+    assert_eq!(report.eig.solver, EigSolver::Randomized);
+    assert_eq!((report.eig.oversample, report.eig.power_iters), (8, 2));
+    assert_eq!(model.provenance().eig, report.eig);
+
+    let path = tmp("rand-eig");
+    model.save(&path).unwrap();
+    let loaded = ApncModel::load_with(&path, Compute::reference()).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.provenance(), model.provenance());
+    assert_eq!(loaded.provenance().eig.solver, EigSolver::Randomized);
+
+    let fresh = registry::generate("moons", 150, 131);
+    for x in [&ds.x, &fresh.x] {
+        let want = model.predict_batch(x, 0).unwrap();
+        for chunk in [0usize, 7, 64] {
+            assert_eq!(loaded.predict_batch(x, chunk).unwrap(), want, "chunk={chunk}");
+        }
+    }
+}
+
+#[test]
+fn v1_model_files_load_with_dense_default_provenance() {
+    // a pipeline-fitted model rewritten as a version-1 file (no
+    // eigensolver triple) must still load and predict identically, with
+    // the provenance defaulting to the dense solver every v1 fit used
+    fn fnv1a64(bytes: &[u8]) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+    let (ds, model) = fit_model(Method::Nystrom, 132);
+    assert_eq!(model.provenance().eig, EigProvenance::default(), "fixture must be dense-fitted");
+    let path = tmp("v1-file");
+    model.save(&path).unwrap();
+    let v2 = std::fs::read(&path).unwrap();
+    // magic(8) + version(4) + method(4) + kcode(4) + params(16) + d(8)
+    // + k(8) + seed(8) = 60: the v2 triple lives at 60..72 — drop it,
+    // stamp version 1, recompute the trailer over the hashed span
+    let mut v1 = Vec::with_capacity(v2.len() - 12);
+    v1.extend_from_slice(&v2[..8]);
+    v1.extend_from_slice(&1u32.to_le_bytes());
+    v1.extend_from_slice(&v2[12..60]);
+    v1.extend_from_slice(&v2[72..]);
+    let end = v1.len() - 8;
+    let ck = fnv1a64(&v1[8..end]).to_le_bytes();
+    v1[end..].copy_from_slice(&ck);
+    std::fs::write(&path, &v1).unwrap();
+
+    let loaded = ApncModel::load_with(&path, Compute::reference()).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.provenance().eig, EigProvenance::default());
+    assert_eq!(loaded.provenance(), model.provenance());
+    assert_eq!(
+        loaded.predict_batch(&ds.x, 0).unwrap(),
+        model.predict_batch(&ds.x, 0).unwrap(),
+        "a v1 file must serve the same labels"
+    );
 }
 
 #[test]

@@ -9,6 +9,7 @@ use apnc::coordinator::sample::SampleMode;
 use apnc::data::registry;
 use apnc::embedding::Method;
 use apnc::experiments::{table2, table3};
+use apnc::linalg::EigSolver;
 use apnc::runtime::Compute;
 
 fn pjrt_or_skip() -> Option<Compute> {
@@ -122,6 +123,56 @@ fn table3_tiny_on_pjrt() {
     let tables = table3::run(&cfg, &pjrt).unwrap();
     assert_eq!(tables.len(), 1);
     assert!(tables[0].cells[1][0].embed_secs[0] > 0.0);
+}
+
+#[test]
+fn randomized_eigensolver_matches_dense_clustering_quality() {
+    // PR-7 quality pin: swapping the whitening eigensolver for the
+    // randomized truncated one at equal (l, m) must not cost clustering
+    // quality — NMI within 0.02 of the dense fit (reference backend, so
+    // this runs everywhere)
+    let ds = registry::generate("rings", 1200, 3);
+    let mut dense_cfg = cfg(Method::Nystrom);
+    dense_cfg.m = 32;
+    dense_cfg.eig_solver = EigSolver::Dense;
+    let mut rand_cfg = dense_cfg.clone();
+    rand_cfg.eig_solver = EigSolver::Randomized; // m + 8 = 40 < l = 128
+    let dense = Pipeline::with_compute(dense_cfg, Compute::reference()).run(&ds).unwrap();
+    let rand = Pipeline::with_compute(rand_cfg.clone(), Compute::reference()).run(&ds).unwrap();
+    assert!(dense.nmi > 0.8, "dense baseline degenerated: nmi {}", dense.nmi);
+    assert!(
+        (dense.nmi - rand.nmi).abs() <= 0.02,
+        "rand solver cost quality: dense nmi {} vs rand nmi {}",
+        dense.nmi,
+        rand.nmi
+    );
+    // and the fit really did go through the randomized path
+    let (model, report) =
+        Pipeline::with_compute(rand_cfg, Compute::reference()).fit(&ds).unwrap();
+    assert_eq!(report.eig.solver, EigSolver::Randomized);
+    assert_eq!(model.provenance().eig.solver, EigSolver::Randomized);
+}
+
+#[test]
+fn auto_solver_at_small_l_is_byte_identical_to_dense() {
+    // auto only switches to the sketch when m + oversample < l/4; at
+    // l = 128, m = 32 it must resolve dense and reproduce the dense run
+    // bit-for-bit (the rng never sees a Gaussian-panel draw)
+    let ds = registry::generate("moons", 700, 6);
+    let mut dense_cfg = cfg(Method::Nystrom);
+    dense_cfg.m = 32;
+    dense_cfg.eig_solver = EigSolver::Dense;
+    let mut auto_cfg = dense_cfg.clone();
+    auto_cfg.eig_solver = EigSolver::Auto;
+    let a = Pipeline::with_compute(dense_cfg, Compute::reference()).run(&ds).unwrap();
+    let b = Pipeline::with_compute(auto_cfg.clone(), Compute::reference()).run(&ds).unwrap();
+    assert_eq!(a.labels, b.labels, "auto->dense must not perturb a single label");
+    assert_eq!(a.obj_curve.len(), b.obj_curve.len());
+    for (x, y) in a.obj_curve.iter().zip(&b.obj_curve) {
+        assert_eq!(x.to_bits(), y.to_bits(), "objective curves must be byte-equal");
+    }
+    let (_, report) = Pipeline::with_compute(auto_cfg, Compute::reference()).fit(&ds).unwrap();
+    assert_eq!(report.eig.solver, EigSolver::Dense, "auto must have resolved dense here");
 }
 
 #[test]

@@ -1,0 +1,145 @@
+//! Correctness harness for the randomized truncated eigensolver
+//! (`linalg::eigh_rand`, PR 7) — the three contracts the coefficient
+//! reducer leans on:
+//!
+//! (1) **Spectral accuracy.** On matrices with a decaying spectrum (the
+//! shape Nyström Gram matrices have) the top-m Ritz values must match
+//! the dense `eigh` within rtol 1e-4 and the Ritz subspace must align
+//! with the dense top-m invariant subspace — compared via orthogonal
+//! projectors, so per-vector sign flips and within-eigenspace rotations
+//! don't count as error.
+//!
+//! (2) **Thread parity.** Bit-identical output across 1/2/7/8 threads at
+//! a fixed seed: the Gaussian panel is drawn sequentially and every GEMM
+//! merges in fixed chunk order, so the thread count must not leak into a
+//! single bit.
+//!
+//! (3) **Replay.** Same seed + same config twice → byte-equal output.
+//!
+//! `parallel::set_threads` is process-wide, so the test that flips it
+//! serializes on `THREADS_LOCK` (same pattern as `eigh_parity.rs`).
+
+use std::sync::Mutex;
+
+use apnc::linalg::{eigh, eigh_rand, Eigh, Matrix};
+use apnc::parallel;
+use apnc::rng::Pcg;
+
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Symmetric n×n matrix with the prescribed spectrum: an orthonormal
+/// basis V from the dense eigh of a random SPD matrix, reassembled as
+/// `V diag(spec) Vᵀ`. `spec[i]` is the i-th **largest** eigenvalue.
+fn matrix_with_spectrum(n: usize, seed: u64, spec: &[f64]) -> Matrix {
+    assert_eq!(spec.len(), n);
+    let mut rng = Pcg::seeded(seed);
+    let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+    let mut s = b.matmul_nt(&b);
+    for i in 0..n {
+        s[(i, i)] += 1.0;
+    }
+    let basis = eigh(&s).vectors; // orthonormal columns
+    // column c of the basis carries spec[n - 1 - c] so that ascending
+    // eigh order lines up with the descending `spec`
+    let scaled = Matrix::from_fn(n, n, |r, c| basis[(r, c)] * spec[n - 1 - c]);
+    scaled.matmul_nt(&basis)
+}
+
+/// Geometric decay 1, 1/2, 1/4, ... — every Gram-like test matrix here.
+fn decaying_spec(n: usize) -> Vec<f64> {
+    (0..n).map(|i| 0.5f64.powi(i as i32)).collect()
+}
+
+fn bits(e: &Eigh) -> (Vec<u64>, Vec<u64>) {
+    (
+        e.values.iter().map(|v| v.to_bits()).collect(),
+        e.vectors.data().iter().map(|v| v.to_bits()).collect(),
+    )
+}
+
+/// ‖V Vᵀ − W Wᵀ‖_max over n×n projector entries: rotation- and
+/// sign-invariant distance between the two m-dimensional subspaces.
+fn projector_gap(v: &Matrix, w: &Matrix) -> f64 {
+    assert_eq!(v.rows(), w.rows());
+    assert_eq!(v.cols(), w.cols());
+    let pv = v.matmul_nt(v);
+    let pw = w.matmul_nt(w);
+    pv.data()
+        .iter()
+        .zip(pw.data())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max)
+}
+
+#[test]
+fn top_m_eigenvalues_match_dense_within_rtol() {
+    let (n, m) = (128usize, 10usize);
+    let a = matrix_with_spectrum(n, 4101, &decaying_spec(n));
+    let dense = eigh(&a);
+    let mut rng = Pcg::seeded(4102);
+    let rand = eigh_rand(&a, m, 8, 2, &mut rng);
+    assert_eq!(rand.values.len(), m);
+    // both ascending; dense's top-m live at the tail
+    for i in 0..m {
+        let want = dense.values[n - m + i];
+        let got = rand.values[i];
+        let rtol = (got - want).abs() / want.abs().max(1e-300);
+        assert!(
+            rtol < 1e-4,
+            "Ritz value {i}: got {got:.12e}, dense says {want:.12e} (rtol {rtol:.2e})"
+        );
+    }
+}
+
+#[test]
+fn ritz_subspace_aligns_with_dense_top_m() {
+    let (n, m) = (96usize, 8usize);
+    let a = matrix_with_spectrum(n, 4103, &decaying_spec(n));
+    let dense = eigh(&a);
+    // dense top-m eigenvectors, column order irrelevant to the projector
+    let top = Matrix::from_fn(n, m, |r, c| dense.vectors[(r, n - m + c)]);
+    let mut rng = Pcg::seeded(4104);
+    let rand = eigh_rand(&a, m, 8, 2, &mut rng);
+    let gap = projector_gap(&top, &rand.vectors);
+    assert!(gap < 1e-4, "subspace projectors differ by {gap:.2e}");
+    // and the Ritz vectors are orthonormal among themselves
+    let g = rand.vectors.transpose().matmul(&rand.vectors);
+    for r in 0..m {
+        for c in 0..m {
+            let want = if r == c { 1.0 } else { 0.0 };
+            assert!((g[(r, c)] - want).abs() < 1e-10, "VᵀV[{r},{c}] = {}", g[(r, c)]);
+        }
+    }
+}
+
+#[test]
+fn bit_identical_across_thread_counts() {
+    let _g = THREADS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    // n large enough that the panel GEMMs span several parallel chunks
+    let (n, m) = (384usize, 16usize);
+    let a = matrix_with_spectrum(n, 4105, &decaying_spec(n));
+    let run = |threads: usize| {
+        parallel::set_threads(threads);
+        let e = eigh_rand(&a, m, 8, 2, &mut Pcg::seeded(4106));
+        parallel::set_threads(0);
+        e
+    };
+    let base = bits(&run(1));
+    for t in [2usize, 7, 8] {
+        let got = bits(&run(t));
+        assert_eq!(got.0, base.0, "Ritz values differ, threads={t}");
+        assert_eq!(got.1, base.1, "Ritz vectors differ, threads={t}");
+    }
+}
+
+#[test]
+fn replay_with_same_seed_and_config_is_byte_equal() {
+    let (n, m) = (160usize, 12usize);
+    let a = matrix_with_spectrum(n, 4107, &decaying_spec(n));
+    let once = bits(&eigh_rand(&a, m, 6, 1, &mut Pcg::new(4108, 0xD21E)));
+    let twice = bits(&eigh_rand(&a, m, 6, 1, &mut Pcg::new(4108, 0xD21E)));
+    assert_eq!(once, twice, "same seed + config must replay byte-equal");
+    // and a different seed actually moves the bytes (the panel is live)
+    let other = bits(&eigh_rand(&a, m, 6, 1, &mut Pcg::new(4109, 0xD21E)));
+    assert_ne!(once.1, other.1, "different seed left the Ritz vectors untouched");
+}
