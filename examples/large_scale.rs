@@ -1,35 +1,37 @@
 //! End-to-end validation driver (EXPERIMENTS.md records this run).
 //!
-//! The full production path on a real (synthetic-mirror) large workload:
-//! a CovType-scale dataset on a simulated 20-node MapReduce cluster, both
-//! APNC instances, PJRT artifact backend (python never runs here —
-//! `make artifacts` must have been executed once at build time).
+//! The full *out-of-core* production path on a HIGGS-scale workload:
 //!
-//! Reports the paper's headline metrics: NMI, embedding time, clustering
-//! time, per-phase network costs, and the simulated 20-node cluster time
-//! at 1 Gbps, plus the objective (loss) curve per iteration.
+//! 1. spot-check: a small CovType-mirror fit in memory vs the same bytes
+//!    streamed from a tiled file — centroids, objective curve, and labels
+//!    must be **bit-identical** (asserted);
+//! 2. `gen --stream` equivalent: synthesize a HIGGS-like dataset straight
+//!    to the tile-aligned v2 format, row-at-a-time (never materialized);
+//! 3. tiled fit + streamed predict for both APNC instances with bounded
+//!    RSS, reporting rows/s, network costs, the objective curve (monotone
+//!    decrease asserted), and a subsampled NMI estimate.
 //!
-//!     cargo run --release --example large_scale [-- --n 40000 --l 512]
+//!     cargo run --release --example large_scale [-- --n 200000 --l 512]
+//!
+//! `--n` sizes the HIGGS-like workload (default 200k; the registry's
+//! full-scale entry is 11M rows — pass `--n 11000000` on a beefy host).
 
 use apnc::cli::Args;
 use apnc::coordinator::driver::{Pipeline, PipelineConfig};
 use apnc::coordinator::sample::SampleMode;
 use apnc::data::registry;
+use apnc::data::stream::{self, peak_rss_kb, RowSource, TiledFile};
 use apnc::embedding::Method;
 use apnc::experiments::table3::NET_BYTES_PER_SEC;
 use apnc::runtime::Compute;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
-    let n = args.usize_or("n", 40_000)?;
+    let n = args.usize_or("n", 200_000)?;
     let l = args.usize_or("l", 512)?;
     let m = args.usize_or("m", 256)?;
     let nodes = args.usize_or("nodes", 20)?;
-    let ds = registry::generate("covtype", n, 31);
-    println!(
-        "== large-scale end-to-end: {} (n = {}, d = {}, k = {}) on {} simulated nodes ==",
-        ds.name, ds.n, ds.d, ds.k, nodes
-    );
+    let tile = args.usize_or("tile-rows", 8_192)?;
     let compute = Compute::auto(&Compute::default_artifact_dir());
     println!(
         "compute backend: {}",
@@ -39,63 +41,149 @@ fn main() -> anyhow::Result<()> {
             "rust reference (run `make artifacts`!)"
         }
     );
+    let tmp = std::env::temp_dir();
 
+    // ---- 1. determinism spot-check: in-memory fit == streamed fit --------
+    let small = registry::generate("covtype", 4_000, 31);
+    let small_path = tmp.join(format!("apnc-ls-spot-{}.tiled", std::process::id()));
+    stream::save_tiled(&small, 1_024, &small_path)?;
+    let spot_cfg = PipelineConfig::builder()
+        .l(256)
+        .m(128)
+        .workers(nodes)
+        .block_rows(1_024)
+        .max_iters(10)
+        .tol(0.0)
+        .sample_mode(SampleMode::Exact)
+        .seed(31)
+        .build()?;
+    let p = Pipeline::with_compute(spot_cfg, compute.clone());
+    let (mem_model, mem_report) = p.fit(&small)?;
+    let tiled_small = TiledFile::open(&small_path)?;
+    let (tiled_model, tiled_report) = p.fit_stream(&tiled_small)?;
+    anyhow::ensure!(
+        mem_model.centroids() == tiled_model.centroids(),
+        "streamed fit diverged from in-memory fit (centroids)"
+    );
+    anyhow::ensure!(
+        mem_report.obj_curve == tiled_report.obj_curve,
+        "streamed fit diverged from in-memory fit (objective curve)"
+    );
+    let mem_labels = mem_model.predict_batch(&small.x, 0)?;
+    let mut streamed_labels = vec![u32::MAX; small.n];
+    tiled_model.predict_stream(&tiled_small, 1_024, |start, labels| {
+        streamed_labels[start..start + labels.len()].copy_from_slice(labels);
+        Ok(())
+    })?;
+    anyhow::ensure!(mem_labels == streamed_labels, "streamed predict diverged");
+    drop(tiled_small);
+    std::fs::remove_file(&small_path)?;
+    println!(
+        "spot-check OK: streamed fit/predict bit-identical to in-memory on {} rows",
+        small.n
+    );
+
+    // ---- 2. synthesize the HIGGS-like workload straight to disk ----------
+    let rowgen = registry::stream_rowgen("higgs", 31).expect("higgs has a streaming generator");
+    let higgs_path = tmp.join(format!("apnc-ls-higgs-{}.tiled", std::process::id()));
+    let t0 = std::time::Instant::now();
+    stream::generate_tiled(&rowgen, "higgs", n, tile, &higgs_path)?;
+    let gen_secs = t0.elapsed().as_secs_f64();
+    let bytes = std::fs::metadata(&higgs_path)?.len();
+    println!(
+        "\n== HIGGS-like workload: {n} rows x 28 dims written tiled ({bytes} bytes) \
+         in {gen_secs:.2}s ({:.0} rows/s) ==",
+        n as f64 / gen_secs.max(1e-9)
+    );
+    let src = TiledFile::open(&higgs_path)?;
+
+    // ---- 3. out-of-core fit + predict, both instances ---------------------
     for method in [Method::Nystrom, Method::StableDist] {
         let cfg = PipelineConfig::builder()
             .method(method)
             .l(l)
             .m(m)
             .workers(nodes)
-            .block_rows(1024)
+            .block_rows(tile)
             .max_iters(20)
             .tol(0.0)
             .sample_mode(SampleMode::Exact)
             .seed(31)
             .build()?;
         let t0 = std::time::Instant::now();
-        let out = Pipeline::with_compute(cfg, compute.clone()).run(&ds)?;
-        let total = t0.elapsed();
+        let (model, report) = Pipeline::with_compute(cfg, compute.clone()).fit_stream(&src)?;
+        let fit_secs = t0.elapsed().as_secs_f64();
         println!("\n--- {} ---", method.label());
-        println!("NMI = {:.4}  ARI = {:.4}  purity = {:.4}", out.nmi, out.ari, out.purity);
         println!(
-            "objective curve ({} iterations): first = {:.1}, last = {:.1}",
-            out.obj_curve.len(),
-            out.obj_curve.first().unwrap(),
-            out.obj_curve.last().unwrap()
+            "streamed fit: {n} rows in {fit_secs:.2}s ({:.0} rows/s), l actual = {}, m = {}",
+            n as f64 / fit_secs.max(1e-9),
+            report.l_actual,
+            report.m_actual
         );
-        for (i, o) in out.obj_curve.iter().enumerate() {
-            println!("  iter {:>2}: obj = {o:.2}", i + 1);
-        }
         println!(
-            "wall-clock: sample {:.2?} | coeff fit {:.2?} | embed {:.2?} | cluster {:.2?} | total {:.2?}",
-            out.times.sample, out.times.coeff_fit, out.times.embed, out.times.cluster, total
+            "wall-clock: sample {:.2?} | coeff fit {:.2?} | embed {:.2?} | cluster {:.2?}",
+            report.times.sample, report.times.coeff_fit, report.times.embed, report.times.cluster
         );
         println!(
             "simulated {}-node cluster @1Gbps: embed {:.2?} | cluster {:.2?}",
             nodes,
-            out.simulated_embed_time(nodes, NET_BYTES_PER_SEC),
-            out.simulated_cluster_time(nodes, NET_BYTES_PER_SEC)
+            report.embed_metrics.simulated_time(nodes, NET_BYTES_PER_SEC),
+            report.cluster_metrics.simulated_time(nodes, NET_BYTES_PER_SEC)
         );
         println!(
-            "network: embed broadcast {} B + shuffle {} B (0 by design); cluster shuffle {} B \
-             ({} B/iter — independent of n)",
-            out.embed_metrics.broadcast_bytes,
-            out.embed_metrics.shuffle_bytes,
-            out.cluster_metrics.shuffle_bytes,
-            out.cluster_metrics.shuffle_bytes / out.iters_run.max(1)
+            "network: embed broadcast {} B + shuffle {} B (0 by design); per-iter cluster \
+             broadcast {} B — independent of n",
+            report.embed_metrics.broadcast_bytes,
+            report.embed_metrics.shuffle_bytes,
+            report.cluster_metrics.broadcast_bytes / report.iters_run.max(1)
         );
         // Lloyd over a fixed embedding: monotone under l2^2 (APNC-Nys);
         // under l1 (APNC-SD) the paper's mean update is not l1-optimal, so
         // allow small per-step rises but require overall improvement.
         let slack = if method == Method::StableDist { 0.02 } else { 1e-5 };
-        for w in out.obj_curve.windows(2) {
-            anyhow::ensure!(w[1] <= w[0] * (1.0 + slack), "objective rose: {:?}", out.obj_curve);
+        for w in report.obj_curve.windows(2) {
+            anyhow::ensure!(
+                w[1] <= w[0] * (1.0 + slack),
+                "objective rose: {:?}",
+                report.obj_curve
+            );
         }
         anyhow::ensure!(
-            out.obj_curve.last().unwrap() <= out.obj_curve.first().unwrap(),
+            report.obj_curve.last().unwrap() <= report.obj_curve.first().unwrap(),
             "no overall improvement"
         );
+
+        // streamed predict with a strided quality subsample (reported, not
+        // asserted: HIGGS-like classes overlap heavily by construction)
+        let stride = (n / 100_000).max(1);
+        let mut sub_pred = Vec::new();
+        let mut sub_truth = Vec::new();
+        let mut truth_buf = Vec::new();
+        let t1 = std::time::Instant::now();
+        let rows = model.predict_stream(&src, tile, |start, labels| {
+            src.read_labels(start, labels.len(), &mut truth_buf)?;
+            for (off, &lab) in labels.iter().enumerate() {
+                if (start + off) % stride == 0 {
+                    sub_pred.push(lab);
+                    sub_truth.push(truth_buf[off]);
+                }
+            }
+            Ok(())
+        })?;
+        let pred_secs = t1.elapsed().as_secs_f64();
+        println!(
+            "streamed predict: {rows} rows in {pred_secs:.2}s ({:.0} rows/s); subsampled NMI \
+             ({} rows) = {:.4}",
+            rows as f64 / pred_secs.max(1e-9),
+            sub_pred.len(),
+            apnc::metrics::nmi(&sub_pred, &sub_truth)
+        );
     }
+    if let Some(kb) = peak_rss_kb() {
+        println!("\npeak RSS across the whole run: {kb} kB");
+    }
+    drop(src);
+    std::fs::remove_file(&higgs_path)?;
     println!("\nlarge_scale OK");
     Ok(())
 }

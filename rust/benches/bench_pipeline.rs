@@ -1,14 +1,36 @@
 //! End-to-end pipeline benchmark: the full sample → fit → embed → cluster
 //! path at a small-but-real operating point, for both APNC instances.
 //! This is the top-level §Perf number.
+//!
+//! The `stream_*` cases exercise the out-of-core path (tiled file on disk
+//! → `fit_stream` / `predict_stream`) at 1 thread vs all threads — the
+//! rows/s pair is the ISSUE's scaling record — and report the process
+//! peak RSS, which stays bounded by one tile + sample + model.
 
 use apnc::bench::Bench;
 use apnc::coordinator::driver::{Pipeline, PipelineConfig};
 use apnc::coordinator::sample::SampleMode;
 use apnc::data::registry;
+use apnc::data::stream::{peak_rss_kb, save_tiled, TiledFile};
 use apnc::embedding::Method;
 use apnc::runtime::Compute;
 use std::hint::black_box;
+
+fn stream_cfg(threads: usize) -> PipelineConfig {
+    PipelineConfig {
+        method: Method::Nystrom,
+        l: 256,
+        m: 128,
+        workers: 4,
+        max_iters: 5,
+        tol: 0.0,
+        sample_mode: SampleMode::Exact,
+        seed: 9,
+        threads,
+        block_rows: 2_048,
+        ..Default::default()
+    }
+}
 
 fn main() {
     let bench = Bench::new("pipeline").with_iters(1, 3);
@@ -41,4 +63,41 @@ fn main() {
         });
         bench.throughput(&stats, ds.n, "point");
     }
+
+    // ---- out-of-core path: tiled file on disk, bounded-RSS fit/predict ----
+    let sn = if Bench::smoke() { 4_096 } else { 65_536 };
+    let sds = registry::generate("covtype", sn, 9);
+    let tiled =
+        std::env::temp_dir().join(format!("apnc-bench-stream-{}.tiled", std::process::id()));
+    save_tiled(&sds, 2_048, &tiled).unwrap();
+    drop(sds); // from here on only the on-disk tiles are touched
+    for (case, threads) in [("stream_fit_t1", 1usize), ("stream_fit_tmax", 0)] {
+        let stats = bench.run(&format!("covtype{}k_{case}", sn / 1024), || {
+            let src = TiledFile::open(&tiled).unwrap();
+            let (model, _) = Pipeline::with_compute(stream_cfg(threads), compute.clone())
+                .fit_stream(black_box(&src))
+                .unwrap();
+            black_box(model.m());
+        });
+        bench.throughput(&stats, sn, "row");
+    }
+    let src = TiledFile::open(&tiled).unwrap();
+    let (model, _) = Pipeline::with_compute(stream_cfg(0), compute.clone())
+        .fit_stream(&src)
+        .unwrap();
+    let stats = bench.run(&format!("covtype{}k_stream_predict_tmax", sn / 1024), || {
+        let mut total = 0u64;
+        model
+            .predict_stream(black_box(&src), 2_048, |_, labels| {
+                total += labels.len() as u64;
+                Ok(())
+            })
+            .unwrap();
+        black_box(total);
+    });
+    bench.throughput(&stats, sn, "row");
+    if let Some(kb) = peak_rss_kb() {
+        eprintln!("peak RSS after streamed fit+predict over {sn} rows: {kb} kB");
+    }
+    let _ = std::fs::remove_file(&tiled);
 }

@@ -9,10 +9,11 @@
 //! them into the next `Ȳ` (Algorithm 2 reduce).
 
 use super::DataBlock;
+use crate::data::stream::RowSource;
 use crate::mapreduce::{Emitter, Engine, Job, JobMetrics, TaskCtx};
 use crate::rng::Pcg;
 use crate::runtime::{Compute, DistKind};
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 /// Centroid initialization strategy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -137,16 +138,49 @@ pub fn init_centroids(blocks: &[DataBlock], m: usize, k: usize, seed: u64) -> Ve
     assert!(n >= k, "need at least k points to seed centroids");
     let mut rng = Pcg::new(seed, 0x1417);
     let picks = rng.choose(n, k);
-    let mut centroids = vec![0.0f32; k * m];
-    for (c, &global) in picks.iter().enumerate() {
+    gather_from_blocks(blocks, &picks, m)
+}
+
+/// Rows `picks` (global indices) gathered from the blocks into a dense
+/// row-major buffer.
+fn gather_from_blocks(blocks: &[DataBlock], picks: &[usize], m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; picks.len() * m];
+    for (row, &global) in picks.iter().enumerate() {
         let blk = blocks
             .iter()
             .find(|b| global >= b.start && global < b.start + b.rows)
             .expect("global index within blocks");
         let r = global - blk.start;
-        centroids[c * m..(c + 1) * m].copy_from_slice(&blk.x[r * m..(r + 1) * m]);
+        out[row * m..(row + 1) * m].copy_from_slice(&blk.x[r * m..(r + 1) * m]);
     }
-    centroids
+    out
+}
+
+/// Rows `picks` gathered from a [`RowSource`] — one point read per pick,
+/// so initialization memory is O(picks · m) regardless of n.
+fn gather_from_source(src: &dyn RowSource, picks: &[usize], m: usize) -> Result<Vec<f32>> {
+    let mut out = vec![0.0f32; picks.len() * m];
+    let mut buf = Vec::new();
+    for (row, &global) in picks.iter().enumerate() {
+        src.read_rows(global, 1, &mut buf)?;
+        out[row * m..(row + 1) * m].copy_from_slice(&buf);
+    }
+    Ok(out)
+}
+
+/// Streamed [`init_centroids`]: the same `0x1417` RNG stream and the same
+/// `choose` call, with rows fetched on demand — bit-identical picks.
+pub fn init_centroids_source(
+    src: &dyn RowSource,
+    m: usize,
+    k: usize,
+    seed: u64,
+) -> Result<Vec<f32>> {
+    let n = src.n();
+    ensure!(n >= k, "need at least k points to seed centroids");
+    let mut rng = Pcg::new(seed, 0x1417);
+    let picks = rng.choose(n, k);
+    gather_from_source(src, &picks, m)
 }
 
 /// k-means++ initialization over (a subsample of) the embedding blocks:
@@ -168,15 +202,40 @@ pub fn init_centroids_kpp(
     // subsample up to `cap` rows into a dense pool
     let take = n.min(cap.max(k));
     let picks = rng.choose(n, take);
-    let mut pool = vec![0.0f32; take * m];
-    for (row, &global) in picks.iter().enumerate() {
-        let blk = blocks
-            .iter()
-            .find(|b| global >= b.start && global < b.start + b.rows)
-            .expect("global index within blocks");
-        let r = global - blk.start;
-        pool[row * m..(row + 1) * m].copy_from_slice(&blk.x[r * m..(r + 1) * m]);
-    }
+    let pool = gather_from_blocks(blocks, &picks, m);
+    kpp_select(&pool, take, m, k, dist, &mut rng)
+}
+
+/// Streamed [`init_centroids_kpp`]: same `0x144B` stream, same subsample
+/// draw, pool rows fetched on demand — bit-identical centroids.
+pub fn init_centroids_kpp_source(
+    src: &dyn RowSource,
+    m: usize,
+    k: usize,
+    dist: DistKind,
+    seed: u64,
+    cap: usize,
+) -> Result<Vec<f32>> {
+    let n = src.n();
+    ensure!(n >= k, "need at least k points to seed centroids");
+    let mut rng = Pcg::new(seed, 0x144B);
+    let take = n.min(cap.max(k));
+    let picks = rng.choose(n, take);
+    let pool = gather_from_source(src, &picks, m)?;
+    Ok(kpp_select(&pool, take, m, k, dist, &mut rng))
+}
+
+/// The k-means++ D²-weighted selection over an already-gathered pool.
+/// Shared verbatim by the block and source initializers, so both consume
+/// the RNG identically.
+fn kpp_select(
+    pool: &[f32],
+    take: usize,
+    m: usize,
+    k: usize,
+    dist: DistKind,
+    rng: &mut Pcg,
+) -> Vec<f32> {
     let point_dist = |a: &[f32], b: &[f32]| -> f64 {
         match dist {
             DistKind::L2Sq => a
@@ -316,20 +375,136 @@ fn lloyd_once(
         metrics.merge(&run.metrics);
         let (z, g, obj) = run.outputs.into_iter().next().expect("one reduce group");
         obj_curve.push(obj);
-        // Ȳ_c = Z_c / g_c ; empty clusters keep their previous centroid
-        for c in 0..k {
-            if g[c] > 0.0 {
-                for j in 0..m {
-                    centroids[c * m + j] = z[c * m + j] / g[c];
-                }
+        apply_centroid_update(&mut centroids, &z, &g, k, m);
+        if lloyd_converged(&obj_curve, cfg.tol) {
+            break;
+        }
+    }
+
+    Ok(LloydOut { centroids, obj_curve, iters_run, metrics })
+}
+
+/// Ȳ_c = Z_c / g_c ; empty clusters keep their previous centroid.
+fn apply_centroid_update(centroids: &mut [f32], z: &[f32], g: &[f32], k: usize, m: usize) {
+    for c in 0..k {
+        if g[c] > 0.0 {
+            for j in 0..m {
+                centroids[c * m + j] = z[c * m + j] / g[c];
             }
         }
-        if cfg.tol > 0.0 && obj_curve.len() >= 2 {
-            let prev = obj_curve[obj_curve.len() - 2];
-            let cur = obj_curve[obj_curve.len() - 1];
-            if prev.is_finite() && prev > 0.0 && (prev - cur).abs() / prev < cfg.tol {
-                break;
+    }
+}
+
+/// Relative objective-improvement convergence check (`tol = 0` disables).
+fn lloyd_converged(obj_curve: &[f64], tol: f64) -> bool {
+    if tol > 0.0 && obj_curve.len() >= 2 {
+        let prev = obj_curve[obj_curve.len() - 2];
+        let cur = obj_curve[obj_curve.len() - 1];
+        prev.is_finite() && prev > 0.0 && (prev - cur).abs() / prev < tol
+    } else {
+        false
+    }
+}
+
+/// Streamed [`run_lloyd`]: Lloyd iterations over embedding tiles read on
+/// demand from `src` (a [`RowSource`] with `d() == m`), holding one tile
+/// plus the `(Z, g)` accumulator in memory. Per-tile `(Z, g, obj)` fold
+/// in tile order — exactly the order the engine's sorted shuffle hands
+/// the reducer — and initialization replays the same RNG streams, so
+/// centroids and the objective curve are bit-identical to the in-memory
+/// path at the same seed and `block_rows`, at any thread count. The
+/// engine's per-iteration broadcast of Ȳ is accounted against `workers`
+/// virtual mappers.
+pub fn run_lloyd_stream(
+    compute: &Compute,
+    src: &dyn RowSource,
+    m: usize,
+    dist: DistKind,
+    cfg: &ClusterConfig,
+    workers: usize,
+    block_rows: usize,
+) -> Result<LloydOut> {
+    ensure!(src.d() == m, "source width {} != embedding width {m}", src.d());
+    ensure!(block_rows > 0, "block_rows must be positive");
+    let restarts = cfg.restarts.max(1);
+    let mut best: Option<LloydOut> = None;
+    for attempt in 0..restarts {
+        let seed = cfg.seed.wrapping_add(attempt as u64 * 0x9E37);
+        let mut out = lloyd_once_stream(compute, src, m, dist, cfg, seed, workers, block_rows)?;
+        let better = match &best {
+            None => true,
+            Some(b) => {
+                out.obj_curve.last().copied().unwrap_or(f64::INFINITY)
+                    < b.obj_curve.last().copied().unwrap_or(f64::INFINITY)
             }
+        };
+        if let Some(b) = &best {
+            // accumulate the cost of all attempts into whichever wins
+            out.metrics.merge(&b.metrics);
+        }
+        if better {
+            best = Some(out);
+        } else if let Some(b) = &mut best {
+            b.metrics = out.metrics;
+        }
+    }
+    Ok(best.expect("restarts >= 1"))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn lloyd_once_stream(
+    compute: &Compute,
+    src: &dyn RowSource,
+    m: usize,
+    dist: DistKind,
+    cfg: &ClusterConfig,
+    seed: u64,
+    workers: usize,
+    block_rows: usize,
+) -> Result<LloydOut> {
+    let k = cfg.k;
+    let n = src.n();
+    let mut centroids = match cfg.init {
+        Init::Random => init_centroids_source(src, m, k, seed)?,
+        Init::KppSample => init_centroids_kpp_source(src, m, k, dist, seed, cfg.kpp_cap)?,
+    };
+    let mut metrics = JobMetrics::default();
+    let mut obj_curve = Vec::new();
+    let mut iters_run = 0;
+    let mut buf = Vec::new();
+
+    for _ in 0..cfg.max_iters {
+        iters_run += 1;
+        // broadcast Ȳ to every (virtual) mapper — same accounting as the
+        // engine path's Algorithm 2 line 4
+        metrics.broadcast_bytes += centroids.len() * 4 * workers;
+        let mut acc: Option<(Vec<f32>, Vec<f32>, f64)> = None;
+        let mut start = 0usize;
+        while start < n {
+            let rows = (n - start).min(block_rows);
+            src.read_rows(start, rows, &mut buf)?;
+            let out = compute.assign(&buf, rows, m, &centroids, k, dist)?;
+            match &mut acc {
+                None => acc = Some((out.z, out.g, out.obj)),
+                Some((z, g, obj)) => {
+                    for (a, b) in z.iter_mut().zip(&out.z) {
+                        *a += b;
+                    }
+                    for (a, b) in g.iter_mut().zip(&out.g) {
+                        *a += b;
+                    }
+                    *obj += out.obj;
+                }
+            }
+            metrics.map_tasks += 1;
+            start += rows;
+        }
+        metrics.reduce_tasks += 1;
+        let (z, g, obj) = acc.expect("n >= 1 yields at least one tile");
+        obj_curve.push(obj);
+        apply_centroid_update(&mut centroids, &z, &g, k, m);
+        if lloyd_converged(&obj_curve, cfg.tol) {
+            break;
         }
     }
 
@@ -495,6 +670,55 @@ mod tests {
         .unwrap();
         let nmi = crate::metrics::nmi(&out.labels, &truth);
         assert!(nmi > 0.9, "nmi {nmi}");
+    }
+
+    #[test]
+    fn streamed_lloyd_bit_identical_to_engine() {
+        let m = 5;
+        let mut rng = Pcg::seeded(21);
+        let mut x = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..330usize {
+            let c = i % 3;
+            for j in 0..m {
+                let center = if j % 3 == c { 4.0 } else { 0.0 };
+                x.push(center + 0.5 * rng.normal() as f32);
+            }
+            labels.push(c as u32);
+        }
+        let blocks = DataBlock::partition(&x, 330, m, 64);
+        let ds = crate::data::Dataset::new("t", m, 3, x, labels);
+        for init in [Init::Random, Init::KppSample] {
+            let cfg = ClusterConfig {
+                k: 3,
+                max_iters: 10,
+                tol: 0.0,
+                seed: 13,
+                init,
+                restarts: 2,
+                ..Default::default()
+            };
+            for workers in [1usize, 4] {
+                let engine = Engine::new(EngineConfig::with_workers(workers));
+                let a = run_lloyd(&engine, &Compute::reference(), &blocks, m, DistKind::L2Sq, &cfg)
+                    .unwrap();
+                let b = run_lloyd_stream(
+                    &Compute::reference(),
+                    &ds,
+                    m,
+                    DistKind::L2Sq,
+                    &cfg,
+                    workers,
+                    64,
+                )
+                .unwrap();
+                assert_eq!(a.centroids, b.centroids, "{init:?} w={workers}");
+                assert_eq!(a.obj_curve, b.obj_curve, "{init:?} w={workers}");
+                assert_eq!(a.iters_run, b.iters_run);
+                assert_eq!(a.metrics.map_tasks, b.metrics.map_tasks);
+                assert_eq!(a.metrics.broadcast_bytes, b.metrics.broadcast_bytes);
+            }
+        }
     }
 
     #[test]

@@ -26,6 +26,7 @@ use super::embed_job;
 use super::sample::{self, SampleMode};
 use super::DataBlock;
 use crate::data::registry::KernelChoice;
+use crate::data::stream::{RowSource, TiledFile, TiledWriter};
 use crate::data::Dataset;
 use crate::embedding::Method;
 use crate::kernels::Kernel;
@@ -235,6 +236,28 @@ impl PipelineConfigBuilder {
     }
 }
 
+/// Unique temp-file path for an embedding spill (pid + seed + a process
+/// counter keep concurrent fits from colliding).
+fn spill_file_path(seed: u64) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "apnc-spill-{}-{seed:x}-{seq}.tiled",
+        std::process::id()
+    ))
+}
+
+/// Deletes the path on drop — the embedding spill never outlives the fit,
+/// even on an error path.
+struct RemoveOnDrop(std::path::PathBuf);
+
+impl Drop for RemoveOnDrop {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
 /// Wall-clock of each phase.
 #[derive(Clone, Debug, Default)]
 pub struct PhaseTimes {
@@ -431,6 +454,155 @@ impl Pipeline {
             },
             sample_metrics: sample_out.metrics,
             embed_metrics: embed_out.metrics,
+            cluster_metrics: lloyd.metrics,
+            eig: fit.eig,
+        };
+        Ok((model, report))
+    }
+
+    /// Out-of-core [`Pipeline::fit`]: the same four phases over a
+    /// [`RowSource`] read tile-by-tile, never materializing the input (or
+    /// the embeddings) in memory. Peak RSS is O(l·d + block_rows·(d + m) +
+    /// k·m + model) regardless of n:
+    ///
+    /// * sampling streams tiles through the engine's exact task schedule
+    ///   ([`sample::run_stream`]);
+    /// * the coefficient fit is unchanged (it only sees the l sampled
+    ///   points);
+    /// * embedding visits each tile once and spills the (rows, m) result
+    ///   to a temporary tile-aligned file that is deleted on exit;
+    /// * Lloyd iterates over the spill ([`cluster_job::run_lloyd_stream`]).
+    ///
+    /// Every phase replays the in-memory path's RNG streams and fold
+    /// order, so for the same bytes, seed, and `block_rows` the model
+    /// (coefficients, centroids) is **bit-identical** to [`Pipeline::fit`]
+    /// at any thread count — pinned by `tests/stream_parity.rs`. The
+    /// returned [`FitReport`] carries no embeddings (they live only in the
+    /// deleted spill); use [`crate::model::ApncModel::predict_stream`] for
+    /// labels.
+    pub fn fit_stream(&self, src: &dyn RowSource) -> Result<(ApncModel, FitReport)> {
+        let cfg = &self.config;
+        cfg.validate()?;
+        crate::parallel::set_threads(cfg.threads);
+        let n = src.n();
+        let d = src.d();
+        ensure!(n >= 2, "source too small: {n} rows");
+        let k = if cfg.k == 0 { src.k() } else { cfg.k };
+        ensure!(
+            k >= 1 && k <= n,
+            "bad k = {k} (sources without class labels need an explicit k)"
+        );
+        let mut rng = Pcg::new(cfg.seed, 0xD21E);
+
+        let kernel = match cfg.kernel {
+            Some(kern) => kern,
+            None => crate::data::registry::spec(src.name())
+                .map(|s| s.kernel)
+                .unwrap_or(KernelChoice::SelfTunedRbf)
+                .build_source(src, &mut rng)?,
+        };
+
+        // ---- Algorithms 3/4 map: sample L --------------------------------
+        let t0 = Instant::now();
+        let sample_out =
+            sample::run_stream(src, cfg.block_rows, cfg.seed, cfg.l, cfg.sample_mode)?;
+        let sample_time = t0.elapsed();
+        ensure!(
+            sample_out.indices.len() >= 2,
+            "sampling returned {} points; increase l",
+            sample_out.indices.len()
+        );
+
+        // ---- Algorithms 3/4 reduce: fit R on one node ---------------------
+        let coeff_cfg = CoeffConfig {
+            method: cfg.method,
+            m: cfg.m,
+            t_frac: cfg.t_frac,
+            ensemble_q: cfg.ensemble_q,
+            eig: cfg.eig_config(),
+        };
+        let fit = coeffs::fit(&sample_out.samples, d, kernel, &coeff_cfg, &mut rng);
+        let coeffs = fit.coeffs;
+        self.compute.warm(d, coeffs.l(), coeffs.m(), k);
+
+        // ---- Algorithm 1: embed tile-by-tile, spill to disk ---------------
+        let t1 = Instant::now();
+        let m_total = coeffs.m();
+        let mut embed_metrics = JobMetrics::default();
+        for blk in &coeffs.blocks {
+            self.engine.broadcast_cost(&mut embed_metrics, blk.broadcast_bytes(d));
+        }
+        let spill_path = spill_file_path(cfg.seed);
+        let _spill_guard = RemoveOnDrop(spill_path.clone());
+        {
+            let mut w = TiledWriter::create(
+                &spill_path,
+                "spill",
+                n,
+                m_total,
+                0,
+                cfg.block_rows,
+                false,
+            )?;
+            let mut buf = Vec::new();
+            let mut start = 0usize;
+            while start < n {
+                let rows = (n - start).min(cfg.block_rows);
+                src.read_rows(start, rows, &mut buf)?;
+                let y = coeffs.embed_block(&self.compute, &buf, rows)?;
+                w.append(&y, None)?;
+                embed_metrics.map_tasks += 1;
+                embed_metrics.add_counter("embedded_points", rows as u64);
+                start += rows;
+            }
+            w.finish()?;
+        }
+        let embed_time = t1.elapsed();
+
+        // ---- Algorithm 2: Lloyd iterations over the spilled embeddings ----
+        let t2 = Instant::now();
+        let spill = TiledFile::open(&spill_path)?;
+        let cluster_cfg = ClusterConfig {
+            k,
+            max_iters: cfg.max_iters,
+            tol: cfg.tol,
+            seed: cfg.seed ^ 0xC0FFEE,
+            restarts: cfg.restarts,
+            ..Default::default()
+        };
+        let lloyd = cluster_job::run_lloyd_stream(
+            &self.compute,
+            &spill,
+            m_total,
+            coeffs.dist(),
+            &cluster_cfg,
+            cfg.workers,
+            cfg.block_rows,
+        )?;
+        let cluster_time = t2.elapsed();
+        drop(spill);
+
+        let model = ApncModel::from_parts(
+            coeffs,
+            lloyd.centroids,
+            k,
+            Provenance { dataset: src.name().to_string(), seed: cfg.seed, eig: fit.eig },
+            self.compute.clone(),
+        )?;
+        let report = FitReport {
+            embeddings: Vec::new(),
+            obj_curve: lloyd.obj_curve,
+            l_actual: sample_out.indices.len(),
+            m_actual: m_total,
+            iters_run: lloyd.iters_run,
+            times: PhaseTimes {
+                sample: sample_time,
+                coeff_fit: fit.fit_time,
+                embed: embed_time,
+                cluster: cluster_time,
+            },
+            sample_metrics: sample_out.metrics,
+            embed_metrics,
             cluster_metrics: lloyd.metrics,
             eig: fit.eig,
         };
@@ -643,6 +815,26 @@ mod tests {
         assert_eq!(out2.labels, out.labels);
         assert_eq!(out2.obj_curve, out.obj_curve);
         assert_eq!(model2.centroids(), model.centroids());
+    }
+
+    #[test]
+    fn fit_stream_matches_fit_bitwise() {
+        // a Dataset is itself a RowSource, so the streamed fit can be
+        // checked against the in-memory fit without touching disk (the
+        // embedding spill still goes through the tiled writer)
+        let ds = registry::generate("rings", 700, 18);
+        let p = Pipeline::with_compute(quick_cfg(Method::Nystrom), Compute::reference());
+        let (ma, ra) = p.fit(&ds).unwrap();
+        let (mb, rb) = p.fit_stream(&ds).unwrap();
+        assert_eq!(ma.centroids(), mb.centroids());
+        assert_eq!(ra.obj_curve, rb.obj_curve);
+        assert_eq!(ra.l_actual, rb.l_actual);
+        assert_eq!(ra.m_actual, rb.m_actual);
+        assert_eq!(ra.iters_run, rb.iters_run);
+        assert_eq!(
+            ma.predict_batch(&ds.x, 0).unwrap(),
+            mb.predict_batch(&ds.x, 0).unwrap()
+        );
     }
 
     #[test]

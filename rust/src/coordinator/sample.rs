@@ -7,6 +7,7 @@
 //! which is the point: only the sample crosses the network).
 
 use super::DataBlock;
+use crate::data::stream::RowSource;
 use crate::mapreduce::{Emitter, Engine, Job, JobError, JobMetrics, TaskCtx};
 
 /// How to draw the sample.
@@ -119,6 +120,60 @@ pub fn run(
     Ok(SampleOut { samples, indices, metrics: run.metrics })
 }
 
+/// Streamed [`run`]: replay the engine's exact task schedule over tiles
+/// read on demand — tile `t` is map task `t` with `TaskCtx::new(seed, t)`,
+/// emissions are concatenated in tile order (what the engine's shuffle
+/// does after sorting by origin task), and the single reduce group runs
+/// under the engine's reduce RNG (`seed ^ 0xF00D`, group 0). The sample
+/// is therefore bit-identical to the in-memory job at the same
+/// `engine_seed` and `block_rows`, while memory stays bounded by one tile
+/// plus the emitted sample.
+pub fn run_stream(
+    src: &dyn RowSource,
+    block_rows: usize,
+    engine_seed: u64,
+    l_target: usize,
+    mode: SampleMode,
+) -> anyhow::Result<SampleOut> {
+    assert!(block_rows > 0);
+    let d = src.d();
+    let n_total = src.n();
+    let job = SampleJob { d, n_total, l_target: l_target.max(1), mode };
+    let mut metrics = JobMetrics::default();
+    let mut values: Vec<(u64, Vec<f32>)> = Vec::new();
+    let mut buf = Vec::new();
+    let mut start = 0usize;
+    let mut t = 0usize;
+    while start < n_total {
+        let rows = (n_total - start).min(block_rows);
+        src.read_rows(start, rows, &mut buf)?;
+        let block = DataBlock { start, rows, x: std::mem::take(&mut buf) };
+        let mut ctx = TaskCtx::new(engine_seed, t);
+        let mut emitter = Emitter::new();
+        job.map(t, &block, &mut ctx, &mut emitter);
+        buf = block.x; // reclaim the tile buffer
+        metrics.map_tasks += 1;
+        metrics.shuffle_pairs += emitter.pairs.len();
+        metrics.shuffle_bytes += emitter.bytes;
+        for (name, v) in ctx.counters {
+            metrics.add_counter(name, v);
+        }
+        values.extend(emitter.pairs.into_iter().map(|(_, v)| v));
+        start += rows;
+        t += 1;
+    }
+    let mut rctx = TaskCtx::new(engine_seed ^ 0xF00D, 0);
+    let reduced = job.reduce(0, values, &mut rctx);
+    metrics.reduce_tasks = 1;
+    let mut samples = Vec::with_capacity(reduced.len() * d);
+    let mut indices = Vec::with_capacity(reduced.len());
+    for (idx, pt) in reduced {
+        indices.push(idx);
+        samples.extend(pt);
+    }
+    Ok(SampleOut { samples, indices, metrics })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,6 +247,27 @@ mod tests {
             got as f64 > expected as f64 * 0.8 && (got as f64) < expected as f64 * 1.2,
             "shuffle {got} vs expected ~{expected}"
         );
+    }
+
+    #[test]
+    fn streamed_sample_bit_identical_to_engine() {
+        let ds = crate::data::registry::generate("moons", 900, 4);
+        let bs = DataBlock::partition(&ds.x, ds.n, ds.d, 128);
+        for mode in [SampleMode::Bernoulli, SampleMode::Exact] {
+            let engine =
+                Engine::new(EngineConfig { workers: 5, seed: 0xAB, ..Default::default() });
+            let a = run(&engine, &bs, ds.d, ds.n, 70, mode).unwrap();
+            let b = run_stream(&ds, 128, 0xAB, 70, mode).unwrap();
+            assert_eq!(a.indices, b.indices);
+            assert_eq!(a.samples, b.samples);
+            assert_eq!(a.metrics.shuffle_bytes, b.metrics.shuffle_bytes);
+            assert_eq!(a.metrics.shuffle_pairs, b.metrics.shuffle_pairs);
+            assert_eq!(a.metrics.map_tasks, b.metrics.map_tasks);
+            assert_eq!(
+                a.metrics.counter("points_seen"),
+                b.metrics.counter("points_seen")
+            );
+        }
     }
 
     #[test]

@@ -1,12 +1,15 @@
 //! Binary dataset persistence.
 //!
-//! Format (little-endian):
+//! v1 format (little-endian):
 //! `"APNC" | u32 version | u64 n | u64 d | u64 k | name_len u32 | name utf8
 //!  | labels u32[n] | x f32[n*d]`
 //!
 //! Lets a generated mirror be frozen to disk once and reused across runs
 //! (`repro gen` → `repro run --input`), so table sweeps compare methods on
-//! *identical* bytes.
+//! *identical* bytes. The tile-aligned v2 format lives in
+//! [`super::stream`]; `load` transparently reads either version, and the
+//! bulk little-endian codecs below are shared by both writers (one
+//! buffered `write_all` per 64 KiB chunk instead of one per element).
 
 use super::Dataset;
 use anyhow::{bail, Context, Result};
@@ -16,7 +19,85 @@ use std::path::Path;
 const MAGIC: &[u8; 4] = b"APNC";
 const VERSION: u32 = 1;
 
-/// Write a dataset to `path`.
+/// Elements per conversion chunk: 16 Ki × 4 B = 64 KiB of scratch, so
+/// codec memory stays constant no matter how large the payload is.
+const IO_CHUNK: usize = 16 * 1024;
+
+/// Bulk little-endian encode of an f32 slice.
+pub fn write_f32s<W: Write>(w: &mut W, vals: &[f32]) -> std::io::Result<()> {
+    let mut buf = [0u8; IO_CHUNK * 4];
+    for chunk in vals.chunks(IO_CHUNK) {
+        let bytes = &mut buf[..chunk.len() * 4];
+        for (b, v) in bytes.chunks_exact_mut(4).zip(chunk) {
+            b.copy_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+/// Bulk little-endian encode of a u32 slice.
+pub fn write_u32s<W: Write>(w: &mut W, vals: &[u32]) -> std::io::Result<()> {
+    let mut buf = [0u8; IO_CHUNK * 4];
+    for chunk in vals.chunks(IO_CHUNK) {
+        let bytes = &mut buf[..chunk.len() * 4];
+        for (b, v) in bytes.chunks_exact_mut(4).zip(chunk) {
+            b.copy_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+/// Bulk read of `count` little-endian f32s, appended to `out`.
+pub fn read_f32s<R: Read>(r: &mut R, count: usize, out: &mut Vec<f32>) -> std::io::Result<()> {
+    out.reserve(count);
+    let mut buf = [0u8; IO_CHUNK * 4];
+    let mut left = count;
+    while left > 0 {
+        let take = left.min(IO_CHUNK);
+        let bytes = &mut buf[..take * 4];
+        r.read_exact(bytes)?;
+        f32s_from_le(bytes, out);
+        left -= take;
+    }
+    Ok(())
+}
+
+/// Bulk read of `count` little-endian u32s, appended to `out`.
+pub fn read_u32s<R: Read>(r: &mut R, count: usize, out: &mut Vec<u32>) -> std::io::Result<()> {
+    out.reserve(count);
+    let mut buf = [0u8; IO_CHUNK * 4];
+    let mut left = count;
+    while left > 0 {
+        let take = left.min(IO_CHUNK);
+        let bytes = &mut buf[..take * 4];
+        r.read_exact(bytes)?;
+        u32s_from_le(bytes, out);
+        left -= take;
+    }
+    Ok(())
+}
+
+/// Decode a little-endian byte run (length divisible by 4) onto `out`.
+pub(crate) fn f32s_from_le(bytes: &[u8], out: &mut Vec<f32>) {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    out.reserve(bytes.len() / 4);
+    for b in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+    }
+}
+
+/// Decode a little-endian byte run (length divisible by 4) onto `out`.
+pub(crate) fn u32s_from_le(bytes: &[u8], out: &mut Vec<u32>) {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    out.reserve(bytes.len() / 4);
+    for b in bytes.chunks_exact(4) {
+        out.push(u32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+    }
+}
+
+/// Write a dataset to `path` (v1 layout).
 pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
     let file = std::fs::File::create(path)
         .with_context(|| format!("creating {}", path.display()))?;
@@ -29,20 +110,20 @@ pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
     let name = ds.name.as_bytes();
     w.write_all(&(name.len() as u32).to_le_bytes())?;
     w.write_all(name)?;
-    for &l in &ds.labels {
-        w.write_all(&l.to_le_bytes())?;
-    }
-    for &v in &ds.x {
-        w.write_all(&v.to_le_bytes())?;
-    }
+    write_u32s(&mut w, &ds.labels)?;
+    write_f32s(&mut w, &ds.x)?;
     w.flush()?;
     Ok(())
 }
 
-/// Read a dataset from `path`.
+/// Read a dataset from `path` (either format version). Every allocation
+/// is bounded by the on-disk file size: the header's implied payload is
+/// checked against the actual length *before* the big buffers are
+/// reserved, so a corrupt header cannot trigger a multi-GB alloc.
 pub fn load(path: &Path) -> Result<Dataset> {
     let file = std::fs::File::open(path)
         .with_context(|| format!("opening {}", path.display()))?;
+    let file_len = file.metadata()?.len();
     let mut r = BufReader::new(file);
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
@@ -50,6 +131,9 @@ pub fn load(path: &Path) -> Result<Dataset> {
         bail!("{} is not an APNC dataset file", path.display());
     }
     let version = read_u32(&mut r)?;
+    if version == super::stream::TILED_VERSION {
+        return super::stream::load_tiled_dataset(path);
+    }
     if version != VERSION {
         bail!("unsupported dataset version {version}");
     }
@@ -63,20 +147,26 @@ pub fn load(path: &Path) -> Result<Dataset> {
     if name_len > 4096 {
         bail!("unreasonable name length {name_len}");
     }
+    let header_len = (4 + 4 + 24 + 4 + name_len) as u64;
+    let payload = (n as u64)
+        .checked_mul(d as u64)
+        .and_then(|nd| nd.checked_mul(4))
+        .and_then(|x| x.checked_add(n as u64 * 4))
+        .and_then(|p| p.checked_add(header_len));
+    match payload {
+        Some(need) if file_len >= need => {}
+        _ => bail!(
+            "{}: {file_len} bytes on disk, header implies n={n} d={d} (truncated or corrupt)",
+            path.display()
+        ),
+    }
     let mut name_buf = vec![0u8; name_len];
     r.read_exact(&mut name_buf)?;
     let name = String::from_utf8(name_buf).context("dataset name is not utf8")?;
-    let mut labels = Vec::with_capacity(n);
-    let mut buf4 = [0u8; 4];
-    for _ in 0..n {
-        r.read_exact(&mut buf4)?;
-        labels.push(u32::from_le_bytes(buf4));
-    }
-    let mut x = Vec::with_capacity(n * d);
-    for _ in 0..n * d {
-        r.read_exact(&mut buf4)?;
-        x.push(f32::from_le_bytes(buf4));
-    }
+    let mut labels = Vec::new();
+    read_u32s(&mut r, n, &mut labels)?;
+    let mut x = Vec::new();
+    read_f32s(&mut r, n * d, &mut x)?;
     if labels.iter().any(|&l| l as usize >= k) {
         bail!("label out of range for k={k}");
     }
@@ -135,5 +225,48 @@ mod tests {
         std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
         assert!(load(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_header_that_outruns_the_file() {
+        // a header claiming 2^40 rows over a 1 KiB file must fail fast,
+        // before any allocation sized from the header
+        let ds = registry::generate("moons", 50, 8);
+        let path = tmp("liar");
+        save(&ds, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8..16].copy_from_slice(&(1u64 << 40).to_le_bytes()); // n field
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("truncated or corrupt"), "{err}");
+    }
+
+    #[test]
+    fn loads_v2_tiled_files_transparently() {
+        let ds = registry::generate("rings", 123, 4);
+        let path = tmp("v2");
+        crate::data::stream::save_tiled(&ds, 32, &path).unwrap();
+        let back = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.x, ds.x);
+        assert_eq!(back.labels, ds.labels);
+    }
+
+    #[test]
+    fn codec_roundtrip_across_chunk_boundary() {
+        let vals: Vec<f32> = (0..IO_CHUNK + 37).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let mut bytes = Vec::new();
+        write_f32s(&mut bytes, &vals).unwrap();
+        assert_eq!(bytes.len(), vals.len() * 4);
+        let mut back = Vec::new();
+        read_f32s(&mut bytes.as_slice(), vals.len(), &mut back).unwrap();
+        assert_eq!(back, vals);
+        let ints: Vec<u32> = (0..IO_CHUNK * 2 + 5).map(|i| i as u32 * 7).collect();
+        let mut bytes = Vec::new();
+        write_u32s(&mut bytes, &ints).unwrap();
+        let mut back = Vec::new();
+        read_u32s(&mut bytes.as_slice(), ints.len(), &mut back).unwrap();
+        assert_eq!(back, ints);
     }
 }

@@ -6,6 +6,7 @@
 
 pub mod io;
 pub mod registry;
+pub mod stream;
 pub mod synth;
 
 /// An in-memory labeled dataset. Points are rows of `x` (row-major, f32 —

@@ -4,10 +4,12 @@
 //! reproduction defaults (reduced n, d capped at the artifact grid) and the
 //! generator + kernel the paper used for it. `repro table1` prints both.
 
+use super::stream::{self, RowSource};
 use super::synth::{self, Warp};
 use super::Dataset;
 use crate::kernels::Kernel;
 use crate::rng::Pcg;
+use anyhow::Result;
 
 /// How the paper configured the kernel for a dataset (Section 9).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -37,6 +39,23 @@ impl KernelChoice {
             KernelChoice::Neural => Kernel::Tanh { a: 0.0045, b: 0.11 },
             KernelChoice::Polynomial => Kernel::Poly { c: 1.0, degree: 5.0 },
         }
+    }
+
+    /// Streaming [`build`]: parameter estimation reads rows on demand
+    /// from a [`RowSource`] instead of a dense slice. The RNG draw
+    /// sequence is identical, so the resulting kernel is bit-identical
+    /// to `build` over the same bytes.
+    pub fn build_source(self, src: &dyn RowSource, rng: &mut Pcg) -> Result<Kernel> {
+        Ok(match self {
+            KernelChoice::SelfTunedRbf => {
+                Kernel::Rbf { gamma: stream::self_tune_gamma_source(src, rng)? }
+            }
+            KernelChoice::ScaledRbf(mult) => {
+                Kernel::Rbf { gamma: mult * stream::self_tune_gamma_source(src, rng)? }
+            }
+            KernelChoice::Neural => Kernel::Tanh { a: 0.0045, b: 0.11 },
+            KernelChoice::Polynomial => Kernel::Poly { c: 1.0, degree: 5.0 },
+        })
     }
 }
 
@@ -131,6 +150,16 @@ pub fn specs() -> Vec<Spec> {
             kernel: SelfTunedRbf,
         },
         Spec {
+            name: "higgs",
+            kind: "Particle Physics",
+            paper_n: 11_000_000,
+            paper_d: 28,
+            default_n: 11_000_000,
+            d: 28,
+            k: 2,
+            kernel: SelfTunedRbf,
+        },
+        Spec {
             name: "rings",
             kind: "Synthetic",
             paper_n: 0,
@@ -206,7 +235,23 @@ pub fn generate(name: &str, n: usize, seed: u64) -> Dataset {
         ),
         "rings" => synth::rings("rings", n, s.d, s.k, 0.06, seed ^ 0x07),
         "moons" => synth::moons("moons", n, s.d, 0.06, seed ^ 0x08),
+        // HIGGS lookalike: per-row generator, so the in-memory dataset is
+        // byte-identical to what `repro gen --stream` writes (the 11M-row
+        // default is meant for the streamed path; pass a smaller n here)
+        "higgs" => synth::RowGen::higgs_like(seed ^ 0x09).dataset("higgs", n),
         other => unreachable!("spec exists but no generator: {other}"),
+    }
+}
+
+/// Streaming row generator for registry entries that are synthesizable
+/// row-at-a-time (no global shuffle pass). `repro gen --stream` uses this
+/// to write 10M+ row files one tile at a time; entries that return `None`
+/// must be materialized with [`generate`] and frozen via
+/// [`stream::save_tiled`].
+pub fn stream_rowgen(name: &str, seed: u64) -> Option<synth::RowGen> {
+    match name {
+        "higgs" => Some(synth::RowGen::higgs_like(seed ^ 0x09)),
+        _ => None,
     }
 }
 

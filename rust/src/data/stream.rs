@@ -1,0 +1,741 @@
+//! Out-of-core data path: tile-aligned on-disk datasets and the
+//! [`RowSource`] abstraction that lets the pipeline read X in
+//! `block_rows × d` tiles without ever materializing the full matrix.
+//!
+//! ## v2 tiled format (little-endian)
+//!
+//! ```text
+//! "APNC" | u32 version=2 | u64 n | u64 d | u64 k | u64 block_rows
+//!        | u32 flags (bit0 = has_labels) | u32 name_len | name utf8
+//!        | u64 header_checksum (FNV-1a over every preceding byte)
+//! tile 0 | x f32[rows_0 * d] | labels u32[rows_0]   (labels iff flag set)
+//! tile 1 | ...
+//! ```
+//!
+//! Tiles are fixed-stride: every tile holds exactly `block_rows` rows
+//! except the last (`n mod block_rows` when nonzero), so the byte offset
+//! of any tile — and of any row inside it — is a closed-form expression
+//! and a reader can seek straight to a `rows × d` f32 run without
+//! deserializing anything before it. `open` validates the header with
+//! checked arithmetic and rejects any file whose length does not equal
+//! the header's implied payload: truncation, mid-tile EOF, and trailing
+//! garbage are all caught before a single tile is read. v1 files (the
+//! `io::save` layout: all labels, then all x, contiguous) open as a
+//! single-tile source, so every existing dataset file keeps working.
+//!
+//! ## Determinism contract
+//!
+//! The streamed fit replays the engine's per-task RNG schedule over
+//! tiles read in fixed chunk order (tile t ⇔ map task t), so sampled
+//! landmarks, embeddings, centroids, and labels are bit-identical to
+//! the in-memory path at the same seed and `block_rows` — at any thread
+//! count. See `ARCHITECTURE.md` ("Out-of-core data path").
+
+use super::{io, synth, Dataset};
+use anyhow::{bail, ensure, Context, Result};
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+const MAGIC: &[u8; 4] = b"APNC";
+pub(crate) const TILED_VERSION: u32 = 2;
+const FLAG_HAS_LABELS: u32 = 1;
+const MAX_NAME_LEN: usize = 4096;
+
+/// Default tile height for writers and streamed readers. One tile of a
+/// d=32 dataset is 1 MiB of f32 — small enough to keep RSS flat, large
+/// enough that per-tile overhead (seek + header math) vanishes.
+pub const DEFAULT_BLOCK_ROWS: usize = 8192;
+
+/// Row-range access to a (possibly disk-resident) labeled point set.
+///
+/// The streamed pipeline only ever asks for contiguous row ranges in
+/// ascending order (plus point lookups during initialization), so both
+/// backends stay O(range) in memory.
+pub trait RowSource: Send + Sync {
+    /// number of points
+    fn n(&self) -> usize;
+    /// feature dimensionality
+    fn d(&self) -> usize;
+    /// ground-truth class count (0 when unlabeled, e.g. embedding spills)
+    fn k(&self) -> usize;
+    /// dataset name (drives kernel selection via the registry)
+    fn name(&self) -> &str;
+    fn has_labels(&self) -> bool;
+    /// Fill `out` with rows `[start, start+rows)`, row-major. `out` is
+    /// cleared first; the call is an error past the end of the source.
+    fn read_rows(&self, start: usize, rows: usize, out: &mut Vec<f32>) -> Result<()>;
+    /// Fill `out` with labels for rows `[start, start+rows)`. Errors on
+    /// unlabeled sources.
+    fn read_labels(&self, start: usize, rows: usize, out: &mut Vec<u32>) -> Result<()>;
+}
+
+impl RowSource for Dataset {
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn d(&self) -> usize {
+        self.d
+    }
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn has_labels(&self) -> bool {
+        true
+    }
+    fn read_rows(&self, start: usize, rows: usize, out: &mut Vec<f32>) -> Result<()> {
+        ensure!(start + rows <= self.n, "row range {start}+{rows} past n={}", self.n);
+        out.clear();
+        out.extend_from_slice(&self.x[start * self.d..(start + rows) * self.d]);
+        Ok(())
+    }
+    fn read_labels(&self, start: usize, rows: usize, out: &mut Vec<u32>) -> Result<()> {
+        ensure!(start + rows <= self.n, "label range {start}+{rows} past n={}", self.n);
+        out.clear();
+        out.extend_from_slice(&self.labels[start..start + rows]);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// header plumbing
+// ---------------------------------------------------------------------------
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Shape and layout of a tiled file (parsed, validated header).
+#[derive(Clone, Debug)]
+pub struct TileMeta {
+    pub name: String,
+    pub n: usize,
+    pub d: usize,
+    pub k: usize,
+    pub block_rows: usize,
+    pub has_labels: bool,
+    pub version: u32,
+}
+
+impl TileMeta {
+    /// Number of tiles (`ceil(n / block_rows)`).
+    pub fn n_tiles(&self) -> usize {
+        self.n.div_ceil(self.block_rows)
+    }
+
+    /// Rows in tile `t` (full `block_rows` except possibly the last).
+    pub fn tile_rows(&self, t: usize) -> usize {
+        assert!(t < self.n_tiles(), "tile {t} out of range");
+        (self.n - t * self.block_rows).min(self.block_rows)
+    }
+
+    fn encode_header(&self) -> Vec<u8> {
+        let name = self.name.as_bytes();
+        let mut h = Vec::with_capacity(48 + name.len() + 8);
+        h.extend_from_slice(MAGIC);
+        h.extend_from_slice(&TILED_VERSION.to_le_bytes());
+        h.extend_from_slice(&(self.n as u64).to_le_bytes());
+        h.extend_from_slice(&(self.d as u64).to_le_bytes());
+        h.extend_from_slice(&(self.k as u64).to_le_bytes());
+        h.extend_from_slice(&(self.block_rows as u64).to_le_bytes());
+        let flags: u32 = if self.has_labels { FLAG_HAS_LABELS } else { 0 };
+        h.extend_from_slice(&flags.to_le_bytes());
+        h.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        h.extend_from_slice(name);
+        let sum = fnv1a(&h);
+        h.extend_from_slice(&sum.to_le_bytes());
+        h
+    }
+
+    /// Bytes of one full (non-final) tile.
+    fn full_tile_bytes(&self) -> u64 {
+        let x = (self.block_rows as u64) * (self.d as u64) * 4;
+        let l = if self.has_labels { self.block_rows as u64 * 4 } else { 0 };
+        x + l
+    }
+
+    /// Total payload bytes implied by the header; `None` on overflow.
+    fn payload_bytes(&self) -> Option<u64> {
+        let nd = (self.n as u64).checked_mul(self.d as u64)?;
+        let x = nd.checked_mul(4)?;
+        let l = if self.has_labels { (self.n as u64).checked_mul(4)? } else { 0 };
+        x.checked_add(l)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// writer
+// ---------------------------------------------------------------------------
+
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut name = path
+        .file_name()
+        .map(|s| s.to_os_string())
+        .unwrap_or_else(|| std::ffi::OsString::from("tiles"));
+    name.push(format!(".tmp{}", std::process::id()));
+    path.with_file_name(name)
+}
+
+/// Streaming writer for the v2 tiled format: declare the shape up front,
+/// append exactly one tile per call, then `finish` to atomically publish
+/// (write to a sibling temp file + rename, like the model format). A
+/// dropped unfinished writer removes its temp file, so a crashed `gen`
+/// never leaves a half-written dataset behind.
+pub struct TiledWriter {
+    w: BufWriter<File>,
+    meta: TileMeta,
+    rows_written: usize,
+    tmp: PathBuf,
+    path: PathBuf,
+    finished: bool,
+}
+
+impl TiledWriter {
+    pub fn create(
+        path: &Path,
+        name: &str,
+        n: usize,
+        d: usize,
+        k: usize,
+        block_rows: usize,
+        has_labels: bool,
+    ) -> Result<TiledWriter> {
+        ensure!(
+            n > 0 && d > 0 && block_rows > 0,
+            "degenerate shape n={n} d={d} block_rows={block_rows}"
+        );
+        ensure!(!has_labels || k >= 1, "labeled tiled file needs k >= 1, got k={k}");
+        ensure!(name.len() <= MAX_NAME_LEN, "dataset name too long ({} bytes)", name.len());
+        let meta = TileMeta {
+            name: name.to_string(),
+            n,
+            d,
+            k,
+            block_rows,
+            has_labels,
+            version: TILED_VERSION,
+        };
+        let tmp = tmp_sibling(path);
+        let file = File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+        let mut w = BufWriter::new(file);
+        w.write_all(&meta.encode_header())?;
+        Ok(TiledWriter { w, meta, rows_written: 0, tmp, path: path.to_path_buf(), finished: false })
+    }
+
+    /// Rows the next `append` must supply: `block_rows`, or the short
+    /// remainder for the final tile. Zero once all rows are written.
+    pub fn next_tile_rows(&self) -> usize {
+        (self.meta.n - self.rows_written).min(self.meta.block_rows)
+    }
+
+    pub fn rows_written(&self) -> usize {
+        self.rows_written
+    }
+
+    /// Append the next tile. `x` must hold exactly `next_tile_rows() * d`
+    /// values; `labels` is required iff the file was declared labeled.
+    pub fn append(&mut self, x: &[f32], labels: Option<&[u32]>) -> Result<()> {
+        let rows = self.next_tile_rows();
+        ensure!(rows > 0, "all {} rows already written", self.meta.n);
+        ensure!(
+            x.len() == rows * self.meta.d,
+            "tile holds {} values, expected {} rows x {} dims",
+            x.len(),
+            rows,
+            self.meta.d
+        );
+        match (self.meta.has_labels, labels) {
+            (true, Some(l)) => {
+                ensure!(l.len() == rows, "tile has {} labels, expected {rows}", l.len());
+                ensure!(
+                    l.iter().all(|&v| (v as usize) < self.meta.k),
+                    "label out of range for k={}",
+                    self.meta.k
+                );
+            }
+            (true, None) => bail!("labeled tiled file: append needs labels"),
+            (false, Some(_)) => bail!("unlabeled tiled file: append got labels"),
+            (false, None) => {}
+        }
+        io::write_f32s(&mut self.w, x)?;
+        if let Some(l) = labels {
+            io::write_u32s(&mut self.w, l)?;
+        }
+        self.rows_written += rows;
+        Ok(())
+    }
+
+    /// Flush and atomically rename into place. Errors if the declared
+    /// row count was not fully written.
+    pub fn finish(mut self) -> Result<()> {
+        ensure!(
+            self.rows_written == self.meta.n,
+            "tiled writer finished after {} of {} rows",
+            self.rows_written,
+            self.meta.n
+        );
+        self.w.flush()?;
+        std::fs::rename(&self.tmp, &self.path)
+            .with_context(|| format!("publishing {}", self.path.display()))?;
+        self.finished = true;
+        Ok(())
+    }
+}
+
+impl Drop for TiledWriter {
+    fn drop(&mut self) {
+        if !self.finished {
+            std::fs::remove_file(&self.tmp).ok();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// reader
+// ---------------------------------------------------------------------------
+
+struct Inner {
+    file: File,
+    /// reusable byte scratch; grows to at most one tile's x-run
+    scratch: Vec<u8>,
+}
+
+/// Random-access reader over an on-disk APNC dataset. v2 files are read
+/// tile-by-tile; v1 files (contiguous labels + x) are served as a single
+/// tile, so the streamed pipeline accepts either. The file handle lives
+/// behind a mutex — `RowSource` takes `&self` so a `TiledFile` can back
+/// fit and predict without threading mutable borrows everywhere.
+pub struct TiledFile {
+    meta: TileMeta,
+    /// byte offset where tile 0 (v2) or the labels run (v1) begins
+    payload_off: u64,
+    inner: Mutex<Inner>,
+    path: PathBuf,
+}
+
+impl TiledFile {
+    pub fn open(path: &Path) -> Result<TiledFile> {
+        let mut file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let file_len = file.metadata()?.len();
+        let mut fixed = [0u8; 8];
+        file.read_exact(&mut fixed[..8])
+            .with_context(|| format!("{}: file shorter than a header", path.display()))?;
+        if &fixed[..4] != MAGIC {
+            bail!("{} is not an APNC dataset file", path.display());
+        }
+        let version = u32::from_le_bytes([fixed[4], fixed[5], fixed[6], fixed[7]]);
+        match version {
+            1 => Self::open_v1(path, file, file_len),
+            TILED_VERSION => Self::open_v2(path, file, file_len),
+            other => bail!("{}: unsupported dataset version {other}", path.display()),
+        }
+    }
+
+    fn open_v1(path: &Path, mut file: File, file_len: u64) -> Result<TiledFile> {
+        // v1 layout after magic+version: n, d, k, name_len, name, labels, x
+        let mut head = [0u8; 28];
+        file.read_exact(&mut head)
+            .with_context(|| format!("{}: truncated v1 header", path.display()))?;
+        let n = u64::from_le_bytes(head[0..8].try_into().unwrap()) as usize;
+        let d = u64::from_le_bytes(head[8..16].try_into().unwrap()) as usize;
+        let k = u64::from_le_bytes(head[16..24].try_into().unwrap()) as usize;
+        let name_len = u32::from_le_bytes(head[24..28].try_into().unwrap()) as usize;
+        ensure!(n > 0 && d > 0 && k > 0, "degenerate dataset header: n={n} d={d} k={k}");
+        ensure!(name_len <= MAX_NAME_LEN, "unreasonable name length {name_len}");
+        let mut name_buf = vec![0u8; name_len];
+        file.read_exact(&mut name_buf)
+            .with_context(|| format!("{}: truncated v1 header", path.display()))?;
+        let name = String::from_utf8(name_buf).context("dataset name is not utf8")?;
+        // v1 is one big tile: all labels at payload_off, all x after them
+        let meta = TileMeta { name, n, d, k, block_rows: n, has_labels: true, version: 1 };
+        let payload_off = (8 + 28 + name_len) as u64;
+        let payload = meta
+            .payload_bytes()
+            .with_context(|| format!("{}: header implies an impossible size", path.display()))?;
+        let expected = payload_off + payload;
+        ensure!(
+            file_len >= expected,
+            "{}: {file_len} bytes on disk, header implies {expected} (truncated)",
+            path.display()
+        );
+        Ok(TiledFile {
+            meta,
+            payload_off,
+            inner: Mutex::new(Inner { file, scratch: Vec::new() }),
+            path: path.to_path_buf(),
+        })
+    }
+
+    fn open_v2(path: &Path, mut file: File, file_len: u64) -> Result<TiledFile> {
+        let mut head = [0u8; 32];
+        file.read_exact(&mut head)
+            .with_context(|| format!("{}: truncated v2 header", path.display()))?;
+        let n = u64::from_le_bytes(head[0..8].try_into().unwrap()) as usize;
+        let d = u64::from_le_bytes(head[8..16].try_into().unwrap()) as usize;
+        let k = u64::from_le_bytes(head[16..24].try_into().unwrap()) as usize;
+        let block_rows = u64::from_le_bytes(head[24..32].try_into().unwrap()) as usize;
+        let mut tail = [0u8; 8];
+        file.read_exact(&mut tail)
+            .with_context(|| format!("{}: truncated v2 header", path.display()))?;
+        let flags = u32::from_le_bytes(tail[0..4].try_into().unwrap());
+        let name_len = u32::from_le_bytes(tail[4..8].try_into().unwrap()) as usize;
+        ensure!(n > 0 && d > 0, "degenerate dataset header: n={n} d={d}");
+        ensure!(block_rows > 0, "degenerate tile height block_rows=0");
+        ensure!(flags & !FLAG_HAS_LABELS == 0, "unknown flags {flags:#x}");
+        let has_labels = flags & FLAG_HAS_LABELS != 0;
+        ensure!(!has_labels || k >= 1, "labeled file with k={k}");
+        ensure!(name_len <= MAX_NAME_LEN, "unreasonable name length {name_len}");
+        let mut name_buf = vec![0u8; name_len];
+        file.read_exact(&mut name_buf)
+            .with_context(|| format!("{}: truncated v2 header", path.display()))?;
+        let name = String::from_utf8(name_buf).context("dataset name is not utf8")?;
+        let mut stored_sum = [0u8; 8];
+        file.read_exact(&mut stored_sum)
+            .with_context(|| format!("{}: truncated v2 header", path.display()))?;
+        let meta = TileMeta { name, n, d, k, block_rows, has_labels, version: TILED_VERSION };
+        let header = meta.encode_header();
+        // encode_header appends the checksum; strip it to hash the prefix
+        let want = fnv1a(&header[..header.len() - 8]);
+        ensure!(
+            u64::from_le_bytes(stored_sum) == want,
+            "{}: header checksum mismatch (corrupt header)",
+            path.display()
+        );
+        let payload_off = header.len() as u64;
+        let payload = meta
+            .payload_bytes()
+            .with_context(|| format!("{}: header implies an impossible size", path.display()))?;
+        let expected = payload_off
+            .checked_add(payload)
+            .with_context(|| format!("{}: header implies an impossible size", path.display()))?;
+        ensure!(
+            file_len == expected,
+            "{}: {file_len} bytes on disk, header implies {expected} \
+             (truncated or trailing bytes — corrupt tile data)",
+            path.display()
+        );
+        Ok(TiledFile {
+            meta,
+            payload_off,
+            inner: Mutex::new(Inner { file, scratch: Vec::new() }),
+            path: path.to_path_buf(),
+        })
+    }
+
+    pub fn meta(&self) -> &TileMeta {
+        &self.meta
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Byte offset of tile `t`'s x-run.
+    fn tile_off(&self, t: usize) -> u64 {
+        if self.meta.version == 1 {
+            // single tile: labels first, then x
+            return self.payload_off + self.meta.n as u64 * 4;
+        }
+        self.payload_off + self.meta.full_tile_bytes() * t as u64
+    }
+
+    /// Byte offset of tile `t`'s label run.
+    fn label_off(&self, t: usize) -> u64 {
+        if self.meta.version == 1 {
+            return self.payload_off;
+        }
+        self.tile_off(t) + (self.meta.tile_rows(t) * self.meta.d * 4) as u64
+    }
+
+    fn read_f32_run(
+        &self,
+        inner: &mut Inner,
+        off: u64,
+        count: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        inner.file.seek(SeekFrom::Start(off))?;
+        inner.scratch.resize(count * 4, 0);
+        inner.file.read_exact(&mut inner.scratch).with_context(|| {
+            format!("{}: short read inside a tile (corrupt file)", self.path.display())
+        })?;
+        io::f32s_from_le(&inner.scratch, out);
+        Ok(())
+    }
+
+    fn read_u32_run(
+        &self,
+        inner: &mut Inner,
+        off: u64,
+        count: usize,
+        out: &mut Vec<u32>,
+    ) -> Result<()> {
+        inner.file.seek(SeekFrom::Start(off))?;
+        inner.scratch.resize(count * 4, 0);
+        inner.file.read_exact(&mut inner.scratch).with_context(|| {
+            format!("{}: short read inside a tile (corrupt file)", self.path.display())
+        })?;
+        io::u32s_from_le(&inner.scratch, out);
+        Ok(())
+    }
+
+    /// Load the whole file into memory as a [`Dataset`]. Allocation is
+    /// bounded by the on-disk size (validated at `open`); the read runs
+    /// tile-by-tile through the bounded scratch buffer.
+    pub fn read_all(&self) -> Result<Dataset> {
+        ensure!(
+            self.meta.has_labels,
+            "{} has no labels; cannot load as a Dataset",
+            self.path.display()
+        );
+        let (n, d) = (self.meta.n, self.meta.d);
+        let mut x = Vec::with_capacity(n * d);
+        let mut labels = Vec::with_capacity(n);
+        let mut xbuf = Vec::new();
+        let mut lbuf = Vec::new();
+        for t in 0..self.meta.n_tiles() {
+            let start = t * self.meta.block_rows;
+            let rows = self.meta.tile_rows(t);
+            self.read_rows(start, rows, &mut xbuf)?;
+            self.read_labels(start, rows, &mut lbuf)?;
+            x.extend_from_slice(&xbuf);
+            labels.extend_from_slice(&lbuf);
+        }
+        Ok(Dataset::new(self.meta.name.clone(), d, self.meta.k, x, labels))
+    }
+}
+
+impl RowSource for TiledFile {
+    fn n(&self) -> usize {
+        self.meta.n
+    }
+    fn d(&self) -> usize {
+        self.meta.d
+    }
+    fn k(&self) -> usize {
+        self.meta.k
+    }
+    fn name(&self) -> &str {
+        &self.meta.name
+    }
+    fn has_labels(&self) -> bool {
+        self.meta.has_labels
+    }
+
+    fn read_rows(&self, start: usize, rows: usize, out: &mut Vec<f32>) -> Result<()> {
+        ensure!(start + rows <= self.meta.n, "row range {start}+{rows} past n={}", self.meta.n);
+        out.clear();
+        out.reserve(rows * self.meta.d);
+        let mut inner = self.inner.lock().unwrap();
+        let mut cur = start;
+        let mut left = rows;
+        while left > 0 {
+            let t = cur / self.meta.block_rows;
+            let in_tile = cur - t * self.meta.block_rows;
+            let take = (self.meta.tile_rows(t) - in_tile).min(left);
+            let off = self.tile_off(t) + (in_tile * self.meta.d * 4) as u64;
+            self.read_f32_run(&mut inner, off, take * self.meta.d, out)?;
+            cur += take;
+            left -= take;
+        }
+        Ok(())
+    }
+
+    fn read_labels(&self, start: usize, rows: usize, out: &mut Vec<u32>) -> Result<()> {
+        ensure!(self.meta.has_labels, "{} has no labels", self.path.display());
+        ensure!(start + rows <= self.meta.n, "label range {start}+{rows} past n={}", self.meta.n);
+        out.clear();
+        out.reserve(rows);
+        let mut inner = self.inner.lock().unwrap();
+        let mut cur = start;
+        let mut left = rows;
+        while left > 0 {
+            let t = cur / self.meta.block_rows;
+            let in_tile = cur - t * self.meta.block_rows;
+            let take = (self.meta.tile_rows(t) - in_tile).min(left);
+            let off = self.label_off(t) + (in_tile * 4) as u64;
+            self.read_u32_run(&mut inner, off, take, out)?;
+            cur += take;
+            left -= take;
+        }
+        if out.iter().any(|&l| l as usize >= self.meta.k) {
+            bail!("{}: label out of range for k={}", self.path.display(), self.meta.k);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// convenience entry points
+// ---------------------------------------------------------------------------
+
+/// Freeze an in-memory dataset to the v2 tiled format.
+pub fn save_tiled(ds: &Dataset, block_rows: usize, path: &Path) -> Result<()> {
+    let mut w = TiledWriter::create(path, &ds.name, ds.n, ds.d, ds.k, block_rows, true)?;
+    let mut start = 0;
+    while start < ds.n {
+        let rows = w.next_tile_rows();
+        let x = &ds.x[start * ds.d..(start + rows) * ds.d];
+        w.append(x, Some(&ds.labels[start..start + rows]))?;
+        start += rows;
+    }
+    w.finish()
+}
+
+/// Synthesize `n` rows of `gen` straight to a v2 tiled file, one tile in
+/// memory at a time — this is how `repro gen --stream` writes 10M+ row
+/// datasets without materializing them.
+pub fn generate_tiled(
+    gen: &synth::RowGen,
+    name: &str,
+    n: usize,
+    block_rows: usize,
+    path: &Path,
+) -> Result<()> {
+    let d = gen.d();
+    let mut w = TiledWriter::create(path, name, n, d, gen.k(), block_rows, true)?;
+    let mut xs = vec![0.0f32; block_rows * d];
+    let mut ls = vec![0u32; block_rows];
+    let mut row = 0u64;
+    while w.rows_written() < n {
+        let rows = w.next_tile_rows();
+        for r in 0..rows {
+            ls[r] = gen.row(row, &mut xs[r * d..(r + 1) * d]);
+            row += 1;
+        }
+        w.append(&xs[..rows * d], Some(&ls[..rows]))?;
+    }
+    w.finish()
+}
+
+/// Full in-memory load of a v2 tiled file (the `io::load` delegate).
+pub(crate) fn load_tiled_dataset(path: &Path) -> Result<Dataset> {
+    TiledFile::open(path)?.read_all()
+}
+
+/// Streaming self-tuned RBF bandwidth: identical draw sequence and
+/// accumulation order to [`crate::kernels::self_tune_gamma`], with rows
+/// fetched on demand — the fetcher consumes no RNG, so the estimate is
+/// bit-identical to the in-memory heuristic over the same bytes.
+pub fn self_tune_gamma_source(src: &dyn RowSource, rng: &mut crate::rng::Pcg) -> Result<f32> {
+    let d = src.d();
+    let mut tmp = Vec::with_capacity(d);
+    crate::kernels::self_tune_gamma_with(src.n(), d, rng, |i, buf: &mut [f32]| {
+        src.read_rows(i, 1, &mut tmp)?;
+        buf.copy_from_slice(&tmp);
+        Ok(())
+    })
+}
+
+/// Process peak RSS (VmHWM) in KiB, read from /proc/self/status.
+/// Informative on Linux, `None` elsewhere — CI's hard RSS assertion uses
+/// `/usr/bin/time -v` around a fresh process instead.
+pub fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            return rest.trim().trim_end_matches(" kB").trim().parse().ok();
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("apnc-stream-test-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn writer_roundtrip_with_short_last_tile() {
+        let ds = registry::generate("moons", 307, 5);
+        let path = tmp("roundtrip");
+        save_tiled(&ds, 64, &path).unwrap();
+        let tf = TiledFile::open(&path).unwrap();
+        assert_eq!(tf.meta().n, 307);
+        assert_eq!(tf.meta().block_rows, 64);
+        assert_eq!(tf.meta().n_tiles(), 5);
+        assert_eq!(tf.meta().tile_rows(4), 307 - 4 * 64);
+        let back = tf.read_all().unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.x, ds.x);
+        assert_eq!(back.labels, ds.labels);
+        assert_eq!(back.name, ds.name);
+    }
+
+    #[test]
+    fn read_rows_crosses_tile_boundaries() {
+        let ds = registry::generate("rings", 200, 3);
+        let path = tmp("cross");
+        save_tiled(&ds, 48, &path).unwrap();
+        let tf = TiledFile::open(&path).unwrap();
+        let mut buf = Vec::new();
+        // a range spanning three tiles
+        tf.read_rows(40, 100, &mut buf).unwrap();
+        assert_eq!(buf, &ds.x[40 * ds.d..140 * ds.d]);
+        let mut lb = Vec::new();
+        tf.read_labels(40, 100, &mut lb).unwrap();
+        assert_eq!(lb, &ds.labels[40..140]);
+        assert!(tf.read_rows(150, 51, &mut buf).is_err(), "past the end");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn writer_enforces_tile_discipline() {
+        let path = tmp("discipline");
+        let mut w = TiledWriter::create(&path, "t", 10, 2, 2, 4, true).unwrap();
+        // wrong tile size
+        assert!(w.append(&[0.0; 6], Some(&[0, 0, 0])).is_err());
+        // missing labels on a labeled file
+        assert!(w.append(&[0.0; 8], None).is_err());
+        // label out of range
+        assert!(w.append(&[0.0; 8], Some(&[0, 1, 2, 0])).is_err());
+        w.append(&[0.0; 8], Some(&[0, 1, 1, 0])).unwrap();
+        // finishing early is an error and must not publish the file
+        let err = w.finish().unwrap_err().to_string();
+        assert!(err.contains("4 of 10"), "{err}");
+        assert!(!path.exists(), "unfinished writer must not publish");
+    }
+
+    #[test]
+    fn dataset_is_a_row_source() {
+        let ds = registry::generate("moons", 64, 9);
+        let mut buf = Vec::new();
+        ds.read_rows(10, 5, &mut buf).unwrap();
+        assert_eq!(buf, &ds.x[10 * ds.d..15 * ds.d]);
+        let mut lb = Vec::new();
+        ds.read_labels(0, 64, &mut lb).unwrap();
+        assert_eq!(lb, ds.labels);
+        assert!(ds.read_rows(60, 5, &mut buf).is_err());
+    }
+
+    #[test]
+    fn unlabeled_spill_file_roundtrips() {
+        let path = tmp("spill");
+        let mut w = TiledWriter::create(&path, "spill", 6, 3, 0, 4, false).unwrap();
+        w.append(&(0..12).map(|v| v as f32).collect::<Vec<_>>(), None).unwrap();
+        w.append(&(12..18).map(|v| v as f32).collect::<Vec<_>>(), None).unwrap();
+        w.finish().unwrap();
+        let tf = TiledFile::open(&path).unwrap();
+        assert!(!tf.has_labels());
+        let mut buf = Vec::new();
+        tf.read_rows(2, 3, &mut buf).unwrap();
+        assert_eq!(buf, vec![6.0, 7.0, 8.0, 9.0, 10.0, 11.0]);
+        let mut lb = Vec::new();
+        assert!(tf.read_labels(0, 1, &mut lb).is_err());
+        assert!(tf.read_all().is_err(), "unlabeled file cannot become a Dataset");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -252,20 +252,46 @@ fn sqdist(x: &[f32], z: &[f32]) -> f64 {
 pub fn self_tune_gamma(x: &[f32], d: usize, rng: &mut Pcg) -> f32 {
     let n = x.len() / d;
     assert!(n >= 2, "need at least two points");
+    self_tune_gamma_with(n, d, rng, |i, buf: &mut [f32]| {
+        buf.copy_from_slice(&x[i * d..(i + 1) * d]);
+        Ok(())
+    })
+    .expect("in-memory row fetch cannot fail")
+}
+
+/// Fetch-based core of [`self_tune_gamma`]: `fetch(i, buf)` fills `buf`
+/// with row `i`. The RNG draw sequence and f64 accumulation order are
+/// exactly those of the slice version — and `fetch` consumes no RNG — so
+/// an out-of-core caller (rows read from a tiled file) gets a
+/// bit-identical estimate over the same bytes.
+pub fn self_tune_gamma_with<F>(
+    n: usize,
+    d: usize,
+    rng: &mut Pcg,
+    mut fetch: F,
+) -> anyhow::Result<f32>
+where
+    F: FnMut(usize, &mut [f32]) -> anyhow::Result<()>,
+{
+    anyhow::ensure!(n >= 2, "need at least two points");
     let pairs = 1000.min(n * (n - 1) / 2).max(1);
     let mut sum = 0.0;
     let mut cnt = 0usize;
+    let mut bi = vec![0.0f32; d];
+    let mut bj = vec![0.0f32; d];
     for _ in 0..pairs {
         let i = rng.below(n);
         let mut j = rng.below(n);
         if i == j {
             j = (j + 1) % n;
         }
-        sum += sqdist(&x[i * d..(i + 1) * d], &x[j * d..(j + 1) * d]);
+        fetch(i, &mut bi)?;
+        fetch(j, &mut bj)?;
+        sum += sqdist(&bi, &bj);
         cnt += 1;
     }
     let mean = (sum / cnt as f64).max(1e-12);
-    (1.0 / mean) as f32
+    Ok((1.0 / mean) as f32)
 }
 
 #[cfg(test)]

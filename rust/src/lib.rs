@@ -79,9 +79,20 @@
 //! clean run), and retry exhaustion surfaces as a typed
 //! [`mapreduce::JobError`] — see `repro chaos` and `rust/tests/chaos.rs`.
 //!
+//! Datasets bigger than RAM go through the out-of-core data path
+//! ([`data::stream`]): a tile-aligned on-disk format behind the
+//! [`data::stream::RowSource`] trait, a streaming generator (`repro gen
+//! --stream` writes the registry's 11M-point `higgs` entry row-at-a-time),
+//! and streamed fit/predict (`Pipeline::fit_stream`,
+//! [`model::ApncModel::predict_stream`]) whose resident memory is bounded
+//! by one tile + the sample + the model while staying **bit-identical**
+//! to the in-memory path at the same seed — `rust/tests/stream_parity.rs`
+//! pins the contract, `ARCHITECTURE.md` §6 explains why it holds.
+//!
 //! See `examples/` for runnable end-to-end drivers (including
-//! `serve_stream`, a many-client sharded serving demo) and `repro --help`
-//! for the table-regeneration + fit/predict/serve CLI.
+//! `serve_stream`, a many-client sharded serving demo, and `large_scale`,
+//! the out-of-core HIGGS-scale driver) and `repro --help`
+//! for the table-regeneration + fit/predict/gen/serve CLI.
 //!
 //! ## Architecture
 //!

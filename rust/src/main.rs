@@ -7,6 +7,7 @@
 //!   run    [flags]              run one APNC pipeline on one dataset
 //!   fit    [flags]              fit a model and save it (train/serve split)
 //!   predict [flags]             load a saved model, label a dataset
+//!   gen    [flags]              freeze a registry dataset to disk
 //!   serve  [flags]              load a saved model, drive concurrent clients
 //!   chaos  [flags]              end-to-end fault drill: chaotic engine run
 //!                               must be bit-identical to a clean one, then
@@ -24,8 +25,22 @@
 //!                           m + oversample < l/4)
 //!              --eig-oversample P --eig-power-iters Q (rand solver knobs)
 //!              fit only: --out PATH (model file, default <dataset>.apncm)
+//!              fit only: --stream (out-of-core fit: read the input
+//!                           tile-by-tile, spill embeddings to a temp
+//!                           file; bit-identical to the in-memory fit)
+//!              fit only: --input FILE (with --stream: fit a tiled
+//!                           dataset file instead of synthesizing)
 //! `predict` flags: --model PATH [--input FILE | --dataset NAME --n N]
 //!              --chunk N (rows per prediction chunk, 0 = default)
+//!              --stream (out-of-core predict: stream tiles, never
+//!                           materializing the dataset; bounded RSS)
+//!              --labels-out PATH (streamed labels as little-endian u32)
+//!              --quality-sample N (streamed NMI subsample cap,
+//!                           default 100000; 0 disables the check)
+//! `gen` flags: --dataset NAME --n N --data-seed S --out PATH
+//!              --stream (write the tile-aligned v2 format row-by-row —
+//!                           10M+ rows without materializing)
+//!              --tile-rows N (rows per tile, default 8192)
 //! `serve` flags: --model PATH --shards N (serving threads, default 1)
 //!              --clients N --requests N
 //!              --request-rows N (rows per client request, default 512)
@@ -55,6 +70,7 @@ use apnc::cli::Args;
 use apnc::coordinator::driver::{Pipeline, PipelineConfig};
 use apnc::coordinator::sample::SampleMode;
 use apnc::data::registry;
+use apnc::data::stream::{peak_rss_kb, DEFAULT_BLOCK_ROWS, RowSource, TiledFile};
 use apnc::embedding::Method;
 use apnc::experiments::{ablate, table1, table2, table3};
 use apnc::linalg::EigSolver;
@@ -105,17 +121,16 @@ fn pipeline_config(args: &Args) -> Result<PipelineConfig> {
 }
 
 /// Load the `--model` file on the selected backend and check it against
-/// the dataset it is about to label (shared by `predict` and `serve`).
-fn load_model_checked(args: &Args, ds: &apnc::data::Dataset) -> Result<ApncModel> {
+/// the input it is about to label (shared by `predict` and `serve`).
+fn load_model_checked(args: &Args, d: usize) -> Result<ApncModel> {
     let Some(model_path) = args.get("model") else {
         bail!("{} needs --model PATH (produce one with `repro fit`)", args.subcommand);
     };
     let model = ApncModel::load_with(Path::new(model_path), compute_backend(args))?;
     ensure!(
-        model.d() == ds.d,
-        "model was fitted on d = {} but the dataset has d = {}",
-        model.d(),
-        ds.d
+        model.d() == d,
+        "model was fitted on d = {} but the input has d = {d}",
+        model.d()
     );
     Ok(model)
 }
@@ -128,6 +143,21 @@ fn load_dataset(args: &Args) -> Result<apnc::data::Dataset> {
             let name = args.get_or("dataset", "rings").to_string();
             let n = args.usize_or("n", 0)?;
             Ok(registry::generate(&name, n, args.u64_or("data-seed", 7)?))
+        }
+    }
+}
+
+/// The `--stream` counterpart of [`load_dataset`]: `--input FILE` opens
+/// the file as a [`RowSource`] (tile-aligned v2 or legacy v1 — rows are
+/// read on demand, never materialized); otherwise the registry dataset is
+/// generated in memory (a `Dataset` is itself a `RowSource`).
+fn open_source(args: &Args) -> Result<Box<dyn RowSource>> {
+    match args.get("input") {
+        Some(path) => Ok(Box::new(TiledFile::open(Path::new(path))?)),
+        None => {
+            let name = args.get_or("dataset", "rings").to_string();
+            let n = args.usize_or("n", 0)?;
+            Ok(Box::new(registry::generate(&name, n, args.u64_or("data-seed", 7)?)))
         }
     }
 }
@@ -213,6 +243,177 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fit --stream`: out-of-core fit over a [`RowSource`]. Peak RSS is
+/// bounded by the sample, one tile, and the model — never O(n) — and the
+/// fitted model is bit-identical to the in-memory `fit` at the same seed
+/// and block size.
+fn cmd_fit_stream(args: &Args) -> Result<()> {
+    let cfg = pipeline_config(args)?;
+    let src = open_source(args)?;
+    let out_path = args
+        .get("out")
+        .map(String::from)
+        .unwrap_or_else(|| format!("{}.apncm", src.name()));
+    let compute = compute_backend(args);
+    eprintln!(
+        "fit --stream: source={} n={} d={} k={} method={} backend={}",
+        src.name(),
+        src.n(),
+        src.d(),
+        src.k(),
+        cfg.method.label(),
+        if compute.is_pjrt() { "pjrt" } else { "reference" }
+    );
+    let n = src.n();
+    let t0 = Instant::now();
+    let (model, report) = Pipeline::with_compute(cfg, compute).fit_stream(src.as_ref())?;
+    let secs = t0.elapsed().as_secs_f64();
+    model.save(Path::new(&out_path))?;
+    let bytes = std::fs::metadata(&out_path).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "fitted {} model: l = {}, m = {}, k = {} ({} Lloyd iterations)",
+        model.method().label(),
+        model.l(),
+        model.m(),
+        model.k(),
+        report.iters_run
+    );
+    println!(
+        "streamed {} rows in {:.2}s ({:.0} rows/s); times: sample {:.2?}, coeff fit {:.2?}, \
+         embed {:.2?}, cluster {:.2?}",
+        n,
+        secs,
+        n as f64 / secs.max(1e-9),
+        report.times.sample,
+        report.times.coeff_fit,
+        report.times.embed,
+        report.times.cluster
+    );
+    if let Some(kb) = peak_rss_kb() {
+        println!("peak RSS: {kb} kB");
+    }
+    println!("wrote {out_path} ({bytes} bytes)");
+    Ok(())
+}
+
+/// `predict --stream`: load a model and label a [`RowSource`] tile-by-tile
+/// with bounded memory. Labels can be spilled to `--labels-out`; cluster
+/// quality (NMI) is estimated on a strided subsample when the source has
+/// ground-truth labels.
+fn cmd_predict_stream(args: &Args) -> Result<()> {
+    let src = open_source(args)?;
+    let model = load_model_checked(args, src.d())?;
+    println!(
+        "model: {} fitted on '{}' (seed {}): l = {}, m = {}, k = {}, kernel = {:?}",
+        model.method().label(),
+        model.provenance().dataset,
+        model.provenance().seed,
+        model.l(),
+        model.m(),
+        model.k(),
+        model.kernel()
+    );
+    let block_rows = args.usize_or("block-rows", 0)?;
+    let labels_out = args.get("labels-out").map(String::from);
+    let mut writer = match &labels_out {
+        Some(p) => Some(std::io::BufWriter::new(std::fs::File::create(p)?)),
+        None => None,
+    };
+    let n = src.n();
+    let quality_cap = args.usize_or("quality-sample", 100_000)?;
+    let stride = if quality_cap == 0 { 0 } else { (n / quality_cap).max(1) };
+    let check_quality = stride > 0 && src.has_labels();
+    let mut counts = vec![0usize; model.k()];
+    let mut sub_pred = Vec::new();
+    let mut sub_truth = Vec::new();
+    let mut truth_buf = Vec::new();
+    let t0 = Instant::now();
+    let rows = model.predict_stream(src.as_ref(), block_rows, |start, labels| {
+        for &l in labels {
+            counts[l as usize] += 1;
+        }
+        if let Some(w) = writer.as_mut() {
+            apnc::data::io::write_u32s(w, labels)?;
+        }
+        if check_quality {
+            src.read_labels(start, labels.len(), &mut truth_buf)?;
+            for (off, &l) in labels.iter().enumerate() {
+                if (start + off) % stride == 0 {
+                    sub_pred.push(l);
+                    sub_truth.push(truth_buf[off]);
+                }
+            }
+        }
+        Ok(())
+    })?;
+    if let Some(mut w) = writer {
+        use std::io::Write;
+        w.flush()?;
+        println!("labels written to {}", labels_out.as_deref().unwrap_or(""));
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "predicted {} points in {:.2}s ({:.0} rows/s, streamed)",
+        rows,
+        secs,
+        rows as f64 / secs.max(1e-9)
+    );
+    println!("cluster sizes: {counts:?}");
+    if check_quality {
+        println!(
+            "NMI vs ground truth = {:.4} (subsample of {} rows, stride {stride})",
+            apnc::metrics::nmi(&sub_pred, &sub_truth),
+            sub_pred.len()
+        );
+    }
+    if let Some(kb) = peak_rss_kb() {
+        println!("peak RSS: {kb} kB");
+    }
+    Ok(())
+}
+
+/// `gen --stream`: synthesize a dataset straight into the tile-aligned v2
+/// format — row-at-a-time for registry entries with a streaming generator
+/// (10M+ rows in O(tile) memory), else materialize once and freeze tiled.
+fn cmd_gen_stream(args: &Args) -> Result<()> {
+    let name = args.get_or("dataset", "rings").to_string();
+    let Some(spec) = registry::spec(&name) else {
+        bail!("unknown dataset '{name}'");
+    };
+    let mut n = args.usize_or("n", 0)?;
+    if n == 0 {
+        n = spec.default_n;
+    }
+    let data_seed = args.u64_or("data-seed", 7)?;
+    let tile = args.usize_or("tile-rows", DEFAULT_BLOCK_ROWS)?;
+    let out = args.get("out").map(String::from).unwrap_or(format!("{name}.tiled"));
+    let t0 = Instant::now();
+    match registry::stream_rowgen(&name, data_seed) {
+        Some(rowgen) => {
+            apnc::data::stream::generate_tiled(&rowgen, &name, n, tile, Path::new(&out))?
+        }
+        None => {
+            // no row-at-a-time generator for this entry: materialize once,
+            // then freeze in the tiled layout
+            let ds = registry::generate(&name, n, data_seed);
+            apnc::data::stream::save_tiled(&ds, tile, Path::new(&out))?;
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let bytes = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "wrote {out} (tiled v2: n = {n}, d = {}, k = {}, tile = {tile} rows, {bytes} bytes) \
+         in {secs:.2}s ({:.0} rows/s)",
+        spec.d,
+        spec.k,
+        n as f64 / secs.max(1e-9)
+    );
+    if let Some(kb) = peak_rss_kb() {
+        println!("peak RSS: {kb} kB");
+    }
+    Ok(())
+}
+
 fn cmd_fit(args: &Args) -> Result<()> {
     let cfg = pipeline_config(args)?;
     let ds = load_dataset(args)?;
@@ -259,7 +460,7 @@ fn cmd_fit(args: &Args) -> Result<()> {
 
 fn cmd_predict(args: &Args) -> Result<()> {
     let ds = load_dataset(args)?;
-    let model = load_model_checked(args, &ds)?;
+    let model = load_model_checked(args, ds.d)?;
     println!(
         "model: {} fitted on '{}' (seed {}): l = {}, m = {}, k = {}, kernel = {:?}",
         model.method().label(),
@@ -300,7 +501,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let queue_limit = args.usize_or("queue-limit", 0)?;
     let deadline_ms = args.u64_or("deadline-ms", 0)?;
     let ds = load_dataset(args)?;
-    let model = load_model_checked(args, &ds)?;
+    let model = load_model_checked(args, ds.d)?;
     // oracle for the determinism check: direct in-memory prediction
     let want = model.predict_batch(&ds.x, 0)?;
     let handle = model.serve_sharded_bounded(shards, window, queue_limit)?;
@@ -497,10 +698,13 @@ fn main() -> Result<()> {
         "table2" => cmd_table2(&args)?,
         "table3" => cmd_table3(&args)?,
         "run" => cmd_run(&args)?,
+        "fit" if args.has("stream") => cmd_fit_stream(&args)?,
         "fit" => cmd_fit(&args)?,
+        "predict" if args.has("stream") => cmd_predict_stream(&args)?,
         "predict" => cmd_predict(&args)?,
         "serve" => cmd_serve(&args)?,
         "chaos" => cmd_chaos(&args)?,
+        "gen" if args.has("stream") => cmd_gen_stream(&args)?,
         "gen" => {
             // freeze a mirrored dataset to disk for repeatable sweeps
             let name = args.get_or("dataset", "rings").to_string();
@@ -526,13 +730,14 @@ fn main() -> Result<()> {
         "" | "help" => {
             println!("repro — Embed and Conquer (kernel k-means on MapReduce) reproduction");
             println!(
-                "usage: repro <table1|table2|table3|run|fit|predict|serve|chaos|backend> [flags]"
+                "usage: repro <table1|table2|table3|run|fit|predict|gen|serve|chaos|backend> \
+                 [flags]"
             );
             println!("see the module docs in rust/src/main.rs and README.md");
         }
         other => bail!(
             "unknown subcommand '{other}' \
-             (try: table1 table2 table3 run fit predict serve chaos ablate backend)"
+             (try: table1 table2 table3 run fit predict gen serve chaos ablate backend)"
         ),
     }
     Ok(())

@@ -217,6 +217,39 @@ impl ApncModel {
         Ok(labels)
     }
 
+    /// [`ApncModel::predict_batch`] over a [`RowSource`]: tiles of
+    /// `block_rows` rows (0 = [`DEFAULT_CHUNK_ROWS`]) are read on demand,
+    /// predicted, and handed to `sink(start_row, labels)` in row order —
+    /// peak memory is one tile plus its embedding, never O(n). Returns the
+    /// number of rows predicted. Per-row labels are independent of the
+    /// tiling, so any `block_rows` reproduces [`ApncModel::predict`]
+    /// bit-for-bit.
+    pub fn predict_stream(
+        &self,
+        src: &dyn crate::data::stream::RowSource,
+        block_rows: usize,
+        mut sink: impl FnMut(usize, &[u32]) -> Result<()>,
+    ) -> Result<usize> {
+        let d = self.coeffs.d;
+        ensure!(
+            src.d() == d,
+            "source dimensionality {} != fitted dimensionality {d}",
+            src.d()
+        );
+        let chunk = if block_rows == 0 { DEFAULT_CHUNK_ROWS } else { block_rows };
+        let n = src.n();
+        let mut buf = Vec::new();
+        let mut start = 0usize;
+        while start < n {
+            let rows = (n - start).min(chunk);
+            src.read_rows(start, rows, &mut buf)?;
+            let labels = self.predict(&buf)?;
+            sink(start, &labels)?;
+            start += rows;
+        }
+        Ok(n)
+    }
+
     /// Write the model to `path` in the versioned binary format
     /// (see [`format`]).
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -340,6 +373,27 @@ mod tests {
         assert_eq!(model.method(), Method::Nystrom);
         assert_eq!(model.centroids().len(), 24);
         assert_eq!(model.provenance().dataset, "toy");
+    }
+
+    #[test]
+    fn predict_stream_matches_predict_for_any_tiling() {
+        let model = toy_model(1, 4, 6, 5, 3, 7);
+        let mut rng = Pcg::seeded(8);
+        let n = 137;
+        let x: Vec<f32> = (0..n * 4).map(|_| rng.normal() as f32).collect();
+        let want = model.predict(&x).unwrap();
+        let ds = crate::data::Dataset::new("toy", 4, 3, x, vec![0; n]);
+        for block_rows in [1usize, 16, 50, 137, 4096] {
+            let mut got = vec![u32::MAX; n];
+            let rows = model
+                .predict_stream(&ds, block_rows, |start, labels| {
+                    got[start..start + labels.len()].copy_from_slice(labels);
+                    Ok(())
+                })
+                .unwrap();
+            assert_eq!(rows, n);
+            assert_eq!(got, want, "block_rows {block_rows}");
+        }
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! Out-of-core data path: format robustness + end-to-end bit-identity.
+//!
+//! The determinism contract under test (ARCHITECTURE.md "Out-of-core data
+//! path"): for the same bytes, seed, and `block_rows`, the streamed fit
+//! and predict are **bit-identical** to the in-memory path — at any
+//! compute thread count, and regardless of the on-disk tile size (reads
+//! cross tile boundaries transparently). Plus: the v2 tile-aligned format
+//! rejects every corruption class up front, v1 files still open, and the
+//! row-streaming generator writes byte-identical files to the
+//! materialize-then-freeze path.
+
+use apnc::coordinator::driver::{Pipeline, PipelineConfig};
+use apnc::coordinator::sample::SampleMode;
+use apnc::data::registry;
+use apnc::data::stream::{self, RowSource, TiledFile};
+use apnc::data::{io, Dataset};
+use apnc::runtime::Compute;
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("apnc-stream-parity-{name}-{}", std::process::id()))
+}
+
+fn small_cfg(block_rows: usize, threads: usize, seed: u64) -> PipelineConfig {
+    PipelineConfig::builder()
+        .l(48)
+        .m(32)
+        .max_iters(8)
+        .workers(3)
+        .block_rows(block_rows)
+        .threads(threads)
+        .sample_mode(SampleMode::Exact)
+        .seed(seed)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn v2_rejects_every_corruption_class() {
+    let ds = registry::generate("moons", 200, 11);
+    let path = tmp("corrupt");
+    stream::save_tiled(&ds, 64, &path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+    assert!(TiledFile::open(&path).is_ok());
+
+    // wrong magic
+    let mut bad = good.clone();
+    bad[0] ^= 0xFF;
+    std::fs::write(&path, &bad).unwrap();
+    let err = TiledFile::open(&path).unwrap_err().to_string();
+    assert!(err.contains("not an APNC"), "{err}");
+
+    // unknown version
+    let mut bad = good.clone();
+    bad[4..8].copy_from_slice(&3u32.to_le_bytes());
+    std::fs::write(&path, &bad).unwrap();
+    assert!(TiledFile::open(&path).is_err());
+
+    // truncated (mid-tile EOF)
+    std::fs::write(&path, &good[..good.len() - 5]).unwrap();
+    assert!(TiledFile::open(&path).is_err());
+
+    // truncated to roughly half a tile past the header
+    std::fs::write(&path, &good[..good.len() - 64 * ds.d * 2]).unwrap();
+    assert!(TiledFile::open(&path).is_err());
+
+    // trailing junk
+    let mut bad = good.clone();
+    bad.push(0);
+    std::fs::write(&path, &bad).unwrap();
+    assert!(TiledFile::open(&path).is_err());
+
+    // corrupted name byte -> header checksum mismatch
+    let mut bad = good.clone();
+    bad[48] ^= 0x01; // first byte of the embedded name
+    std::fs::write(&path, &bad).unwrap();
+    assert!(TiledFile::open(&path).is_err());
+
+    // the original bytes still open after all that
+    std::fs::write(&path, &good).unwrap();
+    assert!(TiledFile::open(&path).is_ok());
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn v1_files_open_as_row_sources() {
+    let ds = registry::generate("rings", 150, 12);
+    let path = tmp("v1");
+    io::save(&ds, &path).unwrap();
+    let src = TiledFile::open(&path).unwrap();
+    assert_eq!((src.n(), src.d(), src.k()), (ds.n, ds.d, ds.k));
+    assert_eq!(src.name(), "rings");
+    assert!(src.has_labels());
+    let mut x = Vec::new();
+    src.read_rows(0, ds.n, &mut x).unwrap();
+    assert_eq!(x, ds.x);
+    let mut labels = Vec::new();
+    src.read_labels(40, 60, &mut labels).unwrap();
+    assert_eq!(labels, &ds.labels[40..100]);
+    drop(src);
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn v2_files_load_as_datasets() {
+    let ds = registry::generate("moons", 130, 13);
+    let path = tmp("v2load");
+    stream::save_tiled(&ds, 33, &path).unwrap();
+    let back = io::load(&path).unwrap();
+    assert_eq!(back.x, ds.x);
+    assert_eq!(back.labels, ds.labels);
+    assert_eq!(back.name, ds.name);
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn streamed_fit_bit_identical_across_tilings_and_threads() {
+    let ds = registry::generate("rings", 1_200, 3);
+    let path = tmp("fit");
+    // on-disk tile size 96 differs from every cfg.block_rows below: the
+    // determinism contract binds to cfg.block_rows, not the file layout
+    stream::save_tiled(&ds, 96, &path).unwrap();
+    let src = TiledFile::open(&path).unwrap();
+    let mut at_block64: Option<Vec<f32>> = None;
+    for (block_rows, threads) in [(64usize, 1usize), (64, 8), (100, 2), (256, 7)] {
+        let p = Pipeline::with_compute(small_cfg(block_rows, threads, 3), Compute::reference());
+        let (mem_model, mem_report) = p.fit(&ds).unwrap();
+        let (st_model, st_report) = p.fit_stream(&src).unwrap();
+        let tag = format!("block_rows={block_rows} threads={threads}");
+        assert_eq!(mem_model.centroids(), st_model.centroids(), "{tag}");
+        assert_eq!(mem_report.obj_curve, st_report.obj_curve, "{tag}");
+        assert_eq!(mem_report.l_actual, st_report.l_actual, "{tag}");
+        assert_eq!(mem_report.m_actual, st_report.m_actual, "{tag}");
+        assert_eq!(
+            mem_model.predict_batch(&ds.x, 0).unwrap(),
+            st_model.predict_batch(&ds.x, 0).unwrap(),
+            "{tag}"
+        );
+        // thread count must not move the streamed result either
+        if block_rows == 64 {
+            let c = st_model.centroids().to_vec();
+            match &at_block64 {
+                None => at_block64 = Some(c),
+                Some(prev) => assert_eq!(prev, &c, "threads changed the streamed fit"),
+            }
+        }
+    }
+    drop(src);
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn streamed_predict_matches_batch_for_any_tiling() {
+    let ds = registry::generate("moons", 500, 5);
+    let path = tmp("predict");
+    stream::save_tiled(&ds, 64, &path).unwrap();
+    let p = Pipeline::with_compute(small_cfg(128, 0, 5), Compute::reference());
+    let (model, _) = p.fit(&ds).unwrap();
+    let want = model.predict_batch(&ds.x, 0).unwrap();
+    let src = TiledFile::open(&path).unwrap();
+    for block_rows in [1usize, 77, 500] {
+        let mut got = vec![u32::MAX; ds.n];
+        let rows = model
+            .predict_stream(&src, block_rows, |start, labels| {
+                got[start..start + labels.len()].copy_from_slice(labels);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(rows, ds.n);
+        assert_eq!(got, want, "block_rows={block_rows}");
+    }
+    drop(src);
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn streamed_higgs_gen_is_byte_identical_to_in_memory() {
+    let n = 2_000;
+    let streamed = tmp("higgs-streamed");
+    let frozen = tmp("higgs-frozen");
+    let rowgen = registry::stream_rowgen("higgs", 7).unwrap();
+    stream::generate_tiled(&rowgen, "higgs", n, 256, &streamed).unwrap();
+    let ds = registry::generate("higgs", n, 7);
+    assert_eq!((ds.n, ds.d, ds.k), (n, 28, 2));
+    stream::save_tiled(&ds, 256, &frozen).unwrap();
+    assert_eq!(
+        std::fs::read(&streamed).unwrap(),
+        std::fs::read(&frozen).unwrap(),
+        "row-streamed generation must write the same bytes as materialize-then-freeze"
+    );
+    // and the tiled file round-trips back to the in-memory dataset
+    let back: Dataset = io::load(&streamed).unwrap();
+    assert_eq!(back.x, ds.x);
+    assert_eq!(back.labels, ds.labels);
+    std::fs::remove_file(&streamed).unwrap();
+    std::fs::remove_file(&frozen).unwrap();
+}
+
+#[test]
+fn higgs_spec_matches_the_paper_shape() {
+    let s = registry::spec("higgs").unwrap();
+    assert_eq!((s.paper_n, s.paper_d), (11_000_000, 28));
+    assert_eq!((s.d, s.k), (28, 2));
+    assert_eq!(s.default_n, 11_000_000);
+}
