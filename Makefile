@@ -5,21 +5,23 @@
 #   make doc         — rustdoc gate: cargo doc --no-deps with warnings
 #                      denied (broken intra-doc links fail the build)
 #   make lint        — cargo fmt --check + clippy --all-targets -D warnings
+#                      + apnc-lint (the in-tree determinism-contract
+#                      analyzer; see rust/src/analysis/)
 #   make verify      — build + test + doc + lint
 #   make bench-json  — regenerate $(BENCH_OUT) from the perf trajectory
 #                      suites (kernels, linalg, pipeline, serving);
 #                      records are JSON-lines appended by each suite
-#   make bench-json BENCH_OUT=BENCH_PR9.json  — next PR's baseline
+#   make bench-json BENCH_OUT=BENCH_PR10.json  — next PR's baseline
 #
 # CI (.github/workflows/ci.yml) runs `make verify` (plus a second test
 # pass at APNC_THREADS=3) and a bench smoke:
-#   APNC_BENCH_SMOKE=1 make bench-json BENCH_OUT=BENCH_PR8.json
+#   APNC_BENCH_SMOKE=1 make bench-json BENCH_OUT=BENCH_PR9.json
 # (smoke mode shrinks every suite's problem sizes so the bench binaries
 # compile and execute on every PR instead of rotting).
 
 CARGO   ?= cargo
 MANIFEST = rust/Cargo.toml
-BENCH_OUT ?= BENCH_PR8.json
+BENCH_OUT ?= BENCH_PR9.json
 
 .PHONY: build test doc lint verify bench-json
 
@@ -35,6 +37,7 @@ doc:
 lint:
 	$(CARGO) fmt --manifest-path $(MANIFEST) -- --check
 	$(CARGO) clippy --all-targets --manifest-path $(MANIFEST) -- -D warnings
+	$(CARGO) run --release --manifest-path $(MANIFEST) --bin apnc_lint -- rust/src
 
 verify: build test doc lint
 

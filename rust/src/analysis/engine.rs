@@ -1,0 +1,60 @@
+//! File-tree driver: walk a source root, lex each file, apply the
+//! rules, subtract suppressions, and report what is left.
+//!
+//! The walk is sorted and the per-file pipeline is pure, so the
+//! finding list is deterministic — the linter holds itself to the
+//! iteration-order contract it enforces (no hash-ordered containers
+//! anywhere in `analysis/`).
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use super::findings::Finding;
+use super::{rules, scanner, suppress};
+
+/// Lint one source text under a display path (relative to the source
+/// root, `/`-separated — the same shape the scope predicates match).
+pub fn lint_source(path: &str, text: &str) -> Vec<Finding> {
+    let lines = scanner::scan(text);
+    let mask = scanner::test_mask(&lines);
+    let (allows, mut findings) = suppress::collect(path, &lines);
+    let raw = rules::check(path, &lines, &mask);
+    findings.extend(raw.into_iter().filter(|f| !suppress::covered(&allows, f.rule, f.line)));
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+/// Lint every `.rs` file under `src_root`, in sorted path order.
+pub fn lint_tree(src_root: &Path) -> io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs_files(src_root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for file in &files {
+        let text = fs::read_to_string(file)?;
+        findings.extend(lint_source(&display_path(src_root, file), &text));
+    }
+    Ok(findings)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|ext| ext == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Root-relative `/`-separated display path, independent of the host
+/// path separator so findings and scopes are stable across platforms.
+fn display_path(root: &Path, file: &Path) -> String {
+    let rel = file.strip_prefix(root).unwrap_or(file);
+    let parts: Vec<String> =
+        rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    parts.join("/")
+}

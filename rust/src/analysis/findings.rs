@@ -1,0 +1,116 @@
+//! Finding and rule vocabulary for `apnc-lint`.
+//!
+//! Every rule is a named, severity-tagged invariant of the determinism
+//! contract (see the module docs on [`crate::analysis`] for the full
+//! table). A [`Finding`] is one violation, displayed in the fixed
+//! `file:line · RULE · message` shape that `make lint` and CI grep for.
+
+use std::fmt;
+
+/// Severity attached to a rule.
+///
+/// `Deny` findings fail the lint run (nonzero exit); `Warn` findings
+/// print but do not affect the exit code. Every shipped rule is
+/// currently `Deny` — the tag exists so a future rule can land in
+/// observe-only mode before it starts gating CI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Violations fail the run.
+    Deny,
+    /// Violations print only.
+    Warn,
+}
+
+/// The rule vocabulary. `D` rules guard determinism, `U` unsafe
+/// hygiene, `P` panic-freedom on the serving path, `F` float reduction
+/// order, and `A` the suppression annotations themselves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// Unordered-container (`HashMap`/`HashSet`) use in a
+    /// compute/reduce module without sort-before-iterate or an allow.
+    D1,
+    /// Wall-clock reads (`Instant::now`/`SystemTime`) in a
+    /// compute/reduce module.
+    D2,
+    /// Entropy source other than the pipeline PCG in `rng.rs`.
+    D3,
+    /// An `unsafe` site with no `SAFETY:` comment.
+    U1,
+    /// A panic path (`unwrap`/`expect`/`panic!`/...) in a serving
+    /// hot-path module.
+    P1,
+    /// Shared-state accumulation (locks/atomics) inside a `par_*`
+    /// closure, which breaks the fixed reduction order.
+    F1,
+    /// A malformed suppression: bare allow with no reason, or an allow
+    /// naming an unknown rule.
+    A1,
+}
+
+impl Rule {
+    /// Every rule, in report order.
+    pub const ALL: [Rule; 7] =
+        [Rule::D1, Rule::D2, Rule::D3, Rule::U1, Rule::P1, Rule::F1, Rule::A1];
+
+    /// The rule's display name (`D1`, `U1`, ...).
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::D1 => "D1",
+            Rule::D2 => "D2",
+            Rule::D3 => "D3",
+            Rule::U1 => "U1",
+            Rule::P1 => "P1",
+            Rule::F1 => "F1",
+            Rule::A1 => "A1",
+        }
+    }
+
+    /// Parse a rule name as written in an allow annotation.
+    pub fn parse(name: &str) -> Option<Rule> {
+        Rule::ALL.iter().copied().find(|r| r.name() == name)
+    }
+
+    /// The rule's severity. All shipped rules deny.
+    pub fn severity(self) -> Severity {
+        Severity::Deny
+    }
+
+    /// One-line description, for `--help`-style listings and docs.
+    pub fn summary(self) -> &'static str {
+        match self {
+            Rule::D1 => "no unordered-container iteration in compute/reduce modules",
+            Rule::D2 => "no wall-clock reads in compute/reduce modules",
+            Rule::D3 => "the pipeline PCG is the only entropy source",
+            Rule::U1 => "every unsafe site carries a SAFETY: comment",
+            Rule::P1 => "no panic paths in serving hot-path modules",
+            Rule::F1 => "no shared-state accumulation inside par_* closures",
+            Rule::A1 => "every allow annotation names a known rule and a reason",
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One lint violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path of the offending file, relative to the linted source root,
+    /// `/`-separated (this is also the path the scope predicates see).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// The violated rule.
+    pub rule: Rule,
+    /// Human-facing explanation, including the way out (fix or allow).
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{} · {} · {}", self.file, self.line, self.rule, self.message)
+    }
+}

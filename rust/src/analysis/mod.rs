@@ -1,0 +1,46 @@
+//! `apnc-lint` — the determinism-contract static analyzer.
+//!
+//! Everything this crate computes is promised to be bit-identical
+//! across thread counts and byte-replayable at a fixed seed. Parity
+//! tests check that contract after the fact; this module enforces it
+//! *before* the fact by lexing the crate's own sources (no syn, no
+//! proc-macros, no dependencies) and flagging the constructs that
+//! historically break it. The analyzer ships as a library
+//! ([`lint_source`], [`lint_tree`]), a standalone binary
+//! (`apnc_lint`), and a CLI verb (`repro lint`); `make lint` and CI
+//! gate on a clean tree.
+//!
+//! ## Rules
+//!
+//! | Rule | Severity | Invariant |
+//! |------|----------|-----------|
+//! | `D1` | deny | no `HashMap`/`HashSet` in compute/reduce modules (`linalg/`, `mapreduce/`, `coordinator/`, `embedding/`, `metrics/`, `runtime/reference.rs`) without sort-before-iterate |
+//! | `D2` | deny | no `Instant::now`/`SystemTime` in those modules (minus `coordinator/driver.rs`, the telemetry owner) |
+//! | `D3` | deny | the pipeline PCG (`rng.rs`) is the only entropy source, crate-wide |
+//! | `U1` | deny | every `unsafe` site carries a `SAFETY:` comment |
+//! | `P1` | deny | no `unwrap`/`expect`/`panic!` family in `model/serve.rs`, `model/shard.rs`, `runtime/service.rs` |
+//! | `F1` | deny | no locks/atomics accumulation inside `par_*` closure extents |
+//! | `A1` | deny | every allow annotation names a known rule and gives a reason |
+//!
+//! ## Suppressions
+//!
+//! A finding is silenced in source, on the finding's line or the line
+//! directly above, by `apnc-lint: allow(D1) <reason>` inside a
+//! comment (any rule name in place of `D1`) — see [`suppress`] for
+//! the grammar. The reason is mandatory; suppression is line-scoped
+//! by design.
+//!
+//! ## Findings
+//!
+//! One line each, `file:line · RULE · message`, sorted by file, line,
+//! then rule; the binary exits nonzero if any deny-severity finding
+//! survives suppression.
+
+pub mod engine;
+pub mod findings;
+pub mod rules;
+pub mod scanner;
+pub mod suppress;
+
+pub use engine::{lint_source, lint_tree};
+pub use findings::{Finding, Rule, Severity};

@@ -1,0 +1,269 @@
+//! Rule implementations: scope predicates plus per-line token checks.
+//!
+//! Matching is lexical and line-grained on the scanner's code text.
+//! That makes every rule conservative in the same direction: a rule
+//! may flag code that is actually sound (the way out is an allow
+//! annotation with a reason), but code the rule cares about cannot
+//! hide from it behind formatting, strings, or comments. Test regions
+//! (`#[cfg(test)]`) are exempt from every rule — the audit covers
+//! shipped code.
+
+use super::findings::{Finding, Rule};
+use super::scanner::Line;
+
+/// Modules on the fit-side compute/reduce path, where iteration order
+/// and wall-clock reads threaten the bit-identity contract (rules D1
+/// and D2). Paths are relative to the linted source root.
+fn compute_scope(path: &str) -> bool {
+    path.starts_with("linalg/")
+        || path.starts_with("mapreduce/")
+        || path.starts_with("coordinator/")
+        || path.starts_with("embedding/")
+        || path.starts_with("metrics/")
+        || path == "runtime/reference.rs"
+}
+
+/// D2 scope: the compute scope minus `coordinator/driver.rs`. The
+/// driver owns pipeline telemetry (phase timings in `FitReport`), and
+/// the contract's carve-out is exactly that timing belongs to
+/// serving, bench, and driver telemetry — never to computed values.
+fn d2_scope(path: &str) -> bool {
+    compute_scope(path) && path != "coordinator/driver.rs"
+}
+
+/// P1 scope: serving hot-path modules, where a panic kills a shard
+/// thread and a request with it.
+fn p1_scope(path: &str) -> bool {
+    matches!(path, "model/serve.rs" | "model/shard.rs" | "runtime/service.rs")
+}
+
+/// Entropy tokens D3 bans outside `rng.rs`. `RandomState` and
+/// `DefaultHasher` are seeded from the OS per process, so even their
+/// *iteration-free* use is nondeterministic across runs.
+const ENTROPY_TOKENS: [&str; 7] =
+    ["thread_rng", "from_entropy", "OsRng", "getrandom", "RandomState", "DefaultHasher", "rand::"];
+
+/// Panic-path tokens P1 bans. `.unwrap_or_else(...)` (the
+/// lock-poisoning recovery idiom) and the `assert!` family are
+/// deliberately not on the list.
+const PANIC_TOKENS: [&str; 6] =
+    [".unwrap()", ".expect(", "panic!", "unreachable!", "todo!", "unimplemented!"];
+
+/// Entry points of the fixed-order parallel substrate; F1 polices the
+/// argument extent (closures included) of every call to one of these.
+const PAR_CALLS: [&str; 2] = ["par_chunks_mut(", "par_map_indexed("];
+
+/// Shared-mutable-state tokens F1 bans inside a `par_*` call extent:
+/// cross-chunk accumulation through a lock or an atomic read-modify-
+/// write runs in scheduling order, not the fixed chunk merge order.
+const SHARED_STATE_TOKENS: [&str; 6] =
+    ["Mutex", "RwLock", ".lock()", "fetch_add", "fetch_sub", "compare_exchange"];
+
+/// Run every rule over one lexed file. `test_mask[i]` marks lines in
+/// `#[cfg(test)]` regions, which no rule inspects.
+pub fn check(path: &str, lines: &[Line], test_mask: &[bool]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    determinism(path, lines, test_mask, &mut out);
+    entropy(path, lines, test_mask, &mut out);
+    unsafe_hygiene(path, lines, test_mask, &mut out);
+    panic_paths(path, lines, test_mask, &mut out);
+    reduction_order(path, lines, test_mask, &mut out);
+    out
+}
+
+/// D1 + D2 over the compute scope.
+fn determinism(path: &str, lines: &[Line], mask: &[bool], out: &mut Vec<Finding>) {
+    if !compute_scope(path) {
+        return;
+    }
+    let timing = d2_scope(path);
+    for (i, line) in lines.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        let code = &line.code;
+        let unordered = contains_word(code, "HashMap") || contains_word(code, "HashSet");
+        if unordered && !code.trim_start().starts_with("use ") && !sorted_nearby(lines, mask, i) {
+            out.push(finding(
+                path,
+                line.number,
+                Rule::D1,
+                "unordered container in a compute/reduce module: sort before iterating, \
+                 switch to BTreeMap, or allow(D1) with the reason order cannot leak",
+            ));
+        }
+        if timing && (code.contains("Instant::now") || contains_word(code, "SystemTime")) {
+            out.push(finding(
+                path,
+                line.number,
+                Rule::D2,
+                "wall-clock read in a compute/reduce module: timing belongs to \
+                 serving/bench/driver telemetry, or allow(D2) with where the value goes",
+            ));
+        }
+    }
+}
+
+/// The sort-before-iterate escape for D1: a `.sort` call on the same
+/// line or within the next three non-test lines.
+fn sorted_nearby(lines: &[Line], mask: &[bool], i: usize) -> bool {
+    lines
+        .iter()
+        .enumerate()
+        .skip(i)
+        .take(4)
+        .any(|(j, l)| !mask[j] && l.code.contains(".sort"))
+}
+
+/// D3 everywhere except the pipeline PCG itself.
+fn entropy(path: &str, lines: &[Line], mask: &[bool], out: &mut Vec<Finding>) {
+    if path == "rng.rs" {
+        return;
+    }
+    for (i, line) in lines.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        if ENTROPY_TOKENS.iter().any(|t| contains_word(&line.code, t)) {
+            out.push(finding(
+                path,
+                line.number,
+                Rule::D3,
+                "entropy source other than the pipeline PCG: thread seeds through \
+                 rng::Pcg so every run is byte-replayable",
+            ));
+        }
+    }
+}
+
+/// U1 everywhere: each line holding an `unsafe` token needs a
+/// `SAFETY:` comment on the line itself or in the contiguous comment
+/// block directly above it.
+fn unsafe_hygiene(path: &str, lines: &[Line], mask: &[bool], out: &mut Vec<Finding>) {
+    for (i, line) in lines.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        if contains_word(&line.code, "unsafe") && !has_safety_comment(lines, i) {
+            out.push(finding(
+                path,
+                line.number,
+                Rule::U1,
+                "unsafe site without a SAFETY: comment stating the soundness argument",
+            ));
+        }
+    }
+}
+
+fn has_safety_comment(lines: &[Line], i: usize) -> bool {
+    if lines[i].comment.contains("SAFETY:") {
+        return true;
+    }
+    // walk the contiguous comment-only block directly above
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let line = &lines[j];
+        if !line.code.trim().is_empty() || line.comment.trim().is_empty() {
+            return false;
+        }
+        if line.comment.contains("SAFETY:") {
+            return true;
+        }
+    }
+    false
+}
+
+/// P1 over the serving hot-path modules.
+fn panic_paths(path: &str, lines: &[Line], mask: &[bool], out: &mut Vec<Finding>) {
+    if !p1_scope(path) {
+        return;
+    }
+    for (i, line) in lines.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        if PANIC_TOKENS.iter().any(|t| line.code.contains(t)) {
+            out.push(finding(
+                path,
+                line.number,
+                Rule::P1,
+                "panic path in a serving hot-path module: return a typed error, or \
+                 allow(P1) with the invariant that makes this unreachable",
+            ));
+        }
+    }
+}
+
+/// F1: track the paren extent of every `par_*` call (across lines) and
+/// flag shared-state tokens inside it.
+fn reduction_order(path: &str, lines: &[Line], mask: &[bool], out: &mut Vec<Finding>) {
+    let mut depth = 0i32;
+    for (i, line) in lines.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        let code = &line.code;
+        let begin = if depth == 0 {
+            // earliest par_* call opening on this line, if any
+            let open = PAR_CALLS.iter().filter_map(|t| code.find(t).map(|p| p + t.len())).min();
+            match open {
+                Some(open) => {
+                    depth = 1;
+                    open
+                }
+                None => continue,
+            }
+        } else {
+            0
+        };
+        let mut end = code.len();
+        for (off, c) in code[begin..].char_indices() {
+            match c {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = begin + off;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let extent = &code[begin..end];
+        if SHARED_STATE_TOKENS.iter().any(|t| extent.contains(t)) {
+            out.push(finding(
+                path,
+                line.number,
+                Rule::F1,
+                "shared-state accumulation inside a par_* closure: merge through the \
+                 fixed-order reduction helpers instead",
+            ));
+        }
+    }
+}
+
+fn finding(path: &str, line: usize, rule: Rule, message: &str) -> Finding {
+    Finding { file: path.to_string(), line, rule, message: message.to_string() }
+}
+
+/// Substring match with identifier boundaries: neither neighbor of the
+/// hit may be alphanumeric or `_`. Needles ending in punctuation (such
+/// as a path separator) work too — the boundary check only constrains
+/// neighbors that exist.
+fn contains_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let is_ident = |b: Option<u8>| b.is_some_and(|b| b == b'_' || b.is_ascii_alphanumeric());
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let start = from + pos;
+        let end = start + word.len();
+        let pre = start.checked_sub(1).map(|j| bytes[j]);
+        if !is_ident(pre) && !is_ident(bytes.get(end).copied()) {
+            return true;
+        }
+        from = end;
+    }
+    false
+}

@@ -1,0 +1,274 @@
+//! Comment/string-aware source scanner for `apnc-lint`.
+//!
+//! The analyzer never parses Rust — it lexes just enough to know, for
+//! every physical line, which characters the compiler sees (code) and
+//! which only humans see (comments). Rule matching runs on the code
+//! text, so a token inside a string literal or a comment can never
+//! fire; suppression annotations are read from the comment text, so
+//! they can never collide with code.
+//!
+//! The lexer understands line comments, nested block comments, string
+//! and byte-string literals (including escapes and line spill), raw
+//! strings with any number of `#`s, and char literals — the last
+//! matters because `'{'` or `'"'` would otherwise corrupt the brace
+//! and string tracking that everything downstream leans on.
+
+/// One physical source line after lexing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Line {
+    /// 1-based line number in the file.
+    pub number: usize,
+    /// The line's code with comments removed and string/char-literal
+    /// bodies blanked to spaces. Delimiters are kept, so brace and
+    /// paren structure survives.
+    pub code: String,
+    /// The line's comment text (line and block comments, concatenated).
+    pub comment: String,
+}
+
+/// Lexer state that can survive a line boundary.
+#[derive(Clone, Copy)]
+enum Mode {
+    Code,
+    /// Inside a block comment; payload = nesting depth (they nest).
+    Block(u32),
+    /// Inside an ordinary string or byte-string literal.
+    Str,
+    /// Inside a raw string closed by `"` plus this many `#`s.
+    Raw(u32),
+}
+
+/// Split `text` into per-line code/comment views.
+pub fn scan(text: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut mode = Mode::Code;
+    for (idx, raw_line) in text.lines().enumerate() {
+        let chars: Vec<char> = raw_line.chars().collect();
+        let mut code = String::with_capacity(chars.len());
+        let mut comment = String::new();
+        let mut i = 0usize;
+        while i < chars.len() {
+            let c = chars[i];
+            match mode {
+                Mode::Code => {
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        comment.extend(chars[i + 2..].iter());
+                        i = chars.len();
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(1);
+                        i += 2;
+                    } else if c == '"' {
+                        code.push('"');
+                        mode = Mode::Str;
+                        i += 1;
+                    } else if let Some((hashes, open_len)) = raw_string_open(&chars, i) {
+                        for k in 0..open_len {
+                            code.push(chars[i + k]);
+                        }
+                        mode = Mode::Raw(hashes);
+                        i += open_len;
+                    } else if c == '\'' {
+                        let len = char_literal_len(&chars, i);
+                        if len == 0 {
+                            // a lifetime or loop label, not a literal
+                            code.push('\'');
+                            i += 1;
+                        } else {
+                            code.push('\'');
+                            for _ in 0..len.saturating_sub(2) {
+                                code.push(' ');
+                            }
+                            code.push('\'');
+                            i += len;
+                        }
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+                Mode::Block(depth) => {
+                    if c == '*' && chars.get(i + 1) == Some(&'/') {
+                        mode = if depth == 1 { Mode::Code } else { Mode::Block(depth - 1) };
+                        comment.push(' ');
+                        i += 2;
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(depth + 1);
+                        i += 2;
+                    } else {
+                        comment.push(c);
+                        i += 1;
+                    }
+                }
+                Mode::Str => {
+                    if c == '\\' {
+                        code.push(' ');
+                        if i + 1 < chars.len() {
+                            code.push(' ');
+                        }
+                        i += 2;
+                    } else if c == '"' {
+                        code.push('"');
+                        mode = Mode::Code;
+                        i += 1;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                Mode::Raw(hashes) => {
+                    if c == '"' && closes_raw(&chars, i, hashes) {
+                        code.push('"');
+                        for _ in 0..hashes {
+                            code.push('#');
+                        }
+                        mode = Mode::Code;
+                        i += 1 + hashes as usize;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(Line { number: idx + 1, code, comment });
+    }
+    out
+}
+
+/// If position `i` opens a raw (byte) string — `r"`, `r#...#"`, `br"`,
+/// `br#...#"` — return `(hash_count, opener_length)`.
+fn raw_string_open(chars: &[char], i: usize) -> Option<(u32, usize)> {
+    // an identifier ending in `r` followed by a quote is not an opener
+    if i > 0 {
+        let prev = chars[i - 1];
+        if prev.is_alphanumeric() || prev == '_' || prev == '"' {
+            return None;
+        }
+    }
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+/// Does the `"` at position `i` close a raw string with `hashes` `#`s?
+fn closes_raw(chars: &[char], i: usize, hashes: u32) -> bool {
+    (1..=hashes as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// If position `i` (a `'`) starts a char or byte literal, return its
+/// length in chars; `0` means it is a lifetime or loop label.
+fn char_literal_len(chars: &[char], i: usize) -> usize {
+    match chars.get(i + 1) {
+        Some('\\') => match chars.get(i + 2) {
+            // `'\u{...}'`
+            Some('u') if chars.get(i + 3) == Some(&'{') => {
+                let mut j = i + 4;
+                while j < chars.len() && chars[j] != '}' {
+                    j += 1;
+                }
+                if chars.get(j) == Some(&'}') && chars.get(j + 1) == Some(&'\'') {
+                    j + 2 - i
+                } else {
+                    0
+                }
+            }
+            // `'\n'`, `'\''`, `'\\'`, `'\x41'` (x-escapes re-scan below)
+            Some('x') => {
+                if chars.get(i + 5) == Some(&'\'') {
+                    6
+                } else {
+                    0
+                }
+            }
+            Some(_) => {
+                if chars.get(i + 3) == Some(&'\'') {
+                    4
+                } else {
+                    0
+                }
+            }
+            None => 0,
+        },
+        // `'c'` for any single non-quote char
+        Some(&c) if c != '\'' => {
+            if chars.get(i + 2) == Some(&'\'') {
+                3
+            } else {
+                0
+            }
+        }
+        _ => 0,
+    }
+}
+
+/// Mark every line that lives inside a `#[cfg(test)]` item.
+///
+/// The lint rules audit shipped code; test modules are free to
+/// `unwrap()` and build `HashMap`s. Tracking is brace-based: the
+/// attribute arms the tracker, the item's opening `{` enters the
+/// region, and the matching `}` (or a `;` before any brace, for
+/// body-less items) leaves it.
+pub fn test_mask(lines: &[Line]) -> Vec<bool> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum State {
+        Normal,
+        /// Saw the attribute; waiting for the item's opening brace.
+        Armed,
+        /// Inside the item; payload = brace depth just outside it.
+        Inside(i32),
+    }
+
+    let mut depth = 0i32;
+    let mut state = State::Normal;
+    let mut mask = vec![false; lines.len()];
+    for (idx, line) in lines.iter().enumerate() {
+        if state == State::Normal && line.code.trim_start().starts_with("#[cfg(test)") {
+            state = State::Armed;
+        }
+        let mut in_test = state != State::Normal;
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    if state == State::Armed {
+                        state = State::Inside(depth);
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if let State::Inside(open) = state {
+                        if depth == open {
+                            state = State::Normal;
+                            in_test = true;
+                        }
+                    }
+                }
+                ';' => {
+                    // `#[cfg(test)] mod tests;` — item without a body
+                    if state == State::Armed {
+                        state = State::Normal;
+                        in_test = true;
+                    }
+                }
+                _ => {}
+            }
+        }
+        mask[idx] = in_test || state != State::Normal;
+    }
+    mask
+}

@@ -1,0 +1,85 @@
+//! In-source suppression annotations.
+//!
+//! A finding is silenced by an annotation in the *comment* text of the
+//! finding's own line, or of the line directly above it:
+//!
+//! ```text
+//! // apnc-lint: allow(P1) chaos hook: this panic is the test's point
+//! ```
+//!
+//! The rule list is comma-separated (`allow(D1, D2)` covers both).
+//! The free text after the closing paren is mandatory — an allow that
+//! does not say *why* is itself a finding (rule A1) and suppresses
+//! nothing, as is an allow naming an unknown rule. Suppressions are
+//! deliberately line-scoped: a blanket file- or module-level opt-out
+//! would defeat the audit.
+
+use super::findings::{Finding, Rule};
+use super::scanner::Line;
+
+/// The annotation marker looked up in comment text.
+pub const MARKER: &str = "apnc-lint:";
+
+/// A parsed, well-formed allow annotation.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    /// Line the annotation sits on; it covers this line and the next.
+    pub line: usize,
+    /// Rules it silences.
+    pub rules: Vec<Rule>,
+}
+
+/// Extract allow annotations from a file's comments. Malformed
+/// annotations come back as A1 findings instead of `Allow`s.
+pub fn collect(file: &str, lines: &[Line]) -> (Vec<Allow>, Vec<Finding>) {
+    let mut allows = Vec::new();
+    let mut findings = Vec::new();
+    for line in lines {
+        let Some(pos) = line.comment.find(MARKER) else {
+            continue;
+        };
+        let rest = line.comment[pos + MARKER.len()..].trim_start();
+        let Some(body) = rest.strip_prefix("allow(") else {
+            findings.push(malformed(file, line.number, "expected the allow(RULE) form"));
+            continue;
+        };
+        let Some(close) = body.find(')') else {
+            findings.push(malformed(file, line.number, "unclosed allow annotation"));
+            continue;
+        };
+        let mut rules = Vec::new();
+        let mut well_formed = true;
+        for name in body[..close].split(',') {
+            match Rule::parse(name.trim()) {
+                Some(rule) => rules.push(rule),
+                None => {
+                    findings.push(malformed(file, line.number, "allow names an unknown rule"));
+                    well_formed = false;
+                }
+            }
+        }
+        if body[close + 1..].trim().is_empty() {
+            findings.push(malformed(
+                file,
+                line.number,
+                "bare allow without a reason; say why the rule does not apply here",
+            ));
+            well_formed = false;
+        }
+        if well_formed && !rules.is_empty() {
+            allows.push(Allow { line: line.number, rules });
+        }
+    }
+    (allows, findings)
+}
+
+/// Does some allow cover `rule` on `line`?
+pub fn covered(allows: &[Allow], rule: Rule, line: usize) -> bool {
+    allows
+        .iter()
+        .any(|a| a.rules.contains(&rule) && (a.line == line || a.line + 1 == line))
+}
+
+fn malformed(file: &str, line: usize, message: &str) -> Finding {
+    Finding { file: file.to_string(), line, rule: Rule::A1, message: message.to_string() }
+}

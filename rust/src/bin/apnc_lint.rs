@@ -1,0 +1,43 @@
+//! Standalone entry point for `apnc-lint`, the determinism-contract
+//! static analyzer (see `apnc::analysis` for the rule vocabulary).
+//!
+//! Usage: `apnc_lint [SRC_ROOT]`. With no argument it looks for
+//! `rust/src` (repo root) then `src` (crate root). Exit status: 0 on
+//! a clean tree, 1 if any deny-severity finding survives suppression,
+//! 2 if the tree cannot be read.
+
+#![forbid(unsafe_code)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use apnc::analysis::{lint_tree, Severity};
+
+fn main() -> ExitCode {
+    let root = match std::env::args().nth(1) {
+        Some(arg) => PathBuf::from(arg),
+        None => ["rust/src", "src"]
+            .iter()
+            .map(PathBuf::from)
+            .find(|p| p.is_dir())
+            .unwrap_or_else(|| PathBuf::from("src")),
+    };
+    let findings = match lint_tree(&root) {
+        Ok(findings) => findings,
+        Err(err) => {
+            eprintln!("apnc-lint: cannot read {}: {err}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    for finding in &findings {
+        println!("{finding}");
+    }
+    let denied = findings.iter().filter(|f| f.rule.severity() == Severity::Deny).count();
+    if denied == 0 {
+        println!("apnc-lint: clean ({})", root.display());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("apnc-lint: {denied} unsuppressed finding(s)");
+        ExitCode::FAILURE
+    }
+}

@@ -66,6 +66,7 @@ pub fn fit(
 ) -> CoeffOut {
     let l = samples.len() / d;
     assert!(l > 0, "coefficient fit on empty sample set");
+    // apnc-lint: allow(D2) fit_time telemetry for FitReport; never feeds outputs
     let t0 = Instant::now();
     let (coeffs, solver) = match cfg.method {
         Method::Nystrom => nystrom::fit_with(samples, d, kernel, cfg.m, &cfg.eig, rng),

@@ -104,19 +104,42 @@
 //! where the worker pool's nested-parallelism guard sits. Start there
 //! before touching [`parallel`], [`mapreduce`], or [`coordinator`].
 
+// Unsafe hygiene, compiler-enforced: every `unsafe` block must spell
+// out its own obligations (`unsafe_op_in_unsafe_fn`), and `unsafe`
+// exists at all only in the parallel substrate and the kernel mirror
+// loop — every other module forbids it outright. apnc-lint's U1 rule
+// ([`analysis`]) audits the two carve-outs.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+#[forbid(unsafe_code)]
+pub mod analysis;
+#[forbid(unsafe_code)]
 pub mod baselines;
+#[forbid(unsafe_code)]
 pub mod bench;
+#[forbid(unsafe_code)]
 pub mod cli;
+#[forbid(unsafe_code)]
 pub mod coordinator;
+#[forbid(unsafe_code)]
 pub mod data;
+#[forbid(unsafe_code)]
 pub mod embedding;
+#[forbid(unsafe_code)]
 pub mod experiments;
 pub mod kernels;
+#[forbid(unsafe_code)]
 pub mod linalg;
+#[forbid(unsafe_code)]
 pub mod mapreduce;
+#[forbid(unsafe_code)]
 pub mod metrics;
+#[forbid(unsafe_code)]
 pub mod model;
 pub mod parallel;
+#[forbid(unsafe_code)]
 pub mod prop;
+#[forbid(unsafe_code)]
 pub mod rng;
+#[forbid(unsafe_code)]
 pub mod runtime;

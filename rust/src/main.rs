@@ -13,6 +13,10 @@
 //!                               must be bit-identical to a clean one, then
 //!                               shards are killed under live verified traffic
 //!   backend                     report which compute backend is active
+//!   lint   [--src DIR]          run apnc-lint, the determinism-contract
+//!                               static analyzer, over a source tree
+//!                               (default rust/src); nonzero exit on any
+//!                               unsuppressed finding
 //!
 //! Common flags: --runs N --scale S --seed S --only DATASET
 //! `run`/`fit` flags: --dataset NAME --method nys|sd|enys --l N --m N --k N
@@ -60,12 +64,13 @@
 //!              --shards N --clients N --requests N --request-rows N
 //!              --queue-limit N --deadline-ms T (as for `serve`)
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Result};
+use apnc::analysis::Severity;
 use apnc::cli::Args;
 use apnc::coordinator::driver::{Pipeline, PipelineConfig};
 use apnc::coordinator::sample::SampleMode;
@@ -691,6 +696,29 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro lint`: run the determinism-contract static analyzer
+/// (`apnc::analysis`) over a source tree and fail on any unsuppressed
+/// deny-severity finding. Findings print one per line as
+/// `file:line · RULE · message`, paths relative to the linted root.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = args
+        .get("src")
+        .map(PathBuf::from)
+        .or_else(|| ["rust/src", "src"].iter().map(PathBuf::from).find(|p| p.is_dir()))
+        .unwrap_or_else(|| PathBuf::from("src"));
+    let findings = apnc::analysis::lint_tree(&root)
+        .map_err(|e| anyhow::anyhow!("apnc-lint: cannot read {}: {e}", root.display()))?;
+    for finding in &findings {
+        println!("{finding}");
+    }
+    let denied = findings.iter().filter(|f| f.rule.severity() == Severity::Deny).count();
+    if denied > 0 {
+        bail!("apnc-lint: {denied} unsuppressed finding(s) in {}", root.display());
+    }
+    println!("apnc-lint: clean ({})", root.display());
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_str() {
@@ -704,6 +732,7 @@ fn main() -> Result<()> {
         "predict" => cmd_predict(&args)?,
         "serve" => cmd_serve(&args)?,
         "chaos" => cmd_chaos(&args)?,
+        "lint" => cmd_lint(&args)?,
         "gen" if args.has("stream") => cmd_gen_stream(&args)?,
         "gen" => {
             // freeze a mirrored dataset to disk for repeatable sweeps
@@ -730,14 +759,14 @@ fn main() -> Result<()> {
         "" | "help" => {
             println!("repro — Embed and Conquer (kernel k-means on MapReduce) reproduction");
             println!(
-                "usage: repro <table1|table2|table3|run|fit|predict|gen|serve|chaos|backend> \
+                "usage: repro <table1|table2|table3|run|fit|predict|gen|serve|chaos|lint|backend> \
                  [flags]"
             );
             println!("see the module docs in rust/src/main.rs and README.md");
         }
         other => bail!(
             "unknown subcommand '{other}' \
-             (try: table1 table2 table3 run fit predict gen serve chaos ablate backend)"
+             (try: table1 table2 table3 run fit predict gen serve chaos lint ablate backend)"
         ),
     }
     Ok(())

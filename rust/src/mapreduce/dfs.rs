@@ -6,7 +6,9 @@
 //! dataset blocks and the intermediate embedding matrix here between jobs
 //! (Algorithm 1's output is Algorithm 2's input).
 
-use std::collections::HashMap;
+// BTreeMap, not HashMap: `fail_node` iterates the store, and everything
+// in the engine's blast radius must iterate in a deterministic order.
+use std::collections::BTreeMap;
 
 /// One replicated block of typed data.
 #[derive(Clone, Debug)]
@@ -21,7 +23,7 @@ struct StoredBlock<T> {
 pub struct Dfs<T> {
     nodes: usize,
     replication: usize,
-    files: HashMap<String, Vec<StoredBlock<T>>>,
+    files: BTreeMap<String, Vec<StoredBlock<T>>>,
     /// total bytes written (replicas included): DFS write network cost
     pub bytes_written: usize,
 }
@@ -29,7 +31,7 @@ pub struct Dfs<T> {
 impl<T: Clone> Dfs<T> {
     pub fn new(nodes: usize, replication: usize) -> Self {
         assert!(nodes >= 1 && replication >= 1);
-        Dfs { nodes, replication: replication.min(nodes), files: HashMap::new(), bytes_written: 0 }
+        Dfs { nodes, replication: replication.min(nodes), files: BTreeMap::new(), bytes_written: 0 }
     }
 
     /// Store blocks under `name`. `byte_size` sizes each block for cost

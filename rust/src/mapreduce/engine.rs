@@ -149,6 +149,7 @@ impl Engine {
         let straggled = AtomicUsize::new(0);
         let results: Mutex<Vec<(usize, O, Duration, usize, Vec<(&'static str, u64)>)>> =
             Mutex::new(Vec::with_capacity(n_tasks));
+        // apnc-lint: allow(D2) phase telemetry into JobMetrics; never feeds outputs
         let map_start = Instant::now();
         let cpu_time: Mutex<Duration> = Mutex::new(Duration::ZERO);
         std::thread::scope(|scope| {
@@ -163,6 +164,7 @@ impl Engine {
                         if t >= n_tasks {
                             break;
                         }
+                        // apnc-lint: allow(D2) per-task telemetry; never feeds outputs
                         let t0 = Instant::now();
                         let mut attempts = 0;
                         let mut done = false;
@@ -247,6 +249,7 @@ impl Engine {
             task_time: Duration,
         }
         let results: Mutex<Vec<MapOut<J::Key, J::Value>>> = Mutex::new(Vec::with_capacity(n_tasks));
+        // apnc-lint: allow(D2) phase telemetry into JobMetrics; never feeds outputs
         let map_start = Instant::now();
         let cpu_time: Mutex<Duration> = Mutex::new(Duration::ZERO);
         std::thread::scope(|scope| {
@@ -261,6 +264,7 @@ impl Engine {
                         if t >= n_tasks {
                             break;
                         }
+                        // apnc-lint: allow(D2) per-task telemetry; never feeds outputs
                         let t0 = Instant::now();
                         let mut attempts = 0;
                         let mut produced = None;
@@ -333,6 +337,7 @@ impl Engine {
         metrics.map_cpu_time = *cpu_time.lock().unwrap();
 
         // ---- shuffle ---------------------------------------------------------
+        // apnc-lint: allow(D2) phase telemetry into JobMetrics; never feeds outputs
         let reduce_start = Instant::now();
         let mut map_outs = results.into_inner().unwrap();
         // sort by origin task so grouped values are schedule-independent

@@ -12,6 +12,7 @@
 /// this compaction instead. All metrics below are invariant to
 /// relabeling, so the index order never matters.
 fn compact_labels(labels: &[u32]) -> (Vec<usize>, usize) {
+    // apnc-lint: allow(D1) entry()/len() only — this map is never iterated
     let mut index = std::collections::HashMap::new();
     let mut dense = Vec::with_capacity(labels.len());
     for &l in labels {

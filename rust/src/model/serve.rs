@@ -316,7 +316,10 @@ impl PredictTicket {
         match self.redeem_within(None) {
             Redemption::Ready(r) => r,
             Redemption::Died(e) => Err(e),
-            Redemption::TimedOut => unreachable!("no deadline, no timeout"),
+            // no deadline was handed in, so a timeout cannot happen; if
+            // that invariant ever shifts, surface a typed error rather
+            // than a panic on the serving path
+            Redemption::TimedOut => Err(anyhow!("ticket without a deadline reported a timeout")),
         }
     }
 
@@ -355,11 +358,13 @@ pub struct ModelHandle {
 /// Serve non-predict requests; shared by the direct and mid-drain paths.
 fn handle_control(req: Request) -> ControlFlow<String> {
     match req {
+        // apnc-lint: allow(P1) dispatch invariant — both call sites route predicts to the batcher
         Request::Predict(_) => unreachable!("control handler never sees predicts"),
         Request::Shutdown { reply } => {
             let _ = reply.send(());
             ControlFlow::Break("shut down by explicit request".to_string())
         }
+        // apnc-lint: allow(P1) chaos hook — a deliberate death through the real epitaph path
         Request::Crash(msg) => panic!("{msg}"),
         Request::Stall(pause) => {
             std::thread::sleep(pause);
@@ -637,20 +642,23 @@ impl ModelHandle {
 /// for the whole batch), run **one** fused `predict_batch` over the
 /// gathered rows, and demux the labels back per request. A batch of one
 /// request predicts straight from the shared payload — no copy at all.
-fn serve_batch(slot: &ModelSlot, counters: &Counters, batch: Vec<PredictReq>) {
+fn serve_batch(slot: &ModelSlot, counters: &Counters, mut batch: Vec<PredictReq>) {
     let (model, epoch) = slot.load();
     let d = model.d();
     counters.requests.fetch_add(batch.len(), Ordering::Relaxed);
     counters.batches.fetch_add(1, Ordering::Relaxed);
     if batch.len() == 1 {
-        let PredictReq { x, rows, chunk_rows, reply } = batch.into_iter().next().unwrap();
-        let r = model
-            .predict_batch(&x[rows.start * d..rows.end * d], chunk_rows)
-            .map(|labels| {
-                counters.rows.fetch_add(labels.len(), Ordering::Relaxed);
-                Prediction { labels, epoch }
-            });
-        let _ = reply.send(r);
+        // pop the sole request rather than indexing into it: the serving
+        // thread carries no panic site even if the len-1 branch shifts
+        if let Some(PredictReq { x, rows, chunk_rows, reply }) = batch.pop() {
+            let r = model
+                .predict_batch(&x[rows.start * d..rows.end * d], chunk_rows)
+                .map(|labels| {
+                    counters.rows.fetch_add(labels.len(), Ordering::Relaxed);
+                    Prediction { labels, epoch }
+                });
+            let _ = reply.send(r);
+        }
         return;
     }
     // one contiguous buffer for the fused embed pass; per-request rows

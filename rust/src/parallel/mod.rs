@@ -102,10 +102,13 @@ pub fn chunk_rows(total_rows: usize, ops_per_row: usize) -> usize {
 /// touch overlapping elements.
 struct SendPtr<T>(*mut T);
 
-// SAFETY: access discipline (disjoint regions per share, completion
-// barrier before the owner reuses the buffer) is enforced by the two
-// partitioners below.
+// SAFETY: sending the pointer between threads is sound because the two
+// partitioners below hand each share a disjoint region of the buffer,
+// and the pool's completion barrier runs before the owner reuses it.
 unsafe impl<T: Send> Send for SendPtr<T> {}
+// SAFETY: shares only ever *read* the wrapper (to derive their own
+// disjoint region from the base address); the same access discipline
+// as Send makes concurrent `&SendPtr` use sound.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 /// Process `data` in chunks of `chunk_len` elements across up to

@@ -257,8 +257,8 @@ pub(crate) fn broadcast(shares: usize, f: &(dyn Fn(usize) + Sync)) {
         }
         return;
     }
-    // Publish the job. SAFETY of the transmute: fat reference -> fat raw
-    // pointer of identical layout, erasing only the lifetime; the
+    // Publish the job. SAFETY: the transmute goes fat reference -> fat
+    // raw pointer of identical layout, erasing only the lifetime; the
     // completion wait below outlives every dereference.
     let job = JobPtr(unsafe {
         std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync + 'static)>(f)

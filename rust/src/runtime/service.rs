@@ -371,19 +371,24 @@ fn ensure_compiled<'c>(
     paths: &HashMap<String, PathBuf>,
     artifact: &str,
 ) -> Result<&'c xla::PjRtLoadedExecutable> {
-    if !cache.contains_key(artifact) {
-        let path = paths
-            .get(artifact)
-            .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {artifact}: {e}"))?;
-        cache.insert(artifact.to_string(), exe);
+    // entry() instead of contains_key + insert + get: one lookup, and no
+    // unwrap to keep panic-free on the serving path
+    use std::collections::hash_map::Entry;
+    match cache.entry(artifact.to_string()) {
+        Entry::Occupied(hit) => Ok(hit.into_mut()),
+        Entry::Vacant(slot) => {
+            let path = paths
+                .get(artifact)
+                .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {artifact}: {e}"))?;
+            Ok(slot.insert(exe))
+        }
     }
-    Ok(cache.get(artifact).unwrap())
 }
 
 fn run(exe: &xla::PjRtLoadedExecutable, inputs: Vec<Tensor>) -> Result<Vec<OutTensor>> {

@@ -1,0 +1,250 @@
+//! Fixture tests for `apnc-lint` (`apnc::analysis`): every rule has at
+//! least one must-fire and one must-pass fixture, allow annotations
+//! suppress, a bare allow is itself a finding, and the shipped tree is
+//! lint-clean. The fixtures drive [`lint_source`] directly — the rule
+//! engine sees exactly what the binary sees, minus the file walk.
+
+use apnc::analysis::{lint_source, lint_tree, Rule};
+
+/// The rule list a fixture produces, in report order.
+fn rules_of(path: &str, src: &str) -> Vec<Rule> {
+    lint_source(path, src).into_iter().map(|f| f.rule).collect()
+}
+
+// ---- D1: unordered containers in compute/reduce modules ---------------
+
+#[test]
+fn d1_fires_on_hashmap_in_compute_scope() {
+    let src =
+        "fn f() {\n    let mut m = std::collections::HashMap::new();\n    m.insert(1, 2);\n}\n";
+    assert_eq!(rules_of("linalg/fake.rs", src), vec![Rule::D1]);
+    assert_eq!(rules_of("mapreduce/fake.rs", src), vec![Rule::D1]);
+    assert_eq!(rules_of("metrics/fake.rs", src), vec![Rule::D1]);
+}
+
+#[test]
+fn d1_ignores_out_of_scope_modules_and_use_lines() {
+    let src =
+        "fn f() {\n    let mut m = std::collections::HashMap::new();\n    m.insert(1, 2);\n}\n";
+    assert_eq!(rules_of("model/fake.rs", src), vec![]);
+    assert_eq!(rules_of("linalg/fake.rs", "use std::collections::HashMap;\n"), vec![]);
+}
+
+#[test]
+fn d1_accepts_sort_before_iterate() {
+    let src = "fn f(m: std::collections::HashMap<u32, u32>) -> Vec<(u32, u32)> {\n\
+               \x20   let mut pairs: Vec<_> = m.into_iter().collect();\n\
+               \x20   pairs.sort();\n\
+               \x20   pairs\n}\n";
+    assert_eq!(rules_of("linalg/fake.rs", src), vec![]);
+}
+
+#[test]
+fn d1_respects_identifier_boundaries() {
+    let src = "fn f(x: MyHashMapLike) {\n    x.touch();\n}\n";
+    assert_eq!(rules_of("linalg/fake.rs", src), vec![]);
+}
+
+// ---- D2: wall-clock reads in compute/reduce modules --------------------
+
+#[test]
+fn d2_fires_on_instant_now_in_compute_scope() {
+    let src = "fn f() {\n    let t0 = std::time::Instant::now();\n    drop(t0);\n}\n";
+    assert_eq!(rules_of("mapreduce/fake.rs", src), vec![Rule::D2]);
+    assert_eq!(rules_of("embedding/fake.rs", src), vec![Rule::D2]);
+}
+
+#[test]
+fn d2_exempts_driver_telemetry_and_serving() {
+    let src = "fn f() {\n    let t0 = std::time::Instant::now();\n    drop(t0);\n}\n";
+    // the pipeline driver owns phase telemetry — explicit carve-out
+    assert_eq!(rules_of("coordinator/driver.rs", src), vec![]);
+    // serving/bench timing is out of D2's scope entirely
+    assert_eq!(rules_of("model/fake.rs", src), vec![]);
+}
+
+// ---- D3: entropy discipline -------------------------------------------
+
+#[test]
+fn d3_fires_on_foreign_entropy_anywhere() {
+    let src =
+        "fn f() {\n    let s = std::collections::hash_map::RandomState::new();\n    drop(s);\n}\n";
+    assert_eq!(rules_of("data/fake.rs", src), vec![Rule::D3]);
+    assert_eq!(rules_of("model/fake.rs", src), vec![Rule::D3]);
+}
+
+#[test]
+fn d3_exempts_the_pipeline_pcg() {
+    let src = "fn seed_from_os() {\n    let r = OsRng;\n    drop(r);\n}\n";
+    assert_eq!(rules_of("rng.rs", src), vec![]);
+}
+
+// ---- U1: SAFETY comments on unsafe sites ------------------------------
+
+#[test]
+fn u1_fires_on_uncommented_unsafe() {
+    let src = "fn f(p: *mut f32) {\n    unsafe { *p = 0.0 };\n}\n";
+    assert_eq!(rules_of("parallel/fake.rs", src), vec![Rule::U1]);
+}
+
+#[test]
+fn u1_accepts_safety_comment_above_or_inline() {
+    let above = "fn f(p: *mut f32) {\n\
+                 \x20   // SAFETY: caller guarantees p is valid and exclusive\n\
+                 \x20   unsafe { *p = 0.0 };\n}\n";
+    assert_eq!(rules_of("parallel/fake.rs", above), vec![]);
+    let inline = "fn f(p: *mut f32) {\n    unsafe { *p = 0.0 }; // SAFETY: p is valid\n}\n";
+    assert_eq!(rules_of("parallel/fake.rs", inline), vec![]);
+}
+
+#[test]
+fn u1_requires_the_comment_block_to_be_contiguous() {
+    let gap = "fn f(p: *mut f32) {\n\
+               \x20   // SAFETY: this comment is orphaned by the blank line\n\
+               \n\
+               \x20   unsafe { *p = 0.0 };\n}\n";
+    assert_eq!(rules_of("parallel/fake.rs", gap), vec![Rule::U1]);
+}
+
+// ---- P1: panic paths in serving modules --------------------------------
+
+#[test]
+fn p1_fires_on_unwrap_in_serving_scope() {
+    let src = "fn f(v: Vec<u32>) -> u32 {\n    v.into_iter().next().unwrap()\n}\n";
+    assert_eq!(rules_of("model/serve.rs", src), vec![Rule::P1]);
+    assert_eq!(rules_of("runtime/service.rs", src), vec![Rule::P1]);
+}
+
+#[test]
+fn p1_ignores_non_serving_scope_and_poison_recovery() {
+    let src = "fn f(v: Vec<u32>) -> u32 {\n    v.into_iter().next().unwrap()\n}\n";
+    assert_eq!(rules_of("linalg/fake.rs", src), vec![]);
+    // the lock-poisoning recovery idiom is not a panic path
+    let poison = "fn g(m: &std::sync::Mutex<u32>) -> u32 {\n\
+                  \x20   *m.lock().unwrap_or_else(|p| p.into_inner())\n}\n";
+    assert_eq!(rules_of("model/serve.rs", poison), vec![]);
+}
+
+// ---- F1: shared-state accumulation in par_* closures -------------------
+
+#[test]
+fn f1_fires_on_lock_inside_par_extent() {
+    let src = "fn f(out: &mut [f64], total: &std::sync::Mutex<f64>) {\n\
+               \x20   par_chunks_mut(out, 8, |_i, chunk| {\n\
+               \x20       let mut t = total.lock().unwrap_or_else(|p| p.into_inner());\n\
+               \x20       for v in chunk.iter_mut() {\n\
+               \x20           *t += *v;\n\
+               \x20       }\n\
+               \x20   });\n}\n";
+    assert_eq!(rules_of("linalg/fake.rs", src), vec![Rule::F1]);
+}
+
+#[test]
+fn f1_ignores_clean_closures_and_locks_outside_extents() {
+    let clean = "fn f(out: &mut [f64]) {\n\
+                 \x20   par_chunks_mut(out, 8, |i, chunk| {\n\
+                 \x20       for v in chunk.iter_mut() {\n\
+                 \x20           *v += i as f64;\n\
+                 \x20       }\n\
+                 \x20   });\n}\n";
+    assert_eq!(rules_of("linalg/fake.rs", clean), vec![]);
+    let outside = "fn g(m: &std::sync::Mutex<u32>) -> u32 {\n\
+                   \x20   *m.lock().unwrap_or_else(|p| p.into_inner())\n}\n";
+    assert_eq!(rules_of("linalg/fake.rs", outside), vec![]);
+}
+
+// ---- allows and A1 -----------------------------------------------------
+
+#[test]
+fn allow_with_reason_suppresses() {
+    let src = "fn f() {\n\
+               \x20   // apnc-lint: allow(D1) lookup-only cache, never iterated\n\
+               \x20   let mut m = std::collections::HashMap::new();\n\
+               \x20   m.insert(1, 2);\n}\n";
+    assert_eq!(rules_of("linalg/fake.rs", src), vec![]);
+}
+
+#[test]
+fn allow_covers_multiple_rules_at_once() {
+    let src = "fn f() {\n\
+               \x20   // apnc-lint: allow(D1, D2) fixture: both rules silenced at once\n\
+               \x20   let t = (std::collections::HashMap::<u32, u32>::new(), \
+               std::time::Instant::now());\n\
+               \x20   drop(t);\n}\n";
+    assert_eq!(rules_of("mapreduce/fake.rs", src), vec![]);
+}
+
+#[test]
+fn bare_allow_is_a_finding_and_does_not_suppress() {
+    let src = "fn f() {\n\
+               \x20   // apnc-lint: allow(D1)\n\
+               \x20   let mut m = std::collections::HashMap::new();\n\
+               \x20   m.insert(1, 2);\n}\n";
+    assert_eq!(rules_of("linalg/fake.rs", src), vec![Rule::A1, Rule::D1]);
+}
+
+#[test]
+fn allow_naming_an_unknown_rule_is_a_finding() {
+    let src = "fn f() {\n    // apnc-lint: allow(Z9) not a rule\n    let x = 1;\n    drop(x);\n}\n";
+    assert_eq!(rules_of("linalg/fake.rs", src), vec![Rule::A1]);
+}
+
+#[test]
+fn allow_is_line_scoped_not_file_scoped() {
+    let src = "fn f() {\n\
+               \x20   // apnc-lint: allow(D1) only covers the next line\n\
+               \x20   let mut a = std::collections::HashMap::new();\n\
+               \x20   let mut b = std::collections::HashMap::new();\n\
+               \x20   a.insert(1, 2);\n\
+               \x20   b.insert(3, 4);\n}\n";
+    assert_eq!(rules_of("linalg/fake.rs", src), vec![Rule::D1]);
+}
+
+// ---- scanner discipline ------------------------------------------------
+
+#[test]
+fn tokens_in_strings_and_comments_never_fire() {
+    let src = "fn f() -> &'static str {\n\
+               \x20   // HashMap::new() in a comment is fine, unsafe too\n\
+               \x20   \"HashMap::new() and Instant::now() in a string are fine\"\n}\n";
+    assert_eq!(rules_of("linalg/fake.rs", src), vec![]);
+}
+
+#[test]
+fn cfg_test_regions_are_exempt() {
+    let src = "#[cfg(test)]\n\
+               mod tests {\n\
+               \x20   #[test]\n\
+               \x20   fn t() {\n\
+               \x20       let mut m = std::collections::HashMap::new();\n\
+               \x20       m.insert(1, std::time::Instant::now());\n\
+               \x20   }\n\
+               }\n";
+    assert_eq!(rules_of("linalg/fake.rs", src), vec![]);
+}
+
+#[test]
+fn findings_display_in_the_documented_shape() {
+    let findings =
+        lint_source("linalg/fake.rs", "fn f() { let m = std::collections::HashMap::new(); }");
+    assert_eq!(findings.len(), 1);
+    let line = findings[0].to_string();
+    assert!(
+        line.starts_with("linalg/fake.rs:1 · D1 · "),
+        "unexpected finding shape: {line}"
+    );
+}
+
+// ---- the shipped tree --------------------------------------------------
+
+#[test]
+fn shipped_tree_is_lint_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let findings = lint_tree(&root).expect("walking the crate sources");
+    assert!(
+        findings.is_empty(),
+        "apnc-lint found {} issue(s) in the shipped tree:\n{}",
+        findings.len(),
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
