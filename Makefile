@@ -11,17 +11,17 @@
 #   make bench-json  — regenerate $(BENCH_OUT) from the perf trajectory
 #                      suites (kernels, linalg, pipeline, serving);
 #                      records are JSON-lines appended by each suite
-#   make bench-json BENCH_OUT=BENCH_PR10.json  — next PR's baseline
+#   make bench-json BENCH_OUT=BENCH_PR11.json  — next PR's baseline
 #
 # CI (.github/workflows/ci.yml) runs `make verify` (plus a second test
 # pass at APNC_THREADS=3) and a bench smoke:
-#   APNC_BENCH_SMOKE=1 make bench-json BENCH_OUT=BENCH_PR9.json
+#   APNC_BENCH_SMOKE=1 make bench-json BENCH_OUT=BENCH_PR10.json
 # (smoke mode shrinks every suite's problem sizes so the bench binaries
 # compile and execute on every PR instead of rotting).
 
 CARGO   ?= cargo
 MANIFEST = rust/Cargo.toml
-BENCH_OUT ?= BENCH_PR9.json
+BENCH_OUT ?= BENCH_PR10.json
 
 .PHONY: build test doc lint verify bench-json
 

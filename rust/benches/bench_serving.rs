@@ -20,8 +20,9 @@ use std::time::Duration;
 use apnc::bench::Bench;
 use apnc::embedding::{ApncCoeffs, CoeffBlock, Method};
 use apnc::kernels::Kernel;
-use apnc::model::serve::{is_overloaded, BatchWindow};
-use apnc::model::shard::drive_clients;
+use apnc::model::net::{run_loadgen, LoadGenOpts, NetServer};
+use apnc::model::serve::{is_overloaded, BatchWindow, ServeCfg};
+use apnc::model::shard::{drive_clients, Routing, ShardCfg};
 use apnc::model::{ApncModel, Provenance};
 use apnc::rng::Pcg;
 use apnc::runtime::Compute;
@@ -152,5 +153,50 @@ fn main() {
         });
         b.throughput(&st, rows, "row");
         println!("bench serving/{name}: {sheds} submissions shed and retried after backoff");
+    }
+
+    // the network tier: the same verified traffic through a real TCP
+    // loopback socket — closed-loop loadgen connections against a
+    // `NetServer`, unbatched vs coalesced, 1 vs 8 shards. Prices the
+    // wire (framing, checksums, two thread hops per connection) against
+    // in-process serving; every response is still asserted bit-identical
+    // to the in-memory oracle.
+    let net_rows = 32usize;
+    let net_requests = rows / net_rows;
+    for (label, shards, window) in [
+        ("1shard_unbatched", 1usize, BatchWindow::disabled()),
+        ("8shard_unbatched", 8, BatchWindow::disabled()),
+        ("8shard_batched512", 8, BatchWindow::new(512, Duration::from_micros(200))),
+    ] {
+        let cfg = ShardCfg {
+            shards,
+            serve: ServeCfg { window, queue_limit: 0, adaptive: None },
+            routing: Routing::RoundRobin,
+        };
+        let handle = model.clone().serve_tuned(cfg).unwrap();
+        let server = NetServer::bind("127.0.0.1:0", handle.clone()).unwrap();
+        let addr = server.local_addr().to_string();
+        let name = format!("serve_tcp_{label}_{rows}x{d}_req{net_rows}");
+        let st = b.run(&name, || {
+            let report = run_loadgen(
+                &addr,
+                &x,
+                d,
+                &oracle,
+                LoadGenOpts {
+                    connections: 8,
+                    requests: net_requests,
+                    rows_per_request: net_rows,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            assert_eq!(report.dropped, 0, "tcp bench dropped requests");
+            assert_eq!(report.mismatches, 0, "tcp bench diverged from the oracle");
+            std::hint::black_box(report.rows);
+        });
+        b.throughput(&st, net_requests * net_rows, "row");
+        server.shutdown();
+        handle.shutdown();
     }
 }

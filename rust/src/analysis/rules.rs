@@ -32,9 +32,17 @@ fn d2_scope(path: &str) -> bool {
 }
 
 /// P1 scope: serving hot-path modules, where a panic kills a shard
-/// thread and a request with it.
+/// thread and a request with it — or, in the network tier, a
+/// connection thread and every request in flight on it.
 fn p1_scope(path: &str) -> bool {
-    matches!(path, "model/serve.rs" | "model/shard.rs" | "runtime/service.rs")
+    matches!(
+        path,
+        "model/serve.rs"
+            | "model/shard.rs"
+            | "model/net.rs"
+            | "model/proto.rs"
+            | "runtime/service.rs"
+    )
 }
 
 /// Entropy tokens D3 bans outside `rng.rs`. `RandomState` and

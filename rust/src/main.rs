@@ -9,6 +9,12 @@
 //!   predict [flags]             load a saved model, label a dataset
 //!   gen    [flags]              freeze a registry dataset to disk
 //!   serve  [flags]              load a saved model, drive concurrent clients
+//!   serve --listen ADDR         load a saved model and serve it over TCP
+//!                               (the apnw binary protocol; see
+//!                               rust/src/model/proto.rs)
+//!   loadgen [flags]             drive a `serve --listen` server with
+//!                               concurrent verified traffic, report
+//!                               client-side latency percentiles
 //!   chaos  [flags]              end-to-end fault drill: chaotic engine run
 //!                               must be bit-identical to a clean one, then
 //!                               shards are killed under live verified traffic
@@ -56,6 +62,24 @@
 //!                              submissions with Overloaded; 0 = unbounded)
 //!              --deadline-ms T (per-request client deadline; expired
 //!                              waits are counted, the requests still land)
+//! `serve --listen` flags: --model PATH --shards N
+//!              --batch-rows N --batch-wait-us U --queue-limit N (as above)
+//!              --adaptive (grow/shrink the coalescing wait with load)
+//!              --adapt-floor-us U --adapt-cap-us U (adaptive wait bounds,
+//!                              defaults 50/2000)
+//!              --routing rr|least (round-robin or least-loaded dispatch)
+//!              --swap-model PATH --swap-after-ms T (hot-swap a second
+//!                              model mid-serve, gated on a canary batch)
+//!              --serve-secs T (serve for T seconds then exit; 0 = forever)
+//! `loadgen` flags: --connect ADDR --model PATH
+//!              [--input FILE | --dataset NAME --n N --data-seed S]
+//!              --connections N --requests N --rows N (per request)
+//!              --rps R (open-loop pacing; 0 = closed loop)
+//!              --inflight N (closed-loop pipelining depth per connection)
+//!              --patience-ms T (wait this long before counting a drop)
+//!              --expect-epochs N (fail unless >= N distinct model epochs
+//!                              are observed — 2 proves a live hot swap)
+//!              --json PATH (write the latency report as one JSON object)
 //! `chaos` flags: --dataset NAME --n N --seed S
 //!              --map-prob P --reduce-prob P (per-attempt task failures)
 //!              --straggler-prob P --straggler-ms T (injected latency)
@@ -80,8 +104,9 @@ use apnc::embedding::Method;
 use apnc::experiments::{ablate, table1, table2, table3};
 use apnc::linalg::EigSolver;
 use apnc::mapreduce::ChaosPlan;
-use apnc::model::serve::BatchWindow;
-use apnc::model::shard::{drive_clients_opts, DriveOpts};
+use apnc::model::net::{run_loadgen, LoadGenOpts, NetServer};
+use apnc::model::serve::{AdaptiveWindow, BatchWindow, ServeCfg};
+use apnc::model::shard::{drive_clients_opts, DriveOpts, Routing, ShardCfg};
 use apnc::model::ApncModel;
 use apnc::runtime::Compute;
 
@@ -564,6 +589,156 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve --listen`: stand the sharded front-end behind a real TCP
+/// socket and serve the apnw binary protocol until killed (or for
+/// `--serve-secs`). `--swap-model` schedules a warm hot swap mid-serve,
+/// gated on a canary batch drawn from the serving model's own sample
+/// block — a replacement that cannot label the canary is never
+/// published.
+fn cmd_serve_net(args: &Args) -> Result<()> {
+    let Some(listen) = args.get("listen") else {
+        bail!("serve --listen needs an address (e.g. --listen 127.0.0.1:0)");
+    };
+    let Some(model_path) = args.get("model") else {
+        bail!("serve --listen needs --model PATH (produce one with `repro fit`)");
+    };
+    let model = ApncModel::load_with(Path::new(model_path), compute_backend(args))?;
+    // the replacement loads up front: a bad --swap-model path should
+    // fail the command, not a thread two seconds into the drive
+    let swap = match args.get("swap-model") {
+        Some(p) => Some(ApncModel::load_with(Path::new(p), compute_backend(args))?),
+        None => None,
+    };
+    let swap_after = Duration::from_millis(args.u64_or("swap-after-ms", 2000)?);
+    let window = BatchWindow::new(
+        args.usize_or("batch-rows", 0)?,
+        Duration::from_micros(args.u64_or("batch-wait-us", 200)?),
+    );
+    let floor_us = args.u64_or("adapt-floor-us", 50)?;
+    let cap_us = args.u64_or("adapt-cap-us", 2000)?;
+    let adaptive = args.has("adaptive").then(|| {
+        AdaptiveWindow::new(Duration::from_micros(floor_us), Duration::from_micros(cap_us))
+    });
+    let routing = match args.get_or("routing", "rr") {
+        "rr" | "round-robin" => Routing::RoundRobin,
+        "least" | "least-loaded" => Routing::LeastLoaded,
+        other => bail!("unknown --routing '{other}' (rr|least)"),
+    };
+    let cfg = ShardCfg {
+        shards: args.usize_or("shards", 1)?.max(1),
+        serve: ServeCfg { window, queue_limit: args.usize_or("queue-limit", 0)?, adaptive },
+        routing,
+    };
+    eprintln!(
+        "serve --listen: {} model (l = {}, m = {}, k = {}) on {} shard(s), \
+         routing {:?}, adaptive {}",
+        model.method().label(),
+        model.l(),
+        model.m(),
+        model.k(),
+        cfg.shards,
+        cfg.routing,
+        if adaptive.is_some() { "on" } else { "off" }
+    );
+    // canary for warm swaps: the first few rows of the model's own
+    // sample block — always present, always the right dimensionality
+    let d = model.d();
+    let block = &model.coeffs().blocks[0];
+    let canary: Vec<f32> = block.samples[..block.l.min(8).max(1) * d].to_vec();
+    let handle = model.serve_tuned(cfg)?;
+    let server = NetServer::bind(listen, handle.clone())?;
+    // the CI harness parses this exact line for the bound address
+    println!("listening on {}", server.local_addr());
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    let swap_thread = swap.map(|m| {
+        let handle = handle.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(swap_after);
+            match handle.swap_warm(Arc::new(m), &canary) {
+                Ok(epoch) => eprintln!("hot swap published epoch {epoch}"),
+                Err(e) => eprintln!("hot swap rejected: {e:#}"),
+            }
+        })
+    });
+    let serve_secs = args.u64_or("serve-secs", 0)?;
+    if serve_secs == 0 {
+        // serve until the process is killed (CI's trap does exactly that)
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(serve_secs));
+    if let Some(t) = swap_thread {
+        let _ = t.join();
+    }
+    server.shutdown();
+    handle.shutdown();
+    Ok(())
+}
+
+/// `repro loadgen`: drive a running `serve --listen` server with
+/// concurrent verified traffic and print (optionally save as JSON) a
+/// client-side latency report. Exits nonzero on any dropped request,
+/// any response that diverges from local in-memory prediction, or fewer
+/// distinct model epochs than `--expect-epochs`.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let Some(addr) = args.get("connect") else {
+        bail!("loadgen needs --connect ADDR (the `listening on ...` line of `repro serve`)");
+    };
+    let ds = load_dataset(args)?;
+    let model = load_model_checked(args, ds.d)?;
+    // the oracle: every network response must match this bit for bit
+    let oracle = model.predict_batch(&ds.x, 0)?;
+    let opts = LoadGenOpts {
+        connections: args.usize_or("connections", 4)?.max(1),
+        requests: args.usize_or("requests", 64)?.max(1),
+        rows_per_request: args.usize_or("rows", 16)?.max(1),
+        rps: args.usize_or("rps", 0)?,
+        inflight: args.usize_or("inflight", 4)?.max(1),
+        patience: Duration::from_millis(args.u64_or("patience-ms", 10_000)?),
+    };
+    let pacing = if opts.rps > 0 {
+        format!("open loop @ {} req/s", opts.rps)
+    } else {
+        format!("closed loop, {} in flight per connection", opts.inflight)
+    };
+    eprintln!(
+        "loadgen: {} requests of {} rows over {} connections against {addr} ({pacing})",
+        opts.requests, opts.rows_per_request, opts.connections
+    );
+    let report = run_loadgen(addr, &ds.x, ds.d, &oracle, opts)?;
+    println!(
+        "drove {} requests over {} connections in {:.2}s ({:.0} req/s): {} rows verified",
+        report.requests, report.connections, report.secs, report.achieved_rps, report.rows
+    );
+    println!(
+        "latency us: p50 {} | p90 {} | p95 {} | p99 {} | max {}",
+        report.p50_us, report.p90_us, report.p95_us, report.p99_us, report.max_us
+    );
+    println!(
+        "epochs observed: {:?}; dropped {}; mismatches {}",
+        report.epochs, report.dropped, report.mismatches
+    );
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, format!("{}\n", report.to_json()))?;
+        println!("wrote {path}");
+    }
+    ensure!(report.dropped == 0, "{} request(s) got no response in time", report.dropped);
+    ensure!(
+        report.mismatches == 0,
+        "{} response(s) diverged from the in-memory oracle",
+        report.mismatches
+    );
+    let expect_epochs = args.usize_or("expect-epochs", 0)?;
+    ensure!(
+        report.epochs.len() >= expect_epochs,
+        "expected >= {expect_epochs} distinct model epochs, saw {:?}",
+        report.epochs
+    );
+    Ok(())
+}
+
 /// End-to-end fault drill. Phase 1 (engine): fit the same model twice —
 /// once clean, once under the seeded [`ChaosPlan`] (task failures in both
 /// phases, stragglers) — and require bit-identical predictions. Phase 2
@@ -730,7 +905,9 @@ fn main() -> Result<()> {
         "fit" => cmd_fit(&args)?,
         "predict" if args.has("stream") => cmd_predict_stream(&args)?,
         "predict" => cmd_predict(&args)?,
+        "serve" if args.has("listen") => cmd_serve_net(&args)?,
         "serve" => cmd_serve(&args)?,
+        "loadgen" => cmd_loadgen(&args)?,
         "chaos" => cmd_chaos(&args)?,
         "lint" => cmd_lint(&args)?,
         "gen" if args.has("stream") => cmd_gen_stream(&args)?,
@@ -759,14 +936,15 @@ fn main() -> Result<()> {
         "" | "help" => {
             println!("repro — Embed and Conquer (kernel k-means on MapReduce) reproduction");
             println!(
-                "usage: repro <table1|table2|table3|run|fit|predict|gen|serve|chaos|lint|backend> \
-                 [flags]"
+                "usage: repro <table1|table2|table3|run|fit|predict|gen|serve|loadgen|chaos|\
+                 lint|backend> [flags]"
             );
             println!("see the module docs in rust/src/main.rs and README.md");
         }
         other => bail!(
             "unknown subcommand '{other}' \
-             (try: table1 table2 table3 run fit predict gen serve chaos lint ablate backend)"
+             (try: table1 table2 table3 run fit predict gen serve loadgen chaos lint ablate \
+              backend)"
         ),
     }
     Ok(())

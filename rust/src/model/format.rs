@@ -54,19 +54,25 @@ const MAX_BLOCKS: usize = 1 << 12;
 const MAX_DIM: u64 = 1 << 24;
 const MAX_ELEMS: u64 = 1 << 31;
 
-/// FNV-1a 64-bit rolling hash.
-struct Fnv(u64);
+/// FNV-1a 64-bit rolling hash (shared with the network wire protocol in
+/// [`super::proto`], which frames with the same checksum discipline).
+pub(crate) struct Fnv(u64);
 
 impl Fnv {
-    fn new() -> Fnv {
+    pub(crate) fn new() -> Fnv {
         Fnv(0xcbf2_9ce4_8422_2325)
     }
 
-    fn update(&mut self, bytes: &[u8]) {
+    pub(crate) fn update(&mut self, bytes: &[u8]) {
         for &b in bytes {
             self.0 ^= b as u64;
             self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
         }
+    }
+
+    /// The digest over everything hashed so far.
+    pub(crate) fn value(&self) -> u64 {
+        self.0
     }
 }
 

@@ -22,7 +22,13 @@
 //! [`serve::BatchWindow`]: one fused embed pass per drained queue), an
 //! async client API ([`serve::PredictTicket`]), and hot model swap
 //! (epoch-tagged republication behind live traffic — see
-//! [`shard::ShardedHandle::swap`]). All
+//! [`shard::ShardedHandle::swap`]). The network tier ([`net`], [`proto`])
+//! puts the whole stack behind a real TCP socket: a dependency-free
+//! server speaking a checksummed length-prefixed binary protocol,
+//! multiplexing every connection onto one [`shard::ShardedHandle`] and
+//! streaming responses out of order as tickets resolve
+//! ([`ApncModel::serve_tuned`] + [`net::NetServer`]; `repro serve
+//! --listen` / `repro loadgen` are the CLI entry points). All
 //! compute runs through the [`crate::runtime::Compute`] facade, so both
 //! the PJRT artifact backend and the rust reference serve predictions,
 //! and every hot loop lands on the shared parallel core
@@ -32,6 +38,8 @@
 //! and coalesced serving all produce identical labels.
 
 pub mod format;
+pub mod net;
+pub mod proto;
 pub mod serve;
 pub mod shard;
 
@@ -323,6 +331,15 @@ impl ApncModel {
         queue_limit: usize,
     ) -> Result<shard::ShardedHandle> {
         shard::ShardedHandle::start_bounded(self, n_shards, window, queue_limit)
+    }
+
+    /// The fully-tunable sharded front-end: every serving knob — shard
+    /// count, coalescing window, backlog bound, adaptive wait policy
+    /// ([`serve::AdaptiveWindow`]), and routing discipline
+    /// ([`shard::Routing`]) — in one [`shard::ShardCfg`]. This is what
+    /// `repro serve --listen` stands a [`net::NetServer`] on top of.
+    pub fn serve_tuned(self, cfg: shard::ShardCfg) -> Result<shard::ShardedHandle> {
+        shard::ShardedHandle::start_tuned(self, cfg)
     }
 }
 

@@ -1,0 +1,678 @@
+//! TCP serving tier: the sharded front-end behind a real socket.
+//!
+//! [`NetServer`] binds a dependency-free TCP listener and multiplexes
+//! every connection onto one [`ShardedHandle`]: a per-connection reader
+//! thread decodes [`Frame::Predict`] requests (see [`super::proto`] for
+//! the wire format) and submits them through
+//! [`ShardedHandle::predict_async`]; a per-connection writer thread
+//! redeems the resulting [`ShardedTicket`]s and streams
+//! [`Frame::Labels`] responses back **in completion order** — a request
+//! parked behind a slow shard never blocks its connection, because
+//! later requests routed to idle shards answer first and the client
+//! matches responses by id. Everything the in-process tier guarantees
+//! rides along unchanged: bit-identical labels for any routing or
+//! interleaving, epoch-tagged hot swaps, supervised shard healing, and
+//! typed overload shedding (surfaced as request-scoped [`Frame::Error`]
+//! responses).
+//!
+//! Malformed bytes — bad magic, truncated frames, checksum damage,
+//! oversized declared lengths — decode to typed [`proto::WireError`]s
+//! on the reader thread, which answers with a connection-level `Error` frame
+//! and closes that connection; the server itself and every other
+//! connection keep serving (pinned by `rust/tests/net_wire.rs`).
+//!
+//! [`run_loadgen`] is the matching client: a closed- or open-loop load
+//! generator that drives N concurrent connections, verifies every
+//! response bit-identical to the in-memory oracle labels, tracks the
+//! epochs observed across hot swaps, and reports exact client-side
+//! latency percentiles (open-loop latency is measured from each
+//! request's *scheduled* send time, so queueing delay is charged to the
+//! server, not hidden by coordinated omission). `repro serve --listen`
+//! and `repro loadgen` are the CLI entry points; the CI `serving-load`
+//! job gates on zero drops and zero mismatches across a mid-drive swap.
+
+use std::io::{self, Read};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::proto::{self, Frame};
+use super::shard::{percentile_us, ShardedHandle, ShardedTicket};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+/// How long the writer thread parks on its oldest in-flight ticket when
+/// no response is ready — short enough to stay responsive to new
+/// submissions, long enough not to spin.
+const RESOLVE_PARK: Duration = Duration::from_millis(1);
+
+/// A TCP front-end over a [`ShardedHandle`]. Binding spawns one accept
+/// thread; each accepted connection gets a reader and a writer thread
+/// of its own and lives until the client closes (or breaks framing).
+/// [`NetServer::shutdown`] stops accepting; established connections
+/// drain naturally.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// What a connection's reader tells its writer.
+enum ConnEvent {
+    /// a submitted request to stream back once its ticket resolves
+    Ticket { id: u64, ticket: ShardedTicket },
+    /// request-scoped failure (shape mismatch, overload shed): answer
+    /// with an `Error` frame, keep the connection open
+    Reject { id: u64, why: String },
+    /// framing failure: answer with a connection-level `Error` frame,
+    /// then drain in-flight work and close
+    Fatal { why: String },
+    /// clean client close: drain in-flight work and close
+    Closed,
+}
+
+/// Writer-side verdict after applying one [`ConnEvent`].
+enum Intake {
+    /// keep accepting events
+    Open,
+    /// no further requests are coming; drain in-flight work and close
+    Draining,
+    /// the socket's write half is dead; abandon the connection
+    SocketDead,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting connections onto `handle`.
+    pub fn bind(addr: &str, handle: ShardedHandle) -> Result<NetServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding TCP listener on {addr}"))?;
+        let local = listener.local_addr().context("reading the bound address")?;
+        // nonblocking accept so the loop can observe the stop flag
+        listener.set_nonblocking(true).context("setting the listener nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_accept = stop.clone();
+        let accept = std::thread::Builder::new()
+            .name("apnc-net-accept".to_string())
+            .spawn(move || accept_loop(listener, handle, stop_accept))
+            .context("spawning the accept thread")?;
+        Ok(NetServer { addr: local, stop, accept: Mutex::new(Some(accept)) })
+    }
+
+    /// The address the server actually bound (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting new connections and join the accept thread.
+    /// Established connections keep serving until their clients close.
+    /// Idempotent.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let joined = self.accept.lock().unwrap_or_else(|p| p.into_inner()).take();
+        if let Some(j) = joined {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, handle: ShardedHandle, stop: Arc<AtomicBool>) {
+    let conns = AtomicUsize::new(0);
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let n = conns.fetch_add(1, Ordering::Relaxed);
+                spawn_connection(stream, handle.clone(), n);
+            }
+            // WouldBlock: no pending connection — nap and re-check stop.
+            // Transient accept errors (EMFILE, aborted handshakes) get
+            // the same nap instead of a hot error loop.
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+}
+
+/// Stand up the reader/writer thread pair for one accepted connection.
+/// A spawn failure abandons the connection (the client sees a reset);
+/// the server keeps accepting.
+fn spawn_connection(stream: TcpStream, handle: ShardedHandle, n: usize) {
+    // accepted sockets should block: the reader parks in read_frame and
+    // the writer's send path must not short-write
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    let Ok(write_half) = stream.try_clone() else {
+        return;
+    };
+    let (tx, rx) = mpsc::channel();
+    let hello = Frame::Hello {
+        d: handle.d() as u32,
+        m: handle.m() as u32,
+        k: handle.k() as u32,
+        epoch: handle.epoch(),
+    };
+    let writer = std::thread::Builder::new()
+        .name(format!("apnc-net-conn{n}-w"))
+        .spawn(move || conn_writer(write_half, rx, hello));
+    if writer.is_err() {
+        return;
+    }
+    // reader spawn failure drops `tx`; the writer then drains and closes
+    let _ = std::thread::Builder::new()
+        .name(format!("apnc-net-conn{n}-r"))
+        .spawn(move || conn_reader(stream, handle, tx));
+}
+
+/// Decode frames off the socket and submit them; all outbound traffic
+/// goes through the writer via [`ConnEvent`]s.
+fn conn_reader(mut stream: TcpStream, handle: ShardedHandle, tx: mpsc::Sender<ConnEvent>) {
+    let d = handle.d();
+    loop {
+        match proto::read_frame(&mut stream) {
+            Ok(None) => {
+                let _ = tx.send(ConnEvent::Closed);
+                return;
+            }
+            Ok(Some(Frame::Predict { id, rows, x })) => {
+                if (rows as usize).checked_mul(d) != Some(x.len()) {
+                    let why = format!(
+                        "shape mismatch: predict frame declares {rows} rows but carries \
+                         {} values for a model with d = {d}",
+                        x.len()
+                    );
+                    let _ = tx.send(ConnEvent::Reject { id, why });
+                    continue;
+                }
+                let shared: Arc<[f32]> = x.into();
+                let n_rows = rows as usize;
+                match handle.predict_async(&shared, 0..n_rows, 0) {
+                    Ok(ticket) => {
+                        let _ = tx.send(ConnEvent::Ticket { id, ticket });
+                    }
+                    // overload shed or a dead front-end: request-scoped,
+                    // the client may back off and retry on this socket
+                    Err(e) => {
+                        let _ = tx.send(ConnEvent::Reject { id, why: format!("{e:#}") });
+                    }
+                }
+            }
+            Ok(Some(_)) => {
+                let why = "client sent a server-side frame kind".to_string();
+                let _ = tx.send(ConnEvent::Fatal { why });
+                return;
+            }
+            Err(e) => {
+                let _ = tx.send(ConnEvent::Fatal { why: e.to_string() });
+                return;
+            }
+        }
+    }
+}
+
+/// Write a frame; `false` means the socket is gone and the connection
+/// is over (the reader will notice EOF once we shut the socket down).
+fn send_frame(ws: &mut TcpStream, frame: &Frame) -> bool {
+    proto::write_frame(ws, frame).is_ok()
+}
+
+fn apply_event(
+    ws: &mut TcpStream,
+    inflight: &mut Vec<(u64, ShardedTicket)>,
+    ev: ConnEvent,
+) -> Intake {
+    match ev {
+        ConnEvent::Ticket { id, ticket } => {
+            inflight.push((id, ticket));
+            Intake::Open
+        }
+        ConnEvent::Reject { id, why } => {
+            if send_frame(ws, &Frame::Error { id, message: why }) {
+                Intake::Open
+            } else {
+                Intake::SocketDead
+            }
+        }
+        ConnEvent::Fatal { why } => {
+            // best effort: the peer may already be gone (mid-payload
+            // disconnects land here with nobody left to read the error)
+            let _ = send_frame(ws, &Frame::Error { id: 0, message: why });
+            Intake::Draining
+        }
+        ConnEvent::Closed => Intake::Draining,
+    }
+}
+
+/// Stream responses back in completion order: poll every in-flight
+/// ticket, write whatever resolved, and park briefly on the oldest when
+/// nothing is ready. Accepted requests are always answered (or the
+/// socket is dead) before the connection closes.
+fn conn_writer(mut ws: TcpStream, rx: mpsc::Receiver<ConnEvent>, hello: Frame) {
+    let mut inflight: Vec<(u64, ShardedTicket)> = Vec::new();
+    let mut open = send_frame(&mut ws, &hello);
+    while open || !inflight.is_empty() {
+        // intake: block for events only when nothing is resolvable
+        if open && inflight.is_empty() {
+            match rx.recv() {
+                Ok(ev) => match apply_event(&mut ws, &mut inflight, ev) {
+                    Intake::Open => {}
+                    Intake::Draining => open = false,
+                    Intake::SocketDead => break,
+                },
+                Err(_) => open = false,
+            }
+        }
+        let mut socket_dead = false;
+        while open {
+            match rx.try_recv() {
+                Ok(ev) => match apply_event(&mut ws, &mut inflight, ev) {
+                    Intake::Open => {}
+                    Intake::Draining => open = false,
+                    Intake::SocketDead => {
+                        socket_dead = true;
+                        open = false;
+                    }
+                },
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        if socket_dead {
+            break;
+        }
+        // resolve: stream completions out of order as tickets land
+        let mut progressed = false;
+        let mut i = 0;
+        while i < inflight.len() {
+            match inflight[i].1.poll() {
+                Some(result) => {
+                    progressed = true;
+                    let (id, _spent) = inflight.swap_remove(i);
+                    if !reply(&mut ws, id, result) {
+                        return;
+                    }
+                }
+                None => i += 1,
+            }
+        }
+        if !progressed && !inflight.is_empty() {
+            // nothing ready: park briefly on the oldest accepted request
+            // so this loop neither spins nor stalls fresh completions
+            if let Some(result) = inflight[0].1.wait_timeout(RESOLVE_PARK) {
+                let (id, _spent) = inflight.swap_remove(0);
+                if !reply(&mut ws, id, result) {
+                    return;
+                }
+            }
+        }
+    }
+    let _ = ws.shutdown(Shutdown::Both);
+}
+
+fn reply(ws: &mut TcpStream, id: u64, result: Result<super::serve::Prediction>) -> bool {
+    let frame = match result {
+        Ok(p) => Frame::Labels { id, epoch: p.epoch, labels: p.labels },
+        Err(e) => Frame::Error { id, message: format!("{e:#}") },
+    };
+    send_frame(ws, &frame)
+}
+
+/// Client-side driving policy for [`run_loadgen`].
+#[derive(Clone, Copy, Debug)]
+pub struct LoadGenOpts {
+    /// concurrent TCP connections (clamped to >= 1)
+    pub connections: usize,
+    /// total requests across all connections (clamped to >= 1)
+    pub requests: usize,
+    /// rows per request, sliced from the shared batch (clamped to >= 1)
+    pub rows_per_request: usize,
+    /// open-loop target request rate across all connections; 0 runs
+    /// closed-loop (each connection keeps `inflight` requests going)
+    pub rps: usize,
+    /// per-connection pipelining depth in closed-loop mode
+    pub inflight: usize,
+    /// how long a connection waits on an outstanding response before
+    /// declaring its in-flight requests dropped
+    pub patience: Duration,
+}
+
+impl Default for LoadGenOpts {
+    fn default() -> LoadGenOpts {
+        LoadGenOpts {
+            connections: 1,
+            requests: 1,
+            rows_per_request: 16,
+            rps: 0,
+            inflight: 4,
+            patience: Duration::from_secs(10),
+        }
+    }
+}
+
+/// What [`run_loadgen`] measured. `dropped` and `mismatches` are the
+/// acceptance gates: a drive against a healthy server reports zero for
+/// both — every request answered, every label bit-identical to the
+/// in-memory oracle.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// connections driven
+    pub connections: usize,
+    /// requests issued
+    pub requests: usize,
+    /// rows verified bit-identical to the oracle
+    pub rows: usize,
+    /// wall-clock drive time, seconds
+    pub secs: f64,
+    /// completed requests per second over the drive
+    pub achieved_rps: f64,
+    /// median request latency, µs (open-loop: from the scheduled send)
+    pub p50_us: u64,
+    /// 90th-percentile request latency, µs
+    pub p90_us: u64,
+    /// 95th-percentile request latency, µs
+    pub p95_us: u64,
+    /// 99th-percentile request latency, µs
+    pub p99_us: u64,
+    /// worst observed request latency, µs
+    pub max_us: u64,
+    /// distinct model epochs observed across responses, ascending (a
+    /// mid-drive hot swap shows up as a second entry)
+    pub epochs: Vec<u64>,
+    /// requests with no response within the patience window
+    pub dropped: usize,
+    /// responses whose labels diverged from the oracle
+    pub mismatches: usize,
+}
+
+impl LoadReport {
+    /// The report as a single JSON object (one line, no dependencies —
+    /// the same hand-rolled JSON discipline as the bench harness).
+    pub fn to_json(&self) -> String {
+        let epochs: Vec<String> = self.epochs.iter().map(|e| e.to_string()).collect();
+        format!(
+            concat!(
+                "{{\"connections\":{},\"requests\":{},\"rows\":{},",
+                "\"secs\":{:.6},\"achieved_rps\":{:.1},",
+                "\"p50_us\":{},\"p90_us\":{},\"p95_us\":{},\"p99_us\":{},\"max_us\":{},",
+                "\"epochs\":[{}],\"dropped\":{},\"mismatches\":{}}}"
+            ),
+            self.connections,
+            self.requests,
+            self.rows,
+            self.secs,
+            self.achieved_rps,
+            self.p50_us,
+            self.p90_us,
+            self.p95_us,
+            self.p99_us,
+            self.max_us,
+            epochs.join(","),
+            self.dropped,
+            self.mismatches,
+        )
+    }
+}
+
+/// Per-connection tallies folded into the final [`LoadReport`].
+struct ConnStats {
+    latencies: Vec<u64>,
+    epochs: Vec<u64>,
+    rows: usize,
+    completed: usize,
+    dropped: usize,
+    mismatches: usize,
+}
+
+/// Drive `opts.connections` concurrent connections against the server
+/// at `addr`, verifying every response against `oracle` (the in-memory
+/// `predict_batch` labels for `x`, `(rows, d)` row-major).
+///
+/// Requests slice `x` into `rows_per_request`-row windows, rotating
+/// with a per-connection offset (the same sweep discipline as
+/// `drive_clients`). With `rps > 0` the drive is open-loop: sends are
+/// paced on a fixed schedule and latency is measured from the
+/// *scheduled* send time, so a slow server accrues queueing delay
+/// instead of silently slowing the workload down.
+pub fn run_loadgen(
+    addr: &str,
+    x: &[f32],
+    d: usize,
+    oracle: &[u32],
+    opts: LoadGenOpts,
+) -> Result<LoadReport> {
+    ensure!(d > 0 && x.len() % d == 0, "x must be (rows, d) row-major");
+    let rows = x.len() / d;
+    ensure!(rows > 0, "need at least one row of traffic");
+    ensure!(oracle.len() == rows, "oracle must label every row of x");
+    let connections = opts.connections.max(1);
+    let requests = opts.requests.max(1);
+    let batch = opts.rows_per_request.max(1);
+    let slices: Vec<Range<usize>> =
+        (0..rows).step_by(batch).map(|lo| lo..(lo + batch).min(rows)).collect();
+    // open loop: each connection sends its share of the global rate
+    let interval =
+        (opts.rps > 0).then(|| Duration::from_secs_f64(connections as f64 / opts.rps as f64));
+    let started = Instant::now();
+    let stats = std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for c in 0..connections {
+            // spread the total request count evenly, remainder first
+            let share = requests / connections + usize::from(c < requests % connections);
+            let slices = &slices;
+            joins.push(scope.spawn(move || {
+                drive_connection(addr, x, d, oracle, slices, share, c, interval, &opts)
+            }));
+        }
+        let mut all = Vec::new();
+        for j in joins {
+            match j.join() {
+                Ok(r) => all.push(r),
+                Err(_) => all.push(Err(anyhow!("a load generator connection panicked"))),
+            }
+        }
+        all
+    });
+    let secs = started.elapsed().as_secs_f64().max(1e-9);
+    let mut latencies = Vec::new();
+    let mut epochs = Vec::new();
+    let (mut rows_ok, mut completed, mut dropped, mut mismatches) =
+        (0usize, 0usize, 0usize, 0usize);
+    for conn in stats {
+        let conn = conn?;
+        latencies.extend(conn.latencies);
+        for e in conn.epochs {
+            if !epochs.contains(&e) {
+                epochs.push(e);
+            }
+        }
+        rows_ok += conn.rows;
+        completed += conn.completed;
+        dropped += conn.dropped;
+        mismatches += conn.mismatches;
+    }
+    latencies.sort_unstable();
+    epochs.sort_unstable();
+    Ok(LoadReport {
+        connections,
+        requests,
+        rows: rows_ok,
+        secs,
+        achieved_rps: completed as f64 / secs,
+        p50_us: percentile_us(&latencies, 0.50),
+        p90_us: percentile_us(&latencies, 0.90),
+        p95_us: percentile_us(&latencies, 0.95),
+        p99_us: percentile_us(&latencies, 0.99),
+        max_us: latencies.last().copied().unwrap_or(0),
+        epochs,
+        dropped,
+        mismatches,
+    })
+}
+
+/// One connection's worth of the drive: pipelined sends, out-of-order
+/// response matching by id, oracle verification, patience tracking.
+#[allow(clippy::too_many_arguments)]
+fn drive_connection(
+    addr: &str,
+    x: &[f32],
+    d: usize,
+    oracle: &[u32],
+    slices: &[Range<usize>],
+    share: usize,
+    c: usize,
+    interval: Option<Duration>,
+    opts: &LoadGenOpts,
+) -> Result<ConnStats> {
+    let mut stats = ConnStats {
+        latencies: Vec::with_capacity(share),
+        epochs: Vec::new(),
+        rows: 0,
+        completed: 0,
+        dropped: 0,
+        mismatches: 0,
+    };
+    if share == 0 {
+        return Ok(stats);
+    }
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connection {c}: connect {addr}"))?;
+    let _ = stream.set_nodelay(true);
+    // greeting first: confirms protocol and shape before any traffic
+    stream.set_read_timeout(Some(opts.patience))?;
+    match proto::read_frame(&mut stream).map_err(|e| anyhow!("connection {c}: hello: {e}"))? {
+        Some(Frame::Hello { d: hd, .. }) => ensure!(
+            hd as usize == d,
+            "connection {c}: server serves d = {hd}, load generator drives d = {d}"
+        ),
+        other => bail!("connection {c}: expected a hello frame, got {other:?}"),
+    }
+    let started = Instant::now();
+    let inflight_cap = if interval.is_some() { usize::MAX } else { opts.inflight.max(1) };
+    // (id, oracle slice, latency t0 — scheduled send time in open loop)
+    let mut pending: Vec<(u64, Range<usize>, Instant)> = Vec::new();
+    let mut sent = 0usize;
+    while stats.completed + stats.dropped < share {
+        // send everything currently due
+        while sent < share && pending.len() < inflight_cap {
+            let t0 = match interval {
+                Some(iv) => {
+                    let due = started + iv * sent as u32;
+                    if Instant::now() < due {
+                        break;
+                    }
+                    due
+                }
+                None => Instant::now(),
+            };
+            let s = slices[(c + sent) % slices.len()].clone();
+            let frame = Frame::Predict {
+                id: sent as u64,
+                rows: s.len() as u32,
+                x: x[s.start * d..s.end * d].to_vec(),
+            };
+            proto::write_frame(&mut stream, &frame)
+                .map_err(|e| anyhow!("connection {c}: send request {sent}: {e}"))?;
+            pending.push((sent as u64, s, t0));
+            sent += 1;
+        }
+        if pending.is_empty() {
+            // open loop between due times: sleep out the gap
+            if let (Some(iv), true) = (interval, sent < share) {
+                let due = started + iv * sent as u32;
+                let now = Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+            }
+            continue;
+        }
+        // patience: an unanswered request past the window is a drop, and
+        // a drop abandons the connection (the gate wants zero of these)
+        if pending.iter().any(|(_, _, t0)| t0.elapsed() > opts.patience) {
+            stats.dropped += pending.len() + (share - sent);
+            return Ok(stats);
+        }
+        // poll the socket for the next response without overshooting the
+        // next scheduled send; resume a long (patient) read only once a
+        // frame has actually started, so a timeout never splits a frame
+        let budget = match interval {
+            Some(iv) if sent < share => {
+                let due = started + iv * sent as u32;
+                due.saturating_duration_since(Instant::now())
+                    .clamp(Duration::from_millis(1), Duration::from_millis(50))
+            }
+            _ => Duration::from_millis(20),
+        };
+        stream.set_read_timeout(Some(budget))?;
+        let mut first = [0u8; 1];
+        match stream.read(&mut first) {
+            Ok(0) => bail!(
+                "connection {c}: server closed with {} requests in flight",
+                pending.len()
+            ),
+            Ok(_) => {
+                stream.set_read_timeout(Some(opts.patience))?;
+                let mut rest = first.as_slice().chain(&mut stream);
+                receive(&mut rest, oracle, &mut pending, &mut stats)
+                    .with_context(|| format!("connection {c}"))?;
+            }
+            // poll window expired: loop back to send due requests and
+            // re-check patience
+            Err(e) if is_poll_timeout(&e) => {}
+            Err(e) => return Err(anyhow!("connection {c}: read: {e}")),
+        }
+    }
+    Ok(stats)
+}
+
+/// `true` for the error kinds a poll-window read timeout surfaces as.
+fn is_poll_timeout(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut | io::ErrorKind::Interrupted
+    )
+}
+
+/// Consume one response frame: match it to its pending request by id,
+/// verify against the oracle, record latency and epoch.
+fn receive(
+    r: &mut impl Read,
+    oracle: &[u32],
+    pending: &mut Vec<(u64, Range<usize>, Instant)>,
+    stats: &mut ConnStats,
+) -> Result<()> {
+    match proto::read_frame(r).map_err(|e| anyhow!("response: {e}"))? {
+        Some(Frame::Labels { id, epoch, labels }) => {
+            let at = pending
+                .iter()
+                .position(|(pid, _, _)| *pid == id)
+                .ok_or_else(|| anyhow!("response for unknown or duplicate request id {id}"))?;
+            let (_, s, t0) = pending.swap_remove(at);
+            stats.latencies.push(t0.elapsed().as_micros() as u64);
+            stats.completed += 1;
+            if labels[..] == oracle[s.start..s.end] {
+                stats.rows += labels.len();
+            } else {
+                stats.mismatches += 1;
+            }
+            if !stats.epochs.contains(&epoch) {
+                stats.epochs.push(epoch);
+            }
+            Ok(())
+        }
+        Some(Frame::Error { id, message }) => bail!("server error on request {id}: {message}"),
+        Some(other) => bail!("unexpected response frame: {other:?}"),
+        None => bail!("server closed mid-stream"),
+    }
+}

@@ -1,0 +1,576 @@
+//! Wire protocol for the TCP serving tier.
+//!
+//! A connection carries a stream of self-delimiting binary frames in
+//! both directions. Every frame has the same envelope, mirroring the
+//! framing discipline of the on-disk model format
+//! ([`super::format`]): a magic that is *excluded* from the checksum,
+//! little-endian fixed-width fields, a declared payload length that is
+//! capped *before* any allocation, and an FNV-1a/64 digest over every
+//! byte after the magic.
+//!
+//! ```text
+//! magic[4] = "APNW" | u32 version | u32 kind | u64 id |
+//! u32 payload_len | payload bytes | u64 fnv1a(version..payload)
+//! ```
+//!
+//! Frame kinds:
+//!
+//! | kind | frame    | direction       | payload                          |
+//! |------|----------|-----------------|----------------------------------|
+//! | 1    | `Hello`  | server → client | `u32 d, u32 m, u32 k, u64 epoch` |
+//! | 2    | `Predict`| client → server | `u32 rows`, then `rows*d` f32s   |
+//! | 3    | `Labels` | server → client | `u64 epoch`, then `rows` u32s    |
+//! | 4    | `Error`  | server → client | UTF-8 message                    |
+//!
+//! The server streams `Labels` frames back *in completion order*, not
+//! submission order — the `id` the client chose on its `Predict` is
+//! echoed so responses can be matched up. Each side tolerates a clean
+//! close only at a frame boundary; everything else decodes to a typed
+//! [`WireError`], never a panic (this module is inside the `apnc-lint`
+//! P1 no-panic scope).
+//!
+//! Decoding is pure byte manipulation over any [`Read`], so the unit
+//! tests below run under Miri (no sockets, no filesystem).
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+use super::format::Fnv;
+
+/// Frame magic. Distinct from the on-disk `APNCMODL` magic so a model
+/// file piped at a socket (or vice versa) fails loudly and immediately.
+pub const MAGIC: [u8; 4] = *b"APNW";
+
+/// Protocol version. Bump on any envelope or payload layout change.
+pub const VERSION: u32 = 1;
+
+/// Hard cap on a frame's declared payload length (64 MiB). Enforced
+/// before any allocation, so a hostile or corrupt length field cannot
+/// balloon memory; at f32 rows this still admits ~16M features per
+/// request, far beyond any sane batch.
+pub const MAX_FRAME_BYTES: u32 = 1 << 26;
+
+const KIND_HELLO: u32 = 1;
+const KIND_PREDICT: u32 = 2;
+const KIND_LABELS: u32 = 3;
+const KIND_ERROR: u32 = 4;
+
+/// Bytes after the magic, before the payload: version, kind, id,
+/// payload_len.
+const HEAD_BYTES: usize = 4 + 4 + 8 + 4;
+
+/// One protocol frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Server greeting, sent once per connection before anything else:
+    /// the served model's shape and the currently published epoch.
+    Hello {
+        /// Feature dimension every `Predict` payload must match.
+        d: u32,
+        /// Embedding blocks in the served model.
+        m: u32,
+        /// Number of clusters (labels are in `0..k`).
+        k: u32,
+        /// Published model epoch at connect time.
+        epoch: u64,
+    },
+    /// Client request: `rows` feature rows, row-major f32s. `x.len()`
+    /// must equal `rows * d` for the served model's `d` (the protocol
+    /// layer can only check divisibility by four bytes; the server
+    /// checks the shape and answers `Error` on a mismatch).
+    Predict {
+        /// Client-chosen correlation id, echoed on the response.
+        id: u64,
+        /// Declared row count.
+        rows: u32,
+        /// Row-major feature payload.
+        x: Vec<f32>,
+    },
+    /// Server response to one `Predict`: a label per row, tagged with
+    /// the model epoch that produced it.
+    Labels {
+        /// The `Predict` id this answers.
+        id: u64,
+        /// Model epoch the labels came from.
+        epoch: u64,
+        /// One cluster label per requested row.
+        labels: Vec<u32>,
+    },
+    /// Server-side failure. A request-scoped error (shape mismatch,
+    /// shed under overload) echoes the request `id` and the connection
+    /// stays open; a framing error uses id 0 and the connection closes.
+    Error {
+        /// The offending request id, or 0 for connection-level errors.
+        id: u64,
+        /// Human-readable reason.
+        message: String,
+    },
+}
+
+/// Typed decode/encode failures. Everything a hostile or truncated
+/// byte stream can do lands in one of these — never a panic.
+#[derive(Debug)]
+pub enum WireError {
+    /// The first four bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// The version field is newer than this build understands.
+    UnsupportedVersion(u32),
+    /// The kind field names no known frame.
+    UnknownKind(u32),
+    /// The declared payload length exceeds [`MAX_FRAME_BYTES`].
+    /// Detected before any allocation.
+    Oversized {
+        /// Length the frame claimed.
+        declared: u32,
+        /// The cap it violated.
+        limit: u32,
+    },
+    /// The stream ended mid-frame. The label names the field that was
+    /// being read.
+    Truncated(&'static str),
+    /// The trailing digest disagrees with the received bytes.
+    ChecksumMismatch {
+        /// Digest stored in the frame.
+        stored: u64,
+        /// Digest computed over the received bytes.
+        computed: u64,
+    },
+    /// The envelope was sound but the payload doesn't parse as the
+    /// declared kind.
+    Malformed(&'static str),
+    /// Transport-level failure (including read timeouts surfaced as
+    /// `WouldBlock`/`TimedOut`).
+    Io(io::Error),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:02x?} (want {MAGIC:02x?})"),
+            WireError::UnsupportedVersion(v) => {
+                write!(f, "unsupported protocol version {v} (this build speaks {VERSION})")
+            }
+            WireError::UnknownKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::Oversized { declared, limit } => {
+                write!(f, "frame payload of {declared} bytes exceeds the {limit}-byte cap")
+            }
+            WireError::Truncated(what) => write!(f, "frame truncated while reading {what}"),
+            WireError::ChecksumMismatch { stored, computed } => write!(
+                f,
+                "frame checksum mismatch: stored {stored:#018x}, computed {computed:#018x}"
+            ),
+            WireError::Malformed(what) => write!(f, "malformed frame payload: {what}"),
+            WireError::Io(e) => write!(f, "wire i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+/// `read_exact` that names the field on truncation instead of handing
+/// back a bare `UnexpectedEof`.
+fn fill(r: &mut impl Read, buf: &mut [u8], what: &'static str) -> Result<(), WireError> {
+    r.read_exact(buf).map_err(|e| match e.kind() {
+        io::ErrorKind::UnexpectedEof => WireError::Truncated(what),
+        _ => WireError::Io(e),
+    })
+}
+
+fn le_u32(b: &[u8]) -> u32 {
+    let mut a = [0u8; 4];
+    a.copy_from_slice(&b[..4]);
+    u32::from_le_bytes(a)
+}
+
+fn le_u64(b: &[u8]) -> u64 {
+    let mut a = [0u8; 8];
+    a.copy_from_slice(&b[..8]);
+    u64::from_le_bytes(a)
+}
+
+/// Bounds-checked sequential reader over a decoded payload.
+struct Take<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Take<'a> {
+    fn new(buf: &'a [u8]) -> Take<'a> {
+        Take { buf, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], WireError> {
+        let end = self.pos.checked_add(n).ok_or(WireError::Malformed(what))?;
+        if end > self.buf.len() {
+            return Err(WireError::Malformed(what));
+        }
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u32(&mut self, what: &'static str) -> Result<u32, WireError> {
+        Ok(le_u32(self.bytes(4, what)?))
+    }
+
+    fn u64(&mut self, what: &'static str) -> Result<u64, WireError> {
+        Ok(le_u64(self.bytes(8, what)?))
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let out = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        out
+    }
+}
+
+/// Encode `frame` onto `w` (no buffering or flushing of its own).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<(), WireError> {
+    let (kind, id, payload) = encode_payload(frame)?;
+    let len = payload.len() as u32; // capped below u32::MAX by the size check
+    let mut head = [0u8; HEAD_BYTES];
+    head[0..4].copy_from_slice(&VERSION.to_le_bytes());
+    head[4..8].copy_from_slice(&kind.to_le_bytes());
+    head[8..16].copy_from_slice(&id.to_le_bytes());
+    head[16..20].copy_from_slice(&len.to_le_bytes());
+    let mut hash = Fnv::new();
+    hash.update(&head);
+    hash.update(&payload);
+    w.write_all(&MAGIC)?;
+    w.write_all(&head)?;
+    w.write_all(&payload)?;
+    w.write_all(&hash.value().to_le_bytes())?;
+    Ok(())
+}
+
+fn encode_payload(frame: &Frame) -> Result<(u32, u64, Vec<u8>), WireError> {
+    let (kind, id, payload) = match frame {
+        Frame::Hello { d, m, k, epoch } => {
+            let mut p = Vec::with_capacity(20);
+            p.extend_from_slice(&d.to_le_bytes());
+            p.extend_from_slice(&m.to_le_bytes());
+            p.extend_from_slice(&k.to_le_bytes());
+            p.extend_from_slice(&epoch.to_le_bytes());
+            (KIND_HELLO, 0u64, p)
+        }
+        Frame::Predict { id, rows, x } => {
+            let mut p = Vec::with_capacity(4 + 4 * x.len());
+            p.extend_from_slice(&rows.to_le_bytes());
+            for v in x {
+                p.extend_from_slice(&v.to_le_bytes());
+            }
+            (KIND_PREDICT, *id, p)
+        }
+        Frame::Labels { id, epoch, labels } => {
+            let mut p = Vec::with_capacity(8 + 4 * labels.len());
+            p.extend_from_slice(&epoch.to_le_bytes());
+            for l in labels {
+                p.extend_from_slice(&l.to_le_bytes());
+            }
+            (KIND_LABELS, *id, p)
+        }
+        Frame::Error { id, message } => (KIND_ERROR, *id, message.as_bytes().to_vec()),
+    };
+    if payload.len() > MAX_FRAME_BYTES as usize {
+        return Err(WireError::Oversized {
+            declared: payload.len().min(u32::MAX as usize) as u32,
+            limit: MAX_FRAME_BYTES,
+        });
+    }
+    Ok((kind, id, payload))
+}
+
+/// Decode the next frame from `r`.
+///
+/// Returns `Ok(None)` on a clean close — end of stream *exactly at a
+/// frame boundary*. A close anywhere inside a frame is
+/// [`WireError::Truncated`]. The declared payload length is checked
+/// against [`MAX_FRAME_BYTES`] before the payload buffer is allocated.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>, WireError> {
+    // First byte via read(), not read_exact(): Ok(0) here is the one
+    // place EOF means "peer is done", not "frame cut short".
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    let mut magic = [first[0], 0, 0, 0];
+    fill(r, &mut magic[1..], "magic")?;
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let mut head = [0u8; HEAD_BYTES];
+    fill(r, &mut head, "frame header")?;
+    let version = le_u32(&head[0..4]);
+    if version != VERSION {
+        return Err(WireError::UnsupportedVersion(version));
+    }
+    let kind = le_u32(&head[4..8]);
+    let id = le_u64(&head[8..16]);
+    let len = le_u32(&head[16..20]);
+    if len > MAX_FRAME_BYTES {
+        return Err(WireError::Oversized { declared: len, limit: MAX_FRAME_BYTES });
+    }
+    let mut payload = vec![0u8; len as usize];
+    fill(r, &mut payload, "payload")?;
+    let mut sum = [0u8; 8];
+    fill(r, &mut sum, "checksum")?;
+    let mut hash = Fnv::new();
+    hash.update(&head);
+    hash.update(&payload);
+    let computed = hash.value();
+    let stored = le_u64(&sum);
+    if computed != stored {
+        return Err(WireError::ChecksumMismatch { stored, computed });
+    }
+    decode_payload(kind, id, &payload).map(Some)
+}
+
+fn decode_payload(kind: u32, id: u64, payload: &[u8]) -> Result<Frame, WireError> {
+    let mut t = Take::new(payload);
+    let frame = match kind {
+        KIND_HELLO => {
+            let d = t.u32("hello d")?;
+            let m = t.u32("hello m")?;
+            let k = t.u32("hello k")?;
+            let epoch = t.u64("hello epoch")?;
+            Frame::Hello { d, m, k, epoch }
+        }
+        KIND_PREDICT => {
+            let rows = t.u32("predict row count")?;
+            let raw = t.rest();
+            if raw.len() % 4 != 0 {
+                return Err(WireError::Malformed("predict payload is not whole f32s"));
+            }
+            let x = raw.chunks_exact(4).map(le_f32).collect();
+            Frame::Predict { id, rows, x }
+        }
+        KIND_LABELS => {
+            let epoch = t.u64("labels epoch")?;
+            let raw = t.rest();
+            if raw.len() % 4 != 0 {
+                return Err(WireError::Malformed("labels payload is not whole u32s"));
+            }
+            let labels = raw.chunks_exact(4).map(le_u32).collect();
+            Frame::Labels { id, epoch, labels }
+        }
+        KIND_ERROR => {
+            let message = std::str::from_utf8(t.rest())
+                .map_err(|_| WireError::Malformed("error message is not utf-8"))?
+                .to_string();
+            Frame::Error { id, message }
+        }
+        other => return Err(WireError::UnknownKind(other)),
+    };
+    if t.pos != payload.len() {
+        return Err(WireError::Malformed("trailing bytes after payload"));
+    }
+    Ok(frame)
+}
+
+fn le_f32(b: &[u8]) -> f32 {
+    f32::from_bits(le_u32(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encode(frame: &Frame) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, frame).unwrap();
+        buf
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Option<Frame>, WireError> {
+        read_frame(&mut &bytes[..])
+    }
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::Hello { d: 16, m: 4, k: 10, epoch: 3 },
+            Frame::Predict { id: 42, rows: 2, x: vec![1.0, -0.5, 3.25, f32::MIN_POSITIVE] },
+            Frame::Predict { id: 7, rows: 0, x: vec![] },
+            Frame::Labels { id: 42, epoch: 3, labels: vec![0, 9, 4] },
+            Frame::Error { id: 13, message: "shape mismatch: 7 features, model wants 16".into() },
+        ]
+    }
+
+    #[test]
+    fn every_kind_roundtrips() {
+        for frame in sample_frames() {
+            let bytes = encode(&frame);
+            let back = decode(&bytes).unwrap().unwrap();
+            assert_eq!(back, frame, "roundtrip changed the frame");
+        }
+    }
+
+    #[test]
+    fn frames_stream_back_to_back() {
+        let frames = sample_frames();
+        let mut buf = Vec::new();
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let mut r = &buf[..];
+        for f in &frames {
+            assert_eq!(read_frame(&mut r).unwrap().unwrap(), *f);
+        }
+        assert!(read_frame(&mut r).unwrap().is_none(), "stream must end cleanly");
+    }
+
+    #[test]
+    fn empty_stream_is_a_clean_close() {
+        assert!(decode(&[]).unwrap().is_none());
+    }
+
+    #[test]
+    fn every_truncation_point_is_typed() {
+        let full = encode(&Frame::Labels { id: 5, epoch: 1, labels: vec![1, 2, 3] });
+        for cut in 1..full.len() {
+            match decode(&full[..cut]) {
+                Err(WireError::Truncated(_)) => {}
+                other => panic!("cut at {cut}/{} gave {other:?}", full.len()),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let mut bytes = encode(&Frame::Hello { d: 1, m: 1, k: 1, epoch: 0 });
+        bytes[0] = b'X';
+        assert!(matches!(decode(&bytes), Err(WireError::BadMagic(_))));
+    }
+
+    #[test]
+    fn future_version_is_rejected_before_the_checksum() {
+        let mut bytes = encode(&Frame::Hello { d: 1, m: 1, k: 1, epoch: 0 });
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        assert!(matches!(decode(&bytes), Err(WireError::UnsupportedVersion(99))));
+    }
+
+    #[test]
+    fn unknown_kind_is_rejected() {
+        // A valid envelope with kind 200 needs a recomputed checksum.
+        let mut bytes = encode(&Frame::Error { id: 0, message: String::new() });
+        bytes[8..12].copy_from_slice(&200u32.to_le_bytes());
+        let mut hash = Fnv::new();
+        hash.update(&bytes[4..bytes.len() - 8]);
+        let sum = hash.value().to_le_bytes();
+        let at = bytes.len() - 8;
+        bytes[at..].copy_from_slice(&sum);
+        assert!(matches!(decode(&bytes), Err(WireError::UnknownKind(200))));
+    }
+
+    #[test]
+    fn oversized_declared_length_fails_before_allocating() {
+        let mut bytes = encode(&Frame::Predict { id: 1, rows: 1, x: vec![0.0] });
+        // Declare a u32::MAX payload; only the real 8 bytes follow, so a
+        // decoder that allocated eagerly would reserve 4 GiB here.
+        bytes[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        match decode(&bytes) {
+            Err(WireError::Oversized { declared, limit }) => {
+                assert_eq!(declared, u32::MAX);
+                assert_eq!(limit, MAX_FRAME_BYTES);
+            }
+            other => panic!("got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn flipped_payload_byte_fails_the_checksum() {
+        let frame = Frame::Predict { id: 9, rows: 1, x: vec![1.0, 2.0, 3.0] };
+        let clean = encode(&frame);
+        // Flip one bit in every payload byte in turn; each must be caught.
+        let payload_start = 4 + HEAD_BYTES;
+        let payload_end = clean.len() - 8;
+        for at in payload_start..payload_end {
+            let mut bytes = clean.clone();
+            bytes[at] ^= 0x40;
+            assert!(
+                matches!(decode(&bytes), Err(WireError::ChecksumMismatch { .. })),
+                "flip at byte {at} slipped through"
+            );
+        }
+    }
+
+    #[test]
+    fn flipped_checksum_byte_is_caught() {
+        let mut bytes = encode(&Frame::Labels { id: 3, epoch: 0, labels: vec![7] });
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        assert!(matches!(decode(&bytes), Err(WireError::ChecksumMismatch { .. })));
+    }
+
+    #[test]
+    fn ragged_predict_payload_is_malformed() {
+        let mut bytes = Vec::new();
+        // Hand-build a predict frame whose payload is 4 (rows) + 3 bytes.
+        let mut head = [0u8; HEAD_BYTES];
+        head[0..4].copy_from_slice(&VERSION.to_le_bytes());
+        head[4..8].copy_from_slice(&KIND_PREDICT.to_le_bytes());
+        head[8..16].copy_from_slice(&1u64.to_le_bytes());
+        head[16..20].copy_from_slice(&7u32.to_le_bytes());
+        let payload = [1, 0, 0, 0, 0xaa, 0xbb, 0xcc];
+        let mut hash = Fnv::new();
+        hash.update(&head);
+        hash.update(&payload);
+        bytes.extend_from_slice(&MAGIC);
+        bytes.extend_from_slice(&head);
+        bytes.extend_from_slice(&payload);
+        bytes.extend_from_slice(&hash.value().to_le_bytes());
+        assert!(matches!(decode(&bytes), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn error_message_must_be_utf8() {
+        let mut bytes = Vec::new();
+        let mut head = [0u8; HEAD_BYTES];
+        head[0..4].copy_from_slice(&VERSION.to_le_bytes());
+        head[4..8].copy_from_slice(&KIND_ERROR.to_le_bytes());
+        head[8..16].copy_from_slice(&0u64.to_le_bytes());
+        head[16..20].copy_from_slice(&2u32.to_le_bytes());
+        let payload = [0xff, 0xfe];
+        let mut hash = Fnv::new();
+        hash.update(&head);
+        hash.update(&payload);
+        bytes.extend_from_slice(&MAGIC);
+        bytes.extend_from_slice(&head);
+        bytes.extend_from_slice(&payload);
+        bytes.extend_from_slice(&hash.value().to_le_bytes());
+        assert!(matches!(decode(&bytes), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn display_messages_name_the_failure() {
+        let cases: Vec<(WireError, &str)> = vec![
+            (WireError::BadMagic(*b"XXXX"), "magic"),
+            (WireError::UnsupportedVersion(9), "version"),
+            (WireError::UnknownKind(5), "kind"),
+            (WireError::Oversized { declared: 1, limit: 0 }, "exceeds"),
+            (WireError::Truncated("payload"), "truncated"),
+            (WireError::ChecksumMismatch { stored: 0, computed: 1 }, "checksum"),
+            (WireError::Malformed("x"), "malformed"),
+        ];
+        for (err, needle) in cases {
+            assert!(err.to_string().contains(needle), "{err} lacks {needle:?}");
+        }
+    }
+}

@@ -110,6 +110,48 @@ impl BatchWindow {
     }
 }
 
+/// Load-adaptive bounds on the coalescing window's `max_wait`.
+///
+/// With adaptation on, each shard tunes its own hold time between
+/// batches: when a batch fills to `max_rows` or requests are still
+/// queued after a drain (traffic outruns the window), the wait doubles
+/// toward `cap` — longer holds fuse more rows per embed pass exactly
+/// when fusing pays. When a window expires with the queue idle, the
+/// wait halves back toward `floor`, so a lone request never pays more
+/// added latency than the traffic justifies. The current value is
+/// exported as [`ShardStats::window_wait_us`].
+///
+/// Adaptation changes *when* batches are cut, never what they compute —
+/// responses stay bit-identical to unbatched serving.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AdaptiveWindow {
+    /// shortest hold time (the idle-traffic resting point)
+    pub floor: Duration,
+    /// longest hold time under sustained queue pressure
+    pub cap: Duration,
+}
+
+impl AdaptiveWindow {
+    /// Adapt the hold time between `floor` and `cap`.
+    pub fn new(floor: Duration, cap: Duration) -> AdaptiveWindow {
+        AdaptiveWindow { floor, cap: cap.max(floor) }
+    }
+}
+
+/// Everything one serving shard needs to know about how to serve: the
+/// coalescing window, the backlog bound, and the optional wait
+/// adaptation policy. [`ShardCfg`](crate::model::shard::ShardCfg) wraps
+/// this with front-end-level knobs (shard count, routing).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeCfg {
+    /// request coalescing policy (disabled by default)
+    pub window: BatchWindow,
+    /// backlog bound for [`Overloaded`] shedding (0 = unbounded)
+    pub queue_limit: usize,
+    /// adapt `window.max_wait` to load (`None` keeps it fixed)
+    pub adaptive: Option<AdaptiveWindow>,
+}
+
 /// The epoch-tagged publication slot behind a serving thread (the
 /// `ArcSwap` pattern on std: an `RwLock`-guarded `Arc` — readers clone
 /// the `Arc` under a briefly-held read lock, writers republish under the
@@ -199,7 +241,10 @@ pub struct Prediction {
 
 /// Serving-side counters for one shard (shared by every clone of its
 /// handle). `batches < requests` means the coalescing window fused
-/// traffic; `rows` counts successfully predicted rows.
+/// traffic; `rows` counts successfully predicted rows. The latency
+/// percentiles cover submission-to-reply time per request, read from a
+/// log2-bucketed histogram (each reported value is the upper bound of
+/// its bucket, so resolution is a factor of two).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ShardStats {
     /// predict requests served (successful or not)
@@ -208,6 +253,58 @@ pub struct ShardStats {
     pub batches: usize,
     /// rows successfully predicted
     pub rows: usize,
+    /// high-water mark of the queue depth observed at admission
+    pub queue_peak: usize,
+    /// the coalescing window's current hold time, µs (tracks load under
+    /// an [`AdaptiveWindow`]; constant otherwise)
+    pub window_wait_us: u64,
+    /// median in-shard request latency, µs (bucketed)
+    pub p50_us: u64,
+    /// 95th-percentile in-shard request latency, µs (bucketed)
+    pub p95_us: u64,
+    /// 99th-percentile in-shard request latency, µs (bucketed)
+    pub p99_us: u64,
+}
+
+/// Log2-bucketed latency histogram: bucket `b` counts requests whose
+/// latency in µs has bit length `b` (bucket 0 is sub-µs). 40 buckets
+/// reach ~2^39 µs ≈ 6 days, far past any request lifetime. Lock-free:
+/// recording is one relaxed increment on the serving thread's reply
+/// path, reads are racy snapshots like every other counter here.
+pub(crate) struct LatencyHist {
+    buckets: [AtomicUsize; 40],
+}
+
+impl Default for LatencyHist {
+    fn default() -> LatencyHist {
+        LatencyHist { buckets: std::array::from_fn(|_| AtomicUsize::new(0)) }
+    }
+}
+
+impl LatencyHist {
+    fn record(&self, us: u64) {
+        let b = (64 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The upper bound (µs) of the bucket holding the `p`-quantile
+    /// sample, 0 if nothing has been recorded.
+    pub(crate) fn percentile(&self, p: f64) -> u64 {
+        let counts: Vec<usize> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: usize = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p * total as f64).ceil() as usize).clamp(1, total);
+        let mut seen = 0usize;
+        for (b, &n) in counts.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return if b == 0 { 0 } else { (1u64 << b) - 1 };
+            }
+        }
+        (1u64 << (counts.len() - 1)) - 1
+    }
 }
 
 /// Cross-respawn shard counters: the sharded front-end passes one
@@ -218,6 +315,9 @@ pub(crate) struct Counters {
     requests: AtomicUsize,
     batches: AtomicUsize,
     rows: AtomicUsize,
+    queue_peak: AtomicUsize,
+    window_wait_us: AtomicUsize,
+    latency: LatencyHist,
 }
 
 struct PredictReq {
@@ -226,6 +326,8 @@ struct PredictReq {
     /// row range of `x` this request predicts
     rows: Range<usize>,
     chunk_rows: usize,
+    /// when the client handed the request to the queue (latency t0)
+    submitted: Instant,
     reply: mpsc::Sender<Result<Prediction>>,
 }
 
@@ -398,8 +500,7 @@ impl ModelHandle {
         Self::start_shard(
             ModelSlot::new(Arc::new(model)),
             "apnc-model-serve",
-            window,
-            queue_limit,
+            ServeCfg { window, queue_limit, adaptive: None },
             Arc::new(Counters::default()),
         )
     }
@@ -411,13 +512,22 @@ impl ModelHandle {
     pub(crate) fn start_shard(
         slot: Arc<ModelSlot>,
         name: &str,
-        window: BatchWindow,
-        queue_limit: usize,
+        cfg: ServeCfg,
         stats: Arc<Counters>,
     ) -> Result<ModelHandle> {
         let d = slot.load().0.d();
         let counters = stats.clone();
         let served_slot = slot.clone();
+        let ServeCfg { window, queue_limit, adaptive } = cfg;
+        // normalize hand-built policies so floor <= cap always holds on
+        // the serving thread (clamp would panic on an inverted range)
+        let adaptive =
+            adaptive.map(|a| AdaptiveWindow { floor: a.floor.min(a.cap), cap: a.cap.max(a.floor) });
+        // the hold time between batches: fixed at the window's max_wait,
+        // or adapted between the policy's floor and cap. Owner-thread
+        // state, mirrored into the stats for observability.
+        let mut wait = adaptive.map_or(window.max_wait, |a| a.floor);
+        stats.window_wait_us.store(wait.as_micros() as usize, Ordering::Relaxed);
         let core = ServiceCore::spawn(
             name,
             move || Ok(served_slot),
@@ -432,7 +542,7 @@ impl ModelHandle {
                         // an already-expired deadline (max_wait == 0)
                         // degenerates to a non-blocking try_recv: gather
                         // only what is queued
-                        let deadline = Instant::now() + window.max_wait;
+                        let deadline = Instant::now() + wait;
                         while pending_rows < window.max_rows {
                             match drain.next_before(deadline) {
                                 Some(Request::Predict(p)) => {
@@ -446,6 +556,22 @@ impl ModelHandle {
                                 None => break,
                             }
                         }
+                    }
+                    if let Some(a) = adaptive {
+                        // a full batch (or a queue that refilled while we
+                        // drained) means traffic outruns the window: hold
+                        // longer next time so more rows fuse per pass. An
+                        // idle expiry means the hold was pure latency:
+                        // back off toward the floor.
+                        let loaded = pending_rows >= window.max_rows || drain.backlog() > 0;
+                        wait = if loaded {
+                            (wait.max(Duration::from_micros(1)) * 2).clamp(a.floor, a.cap)
+                        } else {
+                            (wait / 2).clamp(a.floor, a.cap)
+                        };
+                        counters
+                            .window_wait_us
+                            .store(wait.as_micros() as usize, Ordering::Relaxed);
                     }
                     serve_batch(slot, &counters, batch);
                     match follow {
@@ -532,7 +658,14 @@ impl ModelHandle {
             }
         }
         let (reply, rx) = mpsc::channel();
-        self.core.send(Request::Predict(PredictReq { x: x.clone(), rows, chunk_rows, reply }))?;
+        self.core.send(Request::Predict(PredictReq {
+            x: x.clone(),
+            rows,
+            chunk_rows,
+            submitted: Instant::now(),
+            reply,
+        }))?;
+        self.stats.queue_peak.fetch_max(self.core.queue_depth(), Ordering::Relaxed);
         Ok(PredictTicket { rx: Some(rx), core: self.core.clone() })
     }
 
@@ -568,12 +701,19 @@ impl ModelHandle {
         self.stats.rows.load(Ordering::Relaxed)
     }
 
-    /// Serving-side counters: requests, fused batches, rows.
+    /// Serving-side counters: requests, fused batches, rows, queue
+    /// high-water mark, the window's current hold time, and bucketed
+    /// in-shard latency percentiles.
     pub fn stats(&self) -> ShardStats {
         ShardStats {
             requests: self.stats.requests.load(Ordering::Relaxed),
             batches: self.stats.batches.load(Ordering::Relaxed),
             rows: self.stats.rows.load(Ordering::Relaxed),
+            queue_peak: self.stats.queue_peak.load(Ordering::Relaxed),
+            window_wait_us: self.stats.window_wait_us.load(Ordering::Relaxed) as u64,
+            p50_us: self.stats.latency.percentile(0.50),
+            p95_us: self.stats.latency.percentile(0.95),
+            p99_us: self.stats.latency.percentile(0.99),
         }
     }
 
@@ -650,13 +790,14 @@ fn serve_batch(slot: &ModelSlot, counters: &Counters, mut batch: Vec<PredictReq>
     if batch.len() == 1 {
         // pop the sole request rather than indexing into it: the serving
         // thread carries no panic site even if the len-1 branch shifts
-        if let Some(PredictReq { x, rows, chunk_rows, reply }) = batch.pop() {
+        if let Some(PredictReq { x, rows, chunk_rows, submitted, reply }) = batch.pop() {
             let r = model
                 .predict_batch(&x[rows.start * d..rows.end * d], chunk_rows)
                 .map(|labels| {
                     counters.rows.fetch_add(labels.len(), Ordering::Relaxed);
                     Prediction { labels, epoch }
                 });
+            counters.latency.record(submitted.elapsed().as_micros() as u64);
             let _ = reply.send(r);
         }
         return;
@@ -677,6 +818,7 @@ fn serve_batch(slot: &ModelSlot, counters: &Counters, mut batch: Vec<PredictReq>
                 let take = p.rows.len();
                 let slice = labels[off..off + take].to_vec();
                 off += take;
+                counters.latency.record(p.submitted.elapsed().as_micros() as u64);
                 let _ = p.reply.send(Ok(Prediction { labels: slice, epoch }));
             }
         }
@@ -686,6 +828,7 @@ fn serve_batch(slot: &ModelSlot, counters: &Counters, mut batch: Vec<PredictReq>
             let n = batch.len();
             let why = format!("{e:#}");
             for p in batch {
+                counters.latency.record(p.submitted.elapsed().as_micros() as u64);
                 let _ = p
                     .reply
                     .send(Err(anyhow!("fused batch of {n} requests failed: {why}")));
@@ -965,5 +1108,63 @@ mod tests {
         }
         // and the shard recovers: fresh submissions are admitted again
         assert_eq!(handle.predict_shared(&shared, 0..8, 0).unwrap(), want);
+    }
+
+    #[test]
+    fn adaptive_window_grows_under_load_and_shrinks_when_idle() {
+        let model = toy_model(1, 3, 6, 4, 3, 80);
+        let mut rng = Pcg::seeded(81);
+        let x: Vec<f32> = (0..8 * 3).map(|_| rng.normal() as f32).collect();
+        let want = model.predict_batch(&x, 0).unwrap();
+        let floor = Duration::from_micros(100);
+        let cap = Duration::from_micros(2_000);
+        let cfg = ServeCfg {
+            // a 4-row drain threshold every 8-row request immediately fills
+            window: BatchWindow::new(4, Duration::from_millis(50)),
+            queue_limit: 0,
+            adaptive: Some(AdaptiveWindow::new(floor, cap)),
+        };
+        let handle = ModelHandle::start_shard(
+            ModelSlot::new(Arc::new(model)),
+            "adaptive-test",
+            cfg,
+            Arc::new(Counters::default()),
+        )
+        .unwrap();
+        assert_eq!(handle.stats().window_wait_us, 100, "starts at the floor");
+        // every 8-row request fills the 4-row threshold: each batch is
+        // "loaded", so the hold time doubles until it pins at the cap
+        for _ in 0..6 {
+            assert_eq!(handle.predict(&x).unwrap(), want);
+        }
+        assert_eq!(handle.stats().window_wait_us, 2_000, "pinned at the cap under load");
+        // sequential 1-row requests expire the window idle every time:
+        // the hold halves back down and settles on the floor
+        for _ in 0..6 {
+            assert_eq!(handle.predict(&x[..3]).unwrap(), &want[..1]);
+        }
+        assert_eq!(handle.stats().window_wait_us, 100, "back at the floor when idle");
+        // latency percentiles are monotone and populated once traffic ran
+        let stats = handle.stats();
+        assert!(stats.p50_us <= stats.p95_us && stats.p95_us <= stats.p99_us, "{stats:?}");
+        assert_eq!(stats.requests, 12);
+    }
+
+    #[test]
+    fn queue_peak_tracks_the_admission_high_water_mark() {
+        let model = toy_model(1, 3, 6, 4, 3, 82);
+        let mut rng = Pcg::seeded(83);
+        let x: Vec<f32> = (0..8 * 3).map(|_| rng.normal() as f32).collect();
+        let handle = model.serve().unwrap();
+        assert_eq!(handle.stats().queue_peak, 0);
+        // freeze the shard so submissions pile up deterministically
+        handle.inject_stall(Duration::from_millis(200));
+        let shared: Arc<[f32]> = x.as_slice().into();
+        let tickets: Vec<_> =
+            (0..3).map(|_| handle.predict_async(&shared, 0..8, 0).unwrap()).collect();
+        assert!(handle.stats().queue_peak >= 3, "{:?}", handle.stats());
+        for t in tickets {
+            t.wait().unwrap();
+        }
     }
 }

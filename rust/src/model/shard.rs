@@ -68,10 +68,44 @@ use std::time::{Duration, Instant};
 
 use super::serve::{
     is_overloaded, BatchWindow, Counters, ModelHandle, ModelSlot, PredictTicket, Prediction,
-    Redemption, ShardStats,
+    Redemption, ServeCfg, ShardStats,
 };
 use super::ApncModel;
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, ensure, Context, Result};
+
+/// How the front-end picks the shard for the next request.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Routing {
+    /// Rotate over shards in submission order (the default). Cheapest
+    /// possible routing; spreads uniform traffic perfectly.
+    #[default]
+    RoundRobin,
+    /// Scan every shard's queue depth and pick the shallowest, starting
+    /// the scan from the rotating cursor so ties still spread like
+    /// round-robin. One relaxed atomic read per shard per request buys
+    /// immunity to a wedged or slow shard: traffic flows around the
+    /// backlog instead of queueing behind it.
+    LeastLoaded,
+}
+
+/// Front-end configuration for [`ShardedHandle::start_tuned`]: the
+/// shard count, the per-shard serving policy (coalescing window,
+/// backlog bound, wait adaptation), and the routing discipline.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardCfg {
+    /// serving threads to stand up (clamped to >= 1)
+    pub shards: usize,
+    /// per-shard policy each generation of every shard inherits
+    pub serve: ServeCfg,
+    /// how requests pick their shard
+    pub routing: Routing,
+}
+
+impl Default for ShardCfg {
+    fn default() -> ShardCfg {
+        ShardCfg { shards: 1, serve: ServeCfg::default(), routing: Routing::RoundRobin }
+    }
+}
 
 /// One supervised shard: the current generation's handle, the generation
 /// counter (bumped per respawn, and part of the respawned thread's name),
@@ -95,10 +129,10 @@ struct Inner {
     next: AtomicUsize,
     /// the one epoch-tagged publication slot all shards read
     slot: Arc<ModelSlot>,
-    /// coalescing window a respawned shard inherits
-    window: BatchWindow,
-    /// backlog bound a respawned shard inherits (0 = unbounded)
-    queue_limit: usize,
+    /// per-shard serving policy a respawned shard inherits
+    serve: ServeCfg,
+    /// routing discipline for request admission
+    routing: Routing,
     /// feature dimensionality (stable across swaps and respawns)
     d: usize,
     /// shards respawned by supervision so far
@@ -138,8 +172,7 @@ impl Inner {
         match ModelHandle::start_shard(
             self.slot.clone(),
             &format!("apnc-model-shard-{i}r{gen}"),
-            self.window,
-            self.queue_limit,
+            self.serve,
             slot.stats.clone(),
         ) {
             Ok(fresh) => {
@@ -192,7 +225,22 @@ impl ShardedHandle {
         window: BatchWindow,
         queue_limit: usize,
     ) -> Result<ShardedHandle> {
-        let n = n_shards.max(1);
+        Self::start_tuned(
+            model,
+            ShardCfg {
+                shards: n_shards,
+                serve: ServeCfg { window, queue_limit, adaptive: None },
+                routing: Routing::RoundRobin,
+            },
+        )
+    }
+
+    /// The fully-general constructor: every front-end knob in one
+    /// [`ShardCfg`] — shard count, per-shard coalescing/shedding/wait
+    /// adaptation, and the routing discipline
+    /// ([`ApncModel::serve_tuned`] is the usual entry point).
+    pub fn start_tuned(model: ApncModel, cfg: ShardCfg) -> Result<ShardedHandle> {
+        let n = cfg.shards.max(1);
         let d = model.d();
         // one model in memory behind one publication slot, N serving
         // threads (see the module docs)
@@ -203,8 +251,7 @@ impl ShardedHandle {
                 let handle = ModelHandle::start_shard(
                     slot.clone(),
                     &format!("apnc-model-shard-{i}"),
-                    window,
-                    queue_limit,
+                    cfg.serve,
                     stats.clone(),
                 )?;
                 Ok(ShardSlot { handle: RwLock::new(handle), gen: AtomicUsize::new(0), stats })
@@ -215,8 +262,8 @@ impl ShardedHandle {
                 shards,
                 next: AtomicUsize::new(0),
                 slot,
-                window,
-                queue_limit,
+                serve: cfg.serve,
+                routing: cfg.routing,
                 d,
                 respawns: AtomicUsize::new(0),
                 failures: Mutex::new(Vec::new()),
@@ -225,9 +272,32 @@ impl ShardedHandle {
         })
     }
 
-    /// Round-robin pick of the shard index serving the next request.
+    /// Pick the shard index serving the next request. Round-robin takes
+    /// the rotating cursor; least-loaded scans queue depths from the
+    /// cursor's position (so ties rotate too) and takes the shallowest,
+    /// returning early on the first idle shard.
     fn route_index(&self) -> usize {
-        self.inner.next.fetch_add(1, Ordering::Relaxed) % self.inner.shards.len()
+        let n = self.inner.shards.len();
+        let cursor = self.inner.next.fetch_add(1, Ordering::Relaxed);
+        match self.inner.routing {
+            Routing::RoundRobin => cursor % n,
+            Routing::LeastLoaded => {
+                let mut best = cursor % n;
+                let mut best_depth = usize::MAX;
+                for off in 0..n {
+                    let i = (cursor + off) % n;
+                    let depth = self.inner.shard_handle(i).queue_depth();
+                    if depth == 0 {
+                        return i;
+                    }
+                    if depth < best_depth {
+                        best = i;
+                        best_depth = depth;
+                    }
+                }
+                best
+            }
+        }
     }
 
     fn validate(&self, x: &Arc<[f32]>, rows: &Range<usize>) -> Result<()> {
@@ -357,6 +427,36 @@ impl ShardedHandle {
     /// replacement must expect the same feature dimensionality `d` as the
     /// model the front-end started with.
     pub fn swap(&self, model: Arc<ApncModel>) -> Result<u64> {
+        self.inner.slot.swap(model)
+    }
+
+    /// [`ShardedHandle::swap`] with a warm-up gate: before publication,
+    /// the replacement model predicts `canary` (`(rows, d)` row-major,
+    /// at least one row) on the *caller's* thread. That pre-runs the
+    /// full embed path — kernel evaluations against the new sample
+    /// blocks, centroid distances — so the first post-swap request pays
+    /// no cold-model surprise, and a replacement whose coefficients
+    /// cannot even label a canary batch is rejected **without being
+    /// published**: live traffic keeps the old epoch.
+    pub fn swap_warm(&self, model: Arc<ApncModel>, canary: &[f32]) -> Result<u64> {
+        ensure!(
+            model.d() == self.inner.d,
+            "warm swap rejected: replacement model expects d = {} but the \
+             serving tier was started with d = {}",
+            model.d(),
+            self.inner.d
+        );
+        ensure!(
+            !canary.is_empty() && canary.len() % self.inner.d == 0,
+            "warm swap canary must be (rows, d = {}) row-major with at least one row; \
+             got {} values",
+            self.inner.d,
+            canary.len()
+        );
+        model
+            .predict_batch(canary, 0)
+            .context("warm swap rejected: the replacement failed its canary batch, \
+                      the old model stays published")?;
         self.inner.slot.swap(model)
     }
 
@@ -609,6 +709,24 @@ pub struct DriveReport {
     /// waits that outlived their deadline (each request was still served
     /// and verified by a follow-up redemption)
     pub deadline_expiries: usize,
+    /// median client-observed request latency, µs (exact, from every
+    /// request's admission-to-redemption time)
+    pub p50_us: u64,
+    /// 95th-percentile client-observed request latency, µs
+    pub p95_us: u64,
+    /// 99th-percentile client-observed request latency, µs
+    pub p99_us: u64,
+}
+
+/// Exact quantile of an ascending-sorted latency sample (nearest-rank
+/// method); 0 on an empty sample. Shared with the network load
+/// generator's report.
+pub(crate) fn percentile_us(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
 }
 
 /// Verification traffic driver shared by `repro serve`, `repro chaos`,
@@ -661,77 +779,93 @@ pub fn drive_clients_opts(
     let slices: Vec<Range<usize>> =
         (0..rows).step_by(batch).map(|lo| lo..(lo + batch).min(rows)).collect();
     let before = handle.per_shard_rows();
-    let (total_rows, overload_retries, deadline_expiries) = std::thread::scope(|scope| {
-        let mut joins = Vec::new();
-        for c in 0..clients {
-            let h = handle.clone();
-            let slices = &slices;
-            let x = x.clone();
-            joins.push(scope.spawn(move || {
-                let (mut served, mut retried, mut expired) = (0usize, 0usize, 0usize);
-                for r in 0..opts.requests {
-                    // offset by client, stride 1: every client sweeps
-                    // every slice (a stride of `clients` would trap each
-                    // client in a gcd(clients, n_slices)-sized subset)
-                    let s = slices[(c + r) % slices.len()].clone();
-                    // admission with exponential backoff on shedding
-                    let mut pause = opts.backoff.max(Duration::from_micros(50));
-                    let mut attempt = 0usize;
-                    let mut ticket = loop {
-                        match h.predict_async(&x, s.clone(), 0) {
-                            Ok(t) => break t,
-                            Err(e) if is_overloaded(&e) && attempt < opts.max_retries => {
-                                attempt += 1;
-                                retried += 1;
-                                std::thread::sleep(pause);
-                                pause = (pause * 2).min(Duration::from_millis(50));
+    let (total_rows, overload_retries, deadline_expiries, mut latencies) =
+        std::thread::scope(|scope| {
+            let mut joins = Vec::new();
+            for c in 0..clients {
+                let h = handle.clone();
+                let slices = &slices;
+                let x = x.clone();
+                joins.push(scope.spawn(move || {
+                    let (mut served, mut retried, mut expired) = (0usize, 0usize, 0usize);
+                    let mut waits = Vec::with_capacity(opts.requests);
+                    for r in 0..opts.requests {
+                        // offset by client, stride 1: every client sweeps
+                        // every slice (a stride of `clients` would trap each
+                        // client in a gcd(clients, n_slices)-sized subset)
+                        let s = slices[(c + r) % slices.len()].clone();
+                        let t0 = Instant::now();
+                        // admission with exponential backoff on shedding
+                        let mut pause = opts.backoff.max(Duration::from_micros(50));
+                        let mut attempt = 0usize;
+                        let mut ticket = loop {
+                            match h.predict_async(&x, s.clone(), 0) {
+                                Ok(t) => break t,
+                                Err(e) if is_overloaded(&e) && attempt < opts.max_retries => {
+                                    attempt += 1;
+                                    retried += 1;
+                                    std::thread::sleep(pause);
+                                    pause = (pause * 2).min(Duration::from_millis(50));
+                                }
+                                // apnc-lint: allow(P1) verification driver must abort
+                                Err(e) => panic!("client {c} request {r} not admitted: {e:#}"),
                             }
+                        };
+                        let got = match opts.deadline {
                             // apnc-lint: allow(P1) verification driver must abort
-                            Err(e) => panic!("client {c} request {r} not admitted: {e:#}"),
-                        }
-                    };
-                    let got = match opts.deadline {
-                        // apnc-lint: allow(P1) verification driver must abort
-                        None => ticket.wait().expect("serving request failed"),
-                        Some(deadline) => match ticket.wait_timeout(deadline) {
-                            // apnc-lint: allow(P1) verification driver must abort
-                            Some(r) => r.expect("serving request failed"),
-                            None => {
-                                // bounded patience expired; the request
-                                // is still in flight and must land
-                                expired += 1;
-                                ticket
-                                    .wait_timeout(Duration::from_secs(60))
-                                    // apnc-lint: allow(P1) verification driver must abort
-                                    .expect("request lost after a deadline expiry")
-                                    // apnc-lint: allow(P1) verification driver must abort
-                                    .expect("serving request failed")
-                            }
-                        },
-                    };
-                    assert_eq!(
-                        &got.labels[..],
-                        &oracle[s.clone()],
-                        "client {c} request {r} diverged from in-memory prediction"
-                    );
-                    served += s.len();
-                }
-                (served, retried, expired)
-            }));
-        }
-        // apnc-lint: allow(P1) verification driver must abort on a client panic
-        joins.into_iter().map(|j| j.join().expect("client thread panicked")).fold(
-            (0usize, 0usize, 0usize),
-            |acc, got| (acc.0 + got.0, acc.1 + got.1, acc.2 + got.2),
-        )
-    });
+                            None => ticket.wait().expect("serving request failed"),
+                            Some(deadline) => match ticket.wait_timeout(deadline) {
+                                // apnc-lint: allow(P1) verification driver must abort
+                                Some(r) => r.expect("serving request failed"),
+                                None => {
+                                    // bounded patience expired; the request
+                                    // is still in flight and must land
+                                    expired += 1;
+                                    ticket
+                                        .wait_timeout(Duration::from_secs(60))
+                                        // apnc-lint: allow(P1) verification driver must abort
+                                        .expect("request lost after a deadline expiry")
+                                        // apnc-lint: allow(P1) verification driver must abort
+                                        .expect("serving request failed")
+                                }
+                            },
+                        };
+                        waits.push(t0.elapsed().as_micros() as u64);
+                        assert_eq!(
+                            &got.labels[..],
+                            &oracle[s.clone()],
+                            "client {c} request {r} diverged from in-memory prediction"
+                        );
+                        served += s.len();
+                    }
+                    (served, retried, expired, waits)
+                }));
+            }
+            // apnc-lint: allow(P1) verification driver must abort on a client panic
+            joins.into_iter().map(|j| j.join().expect("client thread panicked")).fold(
+                (0usize, 0usize, 0usize, Vec::new()),
+                |mut acc, got| {
+                    acc.3.extend(got.3);
+                    (acc.0 + got.0, acc.1 + got.1, acc.2 + got.2, acc.3)
+                },
+            )
+        });
     let per_shard_rows = handle
         .per_shard_rows()
         .iter()
         .zip(&before)
         .map(|(after, before)| after - before)
         .collect();
-    DriveReport { total_rows, per_shard_rows, overload_retries, deadline_expiries }
+    latencies.sort_unstable();
+    DriveReport {
+        total_rows,
+        per_shard_rows,
+        overload_retries,
+        deadline_expiries,
+        p50_us: percentile_us(&latencies, 0.50),
+        p95_us: percentile_us(&latencies, 0.95),
+        p99_us: percentile_us(&latencies, 0.99),
+    }
 }
 
 #[cfg(test)]
@@ -974,5 +1108,88 @@ mod tests {
         // d-mismatched replacement is rejected for the whole front-end
         assert!(handle.swap(Arc::new(toy_model(1, 5, 4, 2, 2, 57))).is_err());
         assert_eq!(handle.epoch(), 1);
+    }
+
+    #[test]
+    fn least_loaded_routing_flows_around_a_backlogged_shard() {
+        let model = toy_model(1, 3, 6, 4, 3, 90);
+        let mut rng = Pcg::seeded(91);
+        let x: Vec<f32> = (0..8 * 3).map(|_| rng.normal() as f32).collect();
+        let want = model.predict_batch(&x, 0).unwrap();
+        let handle = ShardedHandle::start_tuned(
+            model,
+            ShardCfg { shards: 2, serve: ServeCfg::default(), routing: Routing::LeastLoaded },
+        )
+        .unwrap();
+        let shared: Arc<[f32]> = x.as_slice().into();
+        // wedge shard 0 and park 3 requests on it *directly* (bypassing
+        // the router), so its queue depth is pinned at 3 while shard 1
+        // sits idle
+        let shard0 = handle.shard(0);
+        shard0.inject_stall(Duration::from_millis(300));
+        let parked: Vec<_> =
+            (0..3).map(|_| shard0.predict_async(&shared, 0..1, 0).unwrap()).collect();
+        // front-end traffic must all flow to the idle shard 1: each
+        // sequential request sees depths (>= 3, 0) and picks shard 1
+        for _ in 0..4 {
+            assert_eq!(handle.predict_shared(&shared, 0..2, 0).unwrap(), &want[..2]);
+        }
+        assert_eq!(
+            handle.per_shard_rows()[1],
+            8,
+            "all routed traffic belongs on the idle shard: {:?}",
+            handle.per_shard_rows()
+        );
+        // the parked requests were never lost, just slow
+        for t in parked {
+            assert_eq!(t.wait().unwrap().labels, &want[..1]);
+        }
+        assert_eq!(handle.per_shard_rows(), vec![3, 8]);
+    }
+
+    #[test]
+    fn least_loaded_routing_stays_bit_identical_under_concurrency() {
+        let model = toy_model(1, 3, 6, 4, 3, 92);
+        let mut rng = Pcg::seeded(93);
+        let x: Vec<f32> = (0..40 * 3).map(|_| rng.normal() as f32).collect();
+        let want = model.predict_batch(&x, 0).unwrap();
+        let handle = ShardedHandle::start_tuned(
+            model,
+            ShardCfg { shards: 3, serve: ServeCfg::default(), routing: Routing::LeastLoaded },
+        )
+        .unwrap();
+        let shared: Arc<[f32]> = x.as_slice().into();
+        let report = drive_clients(&handle, &shared, 3, &want, 4, 6, 8);
+        assert_eq!(report.total_rows, 4 * 6 * 8);
+        assert_eq!(report.per_shard_rows.iter().sum::<usize>(), report.total_rows);
+        // client-observed latency percentiles are populated and monotone
+        assert!(report.p50_us <= report.p95_us && report.p95_us <= report.p99_us, "{report:?}");
+    }
+
+    #[test]
+    fn warm_swap_publishes_a_good_model_and_rejects_a_bad_canary() {
+        let model = toy_model(1, 3, 6, 4, 3, 94);
+        let other = toy_model(1, 3, 5, 6, 4, 95);
+        let mut rng = Pcg::seeded(96);
+        let x: Vec<f32> = (0..12 * 3).map(|_| rng.normal() as f32).collect();
+        let want_b = other.predict_batch(&x, 0).unwrap();
+        let handle = model.serve_sharded(2).unwrap();
+        // a ragged canary (not a multiple of d) is rejected up front and
+        // nothing is published
+        let err = handle.swap_warm(Arc::new(other.clone()), &x[..4]).unwrap_err().to_string();
+        assert!(err.contains("canary"), "{err}");
+        assert_eq!(handle.epoch(), 0, "a rejected warm swap must not publish");
+        // an empty canary never exercises the embed path: also rejected
+        assert!(handle.swap_warm(Arc::new(other.clone()), &[]).is_err());
+        assert_eq!(handle.epoch(), 0);
+        // a d-mismatched replacement is rejected before its canary runs
+        let misfit = toy_model(1, 7, 6, 4, 3, 97);
+        assert!(handle.swap_warm(Arc::new(misfit), &x).is_err());
+        assert_eq!(handle.epoch(), 0);
+        // the good replacement warms on the canary and publishes
+        assert_eq!(handle.swap_warm(Arc::new(other), &x[..6]).unwrap(), 1);
+        assert_eq!(handle.epoch(), 1);
+        let shared: Arc<[f32]> = x.as_slice().into();
+        assert_eq!(handle.predict_shared(&shared, 0..12, 0).unwrap(), want_b);
     }
 }

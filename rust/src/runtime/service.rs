@@ -127,6 +127,13 @@ impl<Req> Drain<'_, Req> {
         };
         self.pulled(got)
     }
+
+    /// Requests submitted but not yet pulled. A racy snapshot, like
+    /// [`ServiceCore::queue_depth`]; the batching loop uses it to judge
+    /// whether traffic is outrunning the coalescing window.
+    pub(crate) fn backlog(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
 }
 
 impl<Req: Send + 'static> ServiceCore<Req> {

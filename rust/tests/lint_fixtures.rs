@@ -113,6 +113,10 @@ fn p1_fires_on_unwrap_in_serving_scope() {
     let src = "fn f(v: Vec<u32>) -> u32 {\n    v.into_iter().next().unwrap()\n}\n";
     assert_eq!(rules_of("model/serve.rs", src), vec![Rule::P1]);
     assert_eq!(rules_of("runtime/service.rs", src), vec![Rule::P1]);
+    // the network tier is serving scope too: a panic on a connection
+    // thread silently drops every request in flight on that socket
+    assert_eq!(rules_of("model/net.rs", src), vec![Rule::P1]);
+    assert_eq!(rules_of("model/proto.rs", src), vec![Rule::P1]);
 }
 
 #[test]

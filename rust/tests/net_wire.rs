@@ -1,0 +1,296 @@
+//! End-to-end coverage of the TCP serving tier: a real `NetServer` on a
+//! loopback socket, driven both by the `run_loadgen` client (bit-exact
+//! verification at scale, hot swap under load) and by hand-crafted raw
+//! frames (out-of-order streaming, malformed wire input). The adversarial
+//! cases pin the contract that bad bytes produce typed error frames and a
+//! closed connection — never a panic, and never a wounded server: after
+//! every attack a fresh connection must still serve verified predictions.
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use apnc::embedding::{ApncCoeffs, CoeffBlock, Method};
+use apnc::kernels::Kernel;
+use apnc::model::net::{run_loadgen, LoadGenOpts, NetServer};
+use apnc::model::proto::{self, Frame};
+use apnc::model::serve::{AdaptiveWindow, BatchWindow, ServeCfg};
+use apnc::model::shard::{Routing, ShardCfg};
+use apnc::model::{ApncModel, Provenance};
+use apnc::rng::Pcg;
+use apnc::runtime::Compute;
+
+/// Synthetic fitted model via the public API (random coefficients are
+/// fine: the wire contract is about bytes and ordering, not accuracy).
+fn synth_model(d: usize, l: usize, m: usize, k: usize, seed: u64) -> ApncModel {
+    let mut rng = Pcg::seeded(seed);
+    let blocks = vec![CoeffBlock {
+        samples: (0..l * d).map(|_| rng.normal() as f32).collect(),
+        l,
+        r_t: (0..l * m).map(|_| rng.normal() as f32 * 0.2).collect(),
+        m,
+    }];
+    let coeffs =
+        ApncCoeffs { method: Method::Nystrom, d, kernel: Kernel::Rbf { gamma: 0.3 }, blocks };
+    let centroids: Vec<f32> = (0..k * m).map(|_| rng.normal() as f32).collect();
+    ApncModel::from_parts(
+        coeffs,
+        centroids,
+        k,
+        Provenance { dataset: "net-wire-test".into(), seed, eig: Default::default() },
+        Compute::reference(),
+    )
+    .unwrap()
+}
+
+/// A random `(rows, d)` batch plus its in-memory oracle labels.
+fn batch(model: &ApncModel, rows: usize, seed: u64) -> (Vec<f32>, Vec<u32>) {
+    let mut rng = Pcg::seeded(seed);
+    let x: Vec<f32> = (0..rows * model.d()).map(|_| rng.normal() as f32).collect();
+    let oracle = model.predict_batch(&x, 0).unwrap();
+    (x, oracle)
+}
+
+/// Connect, consume the hello frame, and sanity-check the served shape.
+fn connect(addr: SocketAddr, d: usize) -> TcpStream {
+    let mut s = TcpStream::connect(addr).expect("connect to the test server");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    match proto::read_frame(&mut s).expect("read the hello frame") {
+        Some(Frame::Hello { d: hd, .. }) => assert_eq!(hd as usize, d),
+        other => panic!("expected a hello frame, got {other:?}"),
+    }
+    s
+}
+
+fn predict_frame(id: u64, x: &[f32], d: usize) -> Frame {
+    Frame::Predict { id, rows: (x.len() / d) as u32, x: x.to_vec() }
+}
+
+fn read_labels(s: &mut TcpStream) -> (u64, u64, Vec<u32>) {
+    match proto::read_frame(s).expect("read a response frame") {
+        Some(Frame::Labels { id, epoch, labels }) => (id, epoch, labels),
+        other => panic!("expected a labels frame, got {other:?}"),
+    }
+}
+
+fn read_error(s: &mut TcpStream) -> (u64, String) {
+    match proto::read_frame(s).expect("read a response frame") {
+        Some(Frame::Error { id, message }) => (id, message),
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+}
+
+#[test]
+fn loadgen_closed_loop_is_bit_identical_over_tcp() {
+    let d = 16;
+    let model = synth_model(d, 128, 64, 10, 501);
+    let (x, oracle) = batch(&model, 256, 502);
+    let cfg = ShardCfg {
+        shards: 4,
+        serve: ServeCfg {
+            window: BatchWindow::new(128, Duration::from_micros(200)),
+            queue_limit: 0,
+            adaptive: Some(AdaptiveWindow::new(
+                Duration::from_micros(50),
+                Duration::from_micros(2000),
+            )),
+        },
+        routing: Routing::LeastLoaded,
+    };
+    let handle = model.serve_tuned(cfg).unwrap();
+    let server = NetServer::bind("127.0.0.1:0", handle.clone()).unwrap();
+    let report = run_loadgen(
+        &server.local_addr().to_string(),
+        &x,
+        d,
+        &oracle,
+        LoadGenOpts { connections: 8, requests: 64, rows_per_request: 16, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(report.dropped, 0, "no request may go unanswered");
+    assert_eq!(report.mismatches, 0, "every response must match the in-memory oracle");
+    assert_eq!(report.rows, 64 * 16, "every row of every response verified");
+    assert_eq!(report.epochs, vec![0], "no swap happened, so one epoch");
+    assert!(report.p50_us <= report.p95_us && report.p95_us <= report.p99_us);
+    server.shutdown();
+    handle.shutdown();
+}
+
+#[test]
+fn hot_swap_mid_drive_keeps_every_response_verified() {
+    let d = 16;
+    let model = synth_model(d, 128, 64, 10, 511);
+    let (x, oracle) = batch(&model, 192, 512);
+    // the replacement is a clone of the serving model: the oracle stays
+    // valid across the swap while the epoch tag proves it happened
+    let replacement = Arc::new(model.clone());
+    let canary = x[..8 * d].to_vec();
+    let handle = model.serve_tuned(ShardCfg { shards: 2, ..Default::default() }).unwrap();
+    let server = NetServer::bind("127.0.0.1:0", handle.clone()).unwrap();
+    let addr = server.local_addr().to_string();
+    let swapper = {
+        let handle = handle.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(100));
+            handle.swap_warm(replacement, &canary).expect("warm swap under load")
+        })
+    };
+    // open loop: ~500 ms of paced traffic, so the 100 ms swap lands with
+    // requests in flight on both sides of it
+    let report = run_loadgen(
+        &addr,
+        &x,
+        d,
+        &oracle,
+        LoadGenOpts {
+            connections: 4,
+            requests: 300,
+            rows_per_request: 16,
+            rps: 600,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(swapper.join().expect("swap thread"), 1, "the swap publishes epoch 1");
+    assert_eq!(report.dropped, 0, "the swap must not drop a single request");
+    assert_eq!(report.mismatches, 0, "responses stay bit-identical across the swap");
+    assert!(
+        report.epochs.len() >= 2,
+        "expected responses from both epochs, saw {:?}",
+        report.epochs
+    );
+    server.shutdown();
+    handle.shutdown();
+}
+
+#[test]
+fn responses_stream_out_of_order_across_connections() {
+    let d = 16;
+    let model = synth_model(d, 64, 32, 8, 521);
+    let (x, oracle) = batch(&model, 16, 522);
+    let handle = model.serve_tuned(ShardCfg { shards: 2, ..Default::default() }).unwrap();
+    let server = NetServer::bind("127.0.0.1:0", handle.clone()).unwrap();
+    let addr = server.local_addr();
+    // park shard 0: the stall is itself a queue item, so the next request
+    // routed there waits ~300 ms behind it
+    handle.shard(0).inject_stall(Duration::from_millis(300));
+    let mut a = connect(addr, d);
+    // round-robin: id 1 -> shard 0 (stalled), id 2 -> shard 1 (fast)
+    proto::write_frame(&mut a, &predict_frame(1, &x[..4 * d], d)).unwrap();
+    proto::write_frame(&mut a, &predict_frame(2, &x[4 * d..8 * d], d)).unwrap();
+    // id 2 overtaking id 1 proves out-of-order streaming on one socket —
+    // and that both of a's requests are routed before b submits anything
+    let (id, _, labels) = read_labels(&mut a);
+    assert_eq!(id, 2, "the fast shard's response must overtake the stalled one");
+    assert_eq!(&labels[..], &oracle[4..8]);
+    // a second connection interleaves while a's id 1 is still in flight
+    let mut b = connect(addr, d);
+    proto::write_frame(&mut b, &predict_frame(1, &x[8 * d..12 * d], d)).unwrap();
+    proto::write_frame(&mut b, &predict_frame(2, &x[12 * d..16 * d], d)).unwrap();
+    let (id, _, labels) = read_labels(&mut b);
+    assert_eq!(id, 2, "b's fast response overtakes its own stalled request too");
+    assert_eq!(&labels[..], &oracle[12..16]);
+    let (id, _, labels) = read_labels(&mut b);
+    assert_eq!(id, 1);
+    assert_eq!(&labels[..], &oracle[8..12]);
+    let (id, _, labels) = read_labels(&mut a);
+    assert_eq!(id, 1);
+    assert_eq!(&labels[..], &oracle[..4]);
+    server.shutdown();
+    handle.shutdown();
+}
+
+#[test]
+fn malformed_wire_input_gets_typed_errors_and_never_kills_the_server() {
+    let d = 16;
+    let model = synth_model(d, 64, 32, 8, 531);
+    let (x, oracle) = batch(&model, 32, 532);
+    let handle = model.serve_tuned(ShardCfg::default()).unwrap();
+    let server = NetServer::bind("127.0.0.1:0", handle.clone()).unwrap();
+    let addr = server.local_addr();
+
+    // request-scoped: a shape mismatch answers with a typed error frame
+    // carrying the request id, and the connection keeps serving
+    let mut s = connect(addr, d);
+    proto::write_frame(&mut s, &Frame::Predict { id: 9, rows: 3, x: x[..5 * d].to_vec() })
+        .unwrap();
+    let (id, why) = read_error(&mut s);
+    assert_eq!(id, 9);
+    assert!(why.contains("shape mismatch"), "{why}");
+    proto::write_frame(&mut s, &predict_frame(10, &x[..4 * d], d)).unwrap();
+    let (id, _, labels) = read_labels(&mut s);
+    assert_eq!(id, 10, "the connection must survive a request-scoped rejection");
+    assert_eq!(&labels[..], &oracle[..4]);
+    drop(s);
+
+    // connection-fatal: wrong magic
+    let mut s = connect(addr, d);
+    s.write_all(b"NOPE").unwrap();
+    let (_, why) = read_error(&mut s);
+    assert!(why.contains("magic"), "{why}");
+    assert_eq!(
+        proto::read_frame(&mut s).unwrap(),
+        None,
+        "the server closes the connection after a framing error"
+    );
+
+    // connection-fatal: future protocol version (checked before payload)
+    let mut s = connect(addr, d);
+    let mut raw = Vec::new();
+    raw.extend_from_slice(&proto::MAGIC);
+    raw.extend_from_slice(&99u32.to_le_bytes());
+    raw.extend_from_slice(&2u32.to_le_bytes());
+    raw.extend_from_slice(&1u64.to_le_bytes());
+    raw.extend_from_slice(&0u32.to_le_bytes());
+    s.write_all(&raw).unwrap();
+    let (_, why) = read_error(&mut s);
+    assert!(why.contains("version"), "{why}");
+
+    // connection-fatal: an absurd declared payload length must be refused
+    // up front — the server must not allocate 4 GiB on a liar's say-so
+    let mut s = connect(addr, d);
+    let mut raw = Vec::new();
+    raw.extend_from_slice(&proto::MAGIC);
+    raw.extend_from_slice(&proto::VERSION.to_le_bytes());
+    raw.extend_from_slice(&2u32.to_le_bytes());
+    raw.extend_from_slice(&1u64.to_le_bytes());
+    raw.extend_from_slice(&u32::MAX.to_le_bytes());
+    s.write_all(&raw).unwrap();
+    let (_, why) = read_error(&mut s);
+    assert!(why.contains("exceeds"), "{why}");
+
+    // connection-fatal: one flipped checksum byte
+    let mut s = connect(addr, d);
+    let mut raw = Vec::new();
+    proto::write_frame(&mut raw, &predict_frame(3, &x[..2 * d], d)).unwrap();
+    let last = raw.len() - 1;
+    raw[last] ^= 0x40;
+    s.write_all(&raw).unwrap();
+    let (_, why) = read_error(&mut s);
+    assert!(why.contains("checksum"), "{why}");
+
+    // connection-fatal: a frame cut short by a write-side shutdown
+    let mut s = connect(addr, d);
+    let mut raw = Vec::new();
+    proto::write_frame(&mut raw, &predict_frame(4, &x[..2 * d], d)).unwrap();
+    s.write_all(&raw[..raw.len() / 2]).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    let (_, why) = read_error(&mut s);
+    assert!(why.contains("truncated"), "{why}");
+
+    // mid-payload disconnect: drop the socket halfway through a frame,
+    // then prove the tier still serves — no thread died with it
+    let mut s = connect(addr, d);
+    let mut raw = Vec::new();
+    proto::write_frame(&mut raw, &predict_frame(5, &x[..2 * d], d)).unwrap();
+    s.write_all(&raw[..raw.len() / 2]).unwrap();
+    drop(s);
+    let mut s = connect(addr, d);
+    proto::write_frame(&mut s, &predict_frame(6, &x[..4 * d], d)).unwrap();
+    let (id, _, labels) = read_labels(&mut s);
+    assert_eq!(id, 6, "a fresh connection must serve after every attack");
+    assert_eq!(&labels[..], &oracle[..4]);
+    server.shutdown();
+    handle.shutdown();
+}
